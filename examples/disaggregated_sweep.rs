@@ -1,0 +1,95 @@
+//! End-to-end driver: the full CoroAMU evaluation pipeline on a real
+//! (small) workload suite — every Table II benchmark, all five
+//! configurations, across the paper's far-memory latency sweep, fanned
+//! over a worker pool, each run validated against its native oracle, with
+//! the AOT-artifact cross-check when `artifacts/` is built.
+//!
+//! This exercises all three layers end to end and reports the paper's
+//! headline metric (Fig. 12 speedups). Recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example disaggregated_sweep [-- --scale full]`
+
+use coroamu::benchmarks::Scale;
+use coroamu::compiler::Variant;
+use coroamu::config::SimConfig;
+use coroamu::coordinator::{lookup, pool, run_matrix, Job};
+use coroamu::runtime;
+use coroamu::util::cli::Args;
+use coroamu::util::table::{geomean, speedup, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let scale = match args.get_or("scale", "small") {
+        "full" => Scale::Full,
+        "tiny" => Scale::Tiny,
+        _ => Scale::Small,
+    };
+    let latencies = [100.0, 200.0, 400.0, 800.0];
+    let benches: Vec<String> = coroamu::benchmarks::all().iter().map(|b| b.spec().name.to_string()).collect();
+
+    // 1) Simulation matrix.
+    let mut jobs = Vec::new();
+    for lat in latencies {
+        let cfg = SimConfig::nh_g().with_far_latency_ns(lat);
+        for b in &benches {
+            for (v, tasks) in [
+                (Variant::Serial, 1usize),
+                (Variant::Coroutine, 16),
+                (Variant::CoroAmuS, 32),
+                (Variant::CoroAmuD, 96),
+                (Variant::CoroAmuFull, 96),
+            ] {
+                jobs.push(Job {
+                    bench: b.clone(),
+                    variant: v,
+                    tasks,
+                    cfg: cfg.clone(),
+                    scale,
+                    seed: 42,
+                    key: format!("{lat}"),
+                });
+            }
+        }
+    }
+    let n = jobs.len();
+    eprintln!("running {n} simulations on {} threads...", pool::default_threads());
+    let t0 = std::time::Instant::now();
+    let rs = run_matrix(jobs, pool::default_threads())?;
+    eprintln!("done in {:.1}s (every run oracle-checked)", t0.elapsed().as_secs_f64());
+
+    // 2) Report speedups per latency.
+    for lat in latencies {
+        let key = format!("{lat}");
+        let mut t = Table::new(
+            format!("Speedup vs serial @ {lat} ns far latency"),
+            &["bench", "Coroutine", "CoroAMU-S", "CoroAMU-D", "CoroAMU-Full"],
+        );
+        let mut full_col = Vec::new();
+        for b in &benches {
+            let serial = lookup(&rs, b, Variant::Serial, &key).unwrap().stats.cycles as f64;
+            let sp = |v: Variant| serial / lookup(&rs, b, v, &key).unwrap().stats.cycles as f64;
+            full_col.push(sp(Variant::CoroAmuFull));
+            t.row(vec![
+                b.clone(),
+                speedup(sp(Variant::Coroutine)),
+                speedup(sp(Variant::CoroAmuS)),
+                speedup(sp(Variant::CoroAmuD)),
+                speedup(sp(Variant::CoroAmuFull)),
+            ]);
+        }
+        t.row(vec!["geomean".into(), "".into(), "".into(), "".into(), speedup(geomean(&full_col))]);
+        t.print();
+    }
+
+    // 3) Three-layer cross-check against the AOT golden models.
+    if runtime::artifacts_available() {
+        let rt = runtime::Runtime::cpu()?;
+        for b in runtime::oracle::GOLDEN_BENCHES {
+            runtime::oracle::check_against_artifact(&rt, b, Variant::CoroAmuFull)?;
+        }
+        println!("\nPJRT cross-check: simulator memory == AOT JAX/Pallas golden models (4/4).");
+    } else {
+        println!("\n(artifacts/ not built; run `make artifacts` for the PJRT cross-check)");
+    }
+    Ok(())
+}

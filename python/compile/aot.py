@@ -1,0 +1,52 @@
+"""AOT driver: lower every L2 model to HLO **text** in artifacts/.
+
+HLO text (NOT ``lowered.compiler_ir('hlo')``-proto serialization) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md and DESIGN.md.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: pathlib.Path) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name, (fn, specs) in MODELS.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: single-artifact dir inference")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out).parent if args.out else pathlib.Path(args.out_dir)
+    build_all(out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: batched binary search golden model.
+
+Scalar lo/hi bisection per query (the same algorithm the CoroIR kernel
+runs), with the sorted array resident in a VMEM block. The oracle
+(`ref.bs_ref`) instead uses vectorized searchsorted - algorithmic
+diversity between kernel and reference.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import QPERM
+
+
+def _kernel(num_queries, steps, arr_ref, o_ref):
+    kmask = jnp.int64(arr_ref.shape[0] - 1)
+
+    def per_query(q, carry):
+        q64 = q.astype(jnp.int64)
+        target = 2 * ((q64 * jnp.int64(QPERM)) & kmask) + 1
+
+        def step(_, lohi):
+            lo, hi = lohi
+            active = lo < hi
+            mid = (lo + hi) >> 1
+            v = pl.load(arr_ref, (pl.dslice(mid, 1),))[0]
+            pred = v < target
+            lo2 = jnp.where(active & pred, mid + 1, lo)
+            hi2 = jnp.where(active & ~pred, mid, hi)
+            return (lo2, hi2)
+
+        lo, _ = jax.lax.fori_loop(0, steps, step, (jnp.int64(0), kmask))
+        pl.store(o_ref, (pl.dslice(q64, 1),), lo[None])
+        return carry
+
+    jax.lax.fori_loop(0, num_queries, per_query, 0)
+
+
+def bs_pallas(sorted_array, num_queries):
+    k = sorted_array.shape[0]
+    steps = max(1, (k - 1).bit_length())
+    return pl.pallas_call(
+        lambda a_ref, o_ref: _kernel(num_queries, steps, a_ref, o_ref),
+        out_shape=jax.ShapeDtypeStruct((num_queries,), jnp.int64),
+        interpret=True,
+    )(sorted_array)

@@ -1,0 +1,35 @@
+"""L1 Pallas kernel: GUPS scatter-update golden model.
+
+Applies ``table[idx] += idx|1`` for ``idx = (i*PERM) & mask`` with a
+sequential in-kernel update loop over the table held in a VMEM block
+(interpret=True on CPU; on a real TPU the table block streams HBM->VMEM
+through the BlockSpec). The pure-numpy oracle is ``ref.gups_ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PERM
+
+
+def _kernel(num_updates, table_ref, o_ref):
+    o_ref[...] = table_ref[...]
+    mask = jnp.int64(o_ref.shape[0] - 1)
+
+    def body(i, carry):
+        idx = (i.astype(jnp.int64) * jnp.int64(PERM)) & mask
+        v = pl.load(o_ref, (pl.dslice(idx, 1),))
+        pl.store(o_ref, (pl.dslice(idx, 1),), v + (idx | jnp.int64(1)))
+        return carry
+
+    jax.lax.fori_loop(0, num_updates, body, 0)
+
+
+def gups_pallas(table, num_updates):
+    """table: int64[2^k] -> updated table (int64[2^k])."""
+    return pl.pallas_call(
+        lambda t_ref, o_ref: _kernel(num_updates, t_ref, o_ref),
+        out_shape=jax.ShapeDtypeStruct(table.shape, jnp.int64),
+        interpret=True,
+    )(table)

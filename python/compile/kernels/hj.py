@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: hash-join probe golden model (paper Listing 1).
+
+Walks each probe key's bucket chain (8-word buckets {cnt, next, k0..k3})
+with a bounded fori_loop + validity masking, accumulating match counts.
+Uses the same mix64 hash as the Rust simulator (pinned constants).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAX_CHAIN = 32
+WORDS = 8
+
+
+def _mix64(x):
+    x = x.astype(jnp.uint64)
+    x = x ^ (x >> jnp.uint64(33))
+    x = x * jnp.uint64(0xFF51AFD7ED558CCD)
+    x = x ^ (x >> jnp.uint64(33))
+    x = x * jnp.uint64(0xC4CEB9FE1A85EC53)
+    x = x ^ (x >> jnp.uint64(33))
+    return x
+
+
+def _kernel(num_keys, bmask, buckets_ref, keys_ref, o_ref):
+    def per_key(t, total):
+        key = pl.load(keys_ref, (pl.dslice(t.astype(jnp.int64), 1),))[0]
+        b0 = (_mix64(key) & jnp.uint64(bmask)).astype(jnp.int64)
+
+        def chain(_, carry):
+            b, acc = carry
+            valid = b >= 0
+            bi = jnp.where(valid, b, 0)
+            base = bi * WORDS
+            rec = pl.load(buckets_ref, (pl.dslice(base, WORDS),))
+            cnt, nxt = rec[0], rec[1]
+            m = jnp.int64(0)
+            for j in range(4):
+                m = m + ((jnp.int64(j) < cnt) & (rec[2 + j] == key)).astype(jnp.int64)
+            acc = acc + jnp.where(valid, m, 0)
+            b = jnp.where(valid, nxt, jnp.int64(-1))
+            return (b, acc)
+
+        _, total = jax.lax.fori_loop(0, MAX_CHAIN, chain, (b0, total))
+        return total
+
+    total = jax.lax.fori_loop(0, num_keys, per_key, jnp.int64(0))
+    o_ref[...] = total[None]
+
+
+def hj_pallas(buckets_flat, keys, bmask):
+    """buckets_flat: int64[total*8]; keys: int64[T] -> int64[1] matches."""
+    return pl.pallas_call(
+        lambda b_ref, k_ref, o_ref: _kernel(keys.shape[0], bmask, b_ref, k_ref, o_ref),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.int64),
+        interpret=True,
+    )(buckets_flat, keys)

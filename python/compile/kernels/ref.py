@@ -1,0 +1,102 @@
+"""Pure-numpy golden references for the Pallas kernels.
+
+These are the correctness oracles (deliberately implemented with different
+algorithms than the Pallas kernels - e.g. vectorized searchsorted vs the
+kernel's scalar bisection loop). Constants are pinned to the Rust side:
+
+* ``mix64``  - rust/src/sim/interp.rs::mix64 (MurmurHash3 finalizer)
+* ``PERM``   - rust/src/benchmarks/gups.rs::PERM
+* ``QPERM``  - rust/src/benchmarks/bs.rs::QPERM
+* ``SCALAR`` - rust/src/benchmarks/stream.rs::SCALAR
+"""
+
+import numpy as np
+
+PERM = 0x9E3779B9
+QPERM = 0x5851F42D
+SCALAR = 3.0
+
+# Pinned values asserted in rust (interp.rs::mix64_reference_values).
+MIX64_PINS = {
+    0: 0x0,
+    1: 0xB456BCFC34C2CB2C,
+    42: 0x810879608E4259CC,
+    0xDEADBEEF: 0xD24BD59F862A1DAC,
+}
+
+
+def mix64(x):
+    """MurmurHash3 finalizer over uint64 (vectorized)."""
+    x = np.asarray(x).astype(np.uint64)
+    with np.errstate(over="ignore"):
+        x = x ^ (x >> np.uint64(33))
+        x = x * np.uint64(0xFF51AFD7ED558CCD)
+        x = x ^ (x >> np.uint64(33))
+        x = x * np.uint64(0xC4CEB9FE1A85EC53)
+        x = x ^ (x >> np.uint64(33))
+    return x
+
+
+def gups_ref(table, num_updates):
+    """table[idx] += idx|1 for idx = (i*PERM) & mask, i in [0, N)."""
+    table = np.asarray(table, dtype=np.int64).copy()
+    mask = np.int64(table.shape[0] - 1)
+    i = np.arange(num_updates, dtype=np.int64)
+    idx = (i * np.int64(PERM)) & mask
+    np.add.at(table, idx, idx | np.int64(1))
+    return table
+
+
+def stream_ref(b, c, scalar=SCALAR):
+    return np.asarray(b, dtype=np.float64) + scalar * np.asarray(c, dtype=np.float64)
+
+
+def bs_ref(sorted_array, num_queries):
+    """Vectorized oracle via searchsorted (kernel uses scalar bisection)."""
+    sorted_array = np.asarray(sorted_array, dtype=np.int64)
+    kmask = np.int64(sorted_array.shape[0] - 1)
+    q = (np.arange(num_queries, dtype=np.int64) * np.int64(QPERM)) & kmask
+    targets = 2 * q + 1
+    return np.searchsorted(sorted_array, targets, side="left").astype(np.int64)
+
+
+def hj_ref(buckets_flat, keys, bmask):
+    """Chain-walking probe count (python-loop oracle)."""
+    buckets = np.asarray(buckets_flat, dtype=np.int64).reshape(-1, 8)
+    total = 0
+    for key in np.asarray(keys, dtype=np.int64):
+        b = int(mix64(np.uint64(key)) & np.uint64(bmask))
+        while b != -1:
+            cnt = buckets[b, 0]
+            for j in range(4):
+                if j < cnt and buckets[b, 2 + j] == key:
+                    total += 1
+            b = int(buckets[b, 1])
+    return np.int64(total)
+
+
+def build_table(nbuckets, build_keys):
+    """Host-side hash-table build - mirrors rust hj.rs::build_table."""
+    words = 8
+    total = nbuckets + nbuckets // 2 + 4
+    flat = np.zeros(total * words, dtype=np.int64)
+    for c in range(total):
+        flat[c * words + 1] = -1
+    next_free = nbuckets
+    for k in np.asarray(build_keys, dtype=np.int64):
+        bi = int(mix64(np.uint64(k)) & np.uint64(nbuckets - 1))
+        while True:
+            cnt = flat[bi * words]
+            if cnt < 4:
+                flat[bi * words + 2 + cnt] = k
+                flat[bi * words] = cnt + 1
+                break
+            nxt = flat[bi * words + 1]
+            if nxt == -1:
+                assert next_free < total, "overflow pool exhausted"
+                flat[bi * words + 1] = next_free
+                bi = next_free
+                next_free += 1
+            else:
+                bi = int(nxt)
+    return flat

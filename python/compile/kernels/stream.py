@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: STREAM triad ``a = b + s*c`` (f64), tiled for VMEM.
+
+The grid walks 512-element blocks; BlockSpec expresses the HBM->VMEM
+streaming schedule (the TPU analogue of the paper's remote->SPM aloads).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import SCALAR
+
+BLOCK = 512
+
+
+def _kernel(s, b_ref, c_ref, a_ref):
+    a_ref[...] = b_ref[...] + s * c_ref[...]
+
+
+def stream_pallas(b, c, scalar=SCALAR):
+    n = b.shape[0]
+    if n % BLOCK == 0 and n >= BLOCK:
+        grid = (n // BLOCK,)
+        spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+        return pl.pallas_call(
+            lambda br, cr, ar: _kernel(scalar, br, cr, ar),
+            grid=grid,
+            in_specs=[spec, spec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float64),
+            interpret=True,
+        )(b, c)
+    # Odd sizes (hypothesis sweeps): single block.
+    return pl.pallas_call(
+        lambda br, cr, ar: _kernel(scalar, br, cr, ar),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float64),
+        interpret=True,
+    )(b, c)

@@ -1,0 +1,74 @@
+"""L2: the JAX golden models, one jitted function per workload, calling
+the L1 Pallas kernels. These are AOT-lowered by ``aot.py`` to HLO text and
+executed from the Rust coordinator via PJRT — Python never runs at
+simulation time.
+
+Shapes are fixed to ``rust/src/benchmarks/mod.rs::oracle_shapes`` so the
+Rust oracle check (`coroamu oracle`) can feed Tiny-scale instances through
+the artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.bs import bs_pallas
+from .kernels.gups import gups_pallas
+from .kernels.hj import hj_pallas
+from .kernels.stream import stream_pallas
+
+# Mirror of rust oracle_shapes.
+GUPS_TABLE = 4096
+GUPS_N = 512
+STREAM_N = 4096
+BS_KEYS = 4096
+BS_QUERIES = 256
+HJ_BUCKETS = 512
+HJ_TUPLES = 1024
+# Bucket memory includes the overflow pool (see hj.rs::build_table):
+HJ_BUCKET_WORDS = (HJ_BUCKETS + HJ_BUCKETS // 2 + 4) * 8
+
+
+def gups_model(table):
+    """int64[GUPS_TABLE] -> (int64[GUPS_TABLE],)"""
+    return (gups_pallas(table, GUPS_N),)
+
+
+def stream_model(b, c):
+    """f64[STREAM_N] x f64[STREAM_N] -> (f64[STREAM_N],)"""
+    return (stream_pallas(b, c),)
+
+
+def bs_model(sorted_array):
+    """int64[BS_KEYS] -> (int64[BS_QUERIES],)"""
+    return (bs_pallas(sorted_array, BS_QUERIES),)
+
+
+def hj_model(buckets_flat, keys):
+    """int64[HJ_BUCKET_WORDS] x int64[HJ_TUPLES] -> (int64[1],)"""
+    return (hj_pallas(buckets_flat, keys, HJ_BUCKETS - 1),)
+
+
+def model(b, c):
+    """The default end-to-end artifact (`model.hlo.txt`): STREAM triad."""
+    return stream_model(b, c)
+
+
+#: name -> (fn, example argument shapes/dtypes)
+MODELS = {
+    "gups": (gups_model, [jax.ShapeDtypeStruct((GUPS_TABLE,), jnp.int64)]),
+    "stream": (
+        stream_model,
+        [jax.ShapeDtypeStruct((STREAM_N,), jnp.float64), jax.ShapeDtypeStruct((STREAM_N,), jnp.float64)],
+    ),
+    "bs": (bs_model, [jax.ShapeDtypeStruct((BS_KEYS,), jnp.int64)]),
+    "hj": (
+        hj_model,
+        [jax.ShapeDtypeStruct((HJ_BUCKET_WORDS,), jnp.int64), jax.ShapeDtypeStruct((HJ_TUPLES,), jnp.int64)],
+    ),
+    "model": (
+        model,
+        [jax.ShapeDtypeStruct((STREAM_N,), jnp.float64), jax.ShapeDtypeStruct((STREAM_N,), jnp.float64)],
+    ),
+}

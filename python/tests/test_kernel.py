@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs pure-numpy oracles.
+
+Fixed-shape checks at the AOT artifact shapes, plus hypothesis sweeps over
+sizes and data. This is the CORE correctness signal for the Python layers;
+the Rust side re-validates the same artifacts through PJRT
+(`coroamu oracle`).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import ref
+from compile.kernels.bs import bs_pallas
+from compile.kernels.gups import gups_pallas
+from compile.kernels.hj import hj_pallas
+from compile.kernels.stream import stream_pallas
+from compile import model
+
+
+def test_mix64_pins_match_rust():
+    for x, want in ref.MIX64_PINS.items():
+        assert int(ref.mix64(np.uint64(x))) == want
+
+
+# ---------------------------------------------------------------- GUPS
+
+def test_gups_pallas_matches_ref_at_artifact_shape():
+    rng = np.random.default_rng(0)
+    table = rng.integers(0, 2**62, size=model.GUPS_TABLE, dtype=np.int64)
+    out = np.asarray(gups_pallas(jnp.asarray(table), model.GUPS_N))
+    np.testing.assert_array_equal(out, ref.gups_ref(table, model.GUPS_N))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    logk=st.integers(min_value=4, max_value=10),
+    n=st.integers(min_value=1, max_value=512),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_gups_pallas_matches_ref_swept(logk, n, seed):
+    rng = np.random.default_rng(seed)
+    table = rng.integers(0, 2**62, size=1 << logk, dtype=np.int64)
+    out = np.asarray(gups_pallas(jnp.asarray(table), n))
+    np.testing.assert_array_equal(out, ref.gups_ref(table, n))
+
+
+# -------------------------------------------------------------- STREAM
+
+def test_stream_pallas_matches_ref_at_artifact_shape():
+    rng = np.random.default_rng(1)
+    b = rng.random(model.STREAM_N)
+    c = rng.random(model.STREAM_N)
+    # XLA may fuse mul+add into an FMA: ULP-level tolerance.
+    out = np.asarray(stream_pallas(jnp.asarray(b), jnp.asarray(c)))
+    np.testing.assert_allclose(out, ref.stream_ref(b, c), rtol=1e-15)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([7, 64, 512, 1024, 1536, 4096]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_stream_pallas_matches_ref_swept(n, seed):
+    rng = np.random.default_rng(seed)
+    b = rng.random(n)
+    c = rng.random(n)
+    out = np.asarray(stream_pallas(jnp.asarray(b), jnp.asarray(c)))
+    np.testing.assert_allclose(out, ref.stream_ref(b, c), rtol=1e-15)
+
+
+# ------------------------------------------------------------------ BS
+
+def _sorted_array(k):
+    return (2 * np.arange(k, dtype=np.int64) + 1)
+
+
+def test_bs_pallas_matches_ref_at_artifact_shape():
+    arr = _sorted_array(model.BS_KEYS)
+    out = np.asarray(bs_pallas(jnp.asarray(arr), model.BS_QUERIES))
+    np.testing.assert_array_equal(out, ref.bs_ref(arr, model.BS_QUERIES))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    logk=st.integers(min_value=3, max_value=12),
+    q=st.integers(min_value=1, max_value=128),
+)
+def test_bs_pallas_matches_ref_swept(logk, q):
+    arr = _sorted_array(1 << logk)
+    out = np.asarray(bs_pallas(jnp.asarray(arr), q))
+    np.testing.assert_array_equal(out, ref.bs_ref(arr, q))
+
+
+# ------------------------------------------------------------------ HJ
+
+def _hj_case(nbuckets, ntuples, seed):
+    rng = np.random.default_rng(seed)
+    domain = nbuckets * 4
+    build_keys = rng.integers(0, domain, size=2 * nbuckets, dtype=np.int64)
+    flat = ref.build_table(nbuckets, build_keys)
+    keys = rng.integers(0, domain, size=ntuples, dtype=np.int64)
+    return flat, keys
+
+
+def test_hj_pallas_matches_ref_at_artifact_shape():
+    flat, keys = _hj_case(model.HJ_BUCKETS, model.HJ_TUPLES, 2)
+    out = np.asarray(hj_pallas(jnp.asarray(flat), jnp.asarray(keys), model.HJ_BUCKETS - 1))
+    assert out[0] == ref.hj_ref(flat, keys, model.HJ_BUCKETS - 1)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    logb=st.integers(min_value=3, max_value=8),
+    t=st.integers(min_value=1, max_value=256),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hj_pallas_matches_ref_swept(logb, t, seed):
+    flat, keys = _hj_case(1 << logb, t, seed)
+    out = np.asarray(hj_pallas(jnp.asarray(flat), jnp.asarray(keys), (1 << logb) - 1))
+    assert out[0] == ref.hj_ref(flat, keys, (1 << logb) - 1)
+
+
+# --------------------------------------------------------------- model
+
+def test_l2_models_trace_and_match_shapes():
+    for name, (fn, specs) in model.MODELS.items():
+        out_aval = jax.eval_shape(fn, *specs)
+        assert isinstance(out_aval, tuple) and len(out_aval) == 1, name
+
+
+def test_l2_gups_model_executes():
+    rng = np.random.default_rng(3)
+    table = rng.integers(0, 2**62, size=model.GUPS_TABLE, dtype=np.int64)
+    (out,) = model.gups_model(jnp.asarray(table))
+    np.testing.assert_array_equal(np.asarray(out), ref.gups_ref(table, model.GUPS_N))

@@ -1,0 +1,50 @@
+//! End-to-end benchmarks: one timing entry per paper table/figure, each
+//! regenerating the artifact at Small scale (Full scale via
+//! `coroamu report --scale full`). The printed tables ARE the paper rows;
+//! the timings document the cost of regenerating each.
+//!
+//! Run: `cargo bench --offline -- fig12` (or any figure filter).
+
+use coroamu::benchmarks::Scale;
+use coroamu::config::SimConfig;
+use coroamu::harness::{self, FigOpts};
+use coroamu::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::from_env();
+    b.warmup_iters = 0;
+    b.measure_iters = if std::env::var("COROAMU_BENCH_FAST").is_ok() { 1 } else { 2 };
+
+    println!("== paper-artifact regeneration benchmarks (Small scale) ==\n");
+
+    if b.enabled("table1") {
+        SimConfig::nh_g().table1().print();
+        b.run("table1", "row", || 1.0);
+    }
+    if b.enabled("table2") {
+        coroamu::benchmarks::table2().print();
+        b.run("table2", "row", || 1.0);
+    }
+
+    for fig in harness::ALL_FIGURES {
+        let name = format!("fig{fig:02}");
+        if !b.enabled(&name) {
+            continue;
+        }
+        let opts = FigOpts { scale: Scale::Small, threads: 1, seed: 42, only: vec![] };
+        // Print the tables once (the artifact), then time regeneration.
+        match harness::figure(fig, &opts) {
+            Ok(tables) => {
+                for t in &tables {
+                    t.print();
+                }
+                b.run(&name, "table", || {
+                    let ts = harness::figure(fig, &opts).expect("figure");
+                    ts.len() as f64
+                });
+            }
+            Err(e) => panic!("figure {fig}: {e:#}"),
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,87 @@
+//! Micro-benchmarks of the simulator substrate itself (the L3 hot path):
+//! interpreter throughput per variant, cache-model probe rate, predictor
+//! update rate. This is the §Perf instrumentation — before/after numbers
+//! are recorded in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --offline` (filter: `cargo bench -- interp`).
+
+use coroamu::benchmarks::{self, Scale};
+use coroamu::compiler::{compile, Variant};
+use coroamu::config::SimConfig;
+use coroamu::sim::{self, MemImage};
+use coroamu::util::benchkit::Bench;
+use coroamu::util::rng::Rng;
+
+fn interp_throughput(b: &mut Bench, bench_name: &str, variant: Variant) {
+    let name = format!("interp/{}/{}", bench_name, variant.label());
+    if !b.enabled(&name) {
+        return;
+    }
+    let cfg = SimConfig::nh_g();
+    b.run(&name, "instr", || {
+        let inst = benchmarks::by_name(bench_name).unwrap().instance(Scale::Small, 42).unwrap();
+        let ck = compile(&inst.kernel, &variant.opts(64), &cfg.amu).unwrap();
+        let mut prog = sim::link(&cfg, &ck, inst.mem, &inst.params);
+        let st = sim::run(&cfg, &mut prog).unwrap();
+        st.dyn_instrs as f64
+    });
+}
+
+fn cache_probe_rate(b: &mut Bench) {
+    use coroamu::sim::memsys::{AccessKind, MemSys};
+    let cfg = SimConfig::nh_g();
+    b.run("cache/probe_mixed", "access", || {
+        let mut ms = MemSys::new(&cfg);
+        let mut rng = Rng::new(1);
+        let n = 200_000u64;
+        let mut t = 0;
+        for _ in 0..n {
+            let addr = 0x8000_0000u64 + (rng.below(1 << 22)) * 8;
+            t = ms.access(addr, coroamu::ir::AddrSpace::Remote, AccessKind::Load, t).saturating_sub(100);
+        }
+        n as f64
+    });
+}
+
+fn bpu_update_rate(b: &mut Bench) {
+    use coroamu::sim::bpu::Tage;
+    let cfg = SimConfig::nh_g();
+    b.run("bpu/tage_update", "branch", || {
+        let mut t = Tage::new(&cfg.bpu);
+        let mut rng = Rng::new(2);
+        let n = 500_000u64;
+        for i in 0..n {
+            t.predict_and_update(i & 63, rng.below(10) != 0);
+        }
+        n as f64
+    });
+}
+
+fn mem_image_rw(b: &mut Bench) {
+    use coroamu::ir::{AddrSpace, Width};
+    b.run("mem/rw8", "op", || {
+        let mut m = MemImage::new();
+        let len = 1u64 << 20;
+        let base = m.alloc("x", AddrSpace::Remote, len);
+        let n = 200_000u64;
+        for i in 0..n {
+            let a = base + ((i * 64) % (len - 8)) & !7;
+            let v = m.read(a, Width::W8).unwrap();
+            m.write(a, Width::W8, v + 1).unwrap();
+        }
+        2.0 * n as f64
+    });
+}
+
+fn main() {
+    let mut b = Bench::from_env();
+    println!("== simulator substrate micro-benchmarks ==");
+    interp_throughput(&mut b, "gups", Variant::Serial);
+    interp_throughput(&mut b, "gups", Variant::CoroAmuFull);
+    interp_throughput(&mut b, "bs", Variant::CoroAmuD);
+    interp_throughput(&mut b, "stream", Variant::CoroAmuS);
+    cache_probe_rate(&mut b);
+    bpu_update_rate(&mut b);
+    mem_image_rw(&mut b);
+    b.finish();
+}

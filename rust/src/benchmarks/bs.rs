@@ -1,0 +1,137 @@
+//! BS: batched binary search over a huge sorted array. Remote structure:
+//! `sorted_array`. A dependent pointer-chase: each probe's address depends
+//! on the previous comparison, so per-task MLP is 1 and all the win comes
+//! from inter-task interleaving — the paper's canonical latency-bound case.
+
+use super::{oracle_shapes, BenchSpec, Benchmark, Instance, Scale};
+use crate::compiler::ast::*;
+use crate::ir::{AddrSpace, AluOp, Width};
+use crate::sim::MemImage;
+use anyhow::{ensure, Result};
+
+pub struct BinarySearch;
+
+pub const QPERM: i64 = 0x5851_F42D; // odd
+
+fn bin(op: AluOp, a: Expr, b: Expr) -> Expr {
+    Expr::Bin(BinOp::I(op), Box::new(a), Box::new(b))
+}
+
+/// Queries q = (i*QPERM) & (K-1); array holds sorted[j] = 2j+1; search for
+/// target = 2q+1 with classic lo/hi bisection; out[i] = final lo (== q).
+pub fn kernel() -> Kernel {
+    let mut kb = KernelBuilder::new("bs");
+    let arr = kb.param_ptr("sorted_array", AddrSpace::Remote);
+    let out = kb.param_ptr("out", AddrSpace::Local);
+    let kmask = kb.param_val("kmask");
+    let n = kb.param_val("num_queries");
+    kb.trip(n);
+    kb.num_tasks(64);
+    let target = kb.var("target");
+    let lo = kb.var("lo");
+    let hi = kb.var("hi");
+    let mid = kb.var("mid");
+    let v = kb.var("v");
+    kb.build(vec![
+        Stmt::Let {
+            var: target,
+            expr: bin(
+                AluOp::Add,
+                Expr::shl(
+                    Expr::and(Expr::mul(Expr::Var(ITER_VAR), Expr::Imm(QPERM)), Expr::Param(kmask)),
+                    Expr::Imm(1),
+                ),
+                Expr::Imm(1),
+            ),
+        },
+        Stmt::Let { var: lo, expr: Expr::Imm(0) },
+        Stmt::Let { var: hi, expr: Expr::Param(kmask) },
+        Stmt::While {
+            cond: bin(AluOp::Slt, Expr::Var(lo), Expr::Var(hi)),
+            body: vec![
+                Stmt::Let {
+                    var: mid,
+                    expr: bin(AluOp::Shr, bin(AluOp::Add, Expr::Var(lo), Expr::Var(hi)), Expr::Imm(1)),
+                },
+                Stmt::Load {
+                    var: v,
+                    addr: Expr::add(Expr::Param(arr), Expr::shl(Expr::Var(mid), Expr::Imm(3))),
+                    width: Width::W8,
+                },
+                Stmt::If {
+                    cond: bin(AluOp::Slt, Expr::Var(v), Expr::Var(target)),
+                    then_: vec![Stmt::Let { var: lo, expr: bin(AluOp::Add, Expr::Var(mid), Expr::Imm(1)) }],
+                    else_: vec![Stmt::Let { var: hi, expr: Expr::Var(mid) }],
+                },
+            ],
+        },
+        Stmt::Store {
+            val: Expr::Var(lo),
+            addr: Expr::add(Expr::Param(out), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))),
+            width: Width::W8,
+        },
+    ])
+}
+
+pub fn sizes(scale: Scale) -> (u64, u64) {
+    match scale {
+        Scale::Tiny => (oracle_shapes::BS_KEYS, oracle_shapes::BS_QUERIES),
+        Scale::Small => (1 << 13, 300),
+        Scale::Full => (1 << 21, 25_000), // 16 MB sorted array
+    }
+}
+
+impl Benchmark for BinarySearch {
+    fn spec(&self) -> BenchSpec {
+        BenchSpec { name: "bs", suite: "Binary Search", remote: "sorted_array" }
+    }
+
+    fn instance(&self, scale: Scale, _seed: u64) -> Result<Instance> {
+        let (k, n) = sizes(scale);
+        let mut mem = MemImage::new();
+        let data: Vec<i64> = (0..k as i64).map(|j| 2 * j + 1).collect();
+        let arr = mem.alloc_init_i64("sorted_array", AddrSpace::Remote, &data);
+        let out = mem.alloc("out", AddrSpace::Local, n * 8);
+        let kmask = (k - 1) as i64;
+        let check = move |m: &MemImage| -> Result<()> {
+            let r = m.region("out").expect("out region");
+            for i in 0..n as i64 {
+                let want = i.wrapping_mul(QPERM) & kmask;
+                let got = m.read(r.base + (i as u64) * 8, Width::W8)?;
+                ensure!(got == want, "out[{i}] = {got}, want {want}");
+            }
+            Ok(())
+        };
+        Ok(Instance {
+            kernel: kernel(),
+            mem,
+            params: vec![arr as i64, out as i64, kmask, n as i64],
+            check: Box::new(check),
+            default_tasks: 64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::testutil::run_all_variants;
+
+    #[test]
+    fn all_variants_pass_oracle_and_interleaving_wins() {
+        let rs = run_all_variants(&BinarySearch);
+        let serial = rs[0].1.cycles as f64;
+        let full = rs[4].1.cycles as f64;
+        assert!(
+            serial / full > 2.0,
+            "BS is a dependent chain; interleaving should win big, got {:.2}x",
+            serial / full
+        );
+    }
+
+    #[test]
+    fn kernel_has_one_suspension_site_in_loop() {
+        let an = crate::compiler::analysis::analyze(&kernel()).unwrap();
+        assert_eq!(an.sites.len(), 1, "only sorted_array probes are remote");
+    }
+}

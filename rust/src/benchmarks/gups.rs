@@ -1,0 +1,112 @@
+//! GUPS (HPCC RandomAccess): read-modify-write updates to random slots of
+//! a giant table. Remote structure: `table`. The update stream uses a
+//! bijective multiplicative permutation so indices are collision-free —
+//! the result is then independent of coroutine interleaving (HPCC itself
+//! tolerates racy updates; we need exactness for oracle checking).
+
+use super::{oracle_shapes, BenchSpec, Benchmark, Instance, Scale};
+use crate::compiler::ast::*;
+use crate::ir::{AddrSpace, AluOp, Width};
+use crate::sim::MemImage;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+pub struct Gups;
+
+pub const PERM: i64 = 0x9E37_79B9; // odd => bijective mod 2^k
+
+pub fn kernel() -> Kernel {
+    let mut kb = KernelBuilder::new("gups");
+    let tab = kb.param_ptr("table", AddrSpace::Remote);
+    let mask = kb.param_val("mask");
+    let n = kb.param_val("num_updates");
+    kb.trip(n);
+    kb.num_tasks(64);
+    let idx = kb.var("idx");
+    let v = kb.var("v");
+    let addr = Expr::add(Expr::Param(tab), Expr::shl(Expr::Var(idx), Expr::Imm(3)));
+    kb.build(vec![
+        Stmt::Let {
+            var: idx,
+            expr: Expr::and(Expr::mul(Expr::Var(ITER_VAR), Expr::Imm(PERM)), Expr::Param(mask)),
+        },
+        Stmt::Load { var: v, addr: addr.clone(), width: Width::W8 },
+        Stmt::Store {
+            val: Expr::Bin(
+                BinOp::I(AluOp::Add),
+                Box::new(Expr::Var(v)),
+                Box::new(Expr::Bin(BinOp::I(AluOp::Or), Box::new(Expr::Var(idx)), Box::new(Expr::Imm(1)))),
+            ),
+            addr,
+            width: Width::W8,
+        },
+    ])
+}
+
+pub fn sizes(scale: Scale) -> (u64, u64) {
+    match scale {
+        Scale::Tiny => (oracle_shapes::GUPS_TABLE, oracle_shapes::GUPS_N),
+        Scale::Small => (1 << 13, 1200),
+        Scale::Full => (1 << 21, 100_000), // 16 MB table >> LLC
+    }
+}
+
+impl Benchmark for Gups {
+    fn spec(&self) -> BenchSpec {
+        BenchSpec { name: "gups", suite: "HPCC", remote: "Table" }
+    }
+
+    fn instance(&self, scale: Scale, seed: u64) -> Result<Instance> {
+        let (words, n) = sizes(scale);
+        let mut mem = MemImage::new();
+        let mut rng = Rng::new(seed);
+        let init: Vec<i64> = (0..words).map(|_| (rng.next_u64() >> 1) as i64).collect();
+        let tab = mem.alloc_init_i64("table", AddrSpace::Remote, &init);
+        // Native oracle.
+        let mask = (words - 1) as i64;
+        let mut expected = init;
+        for i in 0..n as i64 {
+            let idx = (i.wrapping_mul(PERM)) & mask;
+            expected[idx as usize] = expected[idx as usize].wrapping_add(idx | 1);
+        }
+        let check = move |m: &MemImage| -> Result<()> {
+            let r = m.region("table").expect("table region");
+            for (j, want) in expected.iter().enumerate() {
+                let got = m.read(r.base + (j as u64) * 8, Width::W8)?;
+                ensure!(got == *want, "table[{j}] = {got}, want {want}");
+            }
+            Ok(())
+        };
+        Ok(Instance {
+            kernel: kernel(),
+            mem,
+            params: vec![tab as i64, mask, n as i64],
+            check: Box::new(check),
+            default_tasks: 64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::testutil::run_all_variants;
+
+    #[test]
+    fn all_variants_pass_oracle_and_amu_wins() {
+        let rs = run_all_variants(&Gups);
+        let serial = rs[0].1.cycles as f64;
+        let full = rs[4].1.cycles as f64;
+        assert!(serial / full > 1.5, "GUPS Full speedup {:.2}", serial / full);
+    }
+
+    #[test]
+    fn indices_are_distinct() {
+        let (words, n) = sizes(Scale::Small);
+        let mask = (words - 1) as i64;
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..n as i64 {
+            assert!(seen.insert(i.wrapping_mul(PERM) & mask), "collision at {i}");
+        }
+    }
+}

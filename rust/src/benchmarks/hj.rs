@@ -1,0 +1,233 @@
+//! HJ: hash-join probe (paper Listing 1). Remote structures:
+//! `relation->tuples` and `ht->buckets`. Buckets are 64-byte records
+//! `{cnt, next, k0..k3, pad}` chained by index; probing walks the chain
+//! counting key matches into the `matches` accumulator — the paper's
+//! `shared_var(matches)` pragma example. The six in-bucket field loads are
+//! constant-delta within one line, so the coalescer fuses them into a
+//! single coarse-grained fetch (§III-C case 1).
+
+use super::{oracle_shapes, BenchSpec, Benchmark, Instance, Scale};
+use crate::compiler::ast::*;
+use crate::ir::{AddrSpace, AluOp, Width};
+use crate::sim::{mix64, MemImage};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+pub struct HashJoin;
+
+const BUCKET_BYTES: i64 = 64;
+// Bucket field offsets.
+const F_CNT: i64 = 0;
+const F_NEXT: i64 = 8;
+const F_KEYS: i64 = 16; // k0..k3
+
+fn bin(op: AluOp, a: Expr, b: Expr) -> Expr {
+    Expr::Bin(BinOp::I(op), Box::new(a), Box::new(b))
+}
+
+pub fn kernel() -> Kernel {
+    let mut kb = KernelBuilder::new("hj");
+    let tuples = kb.param_ptr("tuples", AddrSpace::Remote);
+    let buckets = kb.param_ptr("buckets", AddrSpace::Remote);
+    let res = kb.param_ptr("result", AddrSpace::Local);
+    let bmask = kb.param_val("bmask");
+    let n = kb.param_val("num_tuples");
+    kb.trip(n);
+    kb.num_tasks(64);
+    let key = kb.var("key");
+    let b = kb.var("b"); // current bucket index, -1 terminates
+    let cnt = kb.var("cnt");
+    let nxt = kb.var("nxt");
+    let k0 = kb.var("k0");
+    let k1 = kb.var("k1");
+    let k2 = kb.var("k2");
+    let k3 = kb.var("k3");
+    let matches = kb.var("matches");
+    kb.shared_var(matches);
+    let bucket_addr = |field: i64| {
+        Expr::add(
+            Expr::Param(buckets),
+            Expr::add(Expr::mul(Expr::Var(b), Expr::Imm(BUCKET_BYTES)), Expr::Imm(field)),
+        )
+    };
+    // matches += (j < cnt) & (kj == key), unrolled j = 0..3.
+    let tally = |kj: VarId, j: i64| Stmt::Let {
+        var: matches,
+        expr: bin(
+            AluOp::Add,
+            Expr::Var(matches),
+            bin(
+                AluOp::And,
+                bin(AluOp::Slt, Expr::Imm(j), Expr::Var(cnt)),
+                bin(AluOp::Seq, Expr::Var(kj), Expr::Var(key)),
+            ),
+        ),
+    };
+    kb.build(vec![
+        Stmt::Load {
+            var: key,
+            addr: Expr::add(Expr::Param(tuples), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(4))),
+            width: Width::W8,
+        },
+        Stmt::Let {
+            var: b,
+            expr: Expr::and(
+                Expr::Bin(BinOp::I(AluOp::Hash), Box::new(Expr::Var(key)), Box::new(Expr::Imm(0))),
+                Expr::Param(bmask),
+            ),
+        },
+        Stmt::While {
+            cond: bin(AluOp::Sne, Expr::Var(b), Expr::Imm(-1)),
+            body: vec![
+                // One 48-byte coarse fetch after coalescing.
+                Stmt::Load { var: cnt, addr: bucket_addr(F_CNT), width: Width::W8 },
+                Stmt::Load { var: nxt, addr: bucket_addr(F_NEXT), width: Width::W8 },
+                Stmt::Load { var: k0, addr: bucket_addr(F_KEYS), width: Width::W8 },
+                Stmt::Load { var: k1, addr: bucket_addr(F_KEYS + 8), width: Width::W8 },
+                Stmt::Load { var: k2, addr: bucket_addr(F_KEYS + 16), width: Width::W8 },
+                Stmt::Load { var: k3, addr: bucket_addr(F_KEYS + 24), width: Width::W8 },
+                tally(k0, 0),
+                tally(k1, 1),
+                tally(k2, 2),
+                tally(k3, 3),
+                Stmt::Let { var: b, expr: Expr::Var(nxt) },
+            ],
+        },
+        // Publish the running count; the final completion writes the total.
+        Stmt::Store { val: Expr::Var(matches), addr: Expr::Param(res), width: Width::W8 },
+    ])
+}
+
+/// (buckets, tuples). Overflow chain buckets live past `buckets`.
+pub fn sizes(scale: Scale) -> (u64, u64) {
+    match scale {
+        Scale::Tiny => (oracle_shapes::HJ_BUCKETS, oracle_shapes::HJ_TUPLES),
+        Scale::Small => (1 << 10, 1500),
+        Scale::Full => (1 << 17, 1 << 18), // 8MB+ buckets, 4MB tuples
+    }
+}
+
+/// Deterministic host-side hash-table build; returns flat bucket memory
+/// (base region includes overflow area) and the expected match count.
+pub fn build_table(nbuckets: u64, build_keys: &[i64]) -> (Vec<i64>, u64) {
+    let words = (BUCKET_BYTES / 8) as usize;
+    // Overflow pool: half again as many buckets.
+    let total = nbuckets as usize + nbuckets as usize / 2 + 4;
+    let mut flat = vec![0i64; total * words];
+    for c in 0..total {
+        flat[c * words + (F_NEXT / 8) as usize] = -1;
+    }
+    let mut next_free = nbuckets as usize;
+    for &k in build_keys {
+        let mut bi = (mix64(k as u64) & (nbuckets - 1)) as usize;
+        loop {
+            let cnt = flat[bi * words] as usize;
+            if cnt < 4 {
+                flat[bi * words + (F_KEYS / 8) as usize + cnt] = k;
+                flat[bi * words] = (cnt + 1) as i64;
+                break;
+            }
+            let nxt = flat[bi * words + 1];
+            if nxt == -1 {
+                assert!(next_free < total, "overflow pool exhausted");
+                flat[bi * words + 1] = next_free as i64;
+                bi = next_free;
+                next_free += 1;
+            } else {
+                bi = nxt as usize;
+            }
+        }
+    }
+    (flat, next_free as u64)
+}
+
+impl Benchmark for HashJoin {
+    fn spec(&self) -> BenchSpec {
+        BenchSpec { name: "hj", suite: "Hash Join", remote: "relation->tuples, ht->buckets" }
+    }
+
+    fn instance(&self, scale: Scale, seed: u64) -> Result<Instance> {
+        let (nbuckets, ntuples) = sizes(scale);
+        let mut rng = Rng::new(seed);
+        // Build side: nbuckets*2 keys drawn from a domain that overlaps the
+        // probe side ~50%.
+        let domain = (nbuckets * 4) as u64;
+        let build_keys: Vec<i64> = (0..nbuckets * 2).map(|_| rng.below(domain) as i64).collect();
+        let (flat, _) = build_table(nbuckets, &build_keys);
+
+        let mut mem = MemImage::new();
+        // Probe tuples + expected matches (native probe).
+        let mut expected: u64 = 0;
+        let words = (BUCKET_BYTES / 8) as usize;
+        let mut tuple_words = Vec::with_capacity(2 * ntuples as usize);
+        for i in 0..ntuples {
+            let key = rng.below(domain) as i64;
+            tuple_words.push(key);
+            tuple_words.push(i as i64); // payload
+            let mut bi = (mix64(key as u64) & (nbuckets - 1)) as i64;
+            while bi != -1 {
+                let cnt = flat[bi as usize * words];
+                for j in 0..4 {
+                    if (j as i64) < cnt && flat[bi as usize * words + 2 + j] == key {
+                        expected += 1;
+                    }
+                }
+                bi = flat[bi as usize * words + 1];
+            }
+        }
+        let tuples = mem.alloc_init_i64("tuples", AddrSpace::Remote, &tuple_words);
+        let buckets = mem.alloc_init_i64("buckets", AddrSpace::Remote, &flat);
+        let res = mem.alloc("result", AddrSpace::Local, 8);
+        let check = move |m: &MemImage| -> Result<()> {
+            let r = m.region("result").expect("result region");
+            let got = m.read(r.base, Width::W8)? as u64;
+            ensure!(got == expected, "matches = {got}, want {expected}");
+            Ok(())
+        };
+        Ok(Instance {
+            kernel: kernel(),
+            mem,
+            params: vec![tuples as i64, buckets as i64, res as i64, (nbuckets - 1) as i64, ntuples as i64],
+            check: Box::new(check),
+            default_tasks: 64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::testutil::run_all_variants;
+    use crate::compiler::{analysis, coalesce};
+
+    #[test]
+    fn all_variants_pass_oracle() {
+        let rs = run_all_variants(&HashJoin);
+        assert!(rs.iter().all(|(_, st)| st.cycles > 0));
+    }
+
+    #[test]
+    fn bucket_fields_fuse_into_coarse_fetch() {
+        let an = analysis::analyze(&kernel()).unwrap();
+        let plan = coalesce::plan(&an, 8, 4096);
+        let coarse = plan
+            .groups
+            .iter()
+            .find(|g| matches!(g.kind, coalesce::GroupKind::Coarse { .. }))
+            .expect("bucket loads should merge coarsely");
+        assert_eq!(coarse.members.len(), 6);
+        match coarse.kind {
+            coalesce::GroupKind::Coarse { span_bytes, .. } => assert_eq!(span_bytes, 48),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn build_table_counts_are_consistent() {
+        let keys = vec![1, 2, 3, 1, 1, 2];
+        let (flat, _) = build_table(8, &keys);
+        let words = 8;
+        let total_stored: i64 = (0..flat.len() / words).map(|b| flat[b * words].min(4)).sum();
+        assert_eq!(total_stored, 6);
+    }
+}

@@ -1,0 +1,108 @@
+//! IS (NPB Integer Sort representative kernel): the key-histogram phase.
+//! Remote structures: `keys` (streamed) and `histogram` (random atomic
+//! increments). Under dynamic AMU scheduling the remote atomic expands
+//! into the §III-E await/asignal lock hand-off procedure — this benchmark
+//! is the synchronization stress test.
+
+use super::{BenchSpec, Benchmark, Instance, Scale};
+use crate::compiler::ast::*;
+use crate::ir::{AddrSpace, AluOp, Width};
+use crate::sim::MemImage;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+pub struct IntSort;
+
+pub fn kernel() -> Kernel {
+    let mut kb = KernelBuilder::new("is");
+    let keys = kb.param_ptr("keys", AddrSpace::Remote);
+    let hist = kb.param_ptr("histogram", AddrSpace::Remote);
+    let n = kb.param_val("num_keys");
+    kb.trip(n);
+    kb.num_tasks(48);
+    let k = kb.var("k");
+    kb.build(vec![
+        Stmt::Load {
+            var: k,
+            addr: Expr::add(Expr::Param(keys), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))),
+            width: Width::W8,
+        },
+        Stmt::AtomicRmw {
+            op: AluOp::Add,
+            old: None,
+            addr: Expr::add(Expr::Param(hist), Expr::shl(Expr::Var(k), Expr::Imm(3))),
+            val: Expr::Imm(1),
+            width: Width::W8,
+        },
+    ])
+}
+
+/// (key_count, bucket_count)
+pub fn sizes(scale: Scale) -> (u64, u64) {
+    match scale {
+        Scale::Tiny => (1 << 10, 1 << 8),
+        Scale::Small => (1200, 1 << 10),
+        Scale::Full => (1 << 18, 1 << 15), // 2MB keys, 256KB histogram
+    }
+}
+
+impl Benchmark for IntSort {
+    fn spec(&self) -> BenchSpec {
+        BenchSpec { name: "is", suite: "NPB", remote: "keys, histogram (all of malloc())" }
+    }
+
+    fn instance(&self, scale: Scale, seed: u64) -> Result<Instance> {
+        let (nkeys, nbuckets) = sizes(scale);
+        let mut rng = Rng::new(seed);
+        let mut mem = MemImage::new();
+        let mut expected = vec![0i64; nbuckets as usize];
+        let key_words: Vec<i64> = (0..nkeys)
+            .map(|_| {
+                let k = rng.below(nbuckets) as i64;
+                expected[k as usize] += 1;
+                k
+            })
+            .collect();
+        let keys = mem.alloc_init_i64("keys", AddrSpace::Remote, &key_words);
+        let hist = mem.alloc("histogram", AddrSpace::Remote, nbuckets * 8);
+        let check = move |m: &MemImage| -> Result<()> {
+            let r = m.region("histogram").expect("histogram region");
+            for (j, want) in expected.iter().enumerate() {
+                let got = m.read(r.base + (j as u64) * 8, Width::W8)?;
+                ensure!(got == *want, "hist[{j}] = {got}, want {want}");
+            }
+            Ok(())
+        };
+        Ok(Instance {
+            kernel: kernel(),
+            mem,
+            params: vec![keys as i64, hist as i64, nkeys as i64],
+            check: Box::new(check),
+            default_tasks: 48,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::testutil::run_all_variants;
+    use crate::benchmarks::{execute, Scale};
+    use crate::compiler::Variant;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn all_variants_pass_oracle_including_atomics() {
+        let rs = run_all_variants(&IntSort);
+        assert!(rs.iter().all(|(_, st)| st.cycles > 0));
+    }
+
+    #[test]
+    fn dynamic_variant_exercises_await_asignal() {
+        let cfg = SimConfig::nh_g();
+        let inst = IntSort.instance(Scale::Small, 7).unwrap();
+        let st = execute(&cfg, inst, Variant::CoroAmuFull, 96).unwrap();
+        // Histogram contention must trigger at least a few lock waits.
+        assert!(st.awaits > 0, "expected await/asignal activity, got none");
+    }
+}

@@ -1,0 +1,155 @@
+//! lbm (519.lbm_r representative kernel): a 5-point stream-collide step
+//! over a W x H lattice, `dst[c] = omega * (src[c-W] + src[c-1] + src[c] +
+//! src[c+1] + src[c+W])`. Remote structures: `srcGrid`, `dstGrid`.
+//! Strong spatial locality: serial runs ride the BOP prefetcher, while the
+//! row-distance offsets exceed the 4KB coarse-grain limit so CoroAMU falls
+//! back to an `aset` group of five line fetches — reproducing the paper's
+//! observation that bandwidth-bound stencils gain the least.
+
+use super::{BenchSpec, Benchmark, Instance, Scale};
+use crate::compiler::ast::*;
+use crate::ir::{AddrSpace, FaluOp, Width};
+use crate::sim::MemImage;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+pub struct Lbm;
+
+pub const OMEGA: f64 = 0.2;
+
+fn fadd(a: Expr, b: Expr) -> Expr {
+    Expr::Bin(BinOp::F(FaluOp::FAdd), Box::new(a), Box::new(b))
+}
+
+/// Width is a compile-time constant per instance so offsets are constant
+/// (as in the real lbm where the grid dimensions are macros).
+pub fn kernel(w: i64) -> Kernel {
+    let mut kb = KernelBuilder::new("lbm");
+    let src = kb.param_ptr("srcGrid", AddrSpace::Remote);
+    let dst = kb.param_ptr("dstGrid", AddrSpace::Remote);
+    let n = kb.param_val("num_cells");
+    kb.trip(n);
+    kb.num_tasks(48);
+    let c = kb.var("c");
+    let up = kb.var("up");
+    let left = kb.var("left");
+    let mid = kb.var("mid");
+    let right = kb.var("right");
+    let down = kb.var("down");
+    let acc = kb.var("acc");
+    let at = |delta: i64| {
+        Expr::add(
+            Expr::Param(src),
+            Expr::add(Expr::shl(Expr::Var(c), Expr::Imm(3)), Expr::Imm(delta * 8)),
+        )
+    };
+    kb.build(vec![
+        // Cell index skips the first row: c = i + W.
+        Stmt::Let { var: c, expr: Expr::add(Expr::Var(ITER_VAR), Expr::Imm(w)) },
+        Stmt::Load { var: up, addr: at(-w), width: Width::W8 },
+        Stmt::Load { var: left, addr: at(-1), width: Width::W8 },
+        Stmt::Load { var: mid, addr: at(0), width: Width::W8 },
+        Stmt::Load { var: right, addr: at(1), width: Width::W8 },
+        Stmt::Load { var: down, addr: at(w), width: Width::W8 },
+        Stmt::Let {
+            var: acc,
+            expr: Expr::Bin(
+                BinOp::F(FaluOp::FMul),
+                Box::new(Expr::FImm(OMEGA)),
+                Box::new(fadd(
+                    fadd(fadd(Expr::Var(up), Expr::Var(left)), fadd(Expr::Var(mid), Expr::Var(right))),
+                    Expr::Var(down),
+                )),
+            ),
+        },
+        Stmt::Store {
+            val: Expr::Var(acc),
+            addr: Expr::add(Expr::Param(dst), Expr::shl(Expr::Var(c), Expr::Imm(3))),
+            width: Width::W8,
+        },
+    ])
+}
+
+/// (W, H): lattice dimensions.
+pub fn sizes(scale: Scale) -> (i64, i64) {
+    match scale {
+        Scale::Tiny => (128, 8),
+        Scale::Small => (256, 12),
+        Scale::Full => (1024, 512), // 4 MB per grid
+    }
+}
+
+impl Benchmark for Lbm {
+    fn spec(&self) -> BenchSpec {
+        BenchSpec { name: "lbm", suite: "SPEC2017 (519.lbm_r)", remote: "srcGrid, dstGrid" }
+    }
+
+    fn instance(&self, scale: Scale, seed: u64) -> Result<Instance> {
+        let (w, h) = sizes(scale);
+        let cells = (w * h) as u64;
+        let trip = (w * (h - 2)) as u64;
+        let mut rng = Rng::new(seed);
+        let mut mem = MemImage::new();
+        let grid: Vec<f64> = (0..cells).map(|_| rng.f64()).collect();
+        let bits: Vec<i64> = grid.iter().map(|g| g.to_bits() as i64).collect();
+        let src = mem.alloc_init_i64("srcGrid", AddrSpace::Remote, &bits);
+        let dst = mem.alloc("dstGrid", AddrSpace::Remote, cells * 8);
+        let mut expected = vec![0f64; cells as usize];
+        for i in 0..trip as usize {
+            let c = i + w as usize;
+            // Same association as the kernel's expression tree:
+            // ((up+left) + (mid+right)) + down.
+            expected[c] = OMEGA
+                * (((grid[c - w as usize] + grid[c - 1]) + (grid[c] + grid[c + 1]))
+                    + grid[c + w as usize]);
+        }
+        let check = move |m: &MemImage| -> Result<()> {
+            let r = m.region("dstGrid").expect("dstGrid region");
+            for (j, want) in expected.iter().enumerate() {
+                let got = f64::from_bits(m.read(r.base + (j as u64) * 8, Width::W8)? as u64);
+                ensure!(got == *want, "dst[{j}] = {got}, want {want}");
+            }
+            Ok(())
+        };
+        Ok(Instance {
+            kernel: kernel(w),
+            mem,
+            params: vec![src as i64, dst as i64, trip as i64],
+            check: Box::new(check),
+            default_tasks: 48,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::testutil::run_all_variants;
+    use crate::compiler::{analysis, coalesce};
+
+    #[test]
+    fn all_variants_pass_oracle() {
+        let rs = run_all_variants(&Lbm);
+        assert!(rs.iter().all(|(_, st)| st.cycles > 0));
+    }
+
+    #[test]
+    fn wide_stencil_falls_back_to_aset_group() {
+        // Full-scale W=1024: row offsets are 8KB apart -> no coarse merge,
+        // one aset group of 5.
+        let an = analysis::analyze(&kernel(1024)).unwrap();
+        let plan = coalesce::plan(&an, 8, 4096);
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.groups[0].members.len(), 5);
+        assert!(matches!(plan.groups[0].kind, coalesce::GroupKind::Set));
+    }
+
+    #[test]
+    fn narrow_stencil_merges_coarsely() {
+        // W=64: span = 2*64*8 + 8 = 1032 bytes <= 4KB -> coarse.
+        let an = analysis::analyze(&kernel(64)).unwrap();
+        let plan = coalesce::plan(&an, 8, 4096);
+        assert_eq!(plan.groups.len(), 1);
+        assert!(matches!(plan.groups[0].kind, coalesce::GroupKind::Coarse { .. }));
+    }
+}

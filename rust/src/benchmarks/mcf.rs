@@ -1,0 +1,140 @@
+//! mcf (505.mcf_r representative kernel): reduced-cost scan over the arc
+//! array. Remote structures: `net->nodes` (potentials), `net->arcs`. Each
+//! arc record fetch is a coarse-merge candidate; the two node-potential
+//! loads are independent random accesses that fuse under one `aset` id.
+
+use super::{BenchSpec, Benchmark, Instance, Scale};
+use crate::compiler::ast::*;
+use crate::ir::{AddrSpace, AluOp, Width};
+use crate::sim::MemImage;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+pub struct Mcf;
+
+const ARC_BYTES: i64 = 32; // {tail, head, cost, pad}
+
+fn bin(op: AluOp, a: Expr, b: Expr) -> Expr {
+    Expr::Bin(BinOp::I(op), Box::new(a), Box::new(b))
+}
+
+pub fn kernel() -> Kernel {
+    let mut kb = KernelBuilder::new("mcf");
+    let arcs = kb.param_ptr("arcs", AddrSpace::Remote);
+    let nodes = kb.param_ptr("nodes", AddrSpace::Remote);
+    let res = kb.param_ptr("result", AddrSpace::Local);
+    let n = kb.param_val("num_arcs");
+    kb.trip(n);
+    kb.num_tasks(64);
+    let tail = kb.var("tail");
+    let head = kb.var("head");
+    let cost = kb.var("cost");
+    let pt = kb.var("pt");
+    let ph = kb.var("ph");
+    let red = kb.var("red");
+    let neg = kb.var("neg");
+    kb.shared_var(neg);
+    let arc_base = Expr::add(Expr::Param(arcs), Expr::mul(Expr::Var(ITER_VAR), Expr::Imm(ARC_BYTES)));
+    kb.build(vec![
+        // Arc record: three constant-delta loads -> one coarse fetch.
+        Stmt::Load { var: tail, addr: arc_base.clone(), width: Width::W8 },
+        Stmt::Load { var: head, addr: Expr::add(arc_base.clone(), Expr::Imm(8)), width: Width::W8 },
+        Stmt::Load { var: cost, addr: Expr::add(arc_base, Expr::Imm(16)), width: Width::W8 },
+        // Node potentials: independent random loads -> aset pair.
+        Stmt::Load {
+            var: pt,
+            addr: Expr::add(Expr::Param(nodes), Expr::shl(Expr::Var(tail), Expr::Imm(3))),
+            width: Width::W8,
+        },
+        Stmt::Load {
+            var: ph,
+            addr: Expr::add(Expr::Param(nodes), Expr::shl(Expr::Var(head), Expr::Imm(3))),
+            width: Width::W8,
+        },
+        Stmt::Let {
+            var: red,
+            expr: bin(AluOp::Add, bin(AluOp::Sub, Expr::Var(cost), Expr::Var(pt)), Expr::Var(ph)),
+        },
+        Stmt::Let {
+            var: neg,
+            expr: bin(AluOp::Add, Expr::Var(neg), bin(AluOp::Slt, Expr::Var(red), Expr::Imm(0))),
+        },
+        Stmt::Store { val: Expr::Var(neg), addr: Expr::Param(res), width: Width::W8 },
+    ])
+}
+
+/// (nodes, arcs)
+pub fn sizes(scale: Scale) -> (u64, u64) {
+    match scale {
+        Scale::Tiny => (1 << 10, 1 << 11),
+        Scale::Small => (1 << 12, 1500),
+        Scale::Full => (1 << 18, 1 << 19), // 2MB nodes, 16MB arcs
+    }
+}
+
+impl Benchmark for Mcf {
+    fn spec(&self) -> BenchSpec {
+        BenchSpec { name: "mcf", suite: "SPEC2017 (505.mcf_r)", remote: "net->nodes, net->arcs" }
+    }
+
+    fn instance(&self, scale: Scale, seed: u64) -> Result<Instance> {
+        let (nnodes, narcs) = sizes(scale);
+        let mut rng = Rng::new(seed);
+        let mut mem = MemImage::new();
+        let pi: Vec<i64> = (0..nnodes).map(|_| rng.range(0, 2000) as i64 - 1000).collect();
+        let mut expected: i64 = 0;
+        let mut arc_words = Vec::with_capacity(4 * narcs as usize);
+        for _ in 0..narcs {
+            let t = rng.below(nnodes) as i64;
+            let h = rng.below(nnodes) as i64;
+            let c = rng.range(0, 100) as i64 - 50;
+            arc_words.extend_from_slice(&[t, h, c, 0]);
+            if c - pi[t as usize] + pi[h as usize] < 0 {
+                expected += 1;
+            }
+        }
+        let arcs = mem.alloc_init_i64("arcs", AddrSpace::Remote, &arc_words);
+        let nodes = mem.alloc_init_i64("nodes", AddrSpace::Remote, &pi);
+        let res = mem.alloc("result", AddrSpace::Local, 8);
+        let check = move |m: &MemImage| -> Result<()> {
+            let r = m.region("result").expect("result region");
+            let got = m.read(r.base, Width::W8)?;
+            ensure!(got == expected, "negative-reduced-cost count = {got}, want {expected}");
+            Ok(())
+        };
+        Ok(Instance {
+            kernel: kernel(),
+            mem,
+            params: vec![arcs as i64, nodes as i64, res as i64, narcs as i64],
+            check: Box::new(check),
+            default_tasks: 64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::testutil::run_all_variants;
+    use crate::compiler::{analysis, coalesce};
+
+    #[test]
+    fn all_variants_pass_oracle() {
+        let rs = run_all_variants(&Mcf);
+        let serial = rs[0].1.cycles as f64;
+        let full = rs[4].1.cycles as f64;
+        assert!(serial / full > 1.2, "mcf Full speedup {:.2}", serial / full);
+    }
+
+    #[test]
+    fn arc_record_coarse_and_potentials_grouped() {
+        let an = analysis::analyze(&kernel()).unwrap();
+        let plan = coalesce::plan(&an, 8, 4096);
+        // Group 1: arc fields coarse (3 members); the potential loads
+        // depend on the arc fields so they form their own group.
+        assert!(plan.groups.len() >= 1);
+        let g0 = &plan.groups[0];
+        assert!(matches!(g0.kind, coalesce::GroupKind::Coarse { .. }));
+        assert_eq!(g0.members.len(), 3);
+    }
+}

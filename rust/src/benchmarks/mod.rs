@@ -1,0 +1,178 @@
+//! The paper's eight memory-bound benchmarks (Table II), written against
+//! the compiler's kernel AST with their remote structures allocated in the
+//! far-memory address space.
+//!
+//! | Suite        | Benchmark | Remote structures            |
+//! |--------------|-----------|------------------------------|
+//! | HPCC         | GUPS      | table                        |
+//! | Binary Search| BS        | sorted_array                 |
+//! | Graph500     | BFS       | graph (vlist/elist), bfs_tree|
+//! | STREAM       | STREAM    | a, b, c                      |
+//! | Hash Join    | HJ        | tuples, ht->buckets          |
+//! | SPEC2017     | mcf       | net->nodes, net->arcs        |
+//! | SPEC2017     | lbm       | srcGrid, dstGrid             |
+//! | NPB          | IS        | keys, histogram              |
+//!
+//! mcf/lbm/IS are representative kernels of the SPEC/NPB originals (arc
+//! price scan, 5-point stream-collide step, key histogram); DESIGN.md §1
+//! documents the substitution.
+
+pub mod bfs;
+pub mod bs;
+pub mod gups;
+pub mod hj;
+pub mod is;
+pub mod lbm;
+pub mod mcf;
+pub mod stream;
+
+use crate::compiler::ast::Kernel;
+use crate::compiler::{compile, Variant};
+use crate::config::SimConfig;
+use crate::sim::{self, MemImage, RunStats};
+use anyhow::Result;
+
+/// Problem scale. `Tiny` uses the fixed shapes shared with the AOT JAX
+/// oracle artifacts (see [`oracle_shapes`]); `Small` runs in unit tests;
+/// `Full` is used by the figure harness (datasets exceed the LLC).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Tiny,
+    Small,
+    Full,
+}
+
+/// Fixed shapes for the Python-side golden-model artifacts. The AOT HLO
+/// is lowered once at these shapes; `Scale::Tiny` instances match them so
+/// the PJRT runtime can cross-validate simulator memory.
+pub mod oracle_shapes {
+    pub const GUPS_TABLE: u64 = 4096;
+    pub const GUPS_N: u64 = 512;
+    pub const STREAM_N: u64 = 4096;
+    pub const BS_KEYS: u64 = 4096;
+    pub const BS_QUERIES: u64 = 256;
+    pub const HJ_BUCKETS: u64 = 512;
+    pub const HJ_TUPLES: u64 = 1024;
+}
+
+/// A fully materialized benchmark run: kernel + datasets + oracle.
+pub struct Instance {
+    pub kernel: Kernel,
+    pub mem: MemImage,
+    pub params: Vec<i64>,
+    /// Native oracle: validates the final memory image.
+    pub check: Box<dyn Fn(&MemImage) -> Result<()> + Send>,
+    /// Default concurrency used by the paper for this workload.
+    pub default_tasks: usize,
+}
+
+/// Static description (Table II row).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchSpec {
+    pub name: &'static str,
+    pub suite: &'static str,
+    pub remote: &'static str,
+}
+
+pub trait Benchmark: Sync {
+    fn spec(&self) -> BenchSpec;
+    fn instance(&self, scale: Scale, seed: u64) -> Result<Instance>;
+}
+
+/// All eight benchmarks, in Table II order.
+pub fn all() -> Vec<Box<dyn Benchmark>> {
+    vec![
+        Box::new(gups::Gups),
+        Box::new(bs::BinarySearch),
+        Box::new(bfs::Bfs),
+        Box::new(stream::Stream),
+        Box::new(hj::HashJoin),
+        Box::new(mcf::Mcf),
+        Box::new(lbm::Lbm),
+        Box::new(is::IntSort),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<Box<dyn Benchmark>> {
+    all().into_iter().find(|b| b.spec().name.eq_ignore_ascii_case(name))
+}
+
+/// Compile an instance under explicit codegen options, run it on `cfg`,
+/// validate the result with the native oracle, and return the stats.
+/// Used by the ablation figures (14/15) which toggle individual
+/// optimizations rather than whole variants.
+pub fn execute_opts(
+    cfg: &SimConfig,
+    inst: Instance,
+    opts: &crate::compiler::CodegenOpts,
+) -> Result<RunStats> {
+    let ck = compile(&inst.kernel, opts, &cfg.amu)?;
+    let mut prog = sim::link(cfg, &ck, inst.mem, &inst.params);
+    let stats = sim::run(cfg, &mut prog)?;
+    (inst.check)(&prog.mem)?;
+    Ok(stats)
+}
+
+/// Compile an instance under `variant`, run it on `cfg`, validate the
+/// result with the native oracle, and return the stats.
+pub fn execute(cfg: &SimConfig, inst: Instance, variant: Variant, tasks: usize) -> Result<RunStats> {
+    execute_opts(cfg, inst, &variant.opts(tasks))
+}
+
+/// Table II rendered from the registry.
+pub fn table2() -> crate::util::table::Table {
+    let mut t = crate::util::table::Table::new(
+        "Table II: Benchmarks and transformed structures",
+        &["Suite", "Benchmark", "Remote Structure"],
+    );
+    for b in all() {
+        let s = b.spec();
+        t.row(vec![s.suite.into(), s.name.into(), s.remote.into()]);
+    }
+    t
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Run a benchmark at Small scale across all five variants, checking
+    /// the oracle each time; returns (variant, stats).
+    pub fn run_all_variants(b: &dyn Benchmark) -> Vec<(Variant, RunStats)> {
+        let cfg = SimConfig::nh_g();
+        Variant::ALL
+            .iter()
+            .map(|v| {
+                let inst = b.instance(Scale::Small, 42).unwrap();
+                let tasks = if v.needs_amu() { 96 } else { 16 };
+                let st = execute(&cfg, inst, *v, tasks)
+                    .unwrap_or_else(|e| panic!("{} under {}: {e:#}", b.spec().name, v.label()));
+                (*v, st)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_eight_in_table2_order() {
+        let names: Vec<&str> = all().iter().map(|b| b.spec().name).collect();
+        assert_eq!(names, vec!["gups", "bs", "bfs", "stream", "hj", "mcf", "lbm", "is"]);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("GUPS").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn table2_renders() {
+        let s = table2().render();
+        assert!(s.contains("Graph500"));
+        assert!(s.contains("sorted_array"));
+    }
+}

@@ -1,0 +1,110 @@
+//! STREAM triad: `a[i] = b[i] + s * c[i]` over f64 arrays. Remote
+//! structures: `a`, `b`, `c`. Bandwidth-bound with perfect spatial
+//! locality — the case where the paper observes serial+BOP competitive at
+//! low latency and coalescing (`aset` on the two loads) helping CoroAMU.
+
+use super::{oracle_shapes, BenchSpec, Benchmark, Instance, Scale};
+use crate::compiler::ast::*;
+use crate::ir::{AddrSpace, FaluOp, Width};
+use crate::sim::MemImage;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+pub struct Stream;
+
+pub const SCALAR: f64 = 3.0;
+
+pub fn kernel() -> Kernel {
+    let mut kb = KernelBuilder::new("stream");
+    let a = kb.param_ptr("a", AddrSpace::Remote);
+    let b = kb.param_ptr("b", AddrSpace::Remote);
+    let c = kb.param_ptr("c", AddrSpace::Remote);
+    let s = kb.param_val("scalar");
+    let n = kb.param_val("n");
+    kb.trip(n);
+    kb.num_tasks(64);
+    let x = kb.var("x");
+    let y = kb.var("y");
+    let t = kb.var("t");
+    let off = Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3));
+    kb.build(vec![
+        Stmt::Load { var: x, addr: Expr::add(Expr::Param(b), off.clone()), width: Width::W8 },
+        Stmt::Load { var: y, addr: Expr::add(Expr::Param(c), off.clone()), width: Width::W8 },
+        Stmt::Let {
+            var: t,
+            expr: Expr::Bin(
+                BinOp::F(FaluOp::FAdd),
+                Box::new(Expr::Var(x)),
+                Box::new(Expr::Bin(BinOp::F(FaluOp::FMul), Box::new(Expr::Param(s)), Box::new(Expr::Var(y)))),
+            ),
+        },
+        Stmt::Store { val: Expr::Var(t), addr: Expr::add(Expr::Param(a), off), width: Width::W8 },
+    ])
+}
+
+pub fn sizes(scale: Scale) -> u64 {
+    match scale {
+        Scale::Tiny => oracle_shapes::STREAM_N,
+        Scale::Small => 1 << 12,
+        Scale::Full => 1 << 19, // 3 x 4 MB >> LLC
+    }
+}
+
+impl Benchmark for Stream {
+    fn spec(&self) -> BenchSpec {
+        BenchSpec { name: "stream", suite: "STREAM", remote: "a, b, c" }
+    }
+
+    fn instance(&self, scale: Scale, seed: u64) -> Result<Instance> {
+        let n = sizes(scale);
+        let mut mem = MemImage::new();
+        let mut rng = Rng::new(seed);
+        let bv: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let cv: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let expected: Vec<f64> = bv.iter().zip(&cv).map(|(b, c)| b + SCALAR * c).collect();
+        let a = mem.alloc("a", AddrSpace::Remote, n * 8);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits() as i64).collect::<Vec<_>>();
+        let b = mem.alloc_init_i64("b", AddrSpace::Remote, &bits(&bv));
+        let c = mem.alloc_init_i64("c", AddrSpace::Remote, &bits(&cv));
+        let check = move |m: &MemImage| -> Result<()> {
+            let r = m.region("a").expect("a region");
+            for (j, want) in expected.iter().enumerate() {
+                let got = f64::from_bits(m.read(r.base + (j as u64) * 8, Width::W8)? as u64);
+                ensure!(got == *want, "a[{j}] = {got}, want {want}");
+            }
+            Ok(())
+        };
+        Ok(Instance {
+            kernel: kernel(),
+            mem,
+            params: vec![a as i64, b as i64, c as i64, SCALAR.to_bits() as i64, n as i64],
+            check: Box::new(check),
+            default_tasks: 64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::testutil::run_all_variants;
+    use crate::compiler::{coalesce, analysis};
+
+    #[test]
+    fn all_variants_pass_oracle() {
+        let rs = run_all_variants(&Stream);
+        // Bandwidth-bound: everyone must still be correct; AMU should not
+        // be catastrophically slower than serial.
+        let serial = rs[0].1.cycles as f64;
+        let full = rs[4].1.cycles as f64;
+        assert!(full < serial * 2.0, "STREAM Full {:.2}x slower than serial", full / serial);
+    }
+
+    #[test]
+    fn triad_loads_coalesce_into_aset_group() {
+        let an = analysis::analyze(&kernel()).unwrap();
+        let plan = coalesce::plan(&an, 8, 4096);
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.groups[0].members.len(), 2, "b[i] and c[i] fuse under one aset id");
+    }
+}

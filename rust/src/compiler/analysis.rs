@@ -1,0 +1,564 @@
+//! AsyncMarkPass — analysis over the kernel AST (paper §III-A/§III-B).
+//!
+//! Produces, without modifying the kernel:
+//!  * the ordered list of **suspension sites** (remote loads/stores/atomics)
+//!    together with conservative live-after variable sets,
+//!  * the **variable classification** into private / shared / sequential
+//!    (§III-B), combining static analysis with pragma hints,
+//!  * straight-line **run ids** used by the request coalescer (§III-C finds
+//!    merge candidates only within a basic block).
+//!
+//! Variable sets are u64 bitmasks; kernels (including inlined callees) are
+//! limited to 64 variables, which all eight benchmarks satisfy easily.
+
+use super::ast::*;
+use crate::ir::{AddrSpace, AluOp, Width};
+use anyhow::{bail, Result};
+
+pub type VarSet = u64;
+
+pub fn vs_contains(s: VarSet, v: VarId) -> bool {
+    s & (1u64 << v) != 0
+}
+
+pub fn vs_insert(s: &mut VarSet, v: VarId) {
+    *s |= 1u64 << v;
+}
+
+pub fn vs_iter(s: VarSet) -> impl Iterator<Item = VarId> {
+    (0..64).filter(move |v| s & (1u64 << v) != 0)
+}
+
+pub fn vs_len(s: VarSet) -> usize {
+    s.count_ones() as usize
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SiteKind {
+    LoadRemote,
+    StoreRemote,
+    AtomicRemote,
+}
+
+/// One suspension site: a remote-memory access the coroutine transform
+/// splits the task at.
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub id: usize,
+    pub kind: SiteKind,
+    pub width: Width,
+    /// Variables that must survive across the suspension (conservative).
+    pub live_after: VarSet,
+    /// Straight-line run (basic-block equivalent) this site belongs to.
+    pub run: usize,
+    /// Variables the site's address expression (transitively) depends on.
+    pub addr_deps: VarSet,
+    /// The variable defined by this site (load destination), if any.
+    pub def: Option<VarId>,
+    /// Pointer-root parameter of the address.
+    pub root: ParamId,
+    /// Variables written between this site and the next site in program
+    /// order (used by the coalescer's dependence check).
+    pub defs_after: VarSet,
+    /// Whether a memory side-effect (store/atomic/call) occurs between this
+    /// site and the next one — a coalescing barrier (§III-C).
+    pub barrier_after: bool,
+    /// The address expression (cloned) — the coalescer matches structure
+    /// to find constant-delta (coarse-grain) merge candidates.
+    pub addr: Expr,
+}
+
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    pub sites: Vec<Site>,
+    pub classes: Vec<VarClass>,
+    /// Vars ever read in the body (params excluded).
+    pub read_vars: VarSet,
+    /// Vars ever written in the body.
+    pub written_vars: VarSet,
+    /// Total number of variables (incl. inlined callee remaps).
+    pub nvars: u32,
+}
+
+impl Analysis {
+    pub fn class(&self, v: VarId) -> VarClass {
+        self.classes[v as usize]
+    }
+
+    /// Variables to save at `site` under the given context policy.
+    /// `optimized` = §III-B context selection (only private variables).
+    /// Basic codegen (stock LLVM coroutine lowering) additionally spills
+    /// read-only values — harmless but wasteful, the paper's case 0.
+    /// Shared *accumulators* are never spilled in either mode: in the
+    /// consolidated single-function runtime they live outside the frame
+    /// (a per-frame copy would lose other tasks' updates).
+    pub fn saved_vars(&self, site: &Site, optimized: bool) -> VarSet {
+        let mut s = 0u64;
+        for v in vs_iter(site.live_after) {
+            let keep = match self.classes[v as usize] {
+                VarClass::Private => true,
+                VarClass::Sequential => false,
+                VarClass::Shared => !optimized && !vs_contains(self.written_vars, v),
+            };
+            if keep {
+                vs_insert(&mut s, v);
+            }
+        }
+        s
+    }
+
+    /// Does basic codegen spill the (read-only) parameters into the frame
+    /// as well? Stock LLVM coroutine lowering puts every captured value in
+    /// the frame; §III-B's context selection lets them bypass it.
+    pub fn spills_params(optimized: bool) -> bool {
+        !optimized
+    }
+}
+
+/// Address space of a memory statement, inferred from the pointer root
+/// (§III-G: each pointer's characteristics are static).
+pub fn stmt_space(addr: &Expr, params: &[Param]) -> Result<(AddrSpace, ParamId)> {
+    match addr.pointer_root(params) {
+        Some(p) => match params[p as usize].kind {
+            ParamKind::Ptr(sp) => Ok((sp, p)),
+            ParamKind::Value => bail!("address rooted at non-pointer param {p}"),
+        },
+        None => bail!("address expression has no unique pointer root: {addr:?}"),
+    }
+}
+
+fn expr_reads(e: &Expr) -> VarSet {
+    let mut vs = Vec::new();
+    e.vars(&mut vs);
+    let mut s = 0u64;
+    for v in vs {
+        vs_insert(&mut s, v);
+    }
+    s
+}
+
+/// All variables read anywhere in `stmts` (no kill — used as the
+/// conservative loop-carried component of liveness).
+fn reads_in(stmts: &[Stmt], kernels: &Kernel) -> VarSet {
+    let mut s = 0u64;
+    for st in stmts {
+        match st {
+            Stmt::Let { expr, .. } => s |= expr_reads(expr),
+            Stmt::Load { addr, .. } => s |= expr_reads(addr),
+            Stmt::Store { val, addr, .. } => s |= expr_reads(val) | expr_reads(addr),
+            Stmt::AtomicRmw { addr, val, .. } => s |= expr_reads(addr) | expr_reads(val),
+            Stmt::If { cond, then_, else_ } => {
+                s |= expr_reads(cond) | reads_in(then_, kernels) | reads_in(else_, kernels)
+            }
+            Stmt::While { cond, body } => s |= expr_reads(cond) | reads_in(body, kernels),
+            Stmt::Call { args, .. } => {
+                for a in args {
+                    s |= expr_reads(a);
+                }
+            }
+        }
+    }
+    s
+}
+
+fn writes_in(stmts: &[Stmt]) -> VarSet {
+    let mut s = 0u64;
+    for st in stmts {
+        match st {
+            Stmt::Let { var, .. } | Stmt::Load { var, .. } => vs_insert(&mut s, *var),
+            Stmt::AtomicRmw { old: Some(v), .. } => vs_insert(&mut s, *v),
+            Stmt::If { then_, else_, .. } => s |= writes_in(then_) | writes_in(else_),
+            Stmt::While { body, .. } => s |= writes_in(body),
+            Stmt::Call { ret: Some(v), .. } => vs_insert(&mut s, *v),
+            _ => {}
+        }
+    }
+    s
+}
+
+struct Walker<'a> {
+    kernel: &'a Kernel,
+    sites: Vec<Site>,
+    next_run: usize,
+    /// Defs accumulated (walking backward) since the last recorded site.
+    defs_acc: VarSet,
+    /// Side-effect barrier accumulated since the last recorded site.
+    barrier_acc: bool,
+}
+
+impl<'a> Walker<'a> {
+    /// Backward walk over `stmts`. `live` is the live-after set at the end
+    /// of the list; `loop_reads` is everything read by enclosing loops
+    /// (conservative loop-carried liveness); `run` is the current
+    /// straight-line run id. Sites are recorded in reverse order (the
+    /// caller reverses + renumbers at the end). Returns the live-before
+    /// set of the list.
+    fn walk(&mut self, stmts: &[Stmt], mut live: VarSet, loop_reads: VarSet, run: usize) -> VarSet {
+        for st in stmts.iter().rev() {
+            match st {
+                Stmt::Let { var, expr } => {
+                    live &= !(1u64 << var);
+                    live |= expr_reads(expr);
+                    vs_insert(&mut self.defs_acc, *var);
+                }
+                Stmt::Load { var, addr, width } => {
+                    let (space, root) = stmt_space(addr, &self.kernel.params).expect("typed addr");
+                    // live-after the load (before the kill of `var`, after
+                    // the load completes): `var` holds the loaded value and
+                    // is live if read later.
+                    if space == AddrSpace::Remote {
+                        self.record(SiteKind::LoadRemote, *width, live | loop_reads, run, addr, Some(*var), root);
+                    }
+                    live &= !(1u64 << var);
+                    live |= expr_reads(addr);
+                    vs_insert(&mut self.defs_acc, *var);
+                }
+                Stmt::Store { val, addr, width } => {
+                    let (space, root) = stmt_space(addr, &self.kernel.params).expect("typed addr");
+                    if space == AddrSpace::Remote {
+                        self.record(SiteKind::StoreRemote, *width, live | loop_reads, run, addr, None, root);
+                    }
+                    live |= expr_reads(val) | expr_reads(addr);
+                    self.barrier_acc = true;
+                }
+                Stmt::AtomicRmw { old, addr, val, width, .. } => {
+                    let (space, root) = stmt_space(addr, &self.kernel.params).expect("typed addr");
+                    if space == AddrSpace::Remote {
+                        self.record(SiteKind::AtomicRemote, *width, live | loop_reads, run, addr, *old, root);
+                    }
+                    if let Some(v) = old {
+                        live &= !(1u64 << v);
+                        vs_insert(&mut self.defs_acc, *v);
+                    }
+                    live |= expr_reads(val) | expr_reads(addr);
+                    self.barrier_acc = true;
+                }
+                Stmt::If { cond, then_, else_ } => {
+                    // Reverse of forward order (then, else): walk else first.
+                    let run_else = self.fresh_run();
+                    let le = self.walk(else_, live, loop_reads, run_else);
+                    let run_then = self.fresh_run();
+                    let lt = self.walk(then_, live, loop_reads, run_then);
+                    live = lt | le | expr_reads(cond);
+                    // Conservative for the outer run: the If's effects
+                    // block coalescing across it.
+                    self.defs_acc |= writes_in(then_) | writes_in(else_);
+                    self.barrier_acc = true;
+                }
+                Stmt::While { cond, body } => {
+                    // Conservative: everything read in the loop (or after
+                    // it) is live throughout the loop.
+                    let body_reads = reads_in(body, self.kernel) | expr_reads(cond);
+                    let run_body = self.fresh_run();
+                    let lb = self.walk(body, live | body_reads, loop_reads | body_reads | live, run_body);
+                    live = live | lb | body_reads;
+                    self.defs_acc |= writes_in(body);
+                    self.barrier_acc = true;
+                }
+                Stmt::Call { callee, args, ret } => {
+                    // Calls are analyzed at their lowering; for caller-side
+                    // liveness the callee behaves like `ret = f(args)`.
+                    let _ = callee;
+                    if let Some(v) = ret {
+                        live &= !(1u64 << v);
+                        vs_insert(&mut self.defs_acc, *v);
+                    }
+                    for a in args {
+                        live |= expr_reads(a);
+                    }
+                    self.barrier_acc = true;
+                }
+            }
+        }
+        live
+    }
+
+    fn fresh_run(&mut self) -> usize {
+        self.next_run += 1;
+        self.next_run
+    }
+
+    fn record(
+        &mut self,
+        kind: SiteKind,
+        width: Width,
+        live_after: VarSet,
+        run: usize,
+        addr: &Expr,
+        def: Option<VarId>,
+        root: ParamId,
+    ) {
+        self.sites.push(Site {
+            id: 0, // renumbered after reversal
+            kind,
+            width,
+            live_after,
+            run,
+            addr_deps: expr_reads(addr),
+            def,
+            root,
+            // Walking backward: what accumulated since the previously
+            // recorded site is exactly what lies *after* this site.
+            defs_after: self.defs_acc,
+            barrier_after: self.barrier_acc,
+            addr: addr.clone(),
+        });
+        self.defs_acc = 0;
+        self.barrier_acc = false;
+    }
+}
+
+/// Commutative self-update detection: `v = v op expr` where `op` is
+/// commutative+associative and `expr` does not read `v`.
+fn is_commutative_update(var: VarId, expr: &Expr) -> bool {
+    const COMM: &[AluOp] = &[AluOp::Add, AluOp::Xor, AluOp::And, AluOp::Or, AluOp::Min, AluOp::Max];
+    if let Expr::Bin(BinOp::I(op), a, b) = expr {
+        if !COMM.contains(op) {
+            return false;
+        }
+        let (va, vb) = (expr_reads(a), expr_reads(b));
+        let vbit = 1u64 << var;
+        // v on exactly one side, other side independent of v.
+        return (matches!(**a, Expr::Var(x) if x == var) && vb & vbit == 0)
+            || (matches!(**b, Expr::Var(x) if x == var) && va & vbit == 0);
+    }
+    false
+}
+
+/// Does `stmts` contain any non-commutative write to `var`?
+fn has_non_commutative_write(stmts: &[Stmt], var: VarId) -> bool {
+    stmts.iter().any(|st| match st {
+        Stmt::Let { var: v, expr } => *v == var && !is_commutative_update(var, expr),
+        Stmt::Load { var: v, .. } => *v == var,
+        Stmt::AtomicRmw { old: Some(v), .. } => *v == var,
+        Stmt::If { then_, else_, .. } => {
+            has_non_commutative_write(then_, var) || has_non_commutative_write(else_, var)
+        }
+        Stmt::While { body, .. } => has_non_commutative_write(body, var),
+        Stmt::Call { ret: Some(v), .. } => *v == var,
+        _ => false,
+    })
+}
+
+/// Is `var` read anywhere outside its own commutative updates?
+fn read_outside_update(stmts: &[Stmt], var: VarId) -> bool {
+    let vbit = 1u64 << var;
+    stmts.iter().any(|st| match st {
+        Stmt::Let { var: v, expr } => {
+            if *v == var && is_commutative_update(var, expr) {
+                false
+            } else {
+                expr_reads(expr) & vbit != 0
+            }
+        }
+        Stmt::Load { addr, .. } => expr_reads(addr) & vbit != 0,
+        Stmt::Store { val, addr, .. } => (expr_reads(val) | expr_reads(addr)) & vbit != 0,
+        Stmt::AtomicRmw { addr, val, .. } => (expr_reads(addr) | expr_reads(val)) & vbit != 0,
+        Stmt::If { cond, then_, else_ } => {
+            expr_reads(cond) & vbit != 0 || read_outside_update(then_, var) || read_outside_update(else_, var)
+        }
+        Stmt::While { cond, body } => expr_reads(cond) & vbit != 0 || read_outside_update(body, var),
+        Stmt::Call { args, .. } => args.iter().any(|a| expr_reads(a) & vbit != 0),
+    })
+}
+
+/// Run the full analysis (§III-A marking + §III-B classification).
+pub fn analyze(kernel: &Kernel) -> Result<Analysis> {
+    if kernel.nvars > 64 {
+        bail!("kernel {} has {} vars; analysis supports <= 64", kernel.name, kernel.nvars);
+    }
+    // Suspension sites + liveness.
+    let mut w = Walker { kernel, sites: Vec::new(), next_run: 0, defs_acc: 0, barrier_acc: false };
+    w.walk(&kernel.body, 0, 0, 0);
+    let mut sites = w.sites;
+    sites.reverse();
+    for (i, s) in sites.iter_mut().enumerate() {
+        s.id = i;
+    }
+
+    // Variable classification.
+    let read = reads_in(&kernel.body, kernel);
+    let written = writes_in(&kernel.body);
+    let mut classes = vec![VarClass::Private; kernel.nvars as usize];
+    for v in 0..kernel.nvars {
+        let cls = if kernel.pragma.sequential_vars.contains(&v) {
+            VarClass::Sequential
+        } else if kernel.pragma.shared_vars.contains(&v) {
+            VarClass::Shared
+        } else if v == ITER_VAR {
+            // The induction variable identifies the task: always private.
+            VarClass::Private
+        } else if !vs_contains(written, v) {
+            // Read-only: bypass context entirely (§III-B case 0).
+            VarClass::Shared
+        } else if !has_non_commutative_write(&kernel.body, v) && !read_outside_update(&kernel.body, v) {
+            // Pure commutative accumulator (§III-B case 2).
+            VarClass::Shared
+        } else {
+            // §III-B case 1 (context-dependent) and case 3 (ambiguous) both
+            // stay per-coroutine; truly ambiguous loop-carried patterns
+            // must be pragma-marked sequential by the programmer, exactly
+            // as the paper requires hints for imprecise cases.
+            VarClass::Private
+        };
+        classes[v as usize] = cls;
+    }
+
+    Ok(Analysis { sites, classes, read_vars: read, written_vars: written, nvars: kernel.nvars })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::AddrSpace::*;
+
+    /// GUPS-like kernel: idx = hash(i); v = tab[idx]; tab[idx] = v ^ idx;
+    /// acc += v (commutative accumulator).
+    fn gups_like() -> Kernel {
+        let mut kb = KernelBuilder::new("gups_like");
+        let tab = kb.param_ptr("tab", Remote);
+        let n = kb.param_val("n");
+        kb.trip(n);
+        let idx = kb.var("idx");
+        let v = kb.var("v");
+        let acc = kb.var("acc");
+        let addr = |idx_v: VarId, tab_p: ParamId| {
+            Expr::add(Expr::Param(tab_p), Expr::shl(Expr::Var(idx_v), Expr::Imm(3)))
+        };
+        kb.build(vec![
+            Stmt::Let {
+                var: idx,
+                expr: Expr::Bin(BinOp::I(AluOp::Hash), Box::new(Expr::Var(ITER_VAR)), Box::new(Expr::Imm(0xFFFF))),
+            },
+            Stmt::Load { var: v, addr: addr(idx, tab), width: Width::W8 },
+            Stmt::Store {
+                val: Expr::Bin(BinOp::I(AluOp::Xor), Box::new(Expr::Var(v)), Box::new(Expr::Var(idx))),
+                addr: addr(idx, tab),
+                width: Width::W8,
+            },
+            Stmt::Let {
+                var: acc,
+                expr: Expr::Bin(BinOp::I(AluOp::Add), Box::new(Expr::Var(acc)), Box::new(Expr::Var(v))),
+            },
+        ])
+    }
+
+    #[test]
+    fn finds_sites_in_order() {
+        let k = gups_like();
+        let a = analyze(&k).unwrap();
+        assert_eq!(a.sites.len(), 2);
+        assert_eq!(a.sites[0].kind, SiteKind::LoadRemote);
+        assert_eq!(a.sites[1].kind, SiteKind::StoreRemote);
+        assert_eq!(a.sites[0].id, 0);
+        // After the load, idx (for the store address) and v are live.
+        let live = a.sites[0].live_after;
+        assert!(vs_contains(live, k_var(&k, "idx")));
+        assert!(vs_contains(live, k_var(&k, "v")));
+    }
+
+    fn k_var(k: &Kernel, name: &str) -> VarId {
+        k.var_names.iter().position(|n| n == name).unwrap() as VarId
+    }
+
+    #[test]
+    fn classification() {
+        let k = gups_like();
+        let a = analyze(&k).unwrap();
+        assert_eq!(a.class(ITER_VAR), VarClass::Private);
+        assert_eq!(a.class(k_var(&k, "idx")), VarClass::Private);
+        assert_eq!(a.class(k_var(&k, "v")), VarClass::Private);
+        // acc only ever updated commutatively: shared.
+        assert_eq!(a.class(k_var(&k, "acc")), VarClass::Shared);
+    }
+
+    #[test]
+    fn context_selection_reduces_saves() {
+        let k = gups_like();
+        let a = analyze(&k).unwrap();
+        let basic = a.saved_vars(&a.sites[0], false);
+        let opt = a.saved_vars(&a.sites[0], true);
+        assert!(vs_len(opt) <= vs_len(basic));
+        assert!(!vs_contains(opt, k_var(&k, "acc")), "shared accumulator must not be saved");
+    }
+
+    #[test]
+    fn while_loop_liveness_is_loop_carried() {
+        // b = head; while (b != 0) { x = load b->next(remote); b = x }
+        let mut kb = KernelBuilder::new("chase");
+        let heads = kb.param_ptr("heads", Remote);
+        let n = kb.param_val("n");
+        kb.trip(n);
+        let b = kb.var("b");
+        let x = kb.var("x");
+        let k = kb.build(vec![
+            Stmt::Let { var: b, expr: Expr::add(Expr::Param(heads), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))) },
+            Stmt::While {
+                cond: Expr::Bin(BinOp::I(AluOp::Sne), Box::new(Expr::Var(b)), Box::new(Expr::Imm(0))),
+                body: vec![
+                    Stmt::Load { var: x, addr: Expr::Var(b), width: Width::W8 },
+                    Stmt::Let { var: b, expr: Expr::Var(x) },
+                ],
+            },
+        ]);
+        // Wait: Expr::Var(b) as address has no pointer root. Use
+        // heads+offset form instead; this test only checks liveness, so
+        // rebuild with a rooted address.
+        let _ = k;
+        let mut kb = KernelBuilder::new("chase2");
+        let heads = kb.param_ptr("heads", Remote);
+        let n = kb.param_val("n");
+        kb.trip(n);
+        let off = kb.var("off");
+        let x = kb.var("x");
+        let k = kb.build(vec![
+            Stmt::Let { var: off, expr: Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3)) },
+            Stmt::While {
+                cond: Expr::Bin(BinOp::I(AluOp::Sne), Box::new(Expr::Var(off)), Box::new(Expr::Imm(0))),
+                body: vec![
+                    Stmt::Load { var: x, addr: Expr::add(Expr::Param(heads), Expr::Var(off)), width: Width::W8 },
+                    Stmt::Let { var: off, expr: Expr::Var(x) },
+                ],
+            },
+        ]);
+        let a = analyze(&k).unwrap();
+        assert_eq!(a.sites.len(), 1);
+        // off is loop-carried: must be live across the suspension.
+        assert!(vs_contains(a.sites[0].live_after, off));
+        let _ = heads;
+    }
+
+    #[test]
+    fn too_many_vars_rejected() {
+        let mut kb = KernelBuilder::new("big");
+        let n = kb.param_val("n");
+        kb.trip(n);
+        for i in 0..70 {
+            kb.var(&format!("v{i}"));
+        }
+        let k = kb.build(vec![]);
+        assert!(analyze(&k).is_err());
+    }
+
+    #[test]
+    fn runs_split_at_control_flow() {
+        let mut kb = KernelBuilder::new("runs");
+        let p = kb.param_ptr("p", Remote);
+        let n = kb.param_val("n");
+        kb.trip(n);
+        let a = kb.var("a");
+        let b = kb.var("b");
+        let addr = |v| Expr::add(Expr::Param(p), Expr::shl(Expr::Var(v), Expr::Imm(3)));
+        let k = kb.build(vec![
+            Stmt::Load { var: a, addr: addr(ITER_VAR), width: Width::W8 },
+            Stmt::If {
+                cond: Expr::Var(a),
+                then_: vec![Stmt::Load { var: b, addr: addr(a), width: Width::W8 }],
+                else_: vec![],
+            },
+        ]);
+        let an = analyze(&k).unwrap();
+        assert_eq!(an.sites.len(), 2);
+        assert_ne!(an.sites[0].run, an.sites[1].run, "sites in different basic blocks");
+    }
+}

@@ -1,0 +1,320 @@
+//! Kernel AST — the compiler front end.
+//!
+//! In the paper, the input is a C/C++ `for` loop annotated with
+//! `#pragma asyncmem` and remote-pointer builtins (Listing 1). Here the
+//! same information is captured as a small structured AST: a loop kernel
+//! with typed parameters (remote/local pointers, scalars), an iteration
+//! body of statements, and pragma hints. Benchmarks construct these with
+//! [`KernelBuilder`]; the passes in this module's siblings analyze and
+//! lower them to CoroIR.
+
+use crate::ir::{AddrSpace, AluOp, FaluOp, Width};
+
+/// Index of a named local variable within a kernel.
+pub type VarId = u32;
+/// Index of a kernel parameter.
+pub type ParamId = u32;
+
+/// The implicit induction variable `i` of the pragma'd loop.
+pub const ITER_VAR: VarId = 0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    /// Pointer into an address space (the paper's `remote_alloc` /
+    /// `_builtin_is_remote` annotations become `Ptr(Remote)`).
+    Ptr(AddrSpace),
+    /// Scalar runtime constant (sizes, masks, seeds).
+    Value,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Param {
+    pub name: String,
+    pub kind: ParamKind,
+}
+
+/// Binary operators usable in expressions. Integer ops mirror
+/// [`AluOp`]; float ops mirror [`FaluOp`] over f64 bit patterns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    I(AluOp),
+    F(FaluOp),
+}
+
+/// Pure expressions (no memory access — loads are statements, which keeps
+/// suspension-point analysis simple and mirrors how the LLVM passes see
+/// memory operations as distinct instructions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Imm(i64),
+    /// f64 immediate (stored as bits).
+    FImm(f64),
+    Var(VarId),
+    Param(ParamId),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn add(a: Expr, b: Expr) -> Expr {
+        Expr::Bin(BinOp::I(AluOp::Add), Box::new(a), Box::new(b))
+    }
+    pub fn mul(a: Expr, b: Expr) -> Expr {
+        Expr::Bin(BinOp::I(AluOp::Mul), Box::new(a), Box::new(b))
+    }
+    pub fn shl(a: Expr, b: Expr) -> Expr {
+        Expr::Bin(BinOp::I(AluOp::Shl), Box::new(a), Box::new(b))
+    }
+    pub fn and(a: Expr, b: Expr) -> Expr {
+        Expr::Bin(BinOp::I(AluOp::And), Box::new(a), Box::new(b))
+    }
+
+    /// Collect variables read by this expression.
+    pub fn vars(&self, out: &mut Vec<VarId>) {
+        match self {
+            Expr::Var(v) => out.push(*v),
+            Expr::Bin(_, a, b) => {
+                a.vars(out);
+                b.vars(out);
+            }
+            _ => {}
+        }
+    }
+
+    /// The single pointer-parameter root of an address expression, if any.
+    /// Address-space inference (§III-G strict typing) requires each address
+    /// to be based on exactly one pointer parameter.
+    pub fn pointer_root(&self, params: &[Param]) -> Option<ParamId> {
+        let mut roots = Vec::new();
+        self.collect_pointer_roots(params, &mut roots);
+        match roots.as_slice() {
+            [one] => Some(*one),
+            _ => None,
+        }
+    }
+
+    fn collect_pointer_roots(&self, params: &[Param], out: &mut Vec<ParamId>) {
+        match self {
+            Expr::Param(p) => {
+                if matches!(params[*p as usize].kind, ParamKind::Ptr(_)) {
+                    out.push(*p);
+                }
+            }
+            Expr::Bin(_, a, b) => {
+                a.collect_pointer_roots(params, out);
+                b.collect_pointer_roots(params, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Statements of the loop body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `var = expr`
+    Let { var: VarId, expr: Expr },
+    /// `var = *(width*)(addr)` — address space inferred from the pointer
+    /// root of `addr`.
+    Load { var: VarId, addr: Expr, width: Width },
+    /// `*(width*)(addr) = val`
+    Store { val: Expr, addr: Expr, width: Width },
+    /// Atomic read-modify-write `old = atomic_op(addr, val)`; `old` may be
+    /// discarded. Transformed by the atomics pass (§III-E) under dynamic
+    /// scheduling.
+    AtomicRmw { op: AluOp, old: Option<VarId>, addr: Expr, val: Expr, width: Width },
+    If { cond: Expr, then_: Vec<Stmt>, else_: Vec<Stmt> },
+    While { cond: Expr, body: Vec<Stmt> },
+    /// Call a nested kernel function (§III-F). The callee runs with
+    /// arguments bound to the caller's expressions; if it contains remote
+    /// accesses it is either inlined or lowered as a nested coroutine.
+    Call { callee: usize, args: Vec<Expr>, ret: Option<VarId> },
+}
+
+/// How a variable behaves across suspension points (§III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarClass {
+    /// Must be saved/restored in the coroutine context.
+    Private,
+    /// Read-only or commutative-update: lives in a shared register, never
+    /// saved.
+    Shared,
+    /// Ambiguous update pattern: hoisted to a serialized update at
+    /// coroutine completion (Return block).
+    Sequential,
+}
+
+/// The paper's `#pragma asyncmem` directives (Listing 1).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Pragma {
+    /// Suggested number of concurrent coroutine tasks (`num_task(64)`).
+    pub num_tasks: Option<usize>,
+    /// Programmer hints: variables safe to share (commutative updates),
+    /// e.g. `shared_var(matches)`.
+    pub shared_vars: Vec<VarId>,
+    /// Programmer hints: variables requiring serialized update.
+    pub sequential_vars: Vec<VarId>,
+    /// Coarse-grained access hint in bytes for specific remote loads (the
+    /// granularity encoding of §III-C); keyed by load ordinal. Empty means
+    /// "let the coalescer decide".
+    pub coarse_hints: Vec<(usize, u32)>,
+}
+
+/// A nested callee function (§III-F): a straight-line/structured body with
+/// its own params; may contain remote accesses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NestedFn {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub body: Vec<Stmt>,
+    /// Variable returned to the caller, if any.
+    pub ret_var: Option<VarId>,
+    pub nvars: u32,
+}
+
+/// A pragma-annotated memory-intensive loop: the compiler's unit of work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    pub params: Vec<Param>,
+    /// Parameter holding the trip count (`num_tuples` in Listing 1).
+    pub trip_param: ParamId,
+    pub body: Vec<Stmt>,
+    pub pragma: Pragma,
+    /// Total number of VarIds used (ITER_VAR included).
+    pub nvars: u32,
+    /// Human-readable variable names (debugging / reports).
+    pub var_names: Vec<String>,
+    /// Nested callees referenced by `Stmt::Call`.
+    pub callees: Vec<NestedFn>,
+}
+
+/// Convenience builder so benchmark definitions read like the paper's
+/// Listing 1.
+pub struct KernelBuilder {
+    name: String,
+    params: Vec<Param>,
+    trip_param: Option<ParamId>,
+    pragma: Pragma,
+    vars: Vec<String>,
+    callees: Vec<NestedFn>,
+}
+
+impl KernelBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            params: Vec::new(),
+            trip_param: None,
+            pragma: Pragma::default(),
+            vars: vec!["i".to_string()], // ITER_VAR
+            callees: Vec::new(),
+        }
+    }
+
+    pub fn param_ptr(&mut self, name: &str, space: AddrSpace) -> ParamId {
+        self.params.push(Param { name: name.into(), kind: ParamKind::Ptr(space) });
+        (self.params.len() - 1) as ParamId
+    }
+
+    pub fn param_val(&mut self, name: &str) -> ParamId {
+        self.params.push(Param { name: name.into(), kind: ParamKind::Value });
+        (self.params.len() - 1) as ParamId
+    }
+
+    pub fn trip(&mut self, p: ParamId) {
+        self.trip_param = Some(p);
+    }
+
+    pub fn var(&mut self, name: &str) -> VarId {
+        self.vars.push(name.into());
+        (self.vars.len() - 1) as VarId
+    }
+
+    pub fn num_tasks(&mut self, n: usize) {
+        self.pragma.num_tasks = Some(n);
+    }
+
+    pub fn shared_var(&mut self, v: VarId) {
+        self.pragma.shared_vars.push(v);
+    }
+
+    pub fn sequential_var(&mut self, v: VarId) {
+        self.pragma.sequential_vars.push(v);
+    }
+
+    pub fn callee(&mut self, f: NestedFn) -> usize {
+        self.callees.push(f);
+        self.callees.len() - 1
+    }
+
+    pub fn build(self, body: Vec<Stmt>) -> Kernel {
+        Kernel {
+            name: self.name,
+            trip_param: self.trip_param.expect("trip count parameter not set"),
+            params: self.params,
+            body,
+            pragma: self.pragma,
+            nvars: self.vars.len() as u32,
+            var_names: self.vars,
+            callees: self.callees,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pointer_root_inference() {
+        let params = vec![
+            Param { name: "tab".into(), kind: ParamKind::Ptr(AddrSpace::Remote) },
+            Param { name: "n".into(), kind: ParamKind::Value },
+        ];
+        let addr = Expr::add(Expr::Param(0), Expr::mul(Expr::Var(ITER_VAR), Expr::Imm(8)));
+        assert_eq!(addr.pointer_root(&params), Some(0));
+        // Scalar-only expression has no pointer root.
+        let scalar = Expr::add(Expr::Param(1), Expr::Imm(1));
+        assert_eq!(scalar.pointer_root(&params), None);
+        // Two pointer roots is ambiguous -> None.
+        let both = Expr::add(Expr::Param(0), Expr::Param(0));
+        assert_eq!(both.pointer_root(&params), None);
+    }
+
+    #[test]
+    fn expr_vars() {
+        let e = Expr::add(Expr::Var(1), Expr::mul(Expr::Var(2), Expr::Var(1)));
+        let mut vs = vec![];
+        e.vars(&mut vs);
+        vs.sort_unstable();
+        assert_eq!(vs, vec![1, 1, 2]);
+    }
+
+    #[test]
+    fn builder_roundtrip() {
+        let mut kb = KernelBuilder::new("gups");
+        let tab = kb.param_ptr("table", AddrSpace::Remote);
+        let n = kb.param_val("num_updates");
+        kb.trip(n);
+        let v = kb.var("val");
+        kb.num_tasks(64);
+        let k = kb.build(vec![
+            Stmt::Load { var: v, addr: Expr::add(Expr::Param(tab), Expr::Var(ITER_VAR)), width: Width::W8 },
+            Stmt::Store {
+                val: Expr::Var(v),
+                addr: Expr::add(Expr::Param(tab), Expr::Var(ITER_VAR)),
+                width: Width::W8,
+            },
+        ]);
+        assert_eq!(k.nvars, 2);
+        assert_eq!(k.trip_param, n);
+        assert_eq!(k.pragma.num_tasks, Some(64));
+        assert_eq!(k.var_names[ITER_VAR as usize], "i");
+    }
+
+    #[test]
+    #[should_panic(expected = "trip count")]
+    fn missing_trip_panics() {
+        KernelBuilder::new("x").build(vec![]);
+    }
+}

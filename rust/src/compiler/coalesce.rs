@@ -1,0 +1,387 @@
+//! Request coalescing (paper §III-C).
+//!
+//! Finds, inside each straight-line run ("basic block" in the paper's
+//! terms), groups of remote loads that can be issued together before a
+//! single yield:
+//!
+//!  1. **Coarse-grained**: accesses at constant address deltas within one
+//!     region merge into a single wide `aload` (up to 4 KB, granularity in
+//!     the high address bits).
+//!  2. **Independent (`aset`)**: loads with no data dependence are issued
+//!     back-to-back and bound to one id with `aset id, n`; the id
+//!     completes only when all constituents have.
+//!
+//! The merge must preserve data dependencies, memory consistency and
+//! side-effect barriers, and respect the hardware group-size limit — a
+//! greedy per-run scan, exactly the "simple greedy algorithm inside each
+//! basic block" the paper describes.
+
+use super::analysis::{Analysis, SiteKind, VarSet};
+use super::ast::{BinOp, Expr};
+use crate::ir::AluOp;
+
+pub const LINE: u32 = 64;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum GroupKind {
+    /// One wide aload covering `span_bytes` starting `base_delta` bytes
+    /// from the leader's address (base_delta <= 0).
+    Coarse { span_bytes: u32, base_delta: i64 },
+    /// `aset`-bound independent requests, one per member.
+    Set,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Group {
+    pub kind: GroupKind,
+    /// Site ids, in program order; `members[0]` is the leader.
+    pub members: Vec<usize>,
+    /// SPM byte offset of each member's data within the id's slot.
+    pub spm_offs: Vec<u32>,
+    /// Total SPM slot footprint for this group, line-aligned.
+    pub slot_bytes: u32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Role {
+    /// Not coalesced: one request, one yield.
+    Single,
+    /// First site of a group: issues all requests, yields once.
+    Leader(usize),
+    /// Later member: data already in SPM, no request, no yield.
+    Member { group: usize, index: usize },
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CoalescePlan {
+    pub roles: Vec<Role>,
+    pub groups: Vec<Group>,
+}
+
+impl CoalescePlan {
+    /// Plan with no coalescing (basic codegen / CoroAMU-S & -D).
+    pub fn disabled(nsites: usize) -> Self {
+        CoalescePlan { roles: vec![Role::Single; nsites], groups: Vec::new() }
+    }
+
+    /// Max SPM slot bytes any site group requires (>= one line).
+    pub fn max_slot_bytes(&self) -> u32 {
+        self.groups.iter().map(|g| g.slot_bytes).max().unwrap_or(LINE).max(LINE)
+    }
+
+    /// Number of yields removed relative to one-yield-per-site.
+    pub fn switches_saved(&self) -> usize {
+        self.groups.iter().map(|g| g.members.len() - 1).sum()
+    }
+}
+
+/// Decompose an expression into (sorted canonical non-constant terms,
+/// constant sum) over `+`. Two addresses merge coarsely iff their
+/// non-constant parts match.
+fn split_const(e: &Expr, terms: &mut Vec<String>, konst: &mut i64) {
+    match e {
+        Expr::Imm(v) => *konst += v,
+        Expr::Bin(BinOp::I(AluOp::Add), a, b) => {
+            split_const(a, terms, konst);
+            split_const(b, terms, konst);
+        }
+        other => terms.push(format!("{other:?}")),
+    }
+}
+
+/// If `a` and `b` differ only by an additive constant, return `delta(b - a)`.
+pub fn const_delta(a: &Expr, b: &Expr) -> Option<i64> {
+    let (mut ta, mut ka) = (Vec::new(), 0i64);
+    let (mut tb, mut kb) = (Vec::new(), 0i64);
+    split_const(a, &mut ta, &mut ka);
+    split_const(b, &mut tb, &mut kb);
+    ta.sort();
+    tb.sort();
+    (ta == tb).then_some(kb - ka)
+}
+
+fn align_up(x: u32, a: u32) -> u32 {
+    x.div_ceil(a) * a
+}
+
+/// Full §III-C planning: coarse merges up to the 4 KB hardware granularity
+/// plus cross-object `aset` groups.
+pub fn plan(analysis: &Analysis, max_group: usize, max_coarse_bytes: u32) -> CoalescePlan {
+    plan_impl(analysis, max_group, max_coarse_bytes, true)
+}
+
+/// Object/line-granular grouping only: adjacent constant-delta loads within
+/// one cache line suspend once. This is NOT the §III-C optimization — it is
+/// the baseline suspension granularity every practical coroutine runtime
+/// has (a 64B record is one prefetch/aload, its field loads are plain) and
+/// applies to basic codegen of all variants.
+pub fn plan_line_granular(analysis: &Analysis) -> CoalescePlan {
+    plan_impl(analysis, 8, LINE, false)
+}
+
+fn plan_impl(analysis: &Analysis, max_group: usize, max_coarse_bytes: u32, allow_set: bool) -> CoalescePlan {
+    let sites = &analysis.sites;
+    let mut roles = vec![Role::Single; sites.len()];
+    let mut groups: Vec<Group> = Vec::new();
+    if max_group < 2 {
+        return CoalescePlan { roles, groups };
+    }
+
+    let mut i = 0;
+    while i < sites.len() {
+        let leader = &sites[i];
+        if leader.kind != SiteKind::LoadRemote {
+            i += 1;
+            continue;
+        }
+        // Extend greedily.
+        let mut members = vec![i];
+        let mut blockers: VarSet = leader.def.map(|v| 1u64 << v).unwrap_or(0) | leader.defs_after;
+        let mut barrier = leader.barrier_after;
+        // Candidate deltas for coarse mode (relative to leader).
+        let mut deltas: Vec<Option<i64>> = vec![Some(0)];
+        let mut j = i + 1;
+        while j < sites.len() && members.len() < max_group {
+            let cand = &sites[j];
+            let ok = cand.kind == SiteKind::LoadRemote
+                && cand.run == leader.run
+                && !barrier
+                && cand.addr_deps & blockers == 0;
+            if !ok {
+                break;
+            }
+            let delta = const_delta(&leader.addr, &cand.addr);
+            if !allow_set {
+                // Line-granular mode: only same-object constant deltas
+                // whose span stays within one line extend the group.
+                let within = match delta {
+                    Some(d) => {
+                        let lo = deltas.iter().flatten().chain([&d]).min().copied().unwrap_or(0);
+                        let hi = deltas.iter().flatten().chain([&d]).max().copied().unwrap_or(0);
+                        (hi + cand.width.bytes() as i64 - lo) <= max_coarse_bytes as i64
+                    }
+                    None => false,
+                };
+                if !within {
+                    break;
+                }
+            }
+            deltas.push(delta);
+            members.push(j);
+            blockers |= cand.def.map(|v| 1u64 << v).unwrap_or(0) | cand.defs_after;
+            barrier |= cand.barrier_after;
+            j += 1;
+        }
+        if members.len() < 2 {
+            i += 1;
+            continue;
+        }
+        // Coarse if every member has a constant delta to the leader and the
+        // span fits the hardware granularity limit.
+        let coarse = if deltas.iter().all(|d| d.is_some()) {
+            let ds: Vec<i64> = deltas.iter().map(|d| d.unwrap()).collect();
+            let min_d = *ds.iter().min().unwrap();
+            let max_idx = ds
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, d)| **d)
+                .map(|(k, _)| k)
+                .unwrap();
+            let max_end = ds[max_idx] + sites[members[max_idx]].width.bytes() as i64;
+            let span = (max_end - min_d) as u32;
+            (span <= max_coarse_bytes).then_some((ds, min_d, span))
+        } else {
+            None
+        };
+        let gid = groups.len();
+        let group = match coarse {
+            Some((ds, min_d, span)) => {
+                let spm_offs: Vec<u32> = ds.iter().map(|d| (d - min_d) as u32).collect();
+                Group {
+                    kind: GroupKind::Coarse { span_bytes: span, base_delta: min_d },
+                    members: members.clone(),
+                    spm_offs,
+                    slot_bytes: align_up(span, LINE),
+                }
+            }
+            None => {
+                let spm_offs: Vec<u32> = (0..members.len() as u32).map(|k| k * LINE).collect();
+                Group {
+                    kind: GroupKind::Set,
+                    members: members.clone(),
+                    spm_offs,
+                    slot_bytes: members.len() as u32 * LINE,
+                }
+            }
+        };
+        roles[members[0]] = Role::Leader(gid);
+        for (idx, m) in members.iter().enumerate().skip(1) {
+            roles[*m] = Role::Member { group: gid, index: idx };
+        }
+        groups.push(group);
+        i = j;
+    }
+    CoalescePlan { roles, groups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::analysis::analyze;
+    use crate::compiler::ast::*;
+    use crate::ir::{AddrSpace::*, Width};
+
+    fn e_add(a: Expr, b: Expr) -> Expr {
+        Expr::add(a, b)
+    }
+
+    /// tuples[i].key and tuples[i].payload: constant delta 8 -> coarse.
+    fn coarse_kernel() -> Kernel {
+        let mut kb = KernelBuilder::new("coarse");
+        let t = kb.param_ptr("tuples", Remote);
+        let n = kb.param_val("n");
+        kb.trip(n);
+        let k = kb.var("k");
+        let p = kb.var("p");
+        let s = kb.var("s");
+        let base = e_add(Expr::Param(t), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(4)));
+        kb.build(vec![
+            Stmt::Load { var: k, addr: base.clone(), width: Width::W8 },
+            Stmt::Load { var: p, addr: e_add(base, Expr::Imm(8)), width: Width::W8 },
+            Stmt::Let { var: s, expr: e_add(Expr::Var(k), Expr::Var(p)) },
+            Stmt::Store { val: Expr::Var(s), addr: e_add(Expr::Param(t), Expr::Imm(0)), width: Width::W8 },
+        ])
+    }
+
+    #[test]
+    fn coarse_merge_found() {
+        let k = coarse_kernel();
+        let a = analyze(&k).unwrap();
+        let p = plan(&a, 8, 4096);
+        assert_eq!(p.groups.len(), 1);
+        let g = &p.groups[0];
+        assert_eq!(g.members, vec![0, 1]);
+        match g.kind {
+            GroupKind::Coarse { span_bytes, base_delta } => {
+                assert_eq!(span_bytes, 16);
+                assert_eq!(base_delta, 0);
+            }
+            _ => panic!("expected coarse, got {:?}", g.kind),
+        }
+        assert_eq!(g.spm_offs, vec![0, 8]);
+        assert_eq!(p.roles[0], Role::Leader(0));
+        assert_eq!(p.roles[1], Role::Member { group: 0, index: 1 });
+        assert_eq!(p.switches_saved(), 1);
+    }
+
+    /// b[i] and c[i]: different pointer roots, independent -> aset group.
+    fn set_kernel() -> Kernel {
+        let mut kb = KernelBuilder::new("setk");
+        let bp = kb.param_ptr("b", Remote);
+        let cp = kb.param_ptr("c", Remote);
+        let n = kb.param_val("n");
+        kb.trip(n);
+        let x = kb.var("x");
+        let y = kb.var("y");
+        let z = kb.var("z");
+        let idx = Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3));
+        kb.build(vec![
+            Stmt::Load { var: x, addr: e_add(Expr::Param(bp), idx.clone()), width: Width::W8 },
+            Stmt::Load { var: y, addr: e_add(Expr::Param(cp), idx), width: Width::W8 },
+            Stmt::Let { var: z, expr: e_add(Expr::Var(x), Expr::Var(y)) },
+        ])
+    }
+
+    #[test]
+    fn independent_loads_form_aset_group() {
+        let k = set_kernel();
+        let a = analyze(&k).unwrap();
+        let p = plan(&a, 8, 4096);
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].kind, GroupKind::Set);
+        assert_eq!(p.groups[0].slot_bytes, 128);
+        assert_eq!(p.groups[0].spm_offs, vec![0, 64]);
+    }
+
+    /// ht[hash(key)] depends on loaded key: must NOT merge.
+    #[test]
+    fn dependent_loads_not_merged() {
+        let mut kb = KernelBuilder::new("dep");
+        let t = kb.param_ptr("t", Remote);
+        let h = kb.param_ptr("h", Remote);
+        let n = kb.param_val("n");
+        kb.trip(n);
+        let key = kb.var("key");
+        let v = kb.var("v");
+        let k = kb.build(vec![
+            Stmt::Load {
+                var: key,
+                addr: e_add(Expr::Param(t), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))),
+                width: Width::W8,
+            },
+            Stmt::Load {
+                var: v,
+                addr: e_add(Expr::Param(h), Expr::shl(Expr::Var(key), Expr::Imm(3))),
+                width: Width::W8,
+            },
+        ]);
+        let a = analyze(&k).unwrap();
+        let p = plan(&a, 8, 4096);
+        assert!(p.groups.is_empty(), "dependent loads merged: {:?}", p.groups);
+    }
+
+    #[test]
+    fn group_size_respects_hardware_limit() {
+        let mut kb = KernelBuilder::new("many");
+        let ps: Vec<_> = (0..6).map(|i| kb.param_ptr(&format!("p{i}"), Remote)).collect();
+        let n = kb.param_val("n");
+        kb.trip(n);
+        let vs: Vec<_> = (0..6).map(|i| kb.var(&format!("v{i}"))).collect();
+        let idx = || Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3));
+        let body: Vec<Stmt> = (0..6)
+            .map(|i| Stmt::Load { var: vs[i], addr: e_add(Expr::Param(ps[i]), idx()), width: Width::W8 })
+            .collect();
+        let k = kb.build(body);
+        let a = analyze(&k).unwrap();
+        let p = plan(&a, 4, 4096);
+        assert_eq!(p.groups.len(), 2, "6 loads with max_group=4 -> groups of 4 and 2");
+        assert_eq!(p.groups[0].members.len(), 4);
+        assert_eq!(p.groups[1].members.len(), 2);
+    }
+
+    #[test]
+    fn coarse_span_limit_falls_back_to_set() {
+        let mut kb = KernelBuilder::new("far_apart");
+        let t = kb.param_ptr("t", Remote);
+        let n = kb.param_val("n");
+        kb.trip(n);
+        let x = kb.var("x");
+        let y = kb.var("y");
+        let base = e_add(Expr::Param(t), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3)));
+        let k = kb.build(vec![
+            Stmt::Load { var: x, addr: base.clone(), width: Width::W8 },
+            Stmt::Load { var: y, addr: e_add(base, Expr::Imm(1 << 20)), width: Width::W8 },
+        ]);
+        let a = analyze(&k).unwrap();
+        let p = plan(&a, 8, 4096);
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].kind, GroupKind::Set, "1MB apart cannot be a coarse fetch");
+    }
+
+    #[test]
+    fn const_delta_matches_structure() {
+        let a = e_add(Expr::Param(0), Expr::Var(1));
+        let b = e_add(e_add(Expr::Param(0), Expr::Imm(24)), Expr::Var(1));
+        assert_eq!(const_delta(&a, &b), Some(24));
+        let c = e_add(Expr::Param(1), Expr::Var(1));
+        assert_eq!(const_delta(&a, &c), None);
+    }
+
+    #[test]
+    fn disabled_plan_is_all_single() {
+        let p = CoalescePlan::disabled(5);
+        assert_eq!(p.roles.len(), 5);
+        assert!(p.roles.iter().all(|r| *r == Role::Single));
+        assert_eq!(p.max_slot_bytes(), LINE);
+    }
+}

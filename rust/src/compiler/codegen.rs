@@ -1,0 +1,655 @@
+//! AsyncSplitPass — CoroIR code generation (paper §III, Fig. 6).
+//!
+//! Lowers an analyzed kernel into a single self-contained CoroIR function
+//! holding both the coroutine runtime and the task bodies ("consolidating
+//! runtime and actual tasks within a single function", §III-A):
+//!
+//! * **Alloca/Init block** — configures the AMU, initializes the handler
+//!   free list, lock table and scheduler queues.
+//! * **Schedule block** — static FIFO + software prefetch, dynamic
+//!   `getfin` + indirect jump, or dynamic `bafin` (Fig. 7).
+//! * **Return block** — recycles handlers, starts subsequent iterations,
+//!   applies sequential-variable updates.
+//! * **Loop phases** — the original body, split at every suspension site
+//!   with context save/restore generated from the liveness analysis.
+//!
+//! Also implements the §III-E atomics procedure (await/asignal lock
+//! hand-off) and §III-F nested coroutines with derived ids.
+
+use super::analysis::{self, vs_iter, Analysis, SiteKind, VarSet};
+use super::ast::*;
+use super::coalesce::{self, CoalescePlan, GroupKind, Role};
+use crate::config::AmuConfig;
+use crate::ir::builder::FuncBuilder;
+use crate::ir::Operand::{Imm, Reg as R};
+use crate::ir::*;
+use anyhow::{bail, Result};
+
+/// Scheduler flavour — selects the paper's evaluation variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedKind {
+    /// Plain loop, blocking remote accesses (baseline "Serial").
+    Serial,
+    /// Software-prefetch + FIFO static scheduler (Coroutine / CoroAMU-S).
+    StaticFifo,
+    /// Original-AMU dynamic scheduler: `getfin` + indirect jump (CoroAMU-D).
+    Getfin,
+    /// Enhanced-AMU dynamic scheduler: `bafin` (CoroAMU-Full).
+    Bafin,
+}
+
+impl SchedKind {
+    pub fn uses_amu(self) -> bool {
+        matches!(self, SchedKind::Getfin | SchedKind::Bafin)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CodegenOpts {
+    pub sched: SchedKind,
+    /// §III-B selective context preservation.
+    pub context_opt: bool,
+    /// §III-C request coalescing.
+    pub coalesce: bool,
+    /// Emulate hand-written C++20-framework coroutines: full-frame spills
+    /// plus per-switch promise/frame management overhead (§II-B, Fig. 3).
+    pub generic_frame: bool,
+    /// Concurrency (tasks in flight); clamped by SPM capacity for AMU.
+    pub num_tasks: usize,
+}
+
+impl CodegenOpts {
+    pub fn serial() -> Self {
+        CodegenOpts { sched: SchedKind::Serial, context_opt: false, coalesce: false, generic_frame: false, num_tasks: 1 }
+    }
+    /// Hand-written C++20-style coroutine (paper's "Coroutine" baseline).
+    pub fn hand_coroutine(n: usize) -> Self {
+        CodegenOpts { sched: SchedKind::StaticFifo, context_opt: false, coalesce: false, generic_frame: true, num_tasks: n }
+    }
+    /// CoroAMU-S: compiler basic codegen, static prefetch scheduling.
+    pub fn coroamu_s(n: usize) -> Self {
+        CodegenOpts { sched: SchedKind::StaticFifo, context_opt: false, coalesce: false, generic_frame: false, num_tasks: n }
+    }
+    /// CoroAMU-D: basic codegen + original AMU (getfin).
+    pub fn coroamu_d(n: usize) -> Self {
+        CodegenOpts { sched: SchedKind::Getfin, context_opt: false, coalesce: false, generic_frame: false, num_tasks: n }
+    }
+    /// CoroAMU-Full: bafin + context selection + coalescing.
+    pub fn coroamu_full(n: usize) -> Self {
+        CodegenOpts { sched: SchedKind::Bafin, context_opt: true, coalesce: true, generic_frame: false, num_tasks: n }
+    }
+}
+
+/// A runtime memory area the harness must allocate (local memory), whose
+/// base address is bound to `reg` before execution.
+#[derive(Debug, Clone)]
+pub struct Area {
+    pub name: String,
+    pub bytes: u64,
+    pub reg: Reg,
+}
+
+#[derive(Debug, Clone)]
+pub struct CompiledKernel {
+    pub func: Function,
+    /// Kernel param p is bound to register `param_regs[p]`.
+    pub param_regs: Vec<Reg>,
+    /// Local runtime areas to allocate + bind.
+    pub areas: Vec<Area>,
+    /// SPM base register (AMU variants only).
+    pub spm_base_reg: Option<Reg>,
+    /// Per-id SPM slot footprint in bytes.
+    pub spm_slot_bytes: u32,
+    /// Final concurrency after SPM capacity clamping.
+    pub num_tasks: usize,
+    pub ctx_bytes: u32,
+    /// Suspension sites found by AsyncMark.
+    pub nsites: usize,
+    /// Coalesce groups formed (0 when coalescing disabled).
+    pub ngroups: usize,
+    /// Ids used: num_tasks, or 2*num_tasks when nested coroutines exist.
+    pub ids_used: usize,
+}
+
+// Context slot layout (per handler):
+const CTX_RESUME: i64 = 0; // resume block id (static/getfin)
+const CTX_ADDR: i64 = 8; // saved address temp
+const CTX_VAL: i64 = 16; // saved value temp / nested return slot
+const CTX_VARS: i64 = 24; // 8-byte slot per variable / nested arg
+
+const FREE_SENTINEL: i64 = -1;
+
+struct Lower<'a> {
+    kernel: &'a Kernel,
+    an: Analysis,
+    plan: CoalescePlan,
+    opts: &'a CodegenOpts,
+    #[allow(dead_code)]
+    amu: &'a AmuConfig,
+    b: FuncBuilder,
+    // Variable/parameter registers.
+    var_reg: Vec<Reg>,
+    param_regs: Vec<Reg>,
+    // Runtime registers.
+    cur_id: Reg,
+    ctx: Reg,
+    next_iter: Reg,
+    active: Reg,
+    free_top: Reg,
+    fifo_head: Reg,
+    fifo_tail: Reg,
+    // Area base registers.
+    handler_base: Reg,
+    spm_base: Reg,
+    free_base: Reg,
+    fifo_base: Reg,
+    lock_base: Reg,
+    waiters_base: Reg,
+    // Key blocks.
+    sched_bb: BlockId,
+    launch_bb: BlockId,
+    finish_bb: BlockId,
+    done_bb: BlockId,
+    // Site cursor (must mirror analysis DFS order).
+    next_site: usize,
+    // Derived sizes.
+    ctx_bytes: u32,
+    num_tasks: usize,
+    slot_bytes: u32,
+    fifo_mask: i64,
+    lock_entries: u64,
+    has_nested: bool,
+    /// Basic codegen frames the (read-only) parameters: stored at launch,
+    /// reloaded at every resume (§III-B case 0 inefficiency).
+    spill_params: bool,
+    // Callee lowering state: when Some, we are lowering a nested callee
+    // and params/vars resolve to these registers instead.
+    callee_params: Option<Vec<Reg>>,
+    callee_vars: Option<Vec<Reg>>,
+    callee_kernel: Option<usize>,
+    /// Entry block per callee (nested coroutine dispatch target).
+    callee_entries: Vec<BlockId>,
+    /// Conservative live set spilled around each call site.
+    call_live_sets: Vec<VarSet>,
+}
+
+pub fn compile(kernel: &Kernel, opts: &CodegenOpts, amu: &AmuConfig) -> Result<CompiledKernel> {
+    // Inline nested calls when the scheduler cannot express them (or the
+    // callee has no remote access — §III-F "most of them are inlined").
+    let kernel = inline_calls(kernel, opts.sched)?;
+    let an = analysis::analyze(&kernel)?;
+    let plan = if opts.coalesce && opts.sched.uses_amu() {
+        coalesce::plan(&an, amu.max_group.max(1), amu.max_coarse_bytes.max(64) as u32)
+    } else if opts.coalesce && opts.sched == SchedKind::StaticFifo {
+        // Prefetch coalescing is always safe (§III-C: "straightforward for
+        // software prefetching").
+        coalesce::plan(&an, 8, 4096)
+    } else if opts.sched == SchedKind::Serial {
+        CoalescePlan::disabled(an.sites.len())
+    } else {
+        // Basic codegen still suspends at *object* granularity: field
+        // loads of one 64B record share a single prefetch/aload + yield
+        // (what any practical coroutine runtime emits). §III-C extends
+        // this to 4KB coarse grains and cross-object aset groups.
+        coalesce::plan_line_granular(&an)
+    };
+
+    if opts.sched == SchedKind::Serial {
+        return lower_serial(&kernel, &an);
+    }
+
+    let has_nested = kernel.body.iter().any(|s| stmt_has_call(s)) && opts.sched.uses_amu();
+    let slot_bytes = plan.max_slot_bytes().next_power_of_two();
+    let mut num_tasks = opts.num_tasks.max(1);
+    if opts.sched.uses_amu() {
+        let spm_bytes = (amu.spm_kb * 1024) as u32;
+        let mut cap = (spm_bytes / slot_bytes) as usize;
+        if has_nested {
+            cap /= 2;
+        }
+        let cap = cap.min(amu.request_table);
+        if cap == 0 {
+            bail!("SPM cannot hold a single slot of {slot_bytes} bytes");
+        }
+        num_tasks = num_tasks.min(cap);
+    }
+
+    // Context: resume + addr/val temps + one slot per var (+ param slots
+    // under basic codegen, which frames captured values like stock LLVM
+    // lowering does + callee arg/var slots).
+    let spill_params = analysis::Analysis::spills_params(opts.context_opt && !opts.generic_frame);
+    let max_callee = kernel.callees.iter().map(|c| c.params.len() as u32 + c.nvars).max().unwrap_or(0);
+    let param_slots = if spill_params { kernel.params.len() as u32 } else { 0 };
+    let slots = (kernel.nvars + param_slots).max(max_callee);
+    let ctx_bytes = ((CTX_VARS as u32 + 8 * slots + 15) / 16) * 16;
+
+    let mut b = FuncBuilder::new(format!("{}_{:?}", kernel.name, opts.sched));
+    let param_regs: Vec<Reg> = kernel.params.iter().map(|_| b.reg()).collect();
+    let var_reg: Vec<Reg> = (0..kernel.nvars).map(|_| b.reg()).collect();
+
+    let mut lw = Lower {
+        kernel: &kernel,
+        an,
+        plan,
+        opts,
+        amu,
+        cur_id: 0,
+        ctx: 0,
+        next_iter: 0,
+        active: 0,
+        free_top: 0,
+        fifo_head: 0,
+        fifo_tail: 0,
+        handler_base: 0,
+        spm_base: 0,
+        free_base: 0,
+        fifo_base: 0,
+        lock_base: 0,
+        waiters_base: 0,
+        sched_bb: 0,
+        launch_bb: 0,
+        finish_bb: 0,
+        done_bb: 0,
+        next_site: 0,
+        ctx_bytes,
+        num_tasks,
+        slot_bytes,
+        fifo_mask: ((2 * num_tasks).next_power_of_two() - 1) as i64,
+        lock_entries: 256,
+        has_nested,
+        spill_params,
+        callee_params: None,
+        callee_vars: None,
+        callee_kernel: None,
+        callee_entries: Vec::new(),
+        call_live_sets: Vec::new(),
+        var_reg,
+        param_regs,
+        b,
+    };
+    lw.cur_id = lw.b.reg();
+    lw.ctx = lw.b.reg();
+    lw.next_iter = lw.b.reg();
+    lw.active = lw.b.reg();
+    lw.free_top = lw.b.reg();
+    lw.fifo_head = lw.b.reg();
+    lw.fifo_tail = lw.b.reg();
+    lw.handler_base = lw.b.reg();
+    lw.spm_base = lw.b.reg();
+    lw.free_base = lw.b.reg();
+    lw.fifo_base = lw.b.reg();
+    lw.lock_base = lw.b.reg();
+    lw.waiters_base = lw.b.reg();
+    lw.emit_coroutine()
+}
+
+fn stmt_has_call(s: &Stmt) -> bool {
+    match s {
+        Stmt::Call { .. } => true,
+        Stmt::If { then_, else_, .. } => then_.iter().any(stmt_has_call) || else_.iter().any(stmt_has_call),
+        Stmt::While { body, .. } => body.iter().any(stmt_has_call),
+        _ => false,
+    }
+}
+
+fn callee_has_remote(f: &NestedFn) -> bool {
+    fn any_remote(stmts: &[Stmt], params: &[Param]) -> bool {
+        stmts.iter().any(|s| match s {
+            Stmt::Load { addr, .. } | Stmt::Store { addr, .. } | Stmt::AtomicRmw { addr, .. } => {
+                matches!(analysis::stmt_space(addr, params), Ok((AddrSpace::Remote, _)))
+            }
+            Stmt::If { then_, else_, .. } => any_remote(then_, params) || any_remote(else_, params),
+            Stmt::While { body, .. } => any_remote(body, params),
+            _ => false,
+        })
+    }
+    any_remote(&f.body, &f.params)
+}
+
+/// Substitute caller argument expressions for callee params and remap
+/// callee variables into fresh caller variable ids.
+fn substitute(e: &Expr, args: &[Expr], var_off: u32) -> Expr {
+    match e {
+        Expr::Param(p) => args[*p as usize].clone(),
+        Expr::Var(v) => Expr::Var(v + var_off),
+        Expr::Bin(op, a, b) => Expr::Bin(*op, Box::new(substitute(a, args, var_off)), Box::new(substitute(b, args, var_off))),
+        other => other.clone(),
+    }
+}
+
+fn inline_body(stmts: &[Stmt], args: &[Expr], var_off: u32) -> Vec<Stmt> {
+    stmts
+        .iter()
+        .map(|s| match s {
+            Stmt::Let { var, expr } => Stmt::Let { var: var + var_off, expr: substitute(expr, args, var_off) },
+            Stmt::Load { var, addr, width } => {
+                Stmt::Load { var: var + var_off, addr: substitute(addr, args, var_off), width: *width }
+            }
+            Stmt::Store { val, addr, width } => Stmt::Store {
+                val: substitute(val, args, var_off),
+                addr: substitute(addr, args, var_off),
+                width: *width,
+            },
+            Stmt::AtomicRmw { op, old, addr, val, width } => Stmt::AtomicRmw {
+                op: *op,
+                old: old.map(|v| v + var_off),
+                addr: substitute(addr, args, var_off),
+                val: substitute(val, args, var_off),
+                width: *width,
+            },
+            Stmt::If { cond, then_, else_ } => Stmt::If {
+                cond: substitute(cond, args, var_off),
+                then_: inline_body(then_, args, var_off),
+                else_: inline_body(else_, args, var_off),
+            },
+            Stmt::While { cond, body } => Stmt::While {
+                cond: substitute(cond, args, var_off),
+                body: inline_body(body, args, var_off),
+            },
+            Stmt::Call { .. } => panic!("nested Call inside callee unsupported"),
+        })
+        .collect()
+}
+
+/// Inline `Stmt::Call` sites. Under serial/static scheduling every call is
+/// inlined; under AMU scheduling only remote-free callees are inlined
+/// (remote callees become true nested coroutines).
+fn inline_calls(kernel: &Kernel, sched: SchedKind) -> Result<Kernel> {
+    if kernel.callees.is_empty() {
+        return Ok(kernel.clone());
+    }
+    let mut k = kernel.clone();
+    let mut nvars = k.nvars;
+    fn rewrite(
+        stmts: &[Stmt],
+        k: &Kernel,
+        sched: SchedKind,
+        nvars: &mut u32,
+        names: &mut Vec<String>,
+    ) -> Result<Vec<Stmt>> {
+        let mut out = Vec::new();
+        for s in stmts {
+            match s {
+                Stmt::Call { callee, args, ret } => {
+                    let f = &k.callees[*callee];
+                    let do_inline = !sched.uses_amu() || !callee_has_remote(f);
+                    if do_inline {
+                        let off = *nvars;
+                        *nvars += f.nvars;
+                        for v in 0..f.nvars {
+                            names.push(format!("{}.v{}", f.name, v));
+                        }
+                        out.extend(inline_body(&f.body, args, off));
+                        if let (Some(rv), Some(fr)) = (ret, f.ret_var) {
+                            out.push(Stmt::Let { var: *rv, expr: Expr::Var(fr + off) });
+                        }
+                    } else {
+                        out.push(s.clone());
+                    }
+                }
+                Stmt::If { cond, then_, else_ } => out.push(Stmt::If {
+                    cond: cond.clone(),
+                    then_: rewrite(then_, k, sched, nvars, names)?,
+                    else_: rewrite(else_, k, sched, nvars, names)?,
+                }),
+                Stmt::While { cond, body } => out.push(Stmt::While {
+                    cond: cond.clone(),
+                    body: rewrite(body, k, sched, nvars, names)?,
+                }),
+                other => out.push(other.clone()),
+            }
+        }
+        Ok(out)
+    }
+    let mut names = k.var_names.clone();
+    k.body = rewrite(&kernel.body, kernel, sched, &mut nvars, &mut names)?;
+    k.nvars = nvars;
+    k.var_names = names;
+    Ok(k)
+}
+
+// ---------------------------------------------------------------------
+// Serial lowering
+// ---------------------------------------------------------------------
+
+fn lower_serial(kernel: &Kernel, an: &Analysis) -> Result<CompiledKernel> {
+    let mut b = FuncBuilder::new(format!("{}_serial", kernel.name));
+    let param_regs: Vec<Reg> = kernel.params.iter().map(|_| b.reg()).collect();
+    let var_reg: Vec<Reg> = (0..kernel.nvars).map(|_| b.reg()).collect();
+    let mut lw = SerialLower { kernel, b, param_regs, var_reg };
+
+    let head = lw.b.new_block("head", CodeTag::Compute);
+    let body = lw.b.new_block("body", CodeTag::Compute);
+    let done = lw.b.new_block("done", CodeTag::Compute);
+    // entry: i = 0
+    lw.b.mov(lw.var_reg[ITER_VAR as usize], Imm(0));
+    lw.b.jmp(head);
+    lw.b.switch_to(head);
+    let total = lw.param_regs[kernel.trip_param as usize];
+    let c = lw.b.alu(AluOp::Slt, R(lw.var_reg[ITER_VAR as usize]), R(total));
+    lw.b.br(R(c), body, done);
+    lw.b.switch_to(body);
+    lw.stmts(&kernel.body)?;
+    let iv = lw.var_reg[ITER_VAR as usize];
+    lw.b.alu_into(iv, AluOp::Add, R(iv), Imm(1));
+    lw.b.jmp(head);
+    lw.b.switch_to(done);
+    lw.b.halt();
+
+    let func = lw.b.build();
+    crate::ir::verify::verify(&func)?;
+    Ok(CompiledKernel {
+        func,
+        param_regs: lw.param_regs,
+        areas: vec![],
+        spm_base_reg: None,
+        spm_slot_bytes: 0,
+        num_tasks: 1,
+        ctx_bytes: 0,
+        nsites: an.sites.len(),
+        ngroups: 0,
+        ids_used: 0,
+    })
+}
+
+struct SerialLower<'a> {
+    kernel: &'a Kernel,
+    b: FuncBuilder,
+    param_regs: Vec<Reg>,
+    var_reg: Vec<Reg>,
+}
+
+impl<'a> SerialLower<'a> {
+    fn expr(&mut self, e: &Expr) -> Operand {
+        match e {
+            Expr::Imm(v) => Imm(*v),
+            Expr::FImm(f) => Imm(f.to_bits() as i64),
+            Expr::Var(v) => R(self.var_reg[*v as usize]),
+            Expr::Param(p) => R(self.param_regs[*p as usize]),
+            Expr::Bin(op, a, b) => {
+                let ra = self.expr(a);
+                let rb = self.expr(b);
+                let dst = match op {
+                    BinOp::I(o) => self.b.alu(*o, ra, rb),
+                    BinOp::F(o) => self.b.falu(*o, ra, rb),
+                };
+                R(dst)
+            }
+        }
+    }
+
+    fn space_of(&self, addr: &Expr) -> AddrSpace {
+        analysis::stmt_space(addr, &self.kernel.params).map(|(s, _)| s).unwrap_or(AddrSpace::Local)
+    }
+
+    fn stmts(&mut self, stmts: &[Stmt]) -> Result<()> {
+        for s in stmts {
+            match s {
+                Stmt::Let { var, expr } => {
+                    let v = self.expr(expr);
+                    self.b.mov(self.var_reg[*var as usize], v);
+                }
+                Stmt::Load { var, addr, width } => {
+                    let sp = self.space_of(addr);
+                    let a = self.expr(addr);
+                    self.b.load_into(self.var_reg[*var as usize], a, 0, *width, sp);
+                }
+                Stmt::Store { val, addr, width } => {
+                    let sp = self.space_of(addr);
+                    let v = self.expr(val);
+                    let a = self.expr(addr);
+                    self.b.store(v, a, 0, *width, sp);
+                }
+                Stmt::AtomicRmw { op, old, addr, val, width } => {
+                    let sp = self.space_of(addr);
+                    let v = self.expr(val);
+                    let a = self.expr(addr);
+                    let dst = old.map(|o| self.var_reg[o as usize]).unwrap_or_else(|| self.b.reg());
+                    self.b.push(Inst::AtomicRmw { op: *op, dst, val: v, base: a, off: 0, width: *width, space: sp });
+                }
+                Stmt::If { cond, then_, else_ } => {
+                    let c = self.expr(cond);
+                    let tb = self.b.new_block("if.then", CodeTag::Compute);
+                    let eb = self.b.new_block("if.else", CodeTag::Compute);
+                    let jb = self.b.new_block("if.join", CodeTag::Compute);
+                    self.b.br(c, tb, eb);
+                    self.b.switch_to(tb);
+                    self.stmts(then_)?;
+                    self.b.jmp(jb);
+                    self.b.switch_to(eb);
+                    self.stmts(else_)?;
+                    self.b.jmp(jb);
+                    self.b.switch_to(jb);
+                }
+                Stmt::While { cond, body } => {
+                    let hb = self.b.new_block("wh.head", CodeTag::Compute);
+                    let bb = self.b.new_block("wh.body", CodeTag::Compute);
+                    let xb = self.b.new_block("wh.exit", CodeTag::Compute);
+                    self.b.jmp(hb);
+                    self.b.switch_to(hb);
+                    let c = self.expr(cond);
+                    self.b.br(c, bb, xb);
+                    self.b.switch_to(bb);
+                    self.stmts(body)?;
+                    self.b.jmp(hb);
+                    self.b.switch_to(xb);
+                }
+                Stmt::Call { .. } => bail!("Call must be inlined before serial lowering"),
+            }
+        }
+        Ok(())
+    }
+}
+
+// The coroutine lowering lives in codegen_coro.rs (same module family) to
+// keep file sizes manageable.
+include!("codegen_coro.rs");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::AddrSpace::Remote;
+
+    fn gups_kernel() -> Kernel {
+        let mut kb = KernelBuilder::new("gups");
+        let tab = kb.param_ptr("tab", Remote);
+        let mask = kb.param_val("mask");
+        let n = kb.param_val("n");
+        kb.trip(n);
+        let idx = kb.var("idx");
+        let v = kb.var("v");
+        let addr = Expr::add(Expr::Param(tab), Expr::shl(Expr::Var(idx), Expr::Imm(3)));
+        kb.build(vec![
+            Stmt::Let {
+                var: idx,
+                expr: Expr::and(
+                    Expr::Bin(BinOp::I(AluOp::Hash), Box::new(Expr::Var(ITER_VAR)), Box::new(Expr::Imm(17))),
+                    Expr::Param(mask),
+                ),
+            },
+            Stmt::Load { var: v, addr: addr.clone(), width: Width::W8 },
+            Stmt::Store {
+                val: Expr::Bin(BinOp::I(AluOp::Xor), Box::new(Expr::Var(v)), Box::new(Expr::Var(idx))),
+                addr,
+                width: Width::W8,
+            },
+        ])
+    }
+
+    #[test]
+    fn serial_compiles_and_verifies() {
+        let k = gups_kernel();
+        let c = compile(&k, &CodegenOpts::serial(), &AmuConfig::disabled()).unwrap();
+        assert!(c.areas.is_empty());
+        assert_eq!(c.num_tasks, 1);
+        assert!(c.func.blocks.len() >= 4);
+    }
+
+    #[test]
+    fn static_fifo_compiles() {
+        let k = gups_kernel();
+        let c = compile(&k, &CodegenOpts::coroamu_s(16), &AmuConfig::disabled()).unwrap();
+        assert_eq!(c.num_tasks, 16);
+        assert!(c.areas.iter().any(|a| a.name == "handler"));
+        assert!(c.areas.iter().any(|a| a.name == "fifo"));
+        // Static scheduling must emit prefetches and indirect jumps.
+        let has_prefetch = c.func.blocks.iter().any(|b| b.insts.iter().any(|i| matches!(i, Inst::Prefetch { .. })));
+        let has_ijmp = c.func.blocks.iter().any(|b| matches!(b.term, Term::IndirectJmp { .. }));
+        assert!(has_prefetch && has_ijmp);
+    }
+
+    #[test]
+    fn getfin_compiles_with_amu_ops() {
+        let k = gups_kernel();
+        let amu = crate::config::SimConfig::nh_g().amu;
+        let c = compile(&k, &CodegenOpts::coroamu_d(96), &amu).unwrap();
+        assert_eq!(c.num_tasks, 96);
+        assert!(c.spm_base_reg.is_some());
+        let has_aload = c.func.blocks.iter().any(|b| b.insts.iter().any(|i| matches!(i, Inst::Aload { .. })));
+        let has_getfin = c.func.blocks.iter().any(|b| b.insts.iter().any(|i| matches!(i, Inst::Getfin { .. })));
+        assert!(has_aload && has_getfin);
+    }
+
+    #[test]
+    fn bafin_compiles_with_bafin_term() {
+        let k = gups_kernel();
+        let amu = crate::config::SimConfig::nh_g().amu;
+        let c = compile(&k, &CodegenOpts::coroamu_full(96), &amu).unwrap();
+        let has_bafin = c.func.blocks.iter().any(|b| matches!(b.term, Term::Bafin { .. }));
+        let has_getfin = c.func.blocks.iter().any(|b| b.insts.iter().any(|i| matches!(i, Inst::Getfin { .. })));
+        assert!(has_bafin && !has_getfin);
+    }
+
+    #[test]
+    fn full_codegen_is_leaner_than_basic() {
+        // §III-B/§III-D: context selection + bafin shrink the generated
+        // code relative to getfin+full-spill.
+        let k = gups_kernel();
+        let amu = crate::config::SimConfig::nh_g().amu;
+        let d = compile(&k, &CodegenOpts::coroamu_d(96), &amu).unwrap();
+        let f = compile(&k, &CodegenOpts::coroamu_full(96), &amu).unwrap();
+        assert!(
+            f.func.static_len() <= d.func.static_len(),
+            "full ({}) should not exceed basic ({})",
+            f.func.static_len(),
+            d.func.static_len()
+        );
+    }
+
+    #[test]
+    fn hand_coroutine_has_more_overhead_than_coroamu_s() {
+        let k = gups_kernel();
+        let hand = compile(&k, &CodegenOpts::hand_coroutine(16), &AmuConfig::disabled()).unwrap();
+        let s = compile(&k, &CodegenOpts::coroamu_s(16), &AmuConfig::disabled()).unwrap();
+        assert!(hand.func.static_len() > s.func.static_len());
+    }
+
+    #[test]
+    fn spm_capacity_clamps_tasks() {
+        let k = gups_kernel();
+        let mut amu = crate::config::SimConfig::nh_g().amu;
+        amu.spm_kb = 1; // 1 KB SPM, 64B slots -> 16 ids
+        let c = compile(&k, &CodegenOpts::coroamu_d(96), &amu).unwrap();
+        assert_eq!(c.num_tasks, 16);
+    }
+}

@@ -1,0 +1,863 @@
+// Coroutine lowering — the body of AsyncSplitPass. This file is
+// `include!`d by codegen.rs (same scope); it holds the `Lower` impl that
+// emits the Fig. 6 runtime skeleton plus the per-variant schedulers.
+
+impl<'a> Lower<'a> {
+    fn slot_of_var(&self, v: VarId) -> i64 {
+        let base = match &self.callee_params {
+            Some(ps) => CTX_VARS + 8 * ps.len() as i64,
+            None => CTX_VARS,
+        };
+        base + 8 * v as i64
+    }
+
+    /// Frame slot of kernel parameter `p` (basic codegen only).
+    fn slot_of_param(&self, p: usize) -> i64 {
+        CTX_VARS + 8 * (self.kernel.nvars as i64 + p as i64)
+    }
+
+    fn reg_of_var(&self, v: VarId) -> Reg {
+        match &self.callee_vars {
+            Some(vs) => vs[v as usize],
+            None => self.var_reg[v as usize],
+        }
+    }
+
+    fn reg_of_param(&self, p: ParamId) -> Reg {
+        match &self.callee_params {
+            Some(ps) => ps[p as usize],
+            None => self.param_regs[p as usize],
+        }
+    }
+
+    fn params(&self) -> &[Param] {
+        match self.callee_kernel {
+            Some(ck) => &self.kernel.callees[ck].params,
+            None => &self.kernel.params,
+        }
+    }
+
+    fn expr(&mut self, e: &Expr) -> Operand {
+        match e {
+            Expr::Imm(v) => Imm(*v),
+            Expr::FImm(f) => Imm(f.to_bits() as i64),
+            Expr::Var(v) => R(self.reg_of_var(*v)),
+            Expr::Param(p) => R(self.reg_of_param(*p)),
+            Expr::Bin(op, a, b) => {
+                let ra = self.expr(a);
+                let rb = self.expr(b);
+                let dst = match op {
+                    BinOp::I(o) => self.b.alu(*o, ra, rb),
+                    BinOp::F(o) => self.b.falu(*o, ra, rb),
+                };
+                R(dst)
+            }
+        }
+    }
+
+    /// Materialize an expression into a register (immediates too).
+    fn expr_reg(&mut self, e: &Expr) -> Reg {
+        match self.expr(e) {
+            R(r) => r,
+            v @ Imm(_) => {
+                let r = self.b.reg();
+                self.b.mov(r, v);
+                r
+            }
+        }
+    }
+
+    /// spm slot address for the current id: spm_base + cur_id * slot_bytes.
+    fn spm_slot_addr(&mut self) -> Reg {
+        let off = self.b.alu(AluOp::Mul, R(self.cur_id), Imm(self.slot_bytes as i64));
+        self.b.alu(AluOp::Add, R(self.spm_base), R(off))
+    }
+
+    /// Emit the context save / request issue / reschedule / restore
+    /// sequence around one suspension. `save` is the variable set to
+    /// spill; `temps` are (ctx-slot, reg) pairs saved and restored in
+    /// place. `issue` emits the decoupled request(s), given the resume
+    /// block. Control continues in a fresh Compute block on return.
+    fn yield_site(
+        &mut self,
+        what: &str,
+        save: VarSet,
+        temps: &[(i64, Reg)],
+        issue: impl FnOnce(&mut Self, BlockId),
+    ) {
+        let save_bb = self.b.new_block(format!("{what}.save"), CodeTag::CtxSwitch);
+        let resume_bb = self.b.new_block(format!("{what}.resume"), CodeTag::CtxSwitch);
+        let cont_bb = self.b.new_block(format!("{what}.cont"), CodeTag::Compute);
+        self.b.jmp(save_bb);
+        self.b.switch_to(save_bb);
+        // Spill live variables into the handler context.
+        for v in vs_iter(save) {
+            let slot = self.slot_of_var(v);
+            let r = self.reg_of_var(v);
+            self.b.store(R(r), R(self.ctx), slot, Width::W8, AddrSpace::Local);
+        }
+        for (slot, r) in temps {
+            self.b.store(R(*r), R(self.ctx), *slot, Width::W8, AddrSpace::Local);
+        }
+        if self.opts.generic_frame {
+            // C++20-framework frame bookkeeping: promise state + frame ptr.
+            let fs = self.ctx_bytes as i64 - 16;
+            self.b.store(Imm(1), R(self.ctx), fs, Width::W8, AddrSpace::Local);
+            self.b.store(R(self.cur_id), R(self.ctx), fs + 8, Width::W8, AddrSpace::Local);
+            let t = self.b.alu(AluOp::Add, R(self.ctx), Imm(64));
+            let _ = self.b.alu(AluOp::And, R(t), Imm(-64));
+        }
+        if matches!(self.opts.sched, SchedKind::StaticFifo | SchedKind::Getfin) {
+            // Software-maintained resumption target (§III-D: bafin removes
+            // this store — the target rides in the request instead).
+            self.b.store(Imm(resume_bb as i64), R(self.ctx), CTX_RESUME, Width::W8, AddrSpace::Local);
+        }
+        issue(self, resume_bb);
+        if self.opts.sched == SchedKind::StaticFifo {
+            // FIFO push: queue[tail & mask] = cur_id; tail += 1.
+            let idx = self.b.alu(AluOp::And, R(self.fifo_tail), Imm(self.fifo_mask));
+            let off = self.b.alu(AluOp::Shl, R(idx), Imm(3));
+            let slot = self.b.alu(AluOp::Add, R(self.fifo_base), R(off));
+            self.b.store(R(self.cur_id), R(slot), 0, Width::W8, AddrSpace::Local);
+            self.b.alu_into(self.fifo_tail, AluOp::Add, R(self.fifo_tail), Imm(1));
+            // Static scheduling launches breadth-first: go through the
+            // launch block so all tasks start before the first resume
+            // (prefetch distance = concurrency).
+            self.b.jmp(self.launch_bb);
+        } else {
+            // Dynamic scheduling: poll immediately; the scheduler falls
+            // through to the launch/drain logic only when idle (Fig. 7).
+            self.b.jmp(self.sched_bb);
+        }
+
+        // Resume path: reload the context.
+        self.b.switch_to(resume_bb);
+        for v in vs_iter(save) {
+            let slot = self.slot_of_var(v);
+            let r = self.reg_of_var(v);
+            self.b.load_into(r, R(self.ctx), slot, Width::W8, AddrSpace::Local);
+        }
+        for (slot, r) in temps {
+            self.b.load_into(*r, R(self.ctx), *slot, Width::W8, AddrSpace::Local);
+        }
+        if let Some(ps) = &self.callee_params {
+            // Nested coroutine: argument registers are clobbered by other
+            // tasks; reload them from the child's arg slots.
+            let ps = ps.clone();
+            for (k, pr) in ps.iter().enumerate() {
+                self.b.load_into(*pr, R(self.ctx), CTX_VARS + 8 * k as i64, Width::W8, AddrSpace::Local);
+            }
+        } else if self.spill_params {
+            // Basic codegen keeps captured values in the frame: reload the
+            // parameters it framed at launch (context selection removes
+            // these loads entirely, Fig. 15).
+            for p in 0..self.param_regs.len() {
+                let slot = self.slot_of_param(p);
+                self.b.load_into(self.param_regs[p], R(self.ctx), slot, Width::W8, AddrSpace::Local);
+            }
+        }
+        if self.opts.generic_frame {
+            let fs = self.ctx_bytes as i64 - 16;
+            let a = self.b.load(R(self.ctx), fs, Width::W8, AddrSpace::Local);
+            let b2 = self.b.load(R(self.ctx), fs + 8, Width::W8, AddrSpace::Local);
+            let _ = self.b.alu(AluOp::Add, R(a), R(b2));
+        }
+        self.b.jmp(cont_bb);
+        self.b.switch_to(cont_bb);
+    }
+
+    /// Saved-variable set for a site under the active context policy.
+    fn save_set(&self, site_idx: usize) -> VarSet {
+        let site = &self.an.sites[site_idx];
+        self.an.saved_vars(site, self.opts.context_opt && !self.opts.generic_frame)
+    }
+
+    // -----------------------------------------------------------------
+    // Site lowering
+    // -----------------------------------------------------------------
+
+    fn lower_load_site(&mut self, var: VarId, addr: &Expr, width: Width) {
+        let site_idx = self.next_site;
+        self.next_site += 1;
+        let role = self.plan.roles.get(site_idx).cloned().unwrap_or(Role::Single);
+        let save = self.save_set(site_idx);
+        let dst = self.reg_of_var(var);
+        match (self.opts.sched, role) {
+            (SchedKind::StaticFifo, Role::Single) => {
+                let a = self.expr_reg(addr);
+                self.b.push(Inst::Prefetch { base: R(a), off: 0, space: AddrSpace::Remote });
+                self.yield_site("ld", save, &[(CTX_ADDR, a)], |_, _| {});
+                self.b.load_into(dst, R(a), 0, width, AddrSpace::Remote);
+            }
+            (SchedKind::StaticFifo, Role::Leader(g)) => {
+                // Prefetch the whole group, one yield.
+                let a = self.expr_reg(addr);
+                let group = self.plan.groups[g].clone();
+                match group.kind {
+                    GroupKind::Coarse { span_bytes, base_delta } => {
+                        let mut off = base_delta;
+                        while off < base_delta + span_bytes as i64 {
+                            self.b.push(Inst::Prefetch { base: R(a), off, space: AddrSpace::Remote });
+                            off += coalesce::LINE as i64;
+                        }
+                    }
+                    GroupKind::Set => {
+                        // Member addresses are group-safe: evaluate now.
+                        let member_addrs: Vec<Expr> = group.members[1..]
+                            .iter()
+                            .map(|m| self.an.sites[*m].addr.clone())
+                            .collect();
+                        self.b.push(Inst::Prefetch { base: R(a), off: 0, space: AddrSpace::Remote });
+                        for ma in &member_addrs {
+                            let mr = self.expr_reg(ma);
+                            self.b.push(Inst::Prefetch { base: R(mr), off: 0, space: AddrSpace::Remote });
+                        }
+                    }
+                }
+                self.yield_site("ldg", save, &[(CTX_ADDR, a)], |_, _| {});
+                self.b.load_into(dst, R(a), 0, width, AddrSpace::Remote);
+            }
+            (SchedKind::StaticFifo, Role::Member { .. }) => {
+                // Demand access; the leader already prefetched it.
+                let a = self.expr_reg(addr);
+                self.b.load_into(dst, R(a), 0, width, AddrSpace::Remote);
+            }
+            (_, Role::Single) => {
+                let a = self.expr_reg(addr);
+                let cur = self.cur_id;
+                self.yield_site("ld", save, &[], move |lw, resume| {
+                    lw.b.push(Inst::Aload {
+                        id: R(cur),
+                        base: R(a),
+                        off: 0,
+                        bytes: width.bytes(),
+                        spm_off: 0,
+                        resume,
+                    });
+                });
+                let sa = self.spm_slot_addr();
+                self.b.load_into(dst, R(sa), 0, width, AddrSpace::Spm);
+            }
+            (_, Role::Leader(g)) => {
+                let a = self.expr_reg(addr);
+                let group = self.plan.groups[g].clone();
+                let cur = self.cur_id;
+                match group.kind {
+                    GroupKind::Coarse { span_bytes, base_delta } => {
+                        self.yield_site("ldc", save, &[], move |lw, resume| {
+                            lw.b.push(Inst::Aload {
+                                id: R(cur),
+                                base: R(a),
+                                off: base_delta,
+                                bytes: span_bytes,
+                                spm_off: 0,
+                                resume,
+                            });
+                        });
+                    }
+                    GroupKind::Set => {
+                        let member_addrs: Vec<(Reg, u32, u32)> = group.members[1..]
+                            .iter()
+                            .zip(group.spm_offs[1..].iter())
+                            .map(|(m, so)| {
+                                let site = self.an.sites[*m].clone();
+                                let r = self.expr_reg(&site.addr);
+                                (r, site.width.bytes(), *so)
+                            })
+                            .collect();
+                        let n = group.members.len() as i64;
+                        self.b.push(Inst::Aset { id: R(cur), n: Imm(n) });
+                        self.yield_site("lds", save, &[], move |lw, resume| {
+                            lw.b.push(Inst::Aload {
+                                id: R(cur),
+                                base: R(a),
+                                off: 0,
+                                bytes: width.bytes(),
+                                spm_off: 0,
+                                resume,
+                            });
+                            for (mr, mb, so) in member_addrs {
+                                lw.b.push(Inst::Aload {
+                                    id: R(cur),
+                                    base: R(mr),
+                                    off: 0,
+                                    bytes: mb,
+                                    spm_off: so,
+                                    resume,
+                                });
+                            }
+                        });
+                    }
+                }
+                let sa = self.spm_slot_addr();
+                self.b.load_into(dst, R(sa), group.spm_offs[0] as i64, width, AddrSpace::Spm);
+            }
+            (_, Role::Member { group, index }) => {
+                // Data already fetched by the leader: read straight out of
+                // the SPM slot, no request, no switch.
+                let off = self.plan.groups[group].spm_offs[index] as i64;
+                let sa = self.spm_slot_addr();
+                self.b.load_into(dst, R(sa), off, width, AddrSpace::Spm);
+            }
+        }
+    }
+
+    fn lower_store_site(&mut self, val: &Expr, addr: &Expr, width: Width) {
+        let site_idx = self.next_site;
+        self.next_site += 1;
+        match self.opts.sched {
+            SchedKind::StaticFifo => {
+                // Remote stores drain through the write buffer; static
+                // coroutines do not yield on them.
+                let v = self.expr(val);
+                let a = self.expr(addr);
+                self.b.store(v, a, 0, width, AddrSpace::Remote);
+            }
+            _ => {
+                let save = self.save_set(site_idx);
+                let v = self.expr(val);
+                let a = self.expr_reg(addr);
+                let sa = self.spm_slot_addr();
+                self.b.store(v, R(sa), 0, width, AddrSpace::Spm);
+                let cur = self.cur_id;
+                self.yield_site("st", save, &[], move |lw, resume| {
+                    lw.b.push(Inst::Astore {
+                        id: R(cur),
+                        base: R(a),
+                        off: 0,
+                        bytes: width.bytes(),
+                        spm_off: 0,
+                        resume,
+                    });
+                });
+            }
+        }
+    }
+
+    /// §III-E: remote atomics under dynamic scheduling become an
+    /// await/asignal lock hand-off procedure (Fig. 8).
+    fn lower_atomic_site(&mut self, op: AluOp, old: Option<VarId>, addr: &Expr, val: &Expr, width: Width) {
+        let site_idx = self.next_site;
+        self.next_site += 1;
+        let save = self.save_set(site_idx);
+        match self.opts.sched {
+            SchedKind::StaticFifo => {
+                let a = self.expr_reg(addr);
+                let v = self.expr_reg(val);
+                self.b.push(Inst::Prefetch { base: R(a), off: 0, space: AddrSpace::Remote });
+                self.yield_site("at", save, &[(CTX_ADDR, a), (CTX_VAL, v)], |_, _| {});
+                let dst = old.map(|o| self.reg_of_var(o)).unwrap_or_else(|| self.b.reg());
+                self.b.push(Inst::AtomicRmw { op, dst, val: R(v), base: R(a), off: 0, width, space: AddrSpace::Remote });
+            }
+            _ => {
+                let a = self.expr_reg(addr);
+                let v = self.expr_reg(val);
+                // --- acquire ---
+                let h0 = self.b.alu(AluOp::Hash, R(a), Imm(0));
+                let h = self.b.alu(AluOp::And, R(h0), Imm(self.lock_entries as i64 - 1));
+                let hoff = self.b.alu(AluOp::Shl, R(h), Imm(4));
+                let le = self.b.alu(AluOp::Add, R(self.lock_base), R(hoff));
+                let owned = self.b.load(R(le), 0, Width::W8, AddrSpace::Local);
+                let take_bb = self.b.new_block("at.take", CodeTag::Lifecycle);
+                let wait_bb = self.b.new_block("at.wait", CodeTag::Lifecycle);
+                let locked_bb = self.b.new_block("at.locked", CodeTag::Lifecycle);
+                let free = self.b.alu(AluOp::Seq, R(owned), Imm(0));
+                self.b.br(R(free), take_bb, wait_bb);
+                self.b.switch_to(take_bb);
+                self.b.store(Imm(1), R(le), 0, Width::W8, AddrSpace::Local);
+                self.b.jmp(locked_bb);
+                // wait: push self on the LIFO waiter stack, sleep via await.
+                self.b.switch_to(wait_bb);
+                let sh = self.b.load(R(le), 8, Width::W8, AddrSpace::Local);
+                let woff = self.b.alu(AluOp::Shl, R(self.cur_id), Imm(3));
+                let wslot = self.b.alu(AluOp::Add, R(self.waiters_base), R(woff));
+                self.b.store(R(sh), R(wslot), 0, Width::W8, AddrSpace::Local);
+                self.b.store(R(self.cur_id), R(le), 8, Width::W8, AddrSpace::Local);
+                let cur = self.cur_id;
+                self.yield_site("at.acq", save, &[(CTX_ADDR, a), (CTX_VAL, v)], move |lw, resume| {
+                    lw.b.push(Inst::Await { id: R(cur), resume });
+                });
+                // Ownership was handed off to us by asignal.
+                self.b.jmp(locked_bb);
+                self.b.switch_to(locked_bb);
+                // --- critical section: aload, modify in SPM, astore ---
+                self.yield_site("at.ld", save, &[(CTX_ADDR, a), (CTX_VAL, v)], move |lw, resume| {
+                    lw.b.push(Inst::Aload { id: R(cur), base: R(a), off: 0, bytes: width.bytes(), spm_off: 0, resume });
+                });
+                let sa = self.spm_slot_addr();
+                let oldr = old.map(|o| self.reg_of_var(o)).unwrap_or_else(|| self.b.reg());
+                self.b.load_into(oldr, R(sa), 0, width, AddrSpace::Spm);
+                let nv = self.b.alu(op, R(oldr), R(v));
+                self.b.store(R(nv), R(sa), 0, width, AddrSpace::Spm);
+                let mut save2 = save;
+                if let Some(o) = old {
+                    analysis::vs_insert(&mut save2, o);
+                }
+                self.yield_site("at.st", save2, &[(CTX_ADDR, a)], move |lw, resume| {
+                    lw.b.push(Inst::Astore { id: R(cur), base: R(a), off: 0, bytes: width.bytes(), spm_off: 0, resume });
+                });
+                // --- release: hand off or unlock ---
+                let h0b = self.b.alu(AluOp::Hash, R(a), Imm(0));
+                let hb = self.b.alu(AluOp::And, R(h0b), Imm(self.lock_entries as i64 - 1));
+                let hoffb = self.b.alu(AluOp::Shl, R(hb), Imm(4));
+                let leb = self.b.alu(AluOp::Add, R(self.lock_base), R(hoffb));
+                let w = self.b.load(R(leb), 8, Width::W8, AddrSpace::Local);
+                let handoff_bb = self.b.new_block("at.handoff", CodeTag::Lifecycle);
+                let unlock_bb = self.b.new_block("at.unlock", CodeTag::Lifecycle);
+                let after_bb = self.b.new_block("at.after", CodeTag::Compute);
+                let none = self.b.alu(AluOp::Seq, R(w), Imm(FREE_SENTINEL));
+                self.b.br(R(none), unlock_bb, handoff_bb);
+                self.b.switch_to(handoff_bb);
+                let woff2 = self.b.alu(AluOp::Shl, R(w), Imm(3));
+                let wslot2 = self.b.alu(AluOp::Add, R(self.waiters_base), R(woff2));
+                let nw = self.b.load(R(wslot2), 0, Width::W8, AddrSpace::Local);
+                self.b.store(R(nw), R(leb), 8, Width::W8, AddrSpace::Local);
+                self.b.push(Inst::Asignal { id: R(w) });
+                self.b.jmp(after_bb);
+                self.b.switch_to(unlock_bb);
+                self.b.store(Imm(0), R(leb), 0, Width::W8, AddrSpace::Local);
+                self.b.jmp(after_bb);
+                self.b.switch_to(after_bb);
+            }
+        }
+    }
+
+    /// §III-F nested coroutine call (non-inlined, AMU schedulers only).
+    fn lower_call_site(&mut self, callee: usize, args: &[Expr], ret: Option<VarId>) {
+        assert!(self.opts.sched.uses_amu(), "nested calls require AMU scheduling");
+        assert!(self.callee_params.is_none(), "only one nesting level supported");
+        let entry = self.callee_entries[callee];
+        // Evaluate arguments, then store them into the child's arg slots.
+        let argv: Vec<Reg> = args.iter().map(|a| self.expr_reg(a)).collect();
+        let child = self.b.alu(AluOp::Add, R(self.cur_id), Imm(self.num_tasks as i64));
+        let coff = self.b.alu(AluOp::Mul, R(child), Imm(self.ctx_bytes as i64));
+        let cctx = self.b.alu(AluOp::Add, R(self.handler_base), R(coff));
+        for (k, ar) in argv.iter().enumerate() {
+            self.b.store(R(*ar), R(cctx), CTX_VARS + 8 * k as i64, Width::W8, AddrSpace::Local);
+        }
+        if self.opts.sched == SchedKind::Getfin {
+            // Software resume target for the child's first dispatch.
+            self.b.store(Imm(entry as i64), R(cctx), CTX_RESUME, Width::W8, AddrSpace::Local);
+        }
+        // Caller hangs; child registered + signalled ready.
+        let live = self.call_live_sets[callee];
+        let cur = self.cur_id;
+        let childr = child;
+        self.yield_site("call", live, &[], move |lw, resume| {
+            lw.b.push(Inst::Await { id: R(cur), resume });
+            lw.b.push(Inst::Await { id: R(childr), resume: entry });
+            lw.b.push(Inst::Asignal { id: R(childr) });
+        });
+        // Caller resumed: fetch the return value from the child context.
+        if let Some(rv) = ret {
+            let coff2 = self.b.alu(AluOp::Add, R(self.cur_id), Imm(self.num_tasks as i64));
+            let coff3 = self.b.alu(AluOp::Mul, R(coff2), Imm(self.ctx_bytes as i64));
+            let cctx2 = self.b.alu(AluOp::Add, R(self.handler_base), R(coff3));
+            self.b.load_into(self.reg_of_var(rv), R(cctx2), CTX_VAL, Width::W8, AddrSpace::Local);
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Statement walk (must mirror the analysis DFS order exactly)
+    // -----------------------------------------------------------------
+
+    fn space_of(&self, addr: &Expr) -> AddrSpace {
+        analysis::stmt_space(addr, self.params()).map(|(s, _)| s).unwrap_or(AddrSpace::Local)
+    }
+
+    fn stmts(&mut self, stmts: &[Stmt]) -> Result<()> {
+        for s in stmts {
+            match s {
+                Stmt::Let { var, expr } => {
+                    let v = self.expr(expr);
+                    let r = self.reg_of_var(*var);
+                    self.b.mov(r, v);
+                }
+                Stmt::Load { var, addr, width } => {
+                    if self.space_of(addr) == AddrSpace::Remote {
+                        self.lower_load_site(*var, addr, *width);
+                    } else {
+                        let a = self.expr(addr);
+                        let r = self.reg_of_var(*var);
+                        self.b.load_into(r, a, 0, *width, AddrSpace::Local);
+                    }
+                }
+                Stmt::Store { val, addr, width } => {
+                    if self.space_of(addr) == AddrSpace::Remote {
+                        self.lower_store_site(val, addr, *width);
+                    } else {
+                        let v = self.expr(val);
+                        let a = self.expr(addr);
+                        self.b.store(v, a, 0, *width, AddrSpace::Local);
+                    }
+                }
+                Stmt::AtomicRmw { op, old, addr, val, width } => {
+                    if self.space_of(addr) == AddrSpace::Remote {
+                        self.lower_atomic_site(*op, *old, addr, val, *width);
+                    } else {
+                        let v = self.expr(val);
+                        let a = self.expr(addr);
+                        let dst = old.map(|o| self.reg_of_var(o)).unwrap_or_else(|| self.b.reg());
+                        self.b.push(Inst::AtomicRmw { op: *op, dst, val: v, base: a, off: 0, width: *width, space: AddrSpace::Local });
+                    }
+                }
+                Stmt::If { cond, then_, else_ } => {
+                    let c = self.expr(cond);
+                    let tb = self.b.new_block("if.then", CodeTag::Compute);
+                    let eb = self.b.new_block("if.else", CodeTag::Compute);
+                    let jb = self.b.new_block("if.join", CodeTag::Compute);
+                    self.b.br(c, tb, eb);
+                    self.b.switch_to(tb);
+                    self.stmts(then_)?;
+                    self.b.jmp(jb);
+                    self.b.switch_to(eb);
+                    self.stmts(else_)?;
+                    self.b.jmp(jb);
+                    self.b.switch_to(jb);
+                }
+                Stmt::While { cond, body } => {
+                    let hb = self.b.new_block("wh.head", CodeTag::Compute);
+                    let bb = self.b.new_block("wh.body", CodeTag::Compute);
+                    let xb = self.b.new_block("wh.exit", CodeTag::Compute);
+                    self.b.jmp(hb);
+                    self.b.switch_to(hb);
+                    let c = self.expr(cond);
+                    self.b.br(c, bb, xb);
+                    self.b.switch_to(bb);
+                    self.stmts(body)?;
+                    self.b.jmp(hb);
+                    self.b.switch_to(xb);
+                }
+                Stmt::Call { callee, args, ret } => {
+                    self.lower_call_site(*callee, args, *ret);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Runtime skeleton
+    // -----------------------------------------------------------------
+
+    fn emit_coroutine(mut self) -> Result<CompiledKernel> {
+        let kernel = self.kernel;
+        let uses_amu = self.opts.sched.uses_amu();
+        let has_atomics = !self.an.sites.is_empty()
+            && self.an.sites.iter().any(|s| s.kind == SiteKind::AtomicRemote);
+        if self.opts.generic_frame {
+            self.ctx_bytes += 16; // frame/promise slots
+        }
+
+        // Split off trailing sequential-variable updates (§III-B case 3):
+        // they run serialized in the Return block.
+        let mut main_body = kernel.body.clone();
+        let mut seq_tail: Vec<Stmt> = Vec::new();
+        loop {
+            let is_seq = match main_body.last() {
+                Some(Stmt::Let { var, .. }) => self.an.class(*var) == VarClass::Sequential,
+                _ => false,
+            };
+            if !is_seq {
+                break;
+            }
+            seq_tail.insert(0, main_body.pop().unwrap());
+        }
+        for v in 0..kernel.nvars {
+            if self.an.class(v) == VarClass::Sequential {
+                let written_in_main = {
+                    fn writes(stmts: &[Stmt], v: VarId) -> bool {
+                        stmts.iter().any(|s| match s {
+                            Stmt::Let { var, .. } | Stmt::Load { var, .. } => *var == v,
+                            Stmt::AtomicRmw { old: Some(o), .. } => *o == v,
+                            Stmt::If { then_, else_, .. } => writes(then_, v) || writes(else_, v),
+                            Stmt::While { body, .. } => writes(body, v),
+                            Stmt::Call { ret: Some(r), .. } => *r == v,
+                            _ => false,
+                        })
+                    }
+                    writes(&main_body, v)
+                };
+                if written_in_main {
+                    bail!(
+                        "sequential variable {} is written outside the trailing update tail; \
+                         hoisting arbitrary updates is not supported (mark it private or restructure)",
+                        kernel.var_names.get(v as usize).cloned().unwrap_or_else(|| format!("v{v}"))
+                    );
+                }
+            }
+        }
+
+        // Key blocks (forward references).
+        self.launch_bb = self.b.new_block("launch", CodeTag::Lifecycle);
+        self.sched_bb = self.b.new_block("sched", CodeTag::Scheduler);
+        self.finish_bb = self.b.new_block("finish", CodeTag::Lifecycle);
+        self.done_bb = self.b.new_block("done", CodeTag::Lifecycle);
+        let body_entry = self.b.new_block("body", CodeTag::Compute);
+        // Nested callee entry blocks.
+        self.callee_entries = kernel
+            .callees
+            .iter()
+            .map(|_| self.b.new_block("child.entry", CodeTag::CtxSwitch))
+            .collect();
+        // Live sets at call sites (conservative: every private var).
+        let mut call_live: VarSet = 0;
+        for v in 0..kernel.nvars {
+            if self.an.class(v) == VarClass::Private {
+                analysis::vs_insert(&mut call_live, v);
+            }
+        }
+        self.call_live_sets = vec![call_live; kernel.callees.len().max(1)];
+
+        // ---- entry / init (Fig. 6 Alloca + Init blocks) ----
+        if uses_amu {
+            self.b.push(Inst::Aconfig { base: R(self.handler_base), size: Imm(self.ctx_bytes as i64) });
+        }
+        self.b.mov(self.next_iter, Imm(0));
+        self.b.mov(self.active, Imm(0));
+        self.b.mov(self.free_top, Imm(self.num_tasks as i64));
+        self.b.mov(self.fifo_head, Imm(0));
+        self.b.mov(self.fifo_tail, Imm(0));
+        let t = self.b.imm(0);
+        let init_loop = self.b.new_block("init.loop", CodeTag::Init);
+        let init_body = self.b.new_block("init.body", CodeTag::Init);
+        let init_next = self.b.new_block("init.next", CodeTag::Init);
+        self.b.jmp(init_loop);
+        self.b.switch_to(init_loop);
+        let c = self.b.alu(AluOp::Slt, R(t), Imm(self.num_tasks as i64));
+        self.b.br(R(c), init_body, init_next);
+        self.b.switch_to(init_body);
+        let off = self.b.alu(AluOp::Shl, R(t), Imm(3));
+        let slot = self.b.alu(AluOp::Add, R(self.free_base), R(off));
+        self.b.store(R(t), R(slot), 0, Width::W8, AddrSpace::Local);
+        if self.opts.generic_frame {
+            // Frame "allocation" touch per task.
+            let coff = self.b.alu(AluOp::Mul, R(t), Imm(self.ctx_bytes as i64));
+            let cb = self.b.alu(AluOp::Add, R(self.handler_base), R(coff));
+            for k in 0..4 {
+                self.b.store(Imm(0), R(cb), 8 * k, Width::W8, AddrSpace::Local);
+            }
+        }
+        self.b.alu_into(t, AluOp::Add, R(t), Imm(1));
+        self.b.jmp(init_loop);
+        self.b.switch_to(init_next);
+        if has_atomics && uses_amu {
+            let l = self.b.imm(0);
+            let lk_loop = self.b.new_block("init.locks", CodeTag::Init);
+            let lk_body = self.b.new_block("init.locks.body", CodeTag::Init);
+            let lk_done = self.b.new_block("init.locks.done", CodeTag::Init);
+            self.b.jmp(lk_loop);
+            self.b.switch_to(lk_loop);
+            let c2 = self.b.alu(AluOp::Slt, R(l), Imm(self.lock_entries as i64));
+            self.b.br(R(c2), lk_body, lk_done);
+            self.b.switch_to(lk_body);
+            let lo = self.b.alu(AluOp::Shl, R(l), Imm(4));
+            let ls = self.b.alu(AluOp::Add, R(self.lock_base), R(lo));
+            self.b.store(Imm(0), R(ls), 0, Width::W8, AddrSpace::Local);
+            self.b.store(Imm(FREE_SENTINEL), R(ls), 8, Width::W8, AddrSpace::Local);
+            self.b.alu_into(l, AluOp::Add, R(l), Imm(1));
+            self.b.jmp(lk_loop);
+            self.b.switch_to(lk_done);
+            self.b.jmp(self.launch_bb);
+        } else {
+            self.b.jmp(self.launch_bb);
+        }
+
+        // ---- launch / drain (Fig. 6 Return block: spawning + recycling) ----
+        self.b.switch_to(self.launch_bb);
+        let total = self.param_regs[kernel.trip_param as usize];
+        let more = self.b.alu(AluOp::Slt, R(self.next_iter), R(total));
+        let chk_free = self.b.new_block("launch.free", CodeTag::Lifecycle);
+        let do_launch = self.b.new_block("launch.do", CodeTag::Lifecycle);
+        let drain = self.b.new_block("drain", CodeTag::Lifecycle);
+        self.b.br(R(more), chk_free, drain);
+        self.b.switch_to(chk_free);
+        let have = self.b.alu(AluOp::Slt, Imm(0), R(self.free_top));
+        self.b.br(R(have), do_launch, self.sched_bb);
+        self.b.switch_to(do_launch);
+        self.b.alu_into(self.free_top, AluOp::Sub, R(self.free_top), Imm(1));
+        let foff = self.b.alu(AluOp::Shl, R(self.free_top), Imm(3));
+        let fslot = self.b.alu(AluOp::Add, R(self.free_base), R(foff));
+        self.b.load_into(self.cur_id, R(fslot), 0, Width::W8, AddrSpace::Local);
+        let coff = self.b.alu(AluOp::Mul, R(self.cur_id), Imm(self.ctx_bytes as i64));
+        self.b.alu_into(self.ctx, AluOp::Add, R(self.handler_base), R(coff));
+        self.b.mov(self.var_reg[ITER_VAR as usize], R(self.next_iter));
+        self.b.alu_into(self.next_iter, AluOp::Add, R(self.next_iter), Imm(1));
+        self.b.alu_into(self.active, AluOp::Add, R(self.active), Imm(1));
+        if self.spill_params {
+            // Frame the captured values once per task (stock lowering).
+            for p in 0..self.param_regs.len() {
+                let slot = self.slot_of_param(p);
+                self.b.store(R(self.param_regs[p]), R(self.ctx), slot, Width::W8, AddrSpace::Local);
+            }
+        }
+        self.b.jmp(body_entry);
+        self.b.switch_to(drain);
+        let empty = self.b.alu(AluOp::Seq, R(self.active), Imm(0));
+        self.b.br(R(empty), self.done_bb, self.sched_bb);
+
+        // ---- scheduler ----
+        self.b.switch_to(self.sched_bb);
+        match self.opts.sched {
+            SchedKind::StaticFifo => {
+                let pop = self.b.new_block("sched.pop", CodeTag::Scheduler);
+                let emptyq = self.b.alu(AluOp::Seq, R(self.fifo_head), R(self.fifo_tail));
+                // Empty queue: either drain to done or spin via launch.
+                self.b.br(R(emptyq), drain, pop);
+                self.b.switch_to(pop);
+                let idx = self.b.alu(AluOp::And, R(self.fifo_head), Imm(self.fifo_mask));
+                let qoff = self.b.alu(AluOp::Shl, R(idx), Imm(3));
+                let qslot = self.b.alu(AluOp::Add, R(self.fifo_base), R(qoff));
+                self.b.load_into(self.cur_id, R(qslot), 0, Width::W8, AddrSpace::Local);
+                self.b.alu_into(self.fifo_head, AluOp::Add, R(self.fifo_head), Imm(1));
+                let hoff = self.b.alu(AluOp::Mul, R(self.cur_id), Imm(self.ctx_bytes as i64));
+                self.b.alu_into(self.ctx, AluOp::Add, R(self.handler_base), R(hoff));
+                if self.opts.generic_frame {
+                    let x = self.b.load(R(self.ctx), self.ctx_bytes as i64 - 16, Width::W8, AddrSpace::Local);
+                    let y = self.b.alu(AluOp::Add, R(x), Imm(1));
+                    let _ = self.b.alu(AluOp::And, R(y), Imm(7));
+                }
+                let resume = self.b.load(R(self.ctx), CTX_RESUME, Width::W8, AddrSpace::Local);
+                self.b.terminate(Term::IndirectJmp { target: R(resume) });
+            }
+            SchedKind::Getfin => {
+                let got = self.b.new_block("sched.got", CodeTag::Scheduler);
+                let id = self.b.reg();
+                self.b.push(Inst::Getfin { dst: id });
+                let none = self.b.alu(AluOp::Slt, R(id), Imm(0));
+                self.b.br(R(none), self.launch_bb, got);
+                self.b.switch_to(got);
+                self.b.mov(self.cur_id, R(id));
+                let hoff = self.b.alu(AluOp::Mul, R(self.cur_id), Imm(self.ctx_bytes as i64));
+                self.b.alu_into(self.ctx, AluOp::Add, R(self.handler_base), R(hoff));
+                let resume = self.b.load(R(self.ctx), CTX_RESUME, Width::W8, AddrSpace::Local);
+                self.b.terminate(Term::IndirectJmp { target: R(resume) });
+            }
+            SchedKind::Bafin => {
+                // Single-instruction poll-and-dispatch: handler address and
+                // id come from hardware; jump target from the BTQ (§IV-A).
+                self.b.terminate(Term::Bafin {
+                    handler_dst: self.ctx,
+                    id_dst: self.cur_id,
+                    fallthrough: self.launch_bb,
+                });
+            }
+            SchedKind::Serial => unreachable!(),
+        }
+
+        // ---- body ----
+        self.b.switch_to(body_entry);
+        self.stmts(&main_body)?;
+        self.b.jmp(self.finish_bb);
+
+        // ---- finish (Return block) ----
+        self.b.switch_to(self.finish_bb);
+        self.stmts(&seq_tail)?;
+        let foff2 = self.b.alu(AluOp::Shl, R(self.free_top), Imm(3));
+        let fslot2 = self.b.alu(AluOp::Add, R(self.free_base), R(foff2));
+        self.b.store(R(self.cur_id), R(fslot2), 0, Width::W8, AddrSpace::Local);
+        self.b.alu_into(self.free_top, AluOp::Add, R(self.free_top), Imm(1));
+        self.b.alu_into(self.active, AluOp::Sub, R(self.active), Imm(1));
+        self.b.jmp(self.launch_bb);
+
+        self.b.switch_to(self.done_bb);
+        self.b.halt();
+
+        // ---- nested callees ----
+        let callees: Vec<usize> = (0..kernel.callees.len()).collect();
+        for ci in callees {
+            if !callee_has_remote(&kernel.callees[ci]) {
+                // Was inlined; entry block still needs a terminator.
+                self.b.switch_to(self.callee_entries[ci]);
+                self.b.halt();
+                continue;
+            }
+            self.emit_callee(ci)?;
+        }
+
+        // ---- package ----
+        let num_tasks = self.num_tasks;
+        let ids_used = if self.has_nested { 2 * num_tasks } else { num_tasks };
+        let mut areas = vec![
+            Area { name: "handler".into(), bytes: ids_used as u64 * self.ctx_bytes as u64, reg: self.handler_base },
+            Area { name: "free".into(), bytes: num_tasks as u64 * 8, reg: self.free_base },
+        ];
+        if self.opts.sched == SchedKind::StaticFifo {
+            areas.push(Area { name: "fifo".into(), bytes: (self.fifo_mask as u64 + 1) * 8, reg: self.fifo_base });
+        }
+        if has_atomics && uses_amu {
+            areas.push(Area { name: "locks".into(), bytes: self.lock_entries * 16, reg: self.lock_base });
+            areas.push(Area { name: "waiters".into(), bytes: ids_used as u64 * 8, reg: self.waiters_base });
+        }
+        let spm_base_reg = uses_amu.then_some(self.spm_base);
+        let func = self.b.build();
+        crate::ir::verify::verify(&func)?;
+        Ok(CompiledKernel {
+            func,
+            param_regs: self.param_regs,
+            areas,
+            spm_base_reg,
+            spm_slot_bytes: if uses_amu { self.slot_bytes } else { 0 },
+            num_tasks,
+            ctx_bytes: self.ctx_bytes,
+            nsites: self.an.sites.len(),
+            ngroups: self.plan.groups.len(),
+            ids_used,
+        })
+    }
+
+    /// Lower a nested callee's body once; all call sites share it.
+    fn emit_callee(&mut self, ci: usize) -> Result<()> {
+        let f = self.kernel.callees[ci].clone();
+        // Build a pseudo-kernel for analysis.
+        let pseudo = Kernel {
+            name: f.name.clone(),
+            params: f.params.clone(),
+            trip_param: 0,
+            body: f.body.clone(),
+            pragma: Pragma::default(),
+            nvars: f.nvars,
+            var_names: (0..f.nvars).map(|v| format!("{}.v{}", f.name, v)).collect(),
+            callees: vec![],
+        };
+        let callee_an = analysis::analyze(&pseudo)?;
+        let callee_plan = CoalescePlan::disabled(callee_an.sites.len());
+        // Swap analysis context.
+        let saved_an = std::mem::replace(&mut self.an, callee_an);
+        let saved_plan = std::mem::replace(&mut self.plan, callee_plan);
+        let saved_site = std::mem::replace(&mut self.next_site, 0);
+        let param_regs: Vec<Reg> = f.params.iter().map(|_| self.b.reg()).collect();
+        let var_regs: Vec<Reg> = (0..f.nvars).map(|_| self.b.reg()).collect();
+        self.callee_params = Some(param_regs.clone());
+        self.callee_vars = Some(var_regs);
+        self.callee_kernel = Some(ci);
+
+        let entry = self.callee_entries[ci];
+        self.b.switch_to(entry);
+        // child_entry: load arguments from the child's ctx arg slots.
+        for (k, pr) in param_regs.iter().enumerate() {
+            self.b.load_into(*pr, R(self.ctx), CTX_VARS + 8 * k as i64, Width::W8, AddrSpace::Local);
+        }
+        let body_bb = self.b.new_block("child.body", CodeTag::Compute);
+        self.b.jmp(body_bb);
+        self.b.switch_to(body_bb);
+        let body = f.body.clone();
+        self.stmts(&body)?;
+        // child return: stash ret value, wake the parent, park this id.
+        if let Some(rv) = f.ret_var {
+            let r = self.reg_of_var(rv);
+            self.b.store(R(r), R(self.ctx), CTX_VAL, Width::W8, AddrSpace::Local);
+        }
+        let parent = self.b.alu(AluOp::Sub, R(self.cur_id), Imm(self.num_tasks as i64));
+        self.b.push(Inst::Asignal { id: R(parent) });
+        self.b.jmp(self.launch_bb);
+
+        self.callee_params = None;
+        self.callee_vars = None;
+        self.callee_kernel = None;
+        self.an = saved_an;
+        self.plan = saved_plan;
+        self.next_site = saved_site;
+        Ok(())
+    }
+}

@@ -1,0 +1,96 @@
+//! The CoroAMU compiler (paper §III).
+//!
+//! Pipeline: [`ast`] (pragma-annotated loop kernels) → [`analysis`]
+//! (AsyncMarkPass: suspension sites, liveness, §III-B variable
+//! classification) → [`coalesce`] (§III-C request aggregation) →
+//! [`codegen`] (AsyncSplitPass: Fig. 6 runtime skeleton + per-variant
+//! schedulers of Fig. 7, §III-E atomics, §III-F nested coroutines).
+
+pub mod analysis;
+pub mod ast;
+pub mod coalesce;
+pub mod codegen;
+
+pub use codegen::{compile, CodegenOpts, CompiledKernel, SchedKind};
+
+/// The paper's five evaluation configurations (§VI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Unmodified application on the baseline processor.
+    Serial,
+    /// Hand-written coroutines, prefetch + static scheduling [23].
+    Coroutine,
+    /// CoroAMU compiler, static prefetch scheduler.
+    CoroAmuS,
+    /// CoroAMU compiler, original-AMU dynamic scheduler (getfin).
+    CoroAmuD,
+    /// CoroAMU compiler + enhanced AMU (bafin) + all optimizations.
+    CoroAmuFull,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 5] =
+        [Variant::Serial, Variant::Coroutine, Variant::CoroAmuS, Variant::CoroAmuD, Variant::CoroAmuFull];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Variant::Serial => "Serial",
+            Variant::Coroutine => "Coroutine",
+            Variant::CoroAmuS => "CoroAMU-S",
+            Variant::CoroAmuD => "CoroAMU-D",
+            Variant::CoroAmuFull => "CoroAMU-Full",
+        }
+    }
+
+    pub fn needs_amu(self) -> bool {
+        matches!(self, Variant::CoroAmuD | Variant::CoroAmuFull)
+    }
+
+    /// Codegen options for this variant at a given concurrency.
+    pub fn opts(self, num_tasks: usize) -> CodegenOpts {
+        match self {
+            Variant::Serial => CodegenOpts::serial(),
+            Variant::Coroutine => CodegenOpts::hand_coroutine(num_tasks),
+            Variant::CoroAmuS => CodegenOpts::coroamu_s(num_tasks),
+            Variant::CoroAmuD => CodegenOpts::coroamu_d(num_tasks),
+            Variant::CoroAmuFull => CodegenOpts::coroamu_full(num_tasks),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s.to_ascii_lowercase().as_str() {
+            "serial" => Some(Variant::Serial),
+            "coroutine" | "hand" => Some(Variant::Coroutine),
+            "coroamu-s" | "s" | "static" => Some(Variant::CoroAmuS),
+            "coroamu-d" | "d" | "getfin" => Some(Variant::CoroAmuD),
+            "coroamu-full" | "full" | "bafin" => Some(Variant::CoroAmuFull),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::parse(v.label()), Some(v));
+        }
+        assert_eq!(Variant::parse("nope"), None);
+    }
+
+    #[test]
+    fn variant_opts_match_paper_configs() {
+        assert_eq!(Variant::Serial.opts(8).sched, SchedKind::Serial);
+        let hand = Variant::Coroutine.opts(8);
+        assert!(hand.generic_frame && hand.sched == SchedKind::StaticFifo);
+        let s = Variant::CoroAmuS.opts(8);
+        assert!(!s.generic_frame && s.sched == SchedKind::StaticFifo && !s.context_opt);
+        let d = Variant::CoroAmuD.opts(8);
+        assert!(d.sched == SchedKind::Getfin && !d.coalesce);
+        let f = Variant::CoroAmuFull.opts(8);
+        assert!(f.sched == SchedKind::Bafin && f.context_opt && f.coalesce);
+    }
+}

@@ -1,0 +1,413 @@
+//! Simulator configuration: the NH-G core of Table I, the Skylake-like
+//! preset used for the paper's Intel-server experiments (Figs 2/3/11), and a
+//! TOML-subset loader with CLI overrides.
+
+use crate::util::minitoml::{self, Doc};
+use anyhow::{bail, Context, Result};
+
+/// Core pipeline parameters (paper Table I).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoreConfig {
+    pub freq_ghz: f64,
+    /// Decode width = rename width (instructions/cycle into the backend).
+    pub dispatch_width: usize,
+    /// Issue width (max instructions beginning execution per cycle).
+    pub issue_width: usize,
+    /// Retire width (instructions leaving the ROB per cycle).
+    pub retire_width: usize,
+    pub rob_entries: usize,
+    pub load_queue: usize,
+    pub store_queue: usize,
+    /// Front-end redirect penalty on a branch misprediction, in cycles.
+    pub mispredict_penalty: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheLevelConfig {
+    pub size_kb: usize,
+    pub ways: usize,
+    pub line_bytes: usize,
+    pub latency_cycles: u64,
+    pub mshrs: usize,
+}
+
+impl CacheLevelConfig {
+    pub fn sets(&self) -> usize {
+        (self.size_kb * 1024) / (self.ways * self.line_bytes)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BpuConfig {
+    pub btb_entries: usize,
+    /// log2 of TAGE tagged-table entries (per table).
+    pub tage_log_entries: usize,
+    pub tage_tables: usize,
+    /// log2 of ITTAGE table entries.
+    pub ittage_log_entries: usize,
+    pub ras_depth: usize,
+    /// Bafin Predict Table entries (paper: 4).
+    pub bpt_entries: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AmuConfig {
+    /// Whether the core has an AMU at all (the Skylake preset does not).
+    pub enabled: bool,
+    /// Issue-side request queue entries (Table I: 16).
+    pub req_queue: usize,
+    /// Finished Queue entries (Table I: 16).
+    pub fin_queue: usize,
+    /// SPM carved out of L2, in KB (paper: 32KB = 1 of 8 ways).
+    pub spm_kb: usize,
+    /// Request Table capacity = SPM lines (paper: 512 concurrent coroutines).
+    pub request_table: usize,
+    /// Bafin Target Queue entries (front-end side).
+    pub btq_entries: usize,
+    /// Whether the `bafin`/BPT/BTQ extension is present (CoroAMU-Full) or
+    /// only plain `getfin` polling (original AMU, CoroAMU-D).
+    pub bafin: bool,
+    /// Max requests aggregatable under one `aset` group (hardware counter
+    /// width constraint, §IV-B).
+    pub max_group: usize,
+    /// Max coarse-grained transfer per aload/astore, bytes (§III-C: 4KB).
+    pub max_coarse_bytes: usize,
+}
+
+impl AmuConfig {
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            req_queue: 0,
+            fin_queue: 0,
+            spm_kb: 0,
+            request_table: 0,
+            btq_entries: 0,
+            bafin: false,
+            max_group: 0,
+            max_coarse_bytes: 0,
+        }
+    }
+}
+
+/// Memory-system parameters. Far memory models the paper's FPGA delayer +
+/// bandwidth regulator in front of HBM.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemConfig {
+    pub local_latency_ns: f64,
+    pub far_latency_ns: f64,
+    /// Far-memory bandwidth in bytes/cycle at core frequency (paper:
+    /// 1-32 B/cycle = 3-96 GB/s at 3 GHz).
+    pub far_bw_bytes_per_cycle: f64,
+    pub local_bw_bytes_per_cycle: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    pub name: String,
+    pub core: CoreConfig,
+    pub l1d: CacheLevelConfig,
+    pub l2: CacheLevelConfig,
+    pub l3: CacheLevelConfig,
+    pub bpu: BpuConfig,
+    pub amu: AmuConfig,
+    pub mem: MemConfig,
+    /// Enable the L2 Best-Offset prefetcher (Table I).
+    pub l2_bop: bool,
+}
+
+impl SimConfig {
+    /// NH-G: FPGA-tailored XiangShan NANHU (paper Table I), emulating a
+    /// 3 GHz core.
+    pub fn nh_g() -> Self {
+        SimConfig {
+            name: "nh-g".into(),
+            core: CoreConfig {
+                freq_ghz: 3.0,
+                dispatch_width: 4,
+                issue_width: 8,
+                retire_width: 4,
+                rob_entries: 96,
+                load_queue: 32,
+                store_queue: 16,
+                mispredict_penalty: 12,
+            },
+            l1d: CacheLevelConfig { size_kb: 32, ways: 8, line_bytes: 64, latency_cycles: 3, mshrs: 16 },
+            l2: CacheLevelConfig { size_kb: 1024, ways: 8, line_bytes: 64, latency_cycles: 14, mshrs: 56 },
+            l3: CacheLevelConfig { size_kb: 6144, ways: 6, line_bytes: 64, latency_cycles: 42, mshrs: 56 },
+            bpu: BpuConfig {
+                btb_entries: 2048,
+                tage_log_entries: 10,
+                tage_tables: 4,
+                ittage_log_entries: 9,
+                ras_depth: 16,
+                bpt_entries: 4,
+            },
+            amu: AmuConfig {
+                enabled: true,
+                req_queue: 16,
+                fin_queue: 16,
+                spm_kb: 32,
+                request_table: 512,
+                btq_entries: 8,
+                bafin: true,
+                max_group: 8,
+                max_coarse_bytes: 4096,
+            },
+            mem: MemConfig {
+                local_latency_ns: 100.0,
+                far_latency_ns: 200.0,
+                far_bw_bytes_per_cycle: 16.0,
+                local_bw_bytes_per_cycle: 32.0,
+            },
+            l2_bop: true,
+        }
+    }
+
+    /// Skylake-like preset for the Intel Xeon Gold 6130 compiler
+    /// experiments (Figs 2, 3, 11). No AMU; prefetch-only ISA. The "far"
+    /// tier models the cross-NUMA hop (~130 ns); local is ~90 ns.
+    pub fn skylake() -> Self {
+        SimConfig {
+            name: "skylake".into(),
+            core: CoreConfig {
+                freq_ghz: 2.1,
+                dispatch_width: 4,
+                issue_width: 8,
+                retire_width: 4,
+                rob_entries: 224,
+                load_queue: 72,
+                store_queue: 56,
+                mispredict_penalty: 16,
+            },
+            l1d: CacheLevelConfig { size_kb: 32, ways: 8, line_bytes: 64, latency_cycles: 4, mshrs: 10 },
+            l2: CacheLevelConfig { size_kb: 1024, ways: 16, line_bytes: 64, latency_cycles: 14, mshrs: 32 },
+            l3: CacheLevelConfig { size_kb: 22528, ways: 11, line_bytes: 64, latency_cycles: 44, mshrs: 48 },
+            bpu: BpuConfig {
+                btb_entries: 4096,
+                tage_log_entries: 11,
+                tage_tables: 5,
+                ittage_log_entries: 10,
+                ras_depth: 32,
+                bpt_entries: 0,
+            },
+            amu: AmuConfig::disabled(),
+            mem: MemConfig {
+                local_latency_ns: 90.0,
+                far_latency_ns: 130.0,
+                far_bw_bytes_per_cycle: 24.0,
+                local_bw_bytes_per_cycle: 32.0,
+            },
+            l2_bop: false,
+        }
+    }
+
+    pub fn preset(name: &str) -> Result<Self> {
+        match name {
+            "nh-g" | "nhg" | "nh_g" => Ok(Self::nh_g()),
+            "skylake" | "xeon" => Ok(Self::skylake()),
+            other => bail!("unknown preset '{other}' (try nh-g or skylake)"),
+        }
+    }
+
+    /// Convert nanoseconds to core cycles.
+    pub fn ns_to_cycles(&self, ns: f64) -> u64 {
+        (ns * self.core.freq_ghz).round() as u64
+    }
+
+    pub fn local_latency_cycles(&self) -> u64 {
+        self.ns_to_cycles(self.mem.local_latency_ns)
+    }
+
+    pub fn far_latency_cycles(&self) -> u64 {
+        self.ns_to_cycles(self.mem.far_latency_ns)
+    }
+
+    /// Set the emulated far-memory latency (the paper's delayer knob).
+    pub fn with_far_latency_ns(mut self, ns: f64) -> Self {
+        self.mem.far_latency_ns = ns;
+        self
+    }
+
+    /// Apply overrides from a parsed minitoml document. Keys mirror the
+    /// struct layout, e.g. `core.rob_entries = 128`.
+    pub fn apply_doc(&mut self, doc: &Doc) -> Result<()> {
+        if let Some(v) = doc.str("name") {
+            self.name = v.to_string();
+        }
+        macro_rules! ov {
+            ($key:expr, $field:expr, i64) => {
+                if let Some(v) = doc.i64($key) {
+                    $field = v as _;
+                }
+            };
+            ($key:expr, $field:expr, f64) => {
+                if let Some(v) = doc.f64($key) {
+                    $field = v;
+                }
+            };
+            ($key:expr, $field:expr, bool) => {
+                if let Some(v) = doc.bool($key) {
+                    $field = v;
+                }
+            };
+        }
+        ov!("core.freq_ghz", self.core.freq_ghz, f64);
+        ov!("core.dispatch_width", self.core.dispatch_width, i64);
+        ov!("core.issue_width", self.core.issue_width, i64);
+        ov!("core.retire_width", self.core.retire_width, i64);
+        ov!("core.rob_entries", self.core.rob_entries, i64);
+        ov!("core.load_queue", self.core.load_queue, i64);
+        ov!("core.store_queue", self.core.store_queue, i64);
+        ov!("core.mispredict_penalty", self.core.mispredict_penalty, i64);
+        ov!("l1d.size_kb", self.l1d.size_kb, i64);
+        ov!("l1d.ways", self.l1d.ways, i64);
+        ov!("l1d.latency_cycles", self.l1d.latency_cycles, i64);
+        ov!("l1d.mshrs", self.l1d.mshrs, i64);
+        ov!("l2.size_kb", self.l2.size_kb, i64);
+        ov!("l2.ways", self.l2.ways, i64);
+        ov!("l2.latency_cycles", self.l2.latency_cycles, i64);
+        ov!("l2.mshrs", self.l2.mshrs, i64);
+        ov!("l3.size_kb", self.l3.size_kb, i64);
+        ov!("l3.ways", self.l3.ways, i64);
+        ov!("l3.latency_cycles", self.l3.latency_cycles, i64);
+        ov!("l3.mshrs", self.l3.mshrs, i64);
+        ov!("amu.enabled", self.amu.enabled, bool);
+        ov!("amu.req_queue", self.amu.req_queue, i64);
+        ov!("amu.fin_queue", self.amu.fin_queue, i64);
+        ov!("amu.request_table", self.amu.request_table, i64);
+        ov!("amu.bafin", self.amu.bafin, bool);
+        ov!("amu.max_group", self.amu.max_group, i64);
+        ov!("mem.local_latency_ns", self.mem.local_latency_ns, f64);
+        ov!("mem.far_latency_ns", self.mem.far_latency_ns, f64);
+        ov!("mem.far_bw_bytes_per_cycle", self.mem.far_bw_bytes_per_cycle, f64);
+        ov!("l2_bop", self.l2_bop, bool);
+        self.validate()
+    }
+
+    pub fn load_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        let doc = minitoml::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let mut cfg = match doc.str("preset") {
+            Some(p) => Self::preset(p)?,
+            None => Self::nh_g(),
+        };
+        cfg.apply_doc(&doc)?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.core.dispatch_width == 0 || self.core.rob_entries == 0 {
+            bail!("core widths/rob must be nonzero");
+        }
+        for (n, c) in [("l1d", &self.l1d), ("l2", &self.l2), ("l3", &self.l3)] {
+            if c.sets() == 0 || !c.sets().is_power_of_two() {
+                bail!("{n}: sets ({}) must be a nonzero power of two", c.sets());
+            }
+            if c.mshrs == 0 {
+                bail!("{n}: mshrs must be nonzero");
+            }
+        }
+        if self.amu.enabled && self.amu.request_table == 0 {
+            bail!("amu enabled but request_table is 0");
+        }
+        Ok(())
+    }
+
+    /// Render paper Table I for this configuration.
+    pub fn table1(&self) -> crate::util::table::Table {
+        use crate::util::table::Table;
+        let mut t = Table::new(
+            format!("Table I: Core microarchitecture configuration ({})", self.name),
+            &["Core Configuration", "Parameter"],
+        );
+        let c = &self.core;
+        t.row(vec!["Frequency (emulated)".into(), format!("{} GHz", c.freq_ghz)]);
+        t.row(vec!["Decode/Rename/Issue Width".into(), format!("{}/{}/{}", c.dispatch_width, c.dispatch_width, c.issue_width)]);
+        t.row(vec!["ROB Entries".into(), format!("{}", c.rob_entries)]);
+        t.row(vec!["Load/Store Queue Entries".into(), format!("{}/{}", c.load_queue, c.store_queue)]);
+        t.row(vec!["Branch Predictor".into(), "BTB + RAS + TAGE + ITTAGE".into()]);
+        if self.amu.enabled {
+            t.row(vec!["AMU Req/Finish Queue Entries".into(), format!("{}/{}", self.amu.req_queue, self.amu.fin_queue)]);
+            t.row(vec!["AMU SPM (from L2)".into(), format!("{} KB ({} coroutines)", self.amu.spm_kb, self.amu.request_table)]);
+        }
+        t.row(vec!["L1 D-Cache".into(), format!("{}-way {}KB, {} MSHRs", self.l1d.ways, self.l1d.size_kb, self.l1d.mshrs)]);
+        t.row(vec![
+            "L2 Cache".into(),
+            format!("{}-way {}KB, {} MSHRs{}", self.l2.ways, self.l2.size_kb, self.l2.mshrs, if self.l2_bop { ", BOP prefetcher" } else { "" }),
+        ]);
+        t.row(vec!["L3 Cache (LLC)".into(), format!("{}-way {}KB, {} MSHRs", self.l3.ways, self.l3.size_kb, self.l3.mshrs)]);
+        t.row(vec!["Local memory latency".into(), format!("{} ns", self.mem.local_latency_ns)]);
+        t.row(vec!["Far memory latency".into(), format!("{} ns", self.mem.far_latency_ns)]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        SimConfig::nh_g().validate().unwrap();
+        SimConfig::skylake().validate().unwrap();
+    }
+
+    #[test]
+    fn nh_g_matches_table1() {
+        let c = SimConfig::nh_g();
+        assert_eq!(c.core.rob_entries, 96);
+        assert_eq!(c.core.dispatch_width, 4);
+        assert_eq!(c.core.issue_width, 8);
+        assert_eq!(c.l1d.mshrs, 16);
+        assert_eq!(c.amu.req_queue, 16);
+        assert_eq!(c.amu.request_table, 512);
+        assert!(c.l2_bop);
+    }
+
+    #[test]
+    fn skylake_has_no_amu() {
+        let c = SimConfig::skylake();
+        assert!(!c.amu.enabled);
+        assert_eq!(c.bpu.bpt_entries, 0);
+    }
+
+    #[test]
+    fn ns_conversion() {
+        let c = SimConfig::nh_g();
+        assert_eq!(c.ns_to_cycles(200.0), 600);
+        assert_eq!(c.far_latency_cycles(), 600);
+    }
+
+    #[test]
+    fn doc_overrides() {
+        let doc = crate::util::minitoml::parse(
+            "[core]\nrob_entries = 128\n[mem]\nfar_latency_ns = 800\n",
+        )
+        .unwrap();
+        let mut c = SimConfig::nh_g();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.core.rob_entries, 128);
+        assert_eq!(c.mem.far_latency_ns, 800.0);
+    }
+
+    #[test]
+    fn bad_cache_geometry_rejected() {
+        let mut c = SimConfig::nh_g();
+        c.l1d.size_kb = 33; // 33KB/8way/64B = non-power-of-two sets
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        assert!(SimConfig::preset("a64fx").is_err());
+    }
+
+    #[test]
+    fn table1_renders() {
+        let t = SimConfig::nh_g().table1();
+        let s = t.render();
+        assert!(s.contains("ROB Entries"));
+        assert!(s.contains("96"));
+    }
+}

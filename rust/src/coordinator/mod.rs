@@ -1,0 +1,98 @@
+//! The evaluation coordinator: builds (benchmark x variant x config)
+//! job matrices, fans them across a worker pool, validates every run
+//! against its native oracle, and aggregates results for the figure
+//! harness. This is the L3 "leader" of the reproduction: it owns process
+//! topology, run lifecycle and metric collection.
+
+pub mod pool;
+
+use crate::benchmarks::{self, Scale};
+use crate::compiler::Variant;
+use crate::config::SimConfig;
+use crate::sim::RunStats;
+use anyhow::{anyhow, Result};
+
+/// One simulation job.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub bench: String,
+    pub variant: Variant,
+    /// Coroutine concurrency; 0 = the benchmark's default.
+    pub tasks: usize,
+    pub cfg: SimConfig,
+    pub scale: Scale,
+    pub seed: u64,
+    /// Free-form key the harness uses to group results (e.g. latency).
+    pub key: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub job: Job,
+    pub stats: RunStats,
+}
+
+/// Execute a single job (compile -> link -> simulate -> oracle-check).
+pub fn run_job(job: &Job) -> Result<RunResult> {
+    let bench = benchmarks::by_name(&job.bench)
+        .ok_or_else(|| anyhow!("unknown benchmark {}", job.bench))?;
+    let inst = bench.instance(job.scale, job.seed)?;
+    let tasks = if job.tasks == 0 { inst.default_tasks } else { job.tasks };
+    let stats = benchmarks::execute(&job.cfg, inst, job.variant, tasks)?;
+    Ok(RunResult { job: job.clone(), stats })
+}
+
+/// Run a job matrix across the worker pool; any failure aborts with the
+/// offending job named.
+pub fn run_matrix(jobs: Vec<Job>, threads: usize) -> Result<Vec<RunResult>> {
+    let results = pool::parallel_map(jobs.len(), threads, |i| {
+        let j = &jobs[i];
+        run_job(j).map_err(|e| anyhow!("{} [{} / {} / {}]: {e:#}", j.bench, j.variant.label(), j.key, j.cfg.name))
+    });
+    results.into_iter().collect()
+}
+
+/// Find the result for (bench, variant, key).
+pub fn lookup<'a>(rs: &'a [RunResult], bench: &str, variant: Variant, key: &str) -> Option<&'a RunResult> {
+    rs.iter().find(|r| r.job.bench == bench && r.job.variant == variant && r.job.key == key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_job(bench: &str, variant: Variant) -> Job {
+        Job {
+            bench: bench.into(),
+            variant,
+            tasks: 0,
+            cfg: SimConfig::nh_g(),
+            scale: Scale::Tiny,
+            seed: 1,
+            key: "t".into(),
+        }
+    }
+
+    #[test]
+    fn run_job_smoke() {
+        let r = run_job(&tiny_job("gups", Variant::Serial)).unwrap();
+        assert!(r.stats.cycles > 0);
+    }
+
+    #[test]
+    fn unknown_bench_errors() {
+        assert!(run_job(&tiny_job("nope", Variant::Serial)).is_err());
+    }
+
+    #[test]
+    fn matrix_runs_parallel_and_lookup_works() {
+        let jobs: Vec<Job> =
+            ["gups", "stream"].iter().flat_map(|b| {
+                [Variant::Serial, Variant::CoroAmuFull].iter().map(|v| tiny_job(b, *v)).collect::<Vec<_>>()
+            }).collect();
+        let rs = run_matrix(jobs, 4).unwrap();
+        assert_eq!(rs.len(), 4);
+        assert!(lookup(&rs, "gups", Variant::CoroAmuFull, "t").is_some());
+        assert!(lookup(&rs, "gups", Variant::CoroAmuD, "t").is_none());
+    }
+}

@@ -1,0 +1,77 @@
+//! Fig. 2: serial vs (hand-written, prefetch-based) coroutine execution on
+//! the Intel Xeon preset, with local (~90 ns) and cross-NUMA (~130 ns)
+//! placements, against the zero-overhead perfect-cache bound.
+
+use super::FigOpts;
+use crate::compiler::Variant;
+use crate::config::SimConfig;
+use crate::coordinator::{lookup, run_matrix, Job};
+use crate::util::table::{speedup, Table};
+use anyhow::Result;
+
+const CORO_TASKS: usize = 8; // the paper's typical sweet spot on Xeon
+
+fn cfg_local() -> SimConfig {
+    // "local": far tier collapses to local DRAM distance.
+    SimConfig::skylake().with_far_latency_ns(90.0)
+}
+
+fn cfg_numa() -> SimConfig {
+    SimConfig::skylake().with_far_latency_ns(130.0)
+}
+
+fn cfg_perfect() -> SimConfig {
+    // Perfect cache: remote data at L2-like distance.
+    SimConfig::skylake().with_far_latency_ns(8.0)
+}
+
+pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
+    let mut jobs = Vec::new();
+    for b in opts.bench_names() {
+        for (key, cfg, variant, tasks) in [
+            ("serial-local", cfg_local(), Variant::Serial, 1),
+            ("coro-local", cfg_local(), Variant::Coroutine, CORO_TASKS),
+            ("serial-numa", cfg_numa(), Variant::Serial, 1),
+            ("coro-numa", cfg_numa(), Variant::Coroutine, CORO_TASKS),
+            ("perfect", cfg_perfect(), Variant::Serial, 1),
+        ] {
+            jobs.push(Job {
+                bench: b.clone(),
+                variant,
+                tasks,
+                cfg,
+                scale: opts.scale,
+                seed: opts.seed,
+                key: key.into(),
+            });
+        }
+    }
+    let rs = run_matrix(jobs, opts.threads)?;
+    let mut t = Table::new(
+        format!("Fig 2: coroutine speedup over serial on Xeon preset ({CORO_TASKS} coroutines)"),
+        &["bench", "coro/serial (local)", "coro/serial (numa)", "perfect-cache bound (numa)"],
+    );
+    for b in opts.bench_names() {
+        let g = |key: &str, v: Variant| lookup(&rs, &b, v, key).unwrap().stats.cycles as f64;
+        let sl = g("serial-local", Variant::Serial);
+        let cl = g("coro-local", Variant::Coroutine);
+        let sn = g("serial-numa", Variant::Serial);
+        let cn = g("coro-numa", Variant::Coroutine);
+        let pf = g("perfect", Variant::Serial);
+        t.row(vec![b.clone(), speedup(sl / cl), speedup(sn / cn), speedup(sn / pf)]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Scale;
+
+    #[test]
+    fn fig2_tiny_single_bench() {
+        let opts = FigOpts { scale: Scale::Tiny, only: vec!["bs".into()], ..FigOpts::quick() };
+        let ts = run(&opts).unwrap();
+        assert!(ts[0].render().contains("bs"));
+    }
+}

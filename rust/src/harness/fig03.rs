@@ -1,0 +1,71 @@
+//! Fig. 3: runtime breakdown of coroutine-optimized applications on the
+//! Xeon preset (cross-NUMA). The paper's finding: scheduler + context
+//! switching each exceed ~30% of execution on average — the motivation for
+//! memory-centric codegen.
+
+use super::FigOpts;
+use crate::compiler::Variant;
+use crate::config::SimConfig;
+use crate::coordinator::{run_matrix, Job};
+use crate::util::table::{pct, Table};
+use anyhow::Result;
+
+pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
+    let cfg = SimConfig::skylake().with_far_latency_ns(130.0);
+    let jobs: Vec<Job> = opts
+        .bench_names()
+        .into_iter()
+        .map(|b| Job {
+            bench: b,
+            variant: Variant::Coroutine,
+            tasks: 8,
+            cfg: cfg.clone(),
+            scale: opts.scale,
+            seed: opts.seed,
+            key: "numa".into(),
+        })
+        .collect();
+    let rs = run_matrix(jobs, opts.threads)?;
+    let mut t = Table::new(
+        "Fig 3: cycle breakdown of hand-coroutine apps (Xeon, cross-NUMA)",
+        &["bench", "compute", "local/ctx", "remote", "scheduler", "mispredict"],
+    );
+    let mut sums = [0.0f64; 5];
+    for r in &rs {
+        let b = r.stats.cycle_breakdown();
+        for (i, (_, v)) in b.iter().enumerate() {
+            sums[i] += v;
+        }
+        t.row(vec![
+            r.job.bench.clone(),
+            pct(b[0].1),
+            pct(b[1].1),
+            pct(b[2].1),
+            pct(b[3].1),
+            pct(b[4].1),
+        ]);
+    }
+    let n = rs.len().max(1) as f64;
+    t.row(vec![
+        "average".into(),
+        pct(sums[0] / n),
+        pct(sums[1] / n),
+        pct(sums[2] / n),
+        pct(sums[3] / n),
+        pct(sums[4] / n),
+    ]);
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Scale;
+
+    #[test]
+    fn fig3_breakdown_rows_sum_near_one() {
+        let opts = FigOpts { scale: Scale::Tiny, only: vec!["gups".into()], ..FigOpts::quick() };
+        let ts = run(&opts).unwrap();
+        assert!(ts[0].render().contains("average"));
+    }
+}

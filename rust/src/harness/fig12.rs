@@ -1,0 +1,128 @@
+//! Fig. 12: CoroAMU performance normalized to serial on NH-G as far-memory
+//! latency sweeps 100-800 ns. The paper's headline numbers: average 3.39x
+//! at 200 ns and 4.87x at 800 ns (up to 29x / 59.8x on GUPS).
+
+use super::FigOpts;
+use crate::compiler::Variant;
+use crate::config::SimConfig;
+use crate::coordinator::{lookup, run_matrix, Job};
+use crate::util::table::{geomean, speedup, Table};
+use anyhow::Result;
+
+pub const LATENCIES_NS: [f64; 4] = [100.0, 200.0, 400.0, 800.0];
+/// Static-prefetch concurrency candidates (best is reported, as in the
+/// paper's per-benchmark labels).
+const S_TASKS: [usize; 3] = [16, 32, 64];
+const DYN_TASKS: usize = 96;
+
+pub fn jobs(opts: &FigOpts) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    for lat in LATENCIES_NS {
+        let cfg = SimConfig::nh_g().with_far_latency_ns(lat);
+        for b in opts.bench_names() {
+            let mk = |variant: Variant, tasks: usize, key: String| Job {
+                bench: b.clone(),
+                variant,
+                tasks,
+                cfg: cfg.clone(),
+                scale: opts.scale,
+                seed: opts.seed,
+                key,
+            };
+            jobs.push(mk(Variant::Serial, 1, format!("{lat}")));
+            jobs.push(mk(Variant::Coroutine, 16, format!("{lat}")));
+            for t in S_TASKS {
+                jobs.push(mk(Variant::CoroAmuS, t, format!("{lat}/{t}")));
+            }
+            jobs.push(mk(Variant::CoroAmuD, DYN_TASKS, format!("{lat}")));
+            jobs.push(mk(Variant::CoroAmuFull, DYN_TASKS, format!("{lat}")));
+        }
+    }
+    jobs
+}
+
+pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
+    let rs = run_matrix(jobs(opts), opts.threads)?;
+    let benches = opts.bench_names();
+    let mut tables = Vec::new();
+    for lat in LATENCIES_NS {
+        let key = format!("{lat}");
+        let mut t = Table::new(
+            format!("Fig 12: speedup vs serial, NH-G, far latency {lat} ns"),
+            &["bench", "Coroutine", "CoroAMU-S(best n)", "CoroAMU-D", "CoroAMU-Full"],
+        );
+        let mut per_variant: [Vec<f64>; 4] = Default::default();
+        for b in &benches {
+            let serial = lookup(&rs, b, Variant::Serial, &key).unwrap().stats.cycles as f64;
+            let coro = serial / lookup(&rs, b, Variant::Coroutine, &key).unwrap().stats.cycles as f64;
+            let (s_best, s_n) = S_TASKS
+                .iter()
+                .map(|n| {
+                    let c = lookup(&rs, b, Variant::CoroAmuS, &format!("{lat}/{n}")).unwrap().stats.cycles;
+                    (serial / c as f64, *n)
+                })
+                .fold((0.0, 0), |acc, x| if x.0 > acc.0 { x } else { acc });
+            let d = serial / lookup(&rs, b, Variant::CoroAmuD, &key).unwrap().stats.cycles as f64;
+            let f = serial / lookup(&rs, b, Variant::CoroAmuFull, &key).unwrap().stats.cycles as f64;
+            per_variant[0].push(coro);
+            per_variant[1].push(s_best);
+            per_variant[2].push(d);
+            per_variant[3].push(f);
+            t.row(vec![
+                b.clone(),
+                speedup(coro),
+                format!("{} ({s_n})", speedup(s_best)),
+                speedup(d),
+                speedup(f),
+            ]);
+        }
+        t.row(vec![
+            "geomean".into(),
+            speedup(geomean(&per_variant[0])),
+            speedup(geomean(&per_variant[1])),
+            speedup(geomean(&per_variant[2])),
+            speedup(geomean(&per_variant[3])),
+        ]);
+        tables.push(t);
+    }
+    // Headline comparison.
+    let mut hl = Table::new(
+        "Fig 12 headline: CoroAMU-Full average speedup (paper: 3.39x @200ns, 4.87x @800ns)",
+        &["latency", "measured", "paper"],
+    );
+    for (lat, paper) in [(200.0, "3.39x"), (800.0, "4.87x")] {
+        let key = format!("{lat}");
+        let mut sp = Vec::new();
+        for b in &benches {
+            let serial = lookup(&rs, b, Variant::Serial, &key).unwrap().stats.cycles as f64;
+            let f = lookup(&rs, b, Variant::CoroAmuFull, &key).unwrap().stats.cycles as f64;
+            sp.push(serial / f);
+        }
+        hl.row(vec![format!("{lat} ns"), speedup(geomean(&sp)), paper.into()]);
+    }
+    tables.push(hl);
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Scale;
+
+    #[test]
+    fn job_matrix_covers_all_cells() {
+        let opts = FigOpts { scale: Scale::Tiny, ..FigOpts::quick() };
+        let js = jobs(&opts);
+        // 4 latencies x 8 benches x (serial + hand + 3xS + D + Full).
+        assert_eq!(js.len(), 4 * 8 * 7);
+    }
+
+    #[test]
+    fn runs_on_tiny_scale_single_bench() {
+        let opts = FigOpts { scale: Scale::Tiny, only: vec!["gups".into()], ..FigOpts::quick() };
+        let tables = run(&opts).unwrap();
+        assert_eq!(tables.len(), LATENCIES_NS.len() + 1);
+        let rendered = tables.last().unwrap().render();
+        assert!(rendered.contains("3.39x"));
+    }
+}

@@ -1,0 +1,70 @@
+//! Fig. 13: dynamic instruction count normalized to serial (the control
+//! cost of coroutine codegen) at 100 ns latency. Paper averages:
+//! CoroAMU-S 6.70x, CoroAMU-D 5.98x, CoroAMU-Full 3.91x.
+
+use super::FigOpts;
+use crate::compiler::Variant;
+use crate::config::SimConfig;
+use crate::coordinator::{lookup, run_matrix, Job};
+use crate::util::table::{geomean, Table};
+use anyhow::Result;
+
+pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
+    let cfg = SimConfig::nh_g().with_far_latency_ns(100.0);
+    let variants = [
+        (Variant::Serial, 1usize),
+        (Variant::CoroAmuS, 64),
+        (Variant::CoroAmuD, 96),
+        (Variant::CoroAmuFull, 96),
+    ];
+    let mut jobs = Vec::new();
+    for b in opts.bench_names() {
+        for (v, tasks) in variants {
+            jobs.push(Job {
+                bench: b.clone(),
+                variant: v,
+                tasks,
+                cfg: cfg.clone(),
+                scale: opts.scale,
+                seed: opts.seed,
+                key: "100".into(),
+            });
+        }
+    }
+    let rs = run_matrix(jobs, opts.threads)?;
+    let mut t = Table::new(
+        "Fig 13: dynamic instruction expansion vs serial @100ns (paper avg: S 6.70x, D 5.98x, Full 3.91x)",
+        &["bench", "CoroAMU-S", "CoroAMU-D", "CoroAMU-Full"],
+    );
+    let mut cols: [Vec<f64>; 3] = Default::default();
+    for b in opts.bench_names() {
+        let base = lookup(&rs, &b, Variant::Serial, "100").unwrap().stats.dyn_instrs as f64;
+        let mut row = vec![b.clone()];
+        for (i, v) in [Variant::CoroAmuS, Variant::CoroAmuD, Variant::CoroAmuFull].iter().enumerate() {
+            let e = lookup(&rs, &b, *v, "100").unwrap().stats.dyn_instrs as f64 / base;
+            cols[i].push(e);
+            row.push(format!("{e:.2}x"));
+        }
+        t.row(row);
+    }
+    t.row(vec![
+        "geomean".into(),
+        format!("{:.2}x", geomean(&cols[0])),
+        format!("{:.2}x", geomean(&cols[1])),
+        format!("{:.2}x", geomean(&cols[2])),
+    ]);
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Scale;
+
+    #[test]
+    fn fig13_tiny() {
+        let opts = FigOpts { scale: Scale::Tiny, only: vec!["stream".into()], ..FigOpts::quick() };
+        let ts = run(&opts).unwrap();
+        assert!(ts[0].render().contains("geomean"));
+    }
+}

@@ -1,0 +1,70 @@
+//! Fig. 14: execution-cycle breakdown at 200 ns for (1) serial code,
+//! (2) CoroAMU-D (getfin + indirect jump), (3) CoroAMU-D with bafin.
+//! Paper: scheduler branch mispredictions cost >15% in (2); bafin
+//! eliminates them in (3).
+
+use super::FigOpts;
+use crate::benchmarks::{self};
+use crate::compiler::codegen::{CodegenOpts, SchedKind};
+use crate::config::SimConfig;
+use crate::coordinator::pool;
+use crate::util::table::{pct, Table};
+use anyhow::Result;
+
+/// "CoroAMU-D with bafin": basic codegen, bafin scheduler, no context /
+/// coalescing optimizations — isolating the §IV-A mechanism.
+pub fn d_with_bafin(tasks: usize) -> CodegenOpts {
+    CodegenOpts { sched: SchedKind::Bafin, context_opt: false, coalesce: false, generic_frame: false, num_tasks: tasks }
+}
+
+pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
+    let cfg = SimConfig::nh_g().with_far_latency_ns(200.0);
+    let benches = opts.bench_names();
+    let configs: Vec<(&str, CodegenOpts)> = vec![
+        ("serial", CodegenOpts::serial()),
+        ("CoroAMU-D", CodegenOpts::coroamu_d(96)),
+        ("D+bafin", d_with_bafin(96)),
+    ];
+    let cells: Vec<(String, String)> = benches
+        .iter()
+        .flat_map(|b| configs.iter().map(move |(n, _)| (b.clone(), n.to_string())))
+        .collect();
+    let stats = pool::parallel_map(cells.len(), opts.threads, |i| {
+        let (b, cname) = &cells[i];
+        let co = &configs.iter().find(|(n, _)| n == cname).unwrap().1;
+        let inst = benchmarks::by_name(b).unwrap().instance(opts.scale, opts.seed).unwrap();
+        benchmarks::execute_opts(&cfg, inst, co)
+            .unwrap_or_else(|e| panic!("fig14 {b}/{cname}: {e:#}"))
+    });
+    let mut t = Table::new(
+        "Fig 14: cycle breakdown @200ns — serial / CoroAMU-D / D+bafin",
+        &["bench", "config", "compute", "local/ctx", "remote", "scheduler", "mispredict"],
+    );
+    for (i, (b, cname)) in cells.iter().enumerate() {
+        let brk = stats[i].cycle_breakdown();
+        t.row(vec![
+            b.clone(),
+            cname.clone(),
+            pct(brk[0].1),
+            pct(brk[1].1),
+            pct(brk[2].1),
+            pct(brk[3].1),
+            pct(brk[4].1),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Scale;
+
+    #[test]
+    fn bafin_removes_mispredict_share() {
+        let opts = FigOpts { scale: Scale::Small, only: vec!["bs".into()], ..FigOpts::quick() };
+        let ts = run(&opts).unwrap();
+        let s = ts[0].render();
+        assert!(s.contains("D+bafin"), "{s}");
+    }
+}

@@ -1,0 +1,68 @@
+//! Fig. 15: compiler-optimization ablation at 100 ns: starting from
+//! CoroAMU-D-with-bafin, add (2) context selection (§III-B) then (3)
+//! request aggregation (§III-C). Reports normalized performance,
+//! normalized switch count, and context operations per switch. Paper:
+//! up to >20% performance gain; switch count drops with aggregation;
+//! context ops per switch drop with selection.
+
+use super::fig14::d_with_bafin;
+use super::FigOpts;
+use crate::benchmarks;
+use crate::compiler::codegen::CodegenOpts;
+use crate::config::SimConfig;
+use crate::coordinator::pool;
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn configs() -> Vec<(&'static str, CodegenOpts)> {
+    let base = d_with_bafin(96);
+    let ctx = CodegenOpts { context_opt: true, ..base.clone() };
+    let full = CodegenOpts { coalesce: true, ..ctx.clone() };
+    vec![("(1) bafin-basic", base), ("(2) +context", ctx), ("(3) +aggregation", full)]
+}
+
+pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
+    let cfg = SimConfig::nh_g().with_far_latency_ns(100.0);
+    let benches = opts.bench_names();
+    let cfgs = configs();
+    let cells: Vec<(String, usize)> =
+        benches.iter().flat_map(|b| (0..cfgs.len()).map(move |i| (b.clone(), i))).collect();
+    let stats = pool::parallel_map(cells.len(), opts.threads, |i| {
+        let (b, ci) = &cells[i];
+        let inst = benchmarks::by_name(b).unwrap().instance(opts.scale, opts.seed).unwrap();
+        benchmarks::execute_opts(&cfg, inst, &cfgs[*ci].1)
+            .unwrap_or_else(|e| panic!("fig15 {b}/{}: {e:#}", cfgs[*ci].0))
+    });
+    let mut t = Table::new(
+        "Fig 15: ablation @100ns (normalized to bafin-basic)",
+        &["bench", "config", "perf", "switches", "ctx ops/switch"],
+    );
+    for b in &benches {
+        let idx = |ci: usize| cells.iter().position(|(bb, c)| bb == b && *c == ci).unwrap();
+        let base = &stats[idx(0)];
+        for (ci, (cname, _)) in cfgs.iter().enumerate() {
+            let s = &stats[idx(ci)];
+            t.row(vec![
+                b.clone(),
+                cname.to_string(),
+                format!("{:.2}x", base.cycles as f64 / s.cycles as f64),
+                format!("{:.2}", s.switches as f64 / base.switches.max(1) as f64),
+                format!("{:.1}", s.ctx_ops_per_switch()),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Scale;
+
+    #[test]
+    fn aggregation_reduces_switches_on_stream() {
+        let opts = FigOpts { scale: Scale::Small, only: vec!["stream".into()], ..FigOpts::quick() };
+        let ts = run(&opts).unwrap();
+        assert!(ts[0].render().contains("+aggregation"));
+    }
+}

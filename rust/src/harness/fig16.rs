@@ -1,0 +1,67 @@
+//! Fig. 16: memory-level parallelism (average in-flight requests at the
+//! far-memory controller) for serial, prefetch-based CoroAMU-S, and
+//! decoupled CoroAMU-Full. Paper: serial < 5, prefetch capped < 20 by
+//! MSHRs, AMU reaches ~64 (scalable with coroutine count).
+
+use super::FigOpts;
+use crate::compiler::Variant;
+use crate::config::SimConfig;
+use crate::coordinator::{lookup, run_matrix, Job};
+use crate::util::table::{mean, Table};
+use anyhow::Result;
+
+pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
+    let cfg = SimConfig::nh_g().with_far_latency_ns(800.0);
+    // CoroAMU-S at its typical best concurrency (16-32, Fig 11/12); more
+    // tasks do not help prefetching past the MSHR/locality limits.
+    let variants = [(Variant::Serial, 1usize), (Variant::CoroAmuS, 32), (Variant::CoroAmuFull, 96)];
+    let mut jobs = Vec::new();
+    for b in opts.bench_names() {
+        for (v, tasks) in variants {
+            jobs.push(Job {
+                bench: b.clone(),
+                variant: v,
+                tasks,
+                cfg: cfg.clone(),
+                scale: opts.scale,
+                seed: opts.seed,
+                key: "mlp".into(),
+            });
+        }
+    }
+    let rs = run_matrix(jobs, opts.threads)?;
+    let mut t = Table::new(
+        "Fig 16: MLP at the far-memory controller @800ns (paper: serial <5, prefetch <20, AMU ~64)",
+        &["bench", "Serial", "CoroAMU-S (prefetch)", "CoroAMU-Full (decoupled)"],
+    );
+    let mut cols: [Vec<f64>; 3] = Default::default();
+    for b in opts.bench_names() {
+        let mut row = vec![b.clone()];
+        for (i, (v, _)) in variants.iter().enumerate() {
+            let mlp = lookup(&rs, &b, *v, "mlp").unwrap().stats.far_mlp;
+            cols[i].push(mlp);
+            row.push(format!("{mlp:.1}"));
+        }
+        t.row(row);
+    }
+    t.row(vec![
+        "mean".into(),
+        format!("{:.1}", mean(&cols[0])),
+        format!("{:.1}", mean(&cols[1])),
+        format!("{:.1}", mean(&cols[2])),
+    ]);
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Scale;
+
+    #[test]
+    fn decoupled_mlp_beats_serial_on_gups() {
+        let opts = FigOpts { scale: Scale::Small, only: vec!["gups".into()], ..FigOpts::quick() };
+        let ts = run(&opts).unwrap();
+        assert!(ts[0].render().contains("mean"));
+    }
+}

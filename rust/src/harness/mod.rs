@@ -1,0 +1,96 @@
+//! Figure/table harness: regenerates every data artifact of the paper's
+//! evaluation (§V-§VI). One module per figure; each returns rendered
+//! [`Table`]s so the CLI, the benches and EXPERIMENTS.md all share one
+//! source of truth.
+//!
+//! | Artifact | Module | Content |
+//! |----------|--------|---------|
+//! | Table I  | `config::SimConfig::table1` | NH-G core configuration |
+//! | Table II | `benchmarks::table2`        | benchmark inventory |
+//! | Fig 2    | [`fig02`] | serial vs hand coroutines, local/NUMA, Xeon |
+//! | Fig 3    | [`fig03`] | cycle breakdown of coroutine apps, Xeon |
+//! | Fig 11   | [`fig11`] | compiler vs hand coroutines, #coroutine sweep |
+//! | Fig 12   | [`fig12`] | CoroAMU speedups vs far-memory latency, NH-G |
+//! | Fig 13   | [`fig13`] | dynamic instruction expansion |
+//! | Fig 14   | [`fig14`] | cycle breakdown serial / getfin / bafin |
+//! | Fig 15   | [`fig15`] | context + aggregation ablation |
+//! | Fig 16   | [`fig16`] | memory-level parallelism |
+
+pub mod fig02;
+pub mod fig03;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+
+use crate::benchmarks::Scale;
+use crate::coordinator::pool;
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// Options shared by all figure generators.
+#[derive(Debug, Clone)]
+pub struct FigOpts {
+    pub scale: Scale,
+    pub threads: usize,
+    pub seed: u64,
+    /// Restrict to these benchmarks (empty = all eight).
+    pub only: Vec<String>,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts { scale: Scale::Full, threads: pool::default_threads(), seed: 42, only: vec![] }
+    }
+}
+
+impl FigOpts {
+    pub fn quick() -> Self {
+        FigOpts { scale: Scale::Small, ..Default::default() }
+    }
+
+    pub fn bench_names(&self) -> Vec<String> {
+        if self.only.is_empty() {
+            crate::benchmarks::all().iter().map(|b| b.spec().name.to_string()).collect()
+        } else {
+            self.only.clone()
+        }
+    }
+}
+
+/// Generate one figure by number.
+pub fn figure(n: u32, opts: &FigOpts) -> Result<Vec<Table>> {
+    match n {
+        2 => fig02::run(opts),
+        3 => fig03::run(opts),
+        11 => fig11::run(opts),
+        12 => fig12::run(opts),
+        13 => fig13::run(opts),
+        14 => fig14::run(opts),
+        15 => fig15::run(opts),
+        16 => fig16::run(opts),
+        other => anyhow::bail!("figure {other} is schematic (no data) or unknown; data figures: 2,3,11-16"),
+    }
+}
+
+pub const ALL_FIGURES: [u32; 8] = [2, 3, 11, 12, 13, 14, 15, 16];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_figure_rejected() {
+        assert!(figure(7, &FigOpts::quick()).is_err());
+    }
+
+    #[test]
+    fn bench_name_filter() {
+        let mut o = FigOpts::quick();
+        assert_eq!(o.bench_names().len(), 8);
+        o.only = vec!["gups".into()];
+        assert_eq!(o.bench_names(), vec!["gups".to_string()]);
+    }
+}

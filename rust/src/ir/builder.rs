@@ -1,0 +1,194 @@
+//! Imperative builder API for constructing CoroIR functions.
+
+use super::*;
+
+/// Builder for a [`Function`]. Blocks are created up-front (possibly as
+/// forward references) and filled in any order; the builder tracks a
+/// current insertion block.
+pub struct FuncBuilder {
+    name: String,
+    blocks: Vec<Block>,
+    sealed: Vec<bool>,
+    cur: BlockId,
+    next_reg: Reg,
+}
+
+impl FuncBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        let entry = Block {
+            name: "entry".into(),
+            tag: CodeTag::Init,
+            insts: Vec::new(),
+            term: Term::Halt,
+        };
+        Self {
+            name: name.into(),
+            blocks: vec![entry],
+            sealed: vec![false],
+            cur: 0,
+            next_reg: 0,
+        }
+    }
+
+    pub fn entry(&self) -> BlockId {
+        0
+    }
+
+    pub fn reg(&mut self) -> Reg {
+        let r = self.next_reg;
+        self.next_reg += 1;
+        r
+    }
+
+    pub fn new_block(&mut self, name: impl Into<String>, tag: CodeTag) -> BlockId {
+        self.blocks.push(Block { name: name.into(), tag, insts: Vec::new(), term: Term::Halt });
+        self.sealed.push(false);
+        (self.blocks.len() - 1) as BlockId
+    }
+
+    pub fn switch_to(&mut self, b: BlockId) {
+        assert!(!self.sealed[b as usize], "block {b} already sealed");
+        self.cur = b;
+    }
+
+    pub fn current(&self) -> BlockId {
+        self.cur
+    }
+
+    pub fn current_tag(&self) -> CodeTag {
+        self.blocks[self.cur as usize].tag
+    }
+
+    pub fn push(&mut self, inst: Inst) {
+        assert!(!self.sealed[self.cur as usize], "pushing into sealed block {}", self.cur);
+        self.blocks[self.cur as usize].insts.push(inst);
+    }
+
+    /// Seal the current block with a terminator.
+    pub fn terminate(&mut self, term: Term) {
+        assert!(!self.sealed[self.cur as usize], "block {} already sealed", self.cur);
+        self.blocks[self.cur as usize].term = term;
+        self.sealed[self.cur as usize] = true;
+    }
+
+    // ----- convenience emitters -----
+
+    pub fn alu(&mut self, op: AluOp, a: Operand, b: Operand) -> Reg {
+        let dst = self.reg();
+        self.push(Inst::Alu { op, dst, a, b });
+        dst
+    }
+
+    pub fn alu_into(&mut self, dst: Reg, op: AluOp, a: Operand, b: Operand) {
+        self.push(Inst::Alu { op, dst, a, b });
+    }
+
+    pub fn falu(&mut self, op: FaluOp, a: Operand, b: Operand) -> Reg {
+        let dst = self.reg();
+        self.push(Inst::Falu { op, dst, a, b });
+        dst
+    }
+
+    pub fn mov(&mut self, dst: Reg, v: Operand) {
+        self.push(Inst::Alu { op: AluOp::Add, dst, a: v, b: Operand::Imm(0) });
+    }
+
+    pub fn imm(&mut self, v: i64) -> Reg {
+        let dst = self.reg();
+        self.mov(dst, Operand::Imm(v));
+        dst
+    }
+
+    pub fn load(&mut self, base: Operand, off: i64, width: Width, space: AddrSpace) -> Reg {
+        let dst = self.reg();
+        self.push(Inst::Load { dst, base, off, width, space });
+        dst
+    }
+
+    pub fn load_into(&mut self, dst: Reg, base: Operand, off: i64, width: Width, space: AddrSpace) {
+        self.push(Inst::Load { dst, base, off, width, space });
+    }
+
+    pub fn store(&mut self, val: Operand, base: Operand, off: i64, width: Width, space: AddrSpace) {
+        self.push(Inst::Store { val, base, off, width, space });
+    }
+
+    pub fn jmp(&mut self, target: BlockId) {
+        self.terminate(Term::Jmp(target));
+    }
+
+    pub fn br(&mut self, cond: Operand, then_: BlockId, else_: BlockId) {
+        self.terminate(Term::Br { cond, then_, else_ });
+    }
+
+    pub fn halt(&mut self) {
+        self.terminate(Term::Halt);
+    }
+
+    /// Finish construction. Panics if any block lacks a terminator.
+    pub fn build(self) -> Function {
+        for (i, sealed) in self.sealed.iter().enumerate() {
+            assert!(*sealed, "block {} ({}) was never terminated", i, self.blocks[i].name);
+        }
+        Function { name: self.name, blocks: self.blocks, entry: 0, nregs: self.next_reg }
+    }
+
+    /// Number of registers allocated so far.
+    pub fn reg_count(&self) -> u32 {
+        self.next_reg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_simple_loop() {
+        // i = 0; while (i < 10) i++;
+        let mut b = FuncBuilder::new("loop10");
+        let i = b.imm(0);
+        let head = b.new_block("head", CodeTag::Compute);
+        let body = b.new_block("body", CodeTag::Compute);
+        let exit = b.new_block("exit", CodeTag::Compute);
+        b.jmp(head);
+        b.switch_to(head);
+        let c = b.alu(AluOp::Slt, Operand::Reg(i), Operand::Imm(10));
+        b.br(Operand::Reg(c), body, exit);
+        b.switch_to(body);
+        b.alu_into(i, AluOp::Add, Operand::Reg(i), Operand::Imm(1));
+        b.jmp(head);
+        b.switch_to(exit);
+        b.halt();
+        let f = b.build();
+        assert_eq!(f.blocks.len(), 4);
+        assert_eq!(f.successors(1), vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "never terminated")]
+    fn unterminated_block_panics() {
+        let mut b = FuncBuilder::new("bad");
+        let _x = b.new_block("x", CodeTag::Compute);
+        b.halt(); // entry terminated, "x" not
+        b.build();
+    }
+
+    #[test]
+    #[should_panic(expected = "already sealed")]
+    fn double_terminate_panics() {
+        let mut b = FuncBuilder::new("bad");
+        b.halt();
+        b.halt();
+    }
+
+    #[test]
+    fn regs_are_dense() {
+        let mut b = FuncBuilder::new("r");
+        let r0 = b.reg();
+        let r1 = b.reg();
+        assert_eq!((r0, r1), (0, 1));
+        b.halt();
+        assert_eq!(b.build().nregs, 2);
+    }
+}

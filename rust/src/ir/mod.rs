@@ -1,0 +1,339 @@
+//! CoroIR — the SSA-lite virtual-register IR the CoroAMU compiler targets.
+//!
+//! This plays the role LLVM IR plays in the paper: the AsyncMark/AsyncSplit
+//! passes (`crate::compiler`) lower annotated loop kernels to CoroIR control
+//! flow, and the NH-G simulator (`crate::sim`) executes CoroIR directly —
+//! each instruction models one machine instruction of the (RV64 + AMI
+//! extension) target.
+//!
+//! Values are untyped 64-bit words; float ops interpret them as f64 bits.
+//! Memory operations carry an [`AddrSpace`] (the paper uses LLVM address
+//! spaces to distinguish remote regions, §III-G) and blocks carry a
+//! [`CodeTag`] used for the cycle-attribution breakdowns of Figs 3/14.
+
+pub mod builder;
+pub mod printer;
+pub mod verify;
+
+/// Virtual register index.
+pub type Reg = u32;
+
+/// Basic block index within a [`Function`].
+pub type BlockId = u32;
+
+/// Address spaces. `Remote` models disaggregated/far memory (the paper's
+/// `remote_alloc` / `_builtin_is_remote` annotations); `Spm` is the
+/// AMU scratchpad carved out of L2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AddrSpace {
+    Local,
+    Remote,
+    Spm,
+}
+
+/// Code-region tag for stall/cycle attribution (Figs 3 and 14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CodeTag {
+    /// Original loop-body computation.
+    Compute,
+    /// Scheduler blocks (poll + dispatch next coroutine).
+    Scheduler,
+    /// Context save/restore around suspension points.
+    CtxSwitch,
+    /// One-time setup (alloca/init blocks).
+    Init,
+    /// Coroutine lifecycle management (return block, launch, recycle).
+    Lifecycle,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    Sra,
+    /// Set-if-less-than (signed): dst = (a < b) as i64.
+    Slt,
+    /// Set-if-less-than (unsigned).
+    SltU,
+    Seq,
+    Sne,
+    Min,
+    Max,
+    /// A single-instruction mixing hash (models the benchmark's inlined
+    /// hash function, e.g. multiplicative hashing in HJ/GUPS).
+    Hash,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaluOp {
+    FAdd,
+    FSub,
+    FMul,
+    FDiv,
+    FMin,
+    FMax,
+    /// dst = (a < b) as i64 (comparison on f64 bits).
+    FLt,
+    /// Convert i64 -> f64 bits.
+    IToF,
+    /// Convert f64 bits -> i64 (truncating).
+    FToI,
+}
+
+/// Access width in bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Width {
+    W1,
+    W2,
+    W4,
+    W8,
+}
+
+impl Width {
+    pub fn bytes(self) -> u32 {
+        match self {
+            Width::W1 => 1,
+            Width::W2 => 2,
+            Width::W4 => 4,
+            Width::W8 => 8,
+        }
+    }
+}
+
+/// Instruction operand: register or immediate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Operand {
+    Reg(Reg),
+    Imm(i64),
+}
+
+impl Operand {
+    pub fn as_reg(self) -> Option<Reg> {
+        match self {
+            Operand::Reg(r) => Some(r),
+            Operand::Imm(_) => None,
+        }
+    }
+}
+
+/// Non-terminator instructions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Inst {
+    Alu { op: AluOp, dst: Reg, a: Operand, b: Operand },
+    Falu { op: FaluOp, dst: Reg, a: Operand, b: Operand },
+    Load { dst: Reg, base: Operand, off: i64, width: Width, space: AddrSpace },
+    Store { val: Operand, base: Operand, off: i64, width: Width, space: AddrSpace },
+    /// Atomic read-modify-write `dst = old; [base+off] = old op val`.
+    AtomicRmw { op: AluOp, dst: Reg, val: Operand, base: Operand, off: i64, width: Width, space: AddrSpace },
+    /// Software prefetch into the cache hierarchy (non-binding, occupies an
+    /// MSHR while in flight — the static-scheduler issue interface).
+    Prefetch { base: Operand, off: i64, space: AddrSpace },
+    /// AMU decoupled load: move `bytes` from `[base+off]` (remote) into the
+    /// SPM slot for `id` at byte offset `spm_off` (sub-slot placement for
+    /// aggregated requests, §IV-B). `resume` is the coroutine resumption
+    /// block bound to the request (encoded in high-order address bits on
+    /// real hardware, §III-D); consumed by `bafin`.
+    Aload { id: Operand, base: Operand, off: i64, bytes: u32, spm_off: u32, resume: BlockId },
+    /// AMU decoupled store: move `bytes` from the SPM slot for `id` (at
+    /// `spm_off`) to `[base+off]` (remote).
+    Astore { id: Operand, base: Operand, off: i64, bytes: u32, spm_off: u32, resume: BlockId },
+    /// Bind the next `n` aload/astore requests to `id`; completion is
+    /// reported only when all have finished (§III-C / §IV-B).
+    Aset { id: Operand, n: Operand },
+    /// Poll the Finished Queue: dst = completed id, or -1 if none.
+    Getfin { dst: Reg },
+    /// Configure the handler-array base/size hardware registers (§III-D).
+    Aconfig { base: Operand, size: Operand },
+    /// Register `id` as hung (non-access request-table entry, §IV-C).
+    /// `resume` is where the coroutine continues once signalled.
+    Await { id: Operand, resume: BlockId },
+    /// Complete a pending `await` with this id, making it visible to
+    /// getfin/bafin.
+    Asignal { id: Operand },
+}
+
+/// Block terminators.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Term {
+    /// Conditional branch: taken (to `then_`) iff `cond != 0`.
+    Br { cond: Operand, then_: BlockId, else_: BlockId },
+    Jmp(BlockId),
+    /// Indirect jump: `target` holds a BlockId as an integer value. The
+    /// dynamic getfin scheduler and the static FIFO scheduler both resume
+    /// coroutines through this — the mispredict-prone jump of §III-D.
+    IndirectJmp { target: Operand },
+    /// `bafin`: if the Finished Queue holds a completed id, pop it, write
+    /// the handler address (aconfig base + id*size) into `handler_dst`,
+    /// write the id into `id_dst`, and jump to the request's bound resume
+    /// block; otherwise fall through. Predicted via the BPT oracle.
+    Bafin { handler_dst: Reg, id_dst: Reg, fallthrough: BlockId },
+    /// End of program.
+    Halt,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub name: String,
+    pub tag: CodeTag,
+    pub insts: Vec<Inst>,
+    pub term: Term,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Function {
+    pub name: String,
+    pub blocks: Vec<Block>,
+    pub entry: BlockId,
+    /// Number of virtual registers (registers are dense `0..nregs`).
+    pub nregs: u32,
+}
+
+impl Function {
+    pub fn block(&self, id: BlockId) -> &Block {
+        &self.blocks[id as usize]
+    }
+
+    /// Successor blocks of `id` (indirect jumps contribute no static edges).
+    pub fn successors(&self, id: BlockId) -> Vec<BlockId> {
+        match &self.blocks[id as usize].term {
+            Term::Br { then_, else_, .. } => vec![*then_, *else_],
+            Term::Jmp(t) => vec![*t],
+            Term::IndirectJmp { .. } => vec![],
+            Term::Bafin { fallthrough, .. } => vec![*fallthrough],
+            Term::Halt => vec![],
+        }
+    }
+
+    /// Total static instruction count (terminators count as one each).
+    pub fn static_len(&self) -> usize {
+        self.blocks.iter().map(|b| b.insts.len() + 1).sum()
+    }
+}
+
+impl Inst {
+    /// Registers read by this instruction.
+    pub fn uses(&self, out: &mut Vec<Reg>) {
+        let mut op = |o: &Operand| {
+            if let Operand::Reg(r) = o {
+                out.push(*r);
+            }
+        };
+        match self {
+            Inst::Alu { a, b, .. } | Inst::Falu { a, b, .. } => {
+                op(a);
+                op(b);
+            }
+            Inst::Load { base, .. } | Inst::Prefetch { base, .. } => op(base),
+            Inst::Store { val, base, .. } => {
+                op(val);
+                op(base);
+            }
+            Inst::AtomicRmw { val, base, .. } => {
+                op(val);
+                op(base);
+            }
+            Inst::Aload { id, base, .. } | Inst::Astore { id, base, .. } => {
+                op(id);
+                op(base);
+            }
+            Inst::Aset { id, n } => {
+                op(id);
+                op(n);
+            }
+            Inst::Getfin { .. } => {}
+            Inst::Aconfig { base, size } => {
+                op(base);
+                op(size);
+            }
+            Inst::Await { id, .. } | Inst::Asignal { id } => op(id),
+        }
+    }
+
+    /// Register written by this instruction, if any.
+    pub fn def(&self) -> Option<Reg> {
+        match self {
+            Inst::Alu { dst, .. }
+            | Inst::Falu { dst, .. }
+            | Inst::Load { dst, .. }
+            | Inst::AtomicRmw { dst, .. }
+            | Inst::Getfin { dst } => Some(*dst),
+            _ => None,
+        }
+    }
+
+    /// Whether this is a memory-subsystem operation (for LSQ accounting).
+    pub fn is_mem(&self) -> bool {
+        matches!(
+            self,
+            Inst::Load { .. } | Inst::Store { .. } | Inst::AtomicRmw { .. } | Inst::Prefetch { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn add(dst: Reg, a: Operand, b: Operand) -> Inst {
+        Inst::Alu { op: AluOp::Add, dst, a, b }
+    }
+
+    #[test]
+    fn uses_and_defs() {
+        let i = add(3, Operand::Reg(1), Operand::Imm(5));
+        let mut u = vec![];
+        i.uses(&mut u);
+        assert_eq!(u, vec![1]);
+        assert_eq!(i.def(), Some(3));
+
+        let s = Inst::Store {
+            val: Operand::Reg(2),
+            base: Operand::Reg(4),
+            off: 8,
+            width: Width::W8,
+            space: AddrSpace::Remote,
+        };
+        let mut u = vec![];
+        s.uses(&mut u);
+        assert_eq!(u, vec![2, 4]);
+        assert_eq!(s.def(), None);
+        assert!(s.is_mem());
+    }
+
+    #[test]
+    fn successors() {
+        let f = Function {
+            name: "t".into(),
+            entry: 0,
+            nregs: 1,
+            blocks: vec![
+                Block {
+                    name: "b0".into(),
+                    tag: CodeTag::Compute,
+                    insts: vec![],
+                    term: Term::Br { cond: Operand::Reg(0), then_: 1, else_: 2 },
+                },
+                Block { name: "b1".into(), tag: CodeTag::Compute, insts: vec![], term: Term::Jmp(2) },
+                Block { name: "b2".into(), tag: CodeTag::Compute, insts: vec![], term: Term::Halt },
+            ],
+        };
+        assert_eq!(f.successors(0), vec![1, 2]);
+        assert_eq!(f.successors(1), vec![2]);
+        assert!(f.successors(2).is_empty());
+        assert_eq!(f.static_len(), 3);
+    }
+
+    #[test]
+    fn width_bytes() {
+        assert_eq!(Width::W1.bytes(), 1);
+        assert_eq!(Width::W8.bytes(), 8);
+    }
+}

@@ -1,0 +1,103 @@
+//! Human-readable CoroIR disassembly (for debugging and golden tests).
+
+use super::*;
+use std::fmt::Write;
+
+fn op_str(o: &Operand) -> String {
+    match o {
+        Operand::Reg(r) => format!("r{r}"),
+        Operand::Imm(v) => format!("{v}"),
+    }
+}
+
+fn space_str(s: AddrSpace) -> &'static str {
+    match s {
+        AddrSpace::Local => "local",
+        AddrSpace::Remote => "remote",
+        AddrSpace::Spm => "spm",
+    }
+}
+
+pub fn inst_to_string(i: &Inst) -> String {
+    match i {
+        Inst::Alu { op, dst, a, b } => format!("r{dst} = {op:?} {}, {}", op_str(a), op_str(b)),
+        Inst::Falu { op, dst, a, b } => format!("r{dst} = {op:?} {}, {}", op_str(a), op_str(b)),
+        Inst::Load { dst, base, off, width, space } => {
+            format!("r{dst} = load.{} {}[{}+{off}]", width.bytes(), space_str(*space), op_str(base))
+        }
+        Inst::Store { val, base, off, width, space } => {
+            format!("store.{} {} -> {}[{}+{off}]", width.bytes(), op_str(val), space_str(*space), op_str(base))
+        }
+        Inst::AtomicRmw { op, dst, val, base, off, width, space } => {
+            let w = width.bytes();
+            let sp = space_str(*space);
+            let b = op_str(base);
+            let v = op_str(val);
+            format!("r{dst} = atomic.{op:?}.{w} {sp}[{b}+{off}], {v}")
+        }
+        Inst::Prefetch { base, off, space } => {
+            format!("prefetch {}[{}+{off}]", space_str(*space), op_str(base))
+        }
+        Inst::Aload { id, base, off, bytes, spm_off, resume } => {
+            format!("aload id={} [{}+{off}] bytes={bytes} spm+{spm_off} resume=bb{resume}", op_str(id), op_str(base))
+        }
+        Inst::Astore { id, base, off, bytes, spm_off, resume } => {
+            format!("astore id={} [{}+{off}] bytes={bytes} spm+{spm_off} resume=bb{resume}", op_str(id), op_str(base))
+        }
+        Inst::Aset { id, n } => format!("aset id={} n={}", op_str(id), op_str(n)),
+        Inst::Getfin { dst } => format!("r{dst} = getfin"),
+        Inst::Aconfig { base, size } => format!("aconfig base={} size={}", op_str(base), op_str(size)),
+        Inst::Await { id, resume } => format!("await id={} resume=bb{resume}", op_str(id)),
+        Inst::Asignal { id } => format!("asignal id={}", op_str(id)),
+    }
+}
+
+pub fn term_to_string(t: &Term) -> String {
+    match t {
+        Term::Br { cond, then_, else_ } => format!("br {} ? bb{then_} : bb{else_}", op_str(cond)),
+        Term::Jmp(t) => format!("jmp bb{t}"),
+        Term::IndirectJmp { target } => format!("ijmp {}", op_str(target)),
+        Term::Bafin { handler_dst, id_dst, fallthrough } => {
+            format!("bafin hdl->r{handler_dst} id->r{id_dst} else bb{fallthrough}")
+        }
+        Term::Halt => "halt".into(),
+    }
+}
+
+pub fn function_to_string(f: &Function) -> String {
+    let mut out = String::new();
+    writeln!(out, "fn {} (entry=bb{}, regs={})", f.name, f.entry, f.nregs).unwrap();
+    for (i, b) in f.blocks.iter().enumerate() {
+        writeln!(out, "bb{i} <{}> [{:?}]:", b.name, b.tag).unwrap();
+        for inst in &b.insts {
+            writeln!(out, "  {}", inst_to_string(inst)).unwrap();
+        }
+        writeln!(out, "  {}", term_to_string(&b.term)).unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::FuncBuilder;
+
+    #[test]
+    fn prints_all_forms() {
+        let mut b = FuncBuilder::new("p");
+        let r = b.imm(7);
+        let x = b.load(Operand::Reg(r), 8, Width::W8, AddrSpace::Remote);
+        b.store(Operand::Reg(x), Operand::Reg(r), 0, Width::W4, AddrSpace::Local);
+        b.push(Inst::Prefetch { base: Operand::Reg(r), off: 0, space: AddrSpace::Remote });
+        b.push(Inst::Aload { id: Operand::Imm(3), base: Operand::Reg(r), off: 0, bytes: 64, spm_off: 0, resume: 0 });
+        b.push(Inst::Aset { id: Operand::Imm(3), n: Operand::Imm(2) });
+        b.push(Inst::Getfin { dst: x });
+        b.push(Inst::Await { id: Operand::Imm(1), resume: 0 });
+        b.push(Inst::Asignal { id: Operand::Imm(1) });
+        b.halt();
+        let s = function_to_string(&b.build());
+        for needle in ["aload", "aset", "getfin", "await", "asignal", "prefetch", "load.8 remote", "halt"] {
+            assert!(s.contains(needle), "missing {needle} in:\n{s}");
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! CoroIR structural verifier. Run after every compiler pass in debug
+//! builds and by tests; catches dangling block references, out-of-range
+//! registers, and malformed AMU sequences.
+
+use super::*;
+use anyhow::{bail, Result};
+
+pub fn verify(f: &Function) -> Result<()> {
+    if f.blocks.is_empty() {
+        bail!("function {} has no blocks", f.name);
+    }
+    if f.entry as usize >= f.blocks.len() {
+        bail!("entry bb{} out of range", f.entry);
+    }
+    let nb = f.blocks.len() as u32;
+    let check_bb = |b: BlockId, what: &str| -> Result<()> {
+        if b >= nb {
+            bail!("{}: dangling block reference bb{} (of {})", what, b, nb);
+        }
+        Ok(())
+    };
+    let check_reg = |r: Reg, what: &str| -> Result<()> {
+        if r >= f.nregs {
+            bail!("{}: register r{} out of range (nregs={})", what, r, f.nregs);
+        }
+        Ok(())
+    };
+    let check_op = |o: &Operand, what: &str| -> Result<()> {
+        if let Operand::Reg(r) = o {
+            check_reg(*r, what)?;
+        }
+        Ok(())
+    };
+
+    for (bi, blk) in f.blocks.iter().enumerate() {
+        let ctx = |i: usize| format!("{}:bb{}[{}]", f.name, bi, i);
+        for (ii, inst) in blk.insts.iter().enumerate() {
+            let mut uses = Vec::new();
+            inst.uses(&mut uses);
+            for r in uses {
+                check_reg(r, &ctx(ii))?;
+            }
+            if let Some(d) = inst.def() {
+                check_reg(d, &ctx(ii))?;
+            }
+            match inst {
+                Inst::Aload { bytes, resume, .. } | Inst::Astore { bytes, resume, .. } => {
+                    check_bb(*resume, &ctx(ii))?;
+                    if *bytes == 0 {
+                        bail!("{}: zero-byte AMU transfer", ctx(ii));
+                    }
+                    if *bytes > 4096 {
+                        bail!("{}: AMU transfer {} exceeds 4KB granularity limit", ctx(ii), bytes);
+                    }
+                }
+                Inst::Await { resume, .. } => check_bb(*resume, &ctx(ii))?,
+                Inst::Load { width, .. } | Inst::Store { width, .. } | Inst::AtomicRmw { width, .. } => {
+                    let _ = width; // widths are enum-constrained
+                }
+                _ => {}
+            }
+        }
+        let tctx = format!("{}:bb{}:term", f.name, bi);
+        match &blk.term {
+            Term::Br { cond, then_, else_ } => {
+                check_op(cond, &tctx)?;
+                check_bb(*then_, &tctx)?;
+                check_bb(*else_, &tctx)?;
+            }
+            Term::Jmp(t) => check_bb(*t, &tctx)?,
+            Term::IndirectJmp { target } => check_op(target, &tctx)?,
+            Term::Bafin { handler_dst, id_dst, fallthrough } => {
+                check_reg(*handler_dst, &tctx)?;
+                check_reg(*id_dst, &tctx)?;
+                check_bb(*fallthrough, &tctx)?;
+            }
+            Term::Halt => {}
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::FuncBuilder;
+
+    #[test]
+    fn valid_function_passes() {
+        let mut b = FuncBuilder::new("ok");
+        let r = b.imm(1);
+        let t = b.new_block("t", CodeTag::Compute);
+        b.br(Operand::Reg(r), t, t);
+        b.switch_to(t);
+        b.halt();
+        verify(&b.build()).unwrap();
+    }
+
+    #[test]
+    fn dangling_block_caught() {
+        let f = Function {
+            name: "bad".into(),
+            entry: 0,
+            nregs: 1,
+            blocks: vec![Block {
+                name: "b".into(),
+                tag: CodeTag::Compute,
+                insts: vec![],
+                term: Term::Jmp(9),
+            }],
+        };
+        assert!(verify(&f).is_err());
+    }
+
+    #[test]
+    fn out_of_range_reg_caught() {
+        let f = Function {
+            name: "bad".into(),
+            entry: 0,
+            nregs: 1,
+            blocks: vec![Block {
+                name: "b".into(),
+                tag: CodeTag::Compute,
+                insts: vec![Inst::Alu {
+                    op: AluOp::Add,
+                    dst: 5,
+                    a: Operand::Imm(0),
+                    b: Operand::Imm(0),
+                }],
+                term: Term::Halt,
+            }],
+        };
+        assert!(verify(&f).is_err());
+    }
+
+    #[test]
+    fn zero_byte_aload_caught() {
+        let f = Function {
+            name: "bad".into(),
+            entry: 0,
+            nregs: 1,
+            blocks: vec![Block {
+                name: "b".into(),
+                tag: CodeTag::Compute,
+                insts: vec![Inst::Aload {
+                    id: Operand::Imm(0),
+                    base: Operand::Imm(0),
+                    off: 0,
+                    bytes: 0,
+                    spm_off: 0,
+                    resume: 0,
+                }],
+                term: Term::Halt,
+            }],
+        };
+        assert!(verify(&f).is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! # CoroAMU reproduction
+//!
+//! A from-scratch reproduction of *"CoroAMU: Unleashing Memory-Driven
+//! Coroutines through Latency-Aware Decoupled Operations"* (PACT 2025):
+//! a memory-centric coroutine compiler over an SSA-lite IR ([`ir`],
+//! [`compiler`]), a cycle-approximate model of the XiangShan NH-G core with
+//! the enhanced Asynchronous Memory Unit ([`sim`]), the paper's eight
+//! benchmarks ([`benchmarks`]), and the evaluation coordinator + figure
+//! harness ([`coordinator`], [`harness`]).
+//!
+//! The Rust side is Layer 3 of the rust+JAX+Pallas stack; Layers 1/2 live
+//! in `python/compile` and are AOT-lowered to `artifacts/*.hlo.txt`, which
+//! [`runtime`] loads through PJRT to cross-validate the simulator's
+//! functional outputs. See DESIGN.md for the full inventory.
+
+pub mod benchmarks;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod ir;
+pub mod runtime;
+pub mod sim;
+pub mod util;

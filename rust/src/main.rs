@@ -1,0 +1,168 @@
+//! `coroamu` — CLI for the CoroAMU reproduction.
+//!
+//! ```text
+//! coroamu report [--fig N | --all] [--scale tiny|small|full] [--only a,b]
+//! coroamu run --bench gups --variant full [--latency 200] [--tasks 96]
+//! coroamu report --table1 | --table2
+//! coroamu oracle            # PJRT cross-check against artifacts/
+//! coroamu dump --bench gups --variant full   # CoroIR disassembly
+//! ```
+
+use anyhow::{bail, Context, Result};
+use coroamu::benchmarks::{self, Scale};
+use coroamu::compiler::{compile, Variant};
+use coroamu::config::SimConfig;
+use coroamu::coordinator::{run_job, Job};
+use coroamu::harness::{self, FigOpts};
+use coroamu::ir::printer;
+use coroamu::runtime;
+use coroamu::util::cli::Args;
+
+fn parse_scale(s: &str) -> Result<Scale> {
+    Ok(match s {
+        "tiny" => Scale::Tiny,
+        "small" => Scale::Small,
+        "full" => Scale::Full,
+        other => bail!("unknown scale {other} (tiny|small|full)"),
+    })
+}
+
+fn fig_opts(args: &Args) -> Result<FigOpts> {
+    let mut o = FigOpts::default();
+    if let Some(s) = args.get("scale") {
+        o.scale = parse_scale(s)?;
+    }
+    if let Some(t) = args.get_usize("threads") {
+        o.threads = t;
+    }
+    if let Some(s) = args.get_u64("seed") {
+        o.seed = s;
+    }
+    if let Some(list) = args.get_list("only") {
+        o.only = list;
+    }
+    Ok(o)
+}
+
+fn cfg_from(args: &Args) -> Result<SimConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SimConfig::load_file(path)?,
+        None => SimConfig::preset(args.get_or("preset", "nh-g"))?,
+    };
+    if let Some(lat) = args.get_f64("latency") {
+        cfg = cfg.with_far_latency_ns(lat);
+    }
+    Ok(cfg)
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let opts = fig_opts(args)?;
+    if args.flag("table1") {
+        cfg_from(args)?.table1().print();
+        return Ok(());
+    }
+    if args.flag("table2") {
+        benchmarks::table2().print();
+        return Ok(());
+    }
+    let figs: Vec<u32> = if args.flag("all") {
+        harness::ALL_FIGURES.to_vec()
+    } else if let Some(n) = args.get_u64("fig") {
+        vec![n as u32]
+    } else {
+        bail!("report needs --fig N, --all, --table1 or --table2");
+    };
+    for f in figs {
+        eprintln!("[coroamu] generating figure {f} (scale {:?}, {} threads)...", opts.scale, opts.threads);
+        for t in harness::figure(f, &opts)? {
+            t.print();
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let bench = args.get("bench").context("--bench required")?.to_string();
+    let variant = Variant::parse(args.get_or("variant", "full")).context("bad --variant")?;
+    let job = Job {
+        bench,
+        variant,
+        tasks: args.get_usize("tasks").unwrap_or(0),
+        cfg: cfg_from(args)?,
+        scale: parse_scale(args.get_or("scale", "small"))?,
+        seed: args.get_u64("seed").unwrap_or(42),
+        key: String::new(),
+    };
+    let r = run_job(&job)?;
+    let st = &r.stats;
+    println!("bench={} variant={} cfg={} far={}ns", r.job.bench, variant.label(), r.job.cfg.name, r.job.cfg.mem.far_latency_ns);
+    println!("  cycles            {}", st.cycles);
+    println!("  dyn instrs        {} (ipc {:.2})", st.dyn_instrs, st.ipc());
+    println!("  switches          {} (ctx ops/switch {:.1})", st.switches, st.ctx_ops_per_switch());
+    println!("  cond branches     {} ({} mispredicted)", st.cond_branches, st.cond_mispredicts);
+    println!("  indirect jumps    {} ({} mispredicted)", st.indirect_jumps, st.indirect_mispredicts);
+    println!("  bafin             {} taken / {} fallthrough / {} mispredicted", st.bafins_taken, st.bafins_fallthrough, st.bafin_mispredicts);
+    println!("  aloads/astores    {}/{} (awaits {})", st.aloads, st.astores, st.awaits);
+    println!("  far MLP           {:.1} (busy {:.0}%)", st.far_mlp, st.far_busy_frac * 100.0);
+    println!("  l1 hits/misses    {}/{}", st.l1_hits, st.l1_misses);
+    let brk = st.cycle_breakdown();
+    let s: Vec<String> = brk.iter().map(|(n, v)| format!("{n} {:.0}%", v * 100.0)).collect();
+    println!("  breakdown         {}", s.join(", "));
+    println!("  oracle            PASS");
+    Ok(())
+}
+
+fn cmd_dump(args: &Args) -> Result<()> {
+    let bench = args.get("bench").context("--bench required")?;
+    let variant = Variant::parse(args.get_or("variant", "full")).context("bad --variant")?;
+    let cfg = cfg_from(args)?;
+    let b = benchmarks::by_name(bench).context("unknown benchmark")?;
+    let inst = b.instance(Scale::Tiny, 42)?;
+    let tasks = args.get_usize("tasks").unwrap_or(inst.default_tasks);
+    let ck = compile(&inst.kernel, &variant.opts(tasks), &cfg.amu)?;
+    println!("{}", printer::function_to_string(&ck.func));
+    println!(
+        "// tasks={} ctx={}B spm_slot={}B sites={} groups={}",
+        ck.num_tasks, ck.ctx_bytes, ck.spm_slot_bytes, ck.nsites, ck.ngroups
+    );
+    Ok(())
+}
+
+fn cmd_oracle(_args: &Args) -> Result<()> {
+    if !runtime::artifacts_available() {
+        bail!("artifacts/ not built — run `make artifacts` first");
+    }
+    let rt = runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    for b in runtime::oracle::GOLDEN_BENCHES {
+        for v in [Variant::Serial, Variant::CoroAmuFull] {
+            runtime::oracle::check_against_artifact(&rt, b, v)?;
+            println!("  {b:<8} {:<13} simulator == AOT golden model  OK", v.label());
+        }
+    }
+    Ok(())
+}
+
+const USAGE: &str = "usage: coroamu <report|run|dump|oracle> [options]
+  report --fig N | --all | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
+  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--tasks N] [--scale ...]
+  dump   --bench NAME [--variant ...]     print generated CoroIR
+  oracle                                  cross-check simulator vs PJRT artifacts";
+
+fn main() {
+    let args = Args::from_env();
+    let r = match args.subcommand.as_deref() {
+        Some("report") => cmd_report(&args),
+        Some("run") => cmd_run(&args),
+        Some("dump") => cmd_dump(&args),
+        Some("oracle") => cmd_oracle(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

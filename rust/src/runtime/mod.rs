@@ -1,0 +1,114 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas golden models from
+//! `artifacts/*.hlo.txt` and executes them on the CPU PJRT client to
+//! cross-validate the simulator's functional results.
+//!
+//! Layer boundaries: Python runs only at build time (`make artifacts`);
+//! this module consumes HLO **text** (not serialized protos — xla_extension
+//! 0.5.1 rejects jax>=0.5's 64-bit instruction ids; the text parser
+//! reassigns ids). See /opt/xla-example/README.md.
+
+pub mod oracle;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory (relative to the repo root).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("COROAMU_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    // Walk up from cwd looking for `artifacts/`.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// A compiled golden-model executable.
+pub struct Golden {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// PJRT CPU client + loaded artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Golden> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Golden { exe, name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned() })
+    }
+
+    /// Load artifact by short name from the artifacts dir
+    /// (`load_named("gups")` -> `artifacts/gups.hlo.txt`).
+    pub fn load_named(&self, name: &str) -> Result<Golden> {
+        self.load(&artifacts_dir().join(format!("{name}.hlo.txt")))
+    }
+}
+
+impl Golden {
+    /// Execute with i64 inputs and return the flattened i64 outputs of the
+    /// result tuple (artifacts are lowered with `return_tuple=True`).
+    pub fn run_i64(&self, inputs: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
+        let lits: Vec<xla::Literal> = inputs.iter().map(|v| xla::Literal::vec1(v)).collect();
+        self.run_literals(&lits)?.iter().map(|l| l.to_vec::<i64>().context("i64 out")).collect()
+    }
+
+    /// Execute with f64 inputs and return f64 outputs.
+    pub fn run_f64(&self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let lits: Vec<xla::Literal> = inputs.iter().map(|v| xla::Literal::vec1(v)).collect();
+        self.run_literals(&lits)?.iter().map(|l| l.to_vec::<f64>().context("f64 out")).collect()
+    }
+
+    fn run_literals(&self, lits: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut out = self.exe.execute::<xla::Literal>(lits).context("execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        out.decompose_tuple().context("decompose tuple")
+    }
+}
+
+/// True when the artifact bundle exists (tests skip gracefully otherwise,
+/// since artifacts are built by `make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("model.hlo.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("COROAMU_ARTIFACTS", "/tmp/xyz_artifacts");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/xyz_artifacts"));
+        std::env::remove_var("COROAMU_ARTIFACTS");
+    }
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+}

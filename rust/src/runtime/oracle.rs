@@ -1,0 +1,109 @@
+//! Cross-validation of the simulator against the AOT JAX/Pallas golden
+//! models: run a `Scale::Tiny` benchmark instance through the full
+//! compiler+simulator stack, then run the corresponding `artifacts/*.hlo.txt`
+//! executable on the same inputs via PJRT and compare memory images.
+//! This is the end-to-end proof that all three layers compose.
+
+use super::Runtime;
+use crate::benchmarks::{self, Benchmark, Scale};
+use crate::compiler::{compile, Variant};
+use crate::config::SimConfig;
+use crate::ir::Width;
+use crate::sim::{self, MemImage};
+use anyhow::{bail, ensure, Context, Result};
+
+fn region_i64(mem: &MemImage, name: &str) -> Result<Vec<i64>> {
+    let r = mem.region(name).with_context(|| format!("region {name}"))?;
+    (0..r.data.len() as u64 / 8).map(|j| mem.read(r.base + j * 8, Width::W8)).collect()
+}
+
+fn region_f64(mem: &MemImage, name: &str) -> Result<Vec<f64>> {
+    Ok(region_i64(mem, name)?.into_iter().map(|v| f64::from_bits(v as u64)).collect())
+}
+
+/// Run `bench` at Tiny scale under `variant` and return the memory image
+/// before and after simulation.
+fn simulate(bench: &dyn Benchmark, variant: Variant) -> Result<(MemImage, MemImage)> {
+    let cfg = SimConfig::nh_g();
+    let inst = bench.instance(Scale::Tiny, 42)?;
+    // Snapshot inputs by building a second identical instance.
+    let before = bench.instance(Scale::Tiny, 42)?.mem;
+    let ck = compile(&inst.kernel, &variant.opts(64), &cfg.amu)?;
+    let mut prog = sim::link(&cfg, &ck, inst.mem, &inst.params);
+    sim::run(&cfg, &mut prog)?;
+    (inst.check)(&prog.mem)?;
+    Ok((before, prog.mem))
+}
+
+/// Cross-check one benchmark against its artifact. Supported: gups,
+/// stream, bs, hj (the four golden-model kernels).
+pub fn check_against_artifact(rt: &Runtime, name: &str, variant: Variant) -> Result<()> {
+    let bench = benchmarks::by_name(name).with_context(|| format!("benchmark {name}"))?;
+    let (before, after) = simulate(bench.as_ref(), variant)?;
+    let golden = rt.load_named(name)?;
+    match name {
+        "gups" => {
+            let table_in = region_i64(&before, "table")?;
+            let out = golden.run_i64(&[table_in])?;
+            let table_sim = region_i64(&after, "table")?;
+            ensure!(out[0] == table_sim, "gups: PJRT golden model and simulator disagree");
+        }
+        "stream" => {
+            let b = region_f64(&before, "b")?;
+            let c = region_f64(&before, "c")?;
+            let out = golden.run_f64(&[b, c])?;
+            let a_sim = region_f64(&after, "a")?;
+            for (j, (g, s)) in out[0].iter().zip(a_sim.iter()).enumerate() {
+                ensure!((g - s).abs() <= 1e-12 * g.abs().max(1.0), "stream a[{j}]: golden {g} vs sim {s}");
+            }
+        }
+        "bs" => {
+            let sorted = region_i64(&before, "sorted_array")?;
+            let out = golden.run_i64(&[sorted])?;
+            let found = region_i64(&after, "out")?;
+            ensure!(out[0] == found, "bs: PJRT golden model and simulator disagree");
+        }
+        "hj" => {
+            let buckets = region_i64(&before, "buckets")?;
+            let keys: Vec<i64> = {
+                let t = region_i64(&before, "tuples")?;
+                t.chunks(2).map(|kp| kp[0]).collect()
+            };
+            let out = golden.run_i64(&[buckets, keys])?;
+            let matches = region_i64(&after, "result")?[0];
+            ensure!(
+                out[0][0] == matches,
+                "hj: golden matches {} vs simulator {}",
+                out[0][0],
+                matches
+            );
+        }
+        other => bail!("no golden artifact for benchmark {other}"),
+    }
+    Ok(())
+}
+
+/// Benchmarks with golden artifacts.
+pub const GOLDEN_BENCHES: [&str; 4] = ["gups", "stream", "bs", "hj"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Full three-layer integration — skipped when `make artifacts` has
+    /// not been run yet.
+    #[test]
+    fn simulator_matches_pjrt_golden_models() {
+        if !super::super::artifacts_available() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        for b in GOLDEN_BENCHES {
+            for v in [Variant::Serial, Variant::CoroAmuFull] {
+                check_against_artifact(&rt, b, v)
+                    .unwrap_or_else(|e| panic!("{b} under {}: {e:#}", v.label()));
+            }
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! The (enhanced) Asynchronous Memory Unit model (§II-C, §IV).
+//!
+//! Request Table entries track in-flight decoupled transfers (capacity =
+//! SPM lines, paper: 512); the Finished Queue holds completed ids awaiting
+//! `getfin`/`bafin`; `aset` groups aggregate multiple transfers under one
+//! id with a completion counter (§IV-B); `await`/`asignal` reuse the same
+//! structures as non-access requests (§IV-C). Timing is analytic: each
+//! entry carries its completion cycle, and polls are answered relative to
+//! the asking cycle (for `bafin`, the *fetch* cycle — the §IV-A oracle).
+
+use crate::ir::BlockId;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy)]
+struct FinEntry {
+    ready: u64,
+    id: i64,
+    resume: BlockId,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct GroupState {
+    remaining: u32,
+    ready_max: u64,
+    resume: BlockId,
+}
+
+#[derive(Debug)]
+pub struct Amu {
+    /// Request Table capacity (ids concurrently in flight).
+    table_cap: usize,
+    /// Completion times of in-flight transfers (slot release).
+    slots: Vec<u64>,
+    finished: Vec<FinEntry>,
+    groups: HashMap<i64, GroupState>,
+    /// Pending `await` registrations: id -> resume block.
+    awaiting: HashMap<i64, BlockId>,
+    /// Small fixed consume latency for getfin/asignal paths.
+    unit_latency: u64,
+    pub stat_aloads: u64,
+    pub stat_astores: u64,
+    pub stat_groups: u64,
+    pub stat_awaits: u64,
+    pub stat_asignals: u64,
+    pub stat_issue_stall_cycles: u64,
+    pub stat_max_inflight: usize,
+}
+
+impl Amu {
+    pub fn new(table_cap: usize, unit_latency: u64) -> Self {
+        Amu {
+            table_cap: table_cap.max(1),
+            slots: Vec::new(),
+            finished: Vec::new(),
+            groups: HashMap::new(),
+            awaiting: HashMap::new(),
+            unit_latency,
+            stat_aloads: 0,
+            stat_astores: 0,
+            stat_groups: 0,
+            stat_awaits: 0,
+            stat_asignals: 0,
+            stat_issue_stall_cycles: 0,
+            stat_max_inflight: 0,
+        }
+    }
+
+    /// Acquire a Request Table slot at cycle `t`; returns the actual issue
+    /// cycle (>= t, delayed when the table is full).
+    fn slot_acquire(&mut self, t: u64) -> u64 {
+        self.slots.retain(|&r| r > t);
+        self.stat_max_inflight = self.stat_max_inflight.max(self.slots.len() + 1);
+        // NOTE: the retain here is load-bearing for the MLP statistic
+        // (stat_max_inflight must see only live transfers), so no fast
+        // path — the request table is bounded at 512 entries.
+        if self.slots.len() < self.table_cap {
+            return t;
+        }
+        let (idx, &earliest) =
+            self.slots.iter().enumerate().min_by_key(|(_, r)| **r).expect("nonempty");
+        self.slots.swap_remove(idx);
+        self.stat_issue_stall_cycles += earliest - t;
+        earliest
+    }
+
+    /// Begin an aggregation group: the next `n` transfers bound to `id`
+    /// complete as one notification.
+    pub fn aset(&mut self, id: i64, n: u32) -> Result<()> {
+        if n == 0 {
+            bail!("aset with n=0");
+        }
+        if self.groups.insert(id, GroupState { remaining: n, ready_max: 0, resume: 0 }).is_some() {
+            bail!("aset on id {id} with a group already open");
+        }
+        self.stat_groups += 1;
+        Ok(())
+    }
+
+    /// Record a transfer bound to `id` completing at `completion`; returns
+    /// the issue cycle granted (slot acquisition may delay past `t`).
+    /// `completion_of` maps the granted issue cycle to the transfer's
+    /// completion (so channel bandwidth is charged from the true issue).
+    pub fn transfer(
+        &mut self,
+        id: i64,
+        resume: BlockId,
+        t: u64,
+        is_store: bool,
+        completion_of: impl FnOnce(u64) -> u64,
+    ) -> u64 {
+        let issue = self.slot_acquire(t);
+        let completion = completion_of(issue);
+        self.slots.push(completion);
+        if is_store {
+            self.stat_astores += 1;
+        } else {
+            self.stat_aloads += 1;
+        }
+        match self.groups.get_mut(&id) {
+            Some(g) => {
+                g.remaining -= 1;
+                g.ready_max = g.ready_max.max(completion);
+                g.resume = resume;
+                if g.remaining == 0 {
+                    let g = self.groups.remove(&id).unwrap();
+                    self.finished.push(FinEntry { ready: g.ready_max, id, resume: g.resume });
+                }
+            }
+            None => self.finished.push(FinEntry { ready: completion, id, resume }),
+        }
+        issue
+    }
+
+    /// §IV-C: register `id` as hung (non-access Request Table entry).
+    pub fn await_register(&mut self, id: i64, resume: BlockId) -> Result<()> {
+        if self.awaiting.insert(id, resume).is_some() {
+            bail!("await on id {id} already awaiting");
+        }
+        self.stat_awaits += 1;
+        Ok(())
+    }
+
+    /// §IV-C: complete a pending await, making `id` visible to polls.
+    pub fn asignal(&mut self, id: i64, t: u64) -> Result<()> {
+        let Some(resume) = self.awaiting.remove(&id) else {
+            bail!("asignal({id}) without matching await");
+        };
+        self.stat_asignals += 1;
+        self.finished.push(FinEntry { ready: t + self.unit_latency, id, resume });
+        Ok(())
+    }
+
+    /// Pop the oldest finished id whose completion is visible at cycle
+    /// `t` (for `bafin`, `t` is the fetch cycle — §IV-A's oracle property).
+    pub fn pop_finished(&mut self, t: u64) -> Option<(i64, BlockId)> {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.finished.iter().enumerate() {
+            if e.ready <= t && best.map(|b| e.ready < self.finished[b].ready).unwrap_or(true) {
+                best = Some(i);
+            }
+        }
+        best.map(|i| {
+            let e = self.finished.remove(i);
+            (e.id, e.resume)
+        })
+    }
+
+    /// Ids currently in the request table (diagnostics).
+    pub fn inflight(&mut self, t: u64) -> usize {
+        self.slots.retain(|&r| r > t);
+        self.slots.len()
+    }
+
+    /// Anything still pending (finished-but-unconsumed or awaiting)?
+    pub fn quiescent(&self) -> bool {
+        self.finished.is_empty() && self.awaiting.is_empty() && self.groups.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_completes_and_pops_in_ready_order() {
+        let mut a = Amu::new(16, 2);
+        a.transfer(0, 10, 0, false, |t| t + 600);
+        a.transfer(1, 11, 0, false, |t| t + 300);
+        assert_eq!(a.pop_finished(100), None, "nothing ready at cycle 100");
+        assert_eq!(a.pop_finished(300), Some((1, 11)), "earliest-ready pops first");
+        assert_eq!(a.pop_finished(1000), Some((0, 10)));
+        assert_eq!(a.pop_finished(1000), None);
+    }
+
+    #[test]
+    fn aset_group_completes_once_all_done() {
+        let mut a = Amu::new(16, 2);
+        a.aset(5, 3).unwrap();
+        a.transfer(5, 20, 0, false, |t| t + 100);
+        a.transfer(5, 20, 0, false, |t| t + 900);
+        assert_eq!(a.pop_finished(500), None, "group incomplete");
+        a.transfer(5, 20, 0, false, |t| t + 200);
+        assert_eq!(a.pop_finished(899), None);
+        assert_eq!(a.pop_finished(900), Some((5, 20)), "ready at max member completion");
+    }
+
+    #[test]
+    fn request_table_backpressure() {
+        let mut a = Amu::new(2, 2);
+        a.transfer(0, 0, 0, false, |t| t + 100);
+        a.transfer(1, 0, 0, false, |t| t + 200);
+        // Third transfer stalls until id 0's slot frees at 100.
+        let issue = a.transfer(2, 0, 0, false, |t| t + 100);
+        assert_eq!(issue, 100);
+        assert_eq!(a.stat_issue_stall_cycles, 100);
+    }
+
+    #[test]
+    fn await_asignal_roundtrip() {
+        let mut a = Amu::new(16, 2);
+        a.await_register(7, 33).unwrap();
+        assert_eq!(a.pop_finished(u64::MAX), None, "awaiting id is not ready");
+        a.asignal(7, 50).unwrap();
+        assert_eq!(a.pop_finished(51), None, "unit latency applies");
+        assert_eq!(a.pop_finished(52), Some((7, 33)));
+        assert!(a.asignal(7, 60).is_err(), "double signal");
+    }
+
+    #[test]
+    fn bafin_oracle_is_fetch_relative() {
+        // An entry completing between fetch and execute is invisible at
+        // fetch: pop with the fetch cycle must not return it.
+        let mut a = Amu::new(16, 0);
+        a.transfer(3, 9, 0, false, |t| t + 50);
+        assert_eq!(a.pop_finished(49), None);
+        assert_eq!(a.pop_finished(50), Some((3, 9)));
+    }
+
+    #[test]
+    fn quiescence() {
+        let mut a = Amu::new(4, 1);
+        assert!(a.quiescent());
+        a.aset(1, 2).unwrap();
+        assert!(!a.quiescent());
+    }
+}

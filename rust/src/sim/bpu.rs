@@ -1,0 +1,331 @@
+//! Branch prediction unit: TAGE (conditional), ITTAGE (indirect), and the
+//! CoroAMU Bafin Predict Table (§IV-A).
+//!
+//! The predictors run on the dynamic stream: the simulator asks for a
+//! prediction before resolving each branch, then trains with the actual
+//! outcome. The scheduler's coroutine-resume indirect jump is what ITTAGE
+//! faces in CoroAMU-D — with dynamically scheduled (memory-arrival-ordered)
+//! targets it degrades to chance, producing the >15% mispredict overhead of
+//! Fig. 14 that `bafin` then eliminates by consuming the Finished-Queue
+//! oracle through the BTQ.
+
+use crate::config::BpuConfig;
+
+/// "PC" of a CoroIR branch: (block id, role). Good enough for indexing.
+pub type Pc = u64;
+
+#[derive(Debug, Clone, Copy)]
+struct TageEntry {
+    tag: u16,
+    ctr: i8, // -4..3 (taken if >= 0)
+    useful: u8,
+}
+
+#[derive(Debug)]
+pub struct Tage {
+    base: Vec<i8>, // bimodal
+    tables: Vec<Vec<TageEntry>>,
+    hist_lens: Vec<u32>,
+    ghist: u64,
+    log_entries: usize,
+    pub stat_lookups: u64,
+    pub stat_mispredicts: u64,
+}
+
+impl Tage {
+    pub fn new(cfg: &BpuConfig) -> Self {
+        let nt = cfg.tage_tables;
+        let hist_lens = (0..nt).map(|i| 4u32 << i).collect();
+        Tage {
+            base: vec![0; 4096],
+            tables: (0..nt)
+                .map(|_| vec![TageEntry { tag: 0, ctr: 0, useful: 0 }; 1 << cfg.tage_log_entries])
+                .collect(),
+            hist_lens,
+            ghist: 0,
+            log_entries: cfg.tage_log_entries,
+            stat_lookups: 0,
+            stat_mispredicts: 0,
+        }
+    }
+
+    fn fold(&self, pc: Pc, hlen: u32) -> (usize, u16) {
+        let h = if hlen >= 64 { self.ghist } else { self.ghist & ((1u64 << hlen) - 1) };
+        let mixed = pc ^ h ^ (h >> 17) ^ (h >> 31) ^ (pc << 7);
+        let idx = (mixed ^ (mixed >> self.log_entries as u32 as u64)) as usize & ((1 << self.log_entries) - 1);
+        let tag = ((mixed >> 13) & 0x3FF) as u16 | 1;
+        (idx, tag)
+    }
+
+    fn predict_components(&self, pc: Pc) -> (Option<usize>, bool) {
+        // Longest matching table wins.
+        for ti in (0..self.tables.len()).rev() {
+            let (idx, tag) = self.fold(pc, self.hist_lens[ti]);
+            let e = &self.tables[ti][idx];
+            if e.tag == tag {
+                return (Some(ti), e.ctr >= 0);
+            }
+        }
+        (None, self.base[pc as usize & 4095] >= 0)
+    }
+
+    /// Predict, train, and return whether the prediction was wrong.
+    pub fn predict_and_update(&mut self, pc: Pc, taken: bool) -> bool {
+        self.stat_lookups += 1;
+        let (provider, pred) = self.predict_components(pc);
+        let mispredict = pred != taken;
+        if mispredict {
+            self.stat_mispredicts += 1;
+        }
+        // Train provider (or base).
+        match provider {
+            Some(ti) => {
+                let (idx, _) = self.fold(pc, self.hist_lens[ti]);
+                let e = &mut self.tables[ti][idx];
+                e.ctr = (e.ctr + if taken { 1 } else { -1 }).clamp(-4, 3);
+                if !mispredict {
+                    e.useful = e.useful.saturating_add(1);
+                }
+                // On mispredict, allocate in a longer table.
+                if mispredict && ti + 1 < self.tables.len() {
+                    let (aidx, atag) = self.fold(pc, self.hist_lens[ti + 1]);
+                    let a = &mut self.tables[ti + 1][aidx];
+                    if a.useful == 0 {
+                        *a = TageEntry { tag: atag, ctr: if taken { 0 } else { -1 }, useful: 0 };
+                    } else {
+                        a.useful -= 1;
+                    }
+                }
+            }
+            None => {
+                let b = &mut self.base[pc as usize & 4095];
+                *b = (*b + if taken { 1 } else { -1 }).clamp(-2, 1);
+                if mispredict && !self.tables.is_empty() {
+                    let (aidx, atag) = self.fold(pc, self.hist_lens[0]);
+                    let a = &mut self.tables[0][aidx];
+                    if a.useful == 0 {
+                        *a = TageEntry { tag: atag, ctr: if taken { 0 } else { -1 }, useful: 0 };
+                    } else {
+                        a.useful -= 1;
+                    }
+                }
+            }
+        }
+        self.ghist = (self.ghist << 1) | taken as u64;
+        mispredict
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ItEntry {
+    tag: u16,
+    target: u64,
+    conf: i8,
+}
+
+/// ITTAGE-lite: tagged target tables with geometric histories + a
+/// PC-indexed last-target base table.
+#[derive(Debug)]
+pub struct Ittage {
+    base: Vec<u64>,
+    tables: Vec<Vec<ItEntry>>,
+    hist_lens: Vec<u32>,
+    /// Path history of recent indirect targets.
+    thist: u64,
+    log_entries: usize,
+    pub stat_lookups: u64,
+    pub stat_mispredicts: u64,
+}
+
+impl Ittage {
+    pub fn new(cfg: &BpuConfig) -> Self {
+        let nt = 3;
+        Ittage {
+            base: vec![u64::MAX; 1024],
+            tables: (0..nt)
+                .map(|_| vec![ItEntry { tag: 0, target: u64::MAX, conf: 0 }; 1 << cfg.ittage_log_entries])
+                .collect(),
+            hist_lens: vec![4, 12, 32],
+            thist: 0,
+            log_entries: cfg.ittage_log_entries,
+            stat_lookups: 0,
+            stat_mispredicts: 0,
+        }
+    }
+
+    fn fold(&self, pc: Pc, hlen: u32) -> (usize, u16) {
+        let h = if hlen >= 64 { self.thist } else { self.thist & ((1u64 << hlen) - 1) };
+        let mixed = pc.wrapping_mul(0x9E37_79B9) ^ h ^ (h >> 11) ^ (h >> 23);
+        let idx = (mixed ^ (mixed >> self.log_entries as u32 as u64)) as usize & ((1 << self.log_entries) - 1);
+        let tag = ((mixed >> 15) & 0x3FF) as u16 | 1;
+        (idx, tag)
+    }
+
+    pub fn predict_and_update(&mut self, pc: Pc, actual: u64) -> bool {
+        self.stat_lookups += 1;
+        let mut pred = self.base[pc as usize & 1023];
+        let mut provider: Option<usize> = None;
+        for ti in (0..self.tables.len()).rev() {
+            let (idx, tag) = self.fold(pc, self.hist_lens[ti]);
+            let e = &self.tables[ti][idx];
+            if e.tag == tag && e.conf >= 0 {
+                pred = e.target;
+                provider = Some(ti);
+                break;
+            }
+        }
+        let mispredict = pred != actual;
+        if mispredict {
+            self.stat_mispredicts += 1;
+        }
+        // Train.
+        self.base[pc as usize & 1023] = actual;
+        match provider {
+            Some(ti) => {
+                let (idx, _) = self.fold(pc, self.hist_lens[ti]);
+                let e = &mut self.tables[ti][idx];
+                if e.target == actual {
+                    e.conf = (e.conf + 1).min(3);
+                } else {
+                    e.conf -= 1;
+                    if e.conf < -1 {
+                        e.target = actual;
+                        e.conf = 0;
+                    }
+                }
+            }
+            None => {}
+        }
+        if mispredict {
+            // Allocate with a longer history.
+            let start = provider.map(|p| p + 1).unwrap_or(0);
+            if start < self.tables.len() {
+                let (idx, tag) = self.fold(pc, self.hist_lens[start]);
+                let e = &mut self.tables[start][idx];
+                if e.conf <= 0 {
+                    *e = ItEntry { tag, target: actual, conf: 0 };
+                }
+            }
+        }
+        self.thist = (self.thist << 4) ^ actual ^ (self.thist >> 60);
+        mispredict
+    }
+}
+
+/// The 4-entry Bafin Predict Table. The oracle property (§IV-A): a bafin's
+/// outcome is decided by the Finished-Queue state *at fetch time*, and the
+/// BTQ delivers exactly that id to the front end, so prediction is always
+/// correct. We model the structure (entries indexed by PC) so that programs
+/// with more distinct bafin PCs than entries would lose coverage.
+#[derive(Debug)]
+pub struct BafinPredictTable {
+    pcs: Vec<Pc>,
+    cap: usize,
+    pub stat_lookups: u64,
+    pub stat_mispredicts: u64,
+}
+
+impl BafinPredictTable {
+    pub fn new(cfg: &BpuConfig) -> Self {
+        BafinPredictTable { pcs: Vec::new(), cap: cfg.bpt_entries.max(1), stat_lookups: 0, stat_mispredicts: 0 }
+    }
+
+    /// Returns true if this bafin PC is covered by the BPT (tracked or
+    /// allocatable); uncovered bafins predict like a plain not-taken
+    /// branch and mispredict whenever they dispatch a coroutine.
+    pub fn covered(&mut self, pc: Pc) -> bool {
+        self.stat_lookups += 1;
+        if self.pcs.contains(&pc) {
+            return true;
+        }
+        if self.pcs.len() < self.cap {
+            self.pcs.push(pc);
+            return true;
+        }
+        // FIFO replacement on overflow.
+        self.pcs.remove(0);
+        self.pcs.push(pc);
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> BpuConfig {
+        SimConfig::nh_g().bpu
+    }
+
+    #[test]
+    fn tage_learns_loop_branch() {
+        let mut t = Tage::new(&cfg());
+        // 9 taken, 1 not-taken, repeating (loop of 10 iterations).
+        for i in 0..20_000u64 {
+            t.predict_and_update(42, i % 10 != 9);
+        }
+        let rate = t.stat_mispredicts as f64 / t.stat_lookups as f64;
+        assert!(rate < 0.05, "TAGE mispredict rate {rate} on periodic loop branch");
+    }
+
+    #[test]
+    fn tage_fails_on_random_as_expected() {
+        let mut t = Tage::new(&cfg());
+        let mut rng = Rng::new(1);
+        for _ in 0..20_000 {
+            t.predict_and_update(42, rng.bool());
+        }
+        let rate = t.stat_mispredicts as f64 / t.stat_lookups as f64;
+        assert!(rate > 0.35, "random branch should be near-chance, got {rate}");
+    }
+
+    #[test]
+    fn ittage_learns_fixed_target() {
+        let mut it = Ittage::new(&cfg());
+        for _ in 0..10_000 {
+            it.predict_and_update(7, 0x1234);
+        }
+        let rate = it.stat_mispredicts as f64 / it.stat_lookups as f64;
+        assert!(rate < 0.01);
+    }
+
+    #[test]
+    fn ittage_learns_short_cycle() {
+        let mut it = Ittage::new(&cfg());
+        let targets = [10u64, 20, 30, 40];
+        for i in 0..40_000usize {
+            it.predict_and_update(7, targets[i % 4]);
+        }
+        let rate = it.stat_mispredicts as f64 / it.stat_lookups as f64;
+        assert!(rate < 0.15, "periodic indirect pattern should be learnable, got {rate}");
+    }
+
+    #[test]
+    fn ittage_near_chance_on_random_targets() {
+        // The CoroAMU-D scheduler case: resume targets in memory-arrival
+        // order are effectively random.
+        let mut it = Ittage::new(&cfg());
+        let mut rng = Rng::new(3);
+        let targets: Vec<u64> = (0..16).map(|i| 100 + i * 10).collect();
+        for _ in 0..40_000 {
+            let t = targets[rng.below(16) as usize];
+            it.predict_and_update(7, t);
+        }
+        let rate = it.stat_mispredicts as f64 / it.stat_lookups as f64;
+        assert!(rate > 0.5, "random 16-target indirect jump should mispredict often, got {rate}");
+    }
+
+    #[test]
+    fn bpt_covers_few_bafins() {
+        let mut b = BafinPredictTable::new(&cfg());
+        assert!(b.covered(1));
+        assert!(b.covered(1));
+        for pc in 2..=4 {
+            assert!(b.covered(pc));
+        }
+        // Fifth distinct PC overflows the 4-entry table.
+        assert!(!b.covered(99));
+    }
+}

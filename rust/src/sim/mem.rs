@@ -1,0 +1,236 @@
+//! Flat simulated memory: named regions mapped into a 64-bit address
+//! space, each tagged Local / Remote / SPM. The benchmark harness
+//! allocates datasets into regions; the interpreter and the timing model
+//! translate addresses through the region table.
+
+use crate::ir::{AddrSpace, Width};
+use anyhow::{bail, Result};
+
+/// Region base addresses by space (regions of one space are packed
+/// consecutively above these bases, 4 KB aligned).
+pub const LOCAL_BASE: u64 = 0x1000_0000;
+pub const SPM_BASE: u64 = 0x4000_0000;
+pub const REMOTE_BASE: u64 = 0x8000_0000;
+
+#[derive(Debug)]
+pub struct Region {
+    pub name: String,
+    pub base: u64,
+    pub space: AddrSpace,
+    pub data: Vec<u8>,
+}
+
+impl Region {
+    pub fn end(&self) -> u64 {
+        self.base + self.data.len() as u64
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct MemImage {
+    pub regions: Vec<Region>,
+    next_local: u64,
+    next_spm: u64,
+    next_remote: u64,
+    /// Last region hit (locality cache for translation).
+    last: std::cell::Cell<usize>,
+}
+
+fn align4k(x: u64) -> u64 {
+    (x + 4095) & !4095
+}
+
+impl MemImage {
+    pub fn new() -> Self {
+        Self {
+            regions: Vec::new(),
+            next_local: LOCAL_BASE,
+            next_spm: SPM_BASE,
+            next_remote: REMOTE_BASE,
+            last: std::cell::Cell::new(0),
+        }
+    }
+
+    /// Allocate a zeroed region; returns its base address.
+    pub fn alloc(&mut self, name: &str, space: AddrSpace, bytes: u64) -> u64 {
+        let base = match space {
+            AddrSpace::Local => &mut self.next_local,
+            AddrSpace::Spm => &mut self.next_spm,
+            AddrSpace::Remote => &mut self.next_remote,
+        };
+        let addr = *base;
+        *base = align4k(*base + bytes.max(1));
+        self.regions.push(Region { name: name.into(), base: addr, space, data: vec![0u8; bytes as usize] });
+        addr
+    }
+
+    #[inline]
+    fn region_idx(&self, addr: u64) -> Option<usize> {
+        let li = self.last.get();
+        if let Some(r) = self.regions.get(li) {
+            if addr >= r.base && addr < r.end() {
+                return Some(li);
+            }
+        }
+        for (i, r) in self.regions.iter().enumerate() {
+            if addr >= r.base && addr < r.end() {
+                self.last.set(i);
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Address space an address belongs to (for the timing model).
+    #[inline]
+    pub fn space_of(&self, addr: u64) -> Option<AddrSpace> {
+        self.region_idx(addr).map(|i| self.regions[i].space)
+    }
+
+    pub fn read(&self, addr: u64, width: Width) -> Result<i64> {
+        let Some(i) = self.region_idx(addr) else {
+            bail!("read from unmapped address {addr:#x}");
+        };
+        let r = &self.regions[i];
+        let off = (addr - r.base) as usize;
+        let n = width.bytes() as usize;
+        if off + n > r.data.len() {
+            bail!("read past end of region {} at {addr:#x}", r.name);
+        }
+        let mut buf = [0u8; 8];
+        buf[..n].copy_from_slice(&r.data[off..off + n]);
+        let raw = u64::from_le_bytes(buf);
+        // Sign-extend sub-word reads (RV64 LW/LH/LB semantics).
+        Ok(match width {
+            Width::W1 => raw as u8 as i8 as i64,
+            Width::W2 => raw as u16 as i16 as i64,
+            Width::W4 => raw as u32 as i32 as i64,
+            Width::W8 => raw as i64,
+        })
+    }
+
+    pub fn write(&mut self, addr: u64, width: Width, val: i64) -> Result<()> {
+        let Some(i) = self.region_idx(addr) else {
+            bail!("write to unmapped address {addr:#x}");
+        };
+        let r = &mut self.regions[i];
+        let off = (addr - r.base) as usize;
+        let n = width.bytes() as usize;
+        if off + n > r.data.len() {
+            bail!("write past end of region {} at {addr:#x}", r.name);
+        }
+        r.data[off..off + n].copy_from_slice(&(val as u64).to_le_bytes()[..n]);
+        Ok(())
+    }
+
+    /// Bulk copy (AMU aload/astore transfers). Byte-exact.
+    pub fn copy(&mut self, src: u64, dst: u64, bytes: u64) -> Result<()> {
+        // Straightforward byte loop through the region API would be slow;
+        // resolve both regions once.
+        let Some(si) = self.region_idx(src) else { bail!("copy src unmapped {src:#x}") };
+        let Some(di) = self.region_idx(dst) else { bail!("copy dst unmapped {dst:#x}") };
+        let so = (src - self.regions[si].base) as usize;
+        let do_ = (dst - self.regions[di].base) as usize;
+        let n = bytes as usize;
+        if so + n > self.regions[si].data.len() || do_ + n > self.regions[di].data.len() {
+            bail!("copy out of bounds ({src:#x} -> {dst:#x}, {bytes}B)");
+        }
+        if si == di {
+            self.regions[si].data.copy_within(so..so + n, do_);
+        } else if si < di {
+            let (l, r) = self.regions.split_at_mut(di);
+            r[0].data[do_..do_ + n].copy_from_slice(&l[si].data[so..so + n]);
+        } else {
+            let (l, r) = self.regions.split_at_mut(si);
+            l[di].data[do_..do_ + n].copy_from_slice(&r[0].data[so..so + n]);
+        }
+        Ok(())
+    }
+
+    /// Allocate a region and bulk-initialize it from i64 words (fast path
+    /// for dataset construction; per-word `write` costs a region lookup).
+    pub fn alloc_init_i64(&mut self, name: &str, space: AddrSpace, data: &[i64]) -> u64 {
+        let base = self.alloc(name, space, (data.len() as u64) * 8);
+        let r = self.regions.last_mut().expect("just allocated");
+        for (chunk, v) in r.data.chunks_exact_mut(8).zip(data.iter()) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+        base
+    }
+
+    /// Read a whole region back as i64 words.
+    pub fn region_as_i64(&self, name: &str) -> Option<Vec<i64>> {
+        let r = self.region(name)?;
+        Some(
+            r.data
+                .chunks_exact(8)
+                .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        )
+    }
+
+    /// Fill a region's bytes directly (dataset initialization).
+    pub fn region_mut(&mut self, name: &str) -> Option<&mut Region> {
+        self.regions.iter_mut().find(|r| r.name == name)
+    }
+
+    pub fn region(&self, name: &str) -> Option<&Region> {
+        self.regions.iter().find(|r| r.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_read_write_roundtrip() {
+        let mut m = MemImage::new();
+        let a = m.alloc("t", AddrSpace::Remote, 64);
+        assert!(a >= REMOTE_BASE);
+        m.write(a + 8, Width::W8, -42).unwrap();
+        assert_eq!(m.read(a + 8, Width::W8).unwrap(), -42);
+        assert_eq!(m.space_of(a), Some(AddrSpace::Remote));
+        assert_eq!(m.space_of(0xdead), None);
+    }
+
+    #[test]
+    fn sign_extension() {
+        let mut m = MemImage::new();
+        let a = m.alloc("t", AddrSpace::Local, 16);
+        m.write(a, Width::W4, -1).unwrap();
+        assert_eq!(m.read(a, Width::W4).unwrap(), -1);
+        m.write(a, Width::W1, 0xFF).unwrap();
+        assert_eq!(m.read(a, Width::W1).unwrap(), -1);
+    }
+
+    #[test]
+    fn oob_faults() {
+        let mut m = MemImage::new();
+        let a = m.alloc("t", AddrSpace::Local, 8);
+        assert!(m.read(a + 8, Width::W8).is_err());
+        assert!(m.write(a + 4, Width::W8, 0).is_err());
+    }
+
+    #[test]
+    fn regions_do_not_overlap() {
+        let mut m = MemImage::new();
+        let a = m.alloc("a", AddrSpace::Remote, 5000);
+        let b = m.alloc("b", AddrSpace::Remote, 100);
+        assert!(b >= a + 5000);
+        m.write(b, Width::W8, 7).unwrap();
+        assert_eq!(m.read(a, Width::W8).unwrap(), 0);
+    }
+
+    #[test]
+    fn copy_between_spaces() {
+        let mut m = MemImage::new();
+        let r = m.alloc("rem", AddrSpace::Remote, 128);
+        let s = m.alloc("spm", AddrSpace::Spm, 128);
+        for k in 0..16 {
+            m.write(r + k * 8, Width::W8, k as i64 * 3).unwrap();
+        }
+        m.copy(r, s, 128).unwrap();
+        assert_eq!(m.read(s + 40, Width::W8).unwrap(), 15);
+    }
+}

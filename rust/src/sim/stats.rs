@@ -1,0 +1,135 @@
+//! Per-run statistics: everything the paper's figures consume.
+
+use crate::ir::CodeTag;
+
+/// Where dispatch-stall cycles went (Figs 3 and 14 buckets).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StallBuckets {
+    /// Waiting on a remote-memory access at the ROB head.
+    pub remote_mem: f64,
+    /// Waiting on local-memory accesses (incl. context switching traffic).
+    pub local_mem: f64,
+    /// Branch-misprediction redirect penalties.
+    pub mispredict: f64,
+    /// Load/store-queue or AMU issue backpressure.
+    pub backpressure: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Total simulated cycles (last retirement).
+    pub cycles: u64,
+    /// Dynamic instructions, total and per block tag.
+    pub dyn_instrs: u64,
+    pub dyn_by_tag: [u64; 5],
+    pub stalls: StallBuckets,
+    // Branch statistics.
+    pub cond_branches: u64,
+    pub cond_mispredicts: u64,
+    pub indirect_jumps: u64,
+    pub indirect_mispredicts: u64,
+    pub bafins_taken: u64,
+    pub bafins_fallthrough: u64,
+    pub bafin_mispredicts: u64,
+    // Memory statistics.
+    pub loads: u64,
+    pub stores: u64,
+    pub prefetches: u64,
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    pub far_lines: u64,
+    pub far_mlp: f64,
+    pub far_busy_frac: f64,
+    // AMU.
+    pub aloads: u64,
+    pub astores: u64,
+    pub amu_max_inflight: usize,
+    pub awaits: u64,
+    // Coroutine runtime.
+    pub switches: u64,
+    pub ctx_ops: u64,
+    pub tasks_completed: u64,
+}
+
+pub fn tag_index(t: CodeTag) -> usize {
+    match t {
+        CodeTag::Compute => 0,
+        CodeTag::Scheduler => 1,
+        CodeTag::CtxSwitch => 2,
+        CodeTag::Init => 3,
+        CodeTag::Lifecycle => 4,
+    }
+}
+
+pub const TAG_NAMES: [&str; 5] = ["compute", "scheduler", "ctxswitch", "init", "lifecycle"];
+
+impl RunStats {
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.dyn_instrs as f64 / self.cycles as f64
+        }
+    }
+
+    /// Context load/stores per scheduler switch (Fig. 15 right axis).
+    pub fn ctx_ops_per_switch(&self) -> f64 {
+        if self.switches == 0 {
+            0.0
+        } else {
+            self.ctx_ops as f64 / self.switches as f64
+        }
+    }
+
+    /// Cycle breakdown for Figs 3/14: (compute+width, local, remote,
+    /// scheduler overhead incl. lifecycle, mispredict), normalized shares.
+    pub fn cycle_breakdown(&self) -> [(String, f64); 5] {
+        let total = self.cycles.max(1) as f64;
+        let stall_sum = self.stalls.remote_mem + self.stalls.local_mem + self.stalls.mispredict + self.stalls.backpressure;
+        let base = (total - stall_sum).max(0.0);
+        // Split base-issue cycles across tags by dynamic instruction share.
+        let di = self.dyn_instrs.max(1) as f64;
+        let sched_share = (self.dyn_by_tag[1] + self.dyn_by_tag[4]) as f64 / di;
+        let ctx_share = self.dyn_by_tag[2] as f64 / di;
+        let compute = base * (1.0 - sched_share - ctx_share);
+        [
+            ("compute".into(), compute / total),
+            ("local/ctx".into(), (self.stalls.local_mem + base * ctx_share) / total),
+            ("remote".into(), self.stalls.remote_mem / total),
+            ("scheduler".into(), (base * sched_share + self.stalls.backpressure) / total),
+            ("mispredict".into(), self.stalls.mispredict / total),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_sums_to_one() {
+        let s = RunStats {
+            cycles: 1000,
+            dyn_instrs: 800,
+            dyn_by_tag: [400, 200, 100, 50, 50],
+            stalls: StallBuckets { remote_mem: 300.0, local_mem: 100.0, mispredict: 50.0, backpressure: 25.0 },
+            ..Default::default()
+        };
+        let b = s.cycle_breakdown();
+        let sum: f64 = b.iter().map(|(_, v)| v).sum();
+        assert!((sum - 1.0).abs() < 1e-9, "breakdown sums to {sum}");
+        assert!(b.iter().all(|(_, v)| *v >= 0.0));
+    }
+
+    #[test]
+    fn ipc_and_ratios() {
+        let mut s = RunStats::default();
+        assert_eq!(s.ipc(), 0.0);
+        s.cycles = 100;
+        s.dyn_instrs = 250;
+        assert!((s.ipc() - 2.5).abs() < 1e-12);
+        s.switches = 10;
+        s.ctx_ops = 35;
+        assert!((s.ctx_ops_per_switch() - 3.5).abs() < 1e-12);
+    }
+}

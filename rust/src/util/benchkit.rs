@@ -1,0 +1,171 @@
+//! Micro-benchmark harness for `cargo bench` (no `criterion` offline).
+//!
+//! Benches are plain binaries with `harness = false`; they construct a
+//! [`Bench`] runner which handles warm-up, repetition, robust statistics and
+//! the `cargo bench -- <filter>` convention.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Optional domain metric, e.g. simulated dynamic instructions/sec.
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+pub struct Bench {
+    filter: Option<String>,
+    pub warmup_iters: u32,
+    pub measure_iters: u32,
+    pub samples: Vec<Sample>,
+}
+
+impl Bench {
+    /// Build from `std::env::args`, honouring `cargo bench -- <filter>` and
+    /// ignoring libtest-style flags like `--bench`.
+    pub fn from_env() -> Self {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with("--"));
+        let fast = std::env::var("COROAMU_BENCH_FAST").is_ok();
+        Self {
+            filter,
+            warmup_iters: if fast { 1 } else { 2 },
+            measure_iters: if fast { 3 } else { 10 },
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Time `f`, which returns an optional work amount for throughput
+    /// reporting (e.g. instructions simulated).
+    pub fn run<F>(&mut self, name: &str, unit: &'static str, mut f: F)
+    where
+        F: FnMut() -> f64,
+    {
+        if !self.enabled(name) {
+            return;
+        }
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.measure_iters as usize);
+        let mut work_total = 0.0;
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            let work = std::hint::black_box(f());
+            times.push(t0.elapsed().as_nanos() as f64);
+            work_total += work;
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let median = times[times.len() / 2];
+        let work_per_iter = work_total / self.measure_iters as f64;
+        let throughput = if work_per_iter > 0.0 {
+            Some((work_per_iter / (mean / 1e9), unit))
+        } else {
+            None
+        };
+        let sample = Sample {
+            name: name.to_string(),
+            iters: self.measure_iters,
+            mean_ns: mean,
+            median_ns: median,
+            min_ns: times[0],
+            max_ns: *times.last().unwrap(),
+            throughput,
+        };
+        println!("{}", format_sample(&sample));
+        self.samples.push(sample);
+    }
+
+    pub fn finish(&self) {
+        println!("\n{} benchmarks complete", self.samples.len());
+    }
+}
+
+pub fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn format_sample(s: &Sample) -> String {
+    let mut line = format!(
+        "bench {:<46} median {:>10}  mean {:>10}  (min {}, max {}, n={})",
+        s.name,
+        human_ns(s.median_ns),
+        human_ns(s.mean_ns),
+        human_ns(s.min_ns),
+        human_ns(s.max_ns),
+        s.iters
+    );
+    if let Some((rate, unit)) = s.throughput {
+        line.push_str(&format!("  [{:.2} M{}/s]", rate / 1e6, unit));
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_ns_ranges() {
+        assert_eq!(human_ns(500.0), "500 ns");
+        assert_eq!(human_ns(1500.0), "1.50 µs");
+        assert_eq!(human_ns(2.5e6), "2.50 ms");
+        assert_eq!(human_ns(3.2e9), "3.200 s");
+    }
+
+    #[test]
+    fn run_records_sample() {
+        let mut b = Bench {
+            filter: None,
+            warmup_iters: 0,
+            measure_iters: 3,
+            samples: Vec::new(),
+        };
+        b.run("smoke", "ops", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+            1000.0
+        });
+        assert_eq!(b.samples.len(), 1);
+        assert!(b.samples[0].throughput.is_some());
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bench {
+            filter: Some("fig12".into()),
+            warmup_iters: 0,
+            measure_iters: 1,
+            samples: Vec::new(),
+        };
+        b.run("fig11/gups", "ops", || 1.0);
+        assert!(b.samples.is_empty());
+        b.run("fig12/gups", "ops", || 1.0);
+        assert_eq!(b.samples.len(), 1);
+    }
+}

@@ -1,0 +1,135 @@
+//! Tiny command-line argument parser (no `clap` in the offline env).
+//!
+//! Model: `prog <subcommand> [--flag] [--key value|--key=value] [positional]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        // First non-dashed token is the subcommand.
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = iter.next();
+            }
+        }
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.options.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else {
+                    // `--key value` if the next token is not another option,
+                    // else a boolean flag.
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let val = iter.next().unwrap();
+                            out.options.insert(body.to_string(), val);
+                        }
+                        _ => out.flags.push(body.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    /// Comma-separated list option, e.g. `--latencies 100,200,800`.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["report", "--fig", "12", "--preset=nh-g", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("report"));
+        assert_eq!(a.get("fig"), Some("12"));
+        assert_eq!(a.get("preset"), Some("nh-g"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let a = parse(&["run", "--n=5", "--m", "7"]);
+        assert_eq!(a.get_u64("n"), Some(5));
+        assert_eq!(a.get_u64("m"), Some(7));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["run", "--fast"]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["run", "gups", "--lat", "200", "bs"]);
+        assert_eq!(a.positional, vec!["gups".to_string(), "bs".to_string()]);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["x", "--lats", "100, 200,800"]);
+        assert_eq!(
+            a.get_list("lats"),
+            Some(vec!["100".into(), "200".into(), "800".into()])
+        );
+    }
+
+    #[test]
+    fn no_subcommand_when_first_is_option() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

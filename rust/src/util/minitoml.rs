@@ -1,0 +1,210 @@
+//! Minimal TOML-subset parser for the config system.
+//!
+//! The offline environment has no `serde`/`toml`, so configuration files in
+//! `configs/` are parsed by this module. Supported subset: `[section]`
+//! headers, `key = value` with integer, float, boolean and quoted-string
+//! values, `#` comments, and blank lines. This covers everything the NH-G /
+//! Skylake presets need.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "minitoml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed document: map from `"section.key"` (or bare `"key"` for the
+/// top-level table) to value.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+    pub fn i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_i64)
+    }
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+}
+
+fn parse_value(raw: &str, line: usize) -> Result<Value, ParseError> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(ParseError { line, msg: "empty value".into() });
+    }
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            return Err(ParseError { line, msg: format!("unterminated string: {raw}") });
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    // Allow numeric separators as in TOML.
+    let cleaned: String = raw.chars().filter(|c| *c != '_').collect();
+    if let Ok(v) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(ParseError { line, msg: format!("cannot parse value: {raw}") })
+}
+
+pub fn parse(text: &str) -> Result<Doc, ParseError> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        // Strip comments, but not inside strings (strings here never
+        // contain '#' in practice; keep it simple and documented).
+        let line = match raw_line.find('#') {
+            Some(pos) if !raw_line[..pos].contains('"') => &raw_line[..pos],
+            _ => raw_line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let Some(name) = inner.strip_suffix(']') else {
+                return Err(ParseError { line: line_no, msg: format!("bad section header: {line}") });
+            };
+            section = name.trim().to_string();
+            if section.is_empty() {
+                return Err(ParseError { line: line_no, msg: "empty section name".into() });
+            }
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(ParseError { line: line_no, msg: format!("expected key = value: {line}") });
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(ParseError { line: line_no, msg: "empty key".into() });
+        }
+        let value = parse_value(&line[eq + 1..], line_no)?;
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.insert(full_key, value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# global
+name = "nh-g"
+[core]
+rob = 96
+freq_ghz = 3.0
+ooo = true
+[mem]
+far_latency_ns = 200
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str("name"), Some("nh-g"));
+        assert_eq!(doc.i64("core.rob"), Some(96));
+        assert_eq!(doc.f64("core.freq_ghz"), Some(3.0));
+        assert_eq!(doc.bool("core.ooo"), Some(true));
+        assert_eq!(doc.i64("mem.far_latency_ns"), Some(200));
+    }
+
+    #[test]
+    fn int_reads_as_f64_too() {
+        let doc = parse("x = 4").unwrap();
+        assert_eq!(doc.f64("x"), Some(4.0));
+    }
+
+    #[test]
+    fn numeric_underscores() {
+        let doc = parse("big = 1_000_000").unwrap();
+        assert_eq!(doc.i64("big"), Some(1_000_000));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("key value").is_err());
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn comment_stripping() {
+        let doc = parse("a = 1 # trailing\n# full line\nb = 2").unwrap();
+        assert_eq!(doc.i64("a"), Some(1));
+        assert_eq!(doc.i64("b"), Some(2));
+    }
+}

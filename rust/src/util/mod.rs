@@ -1,0 +1,10 @@
+//! In-repo substrates replacing unavailable crates (offline build):
+//! PRNGs, TOML-subset parsing, CLI parsing, property testing, bench harness,
+//! and table rendering.
+
+pub mod benchkit;
+pub mod cli;
+pub mod minitoml;
+pub mod proptest;
+pub mod rng;
+pub mod table;

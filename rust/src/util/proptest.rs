@@ -1,0 +1,245 @@
+//! Property-testing mini-framework (no `proptest` crate offline).
+//!
+//! Provides seeded random generators, a `check` runner that searches for a
+//! failing input, and greedy shrinking for integers and vectors. Used by the
+//! coordinator/compiler/simulator invariant tests.
+
+use super::rng::Rng;
+
+/// A generation context handed to strategies.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint: strategies should scale collection sizes by this.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: Rng::new(seed), size }
+    }
+
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        self.rng.below(bound.max(1))
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            return lo;
+        }
+        lo + self.rng.below((hi - lo) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        if hi <= lo {
+            return lo;
+        }
+        lo + self.rng.below((hi - lo) as u64) as i64
+    }
+
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize_in(0, max_len.min(self.size.max(1)) + 1);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len())]
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum CheckResult<T> {
+    Pass { cases: usize },
+    Fail { seed: u64, case: usize, input: T, message: String },
+}
+
+/// Configuration for the runner.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed from env for reproducibility: COROAMU_PT_SEED=123.
+        let seed = std::env::var("COROAMU_PT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0F0_AA11);
+        Self { cases: 128, seed, max_shrink_iters: 400 }
+    }
+}
+
+/// Anything that can propose "smaller" versions of itself.
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for i64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - self.signum()]
+        }
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl<T: Clone + Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Remove halves, then single elements, then shrink elements.
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        for i in 0..self.len().min(8) {
+            let mut v = self.clone();
+            v.remove(i);
+            out.push(v);
+        }
+        for i in 0..self.len().min(4) {
+            for smaller in self[i].shrink() {
+                let mut v = self.clone();
+                v[i] = smaller;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Clone + Shrink, B: Clone + Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `prop` against `cases` random inputs drawn by `gen_input`; on failure,
+/// greedily shrink to a minimal failing input and panic with a reproducer.
+pub fn check<T, G, P>(cfg: Config, mut gen_input: G, mut prop: P)
+where
+    T: Clone + std::fmt::Debug + Shrink,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // Derive a per-case seed so failures reproduce standalone.
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(case_seed, 1 + case % 50);
+        let input = gen_input(&mut g);
+        if let Err(msg) = prop(&input) {
+            // Shrink.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut iters = 0;
+            'outer: loop {
+                for cand in best.shrink() {
+                    iters += 1;
+                    if iters > cfg.max_shrink_iters {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed:#x}, set COROAMU_PT_SEED={seed} to reproduce)\n  minimal input: {best:?}\n  error: {best_msg}",
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// Convenience wrapper with default config.
+pub fn quickcheck<T, G, P>(gen_input: G, prop: P)
+where
+    T: Clone + std::fmt::Debug + Shrink,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check(Config::default(), gen_input, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quickcheck(
+            |g| g.vec(16, |g| g.u64_below(100)),
+            |v: &Vec<u64>| {
+                let mut s = v.clone();
+                s.sort_unstable();
+                if s.len() == v.len() {
+                    Ok(())
+                } else {
+                    Err("sort changed length".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_shrinks_and_panics() {
+        quickcheck(
+            |g| g.vec(32, |g| g.u64_below(1000)),
+            |v: &Vec<u64>| {
+                if v.iter().any(|&x| x >= 500) {
+                    Err("found large element".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_u64_monotone() {
+        for s in 17u64.shrink() {
+            assert!(s < 17);
+        }
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller_or_equal() {
+        let v = vec![5u64, 9, 200];
+        for s in v.shrink() {
+            assert!(s.len() <= v.len());
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build environment has no `rand` crate, so the generators the
+//! reproduction needs (dataset synthesis, Zipf-skewed key draws, property
+//! testing) are implemented here. All generators are seedable and
+//! deterministic so every experiment in EXPERIMENTS.md is exactly
+//! reproducible.
+
+/// SplitMix64 — used for seeding and as a cheap standalone generator.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256** — the main workhorse generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift reduction.
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        if xs.is_empty() {
+            return;
+        }
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Split off an independently-seeded generator (for worker threads).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+/// Zipf-distributed sampler over `[0, n)` with exponent `theta`, using the
+/// rejection-inversion method of Hörmann & Derflinger. Used for skewed key
+/// distributions in the hash-join and GUPS workload generators.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    // Precomputed constants for rejection-inversion.
+    hx0: f64,
+    hxm: f64,
+    s: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0);
+        assert!(theta > 0.0 && (theta - 1.0).abs() > 1e-9, "theta==1 unsupported");
+        let h = |x: f64| ((1.0 + x).powf(1.0 - theta) - 1.0) / (1.0 - theta);
+        let h_inv_arg_max = h(n as f64 - 0.5);
+        let hx0 = h(0.5) - 1.0;
+        let s = 1.0 - Self::h_inv_static(theta, h(1.5) - 1.0);
+        Self { n, theta, hx0, hxm: h_inv_arg_max, s }
+    }
+
+    fn h_inv_static(theta: f64, x: f64) -> f64 {
+        (1.0 + x * (1.0 - theta)).powf(1.0 / (1.0 - theta)) - 1.0
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        loop {
+            let u = self.hx0 + rng.f64() * (self.hxm - self.hx0);
+            let x = Self::h_inv_static(self.theta, u);
+            let k = (x + 0.5).floor();
+            let h = |x: f64| ((1.0 + x).powf(1.0 - self.theta) - 1.0) / (1.0 - self.theta);
+            if k - x <= self.s || u >= h(k + 0.5) - (1.0 + k).powf(-self.theta) {
+                let k = k as i64;
+                return k.clamp(0, self.n as i64 - 1) as u64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xoshiro_below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.below(17);
+            assert!(x < 17);
+        }
+    }
+
+    #[test]
+    fn xoshiro_range_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let x = r.range(5, 11);
+            assert!((5..11).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(11);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_skews_small_keys() {
+        let z = Zipf::new(1000, 0.99);
+        let mut r = Rng::new(5);
+        let mut low = 0usize;
+        let mut n = 0usize;
+        for _ in 0..20_000 {
+            let k = z.sample(&mut r);
+            assert!(k < 1000);
+            if k < 100 {
+                low += 1;
+            }
+            n += 1;
+        }
+        // Zipf(0.99): the first 10% of keys should take far more than 10%
+        // of the mass.
+        assert!(low as f64 / n as f64 > 0.4, "low frac {}", low as f64 / n as f64);
+    }
+
+    #[test]
+    fn split_generators_diverge() {
+        let mut r = Rng::new(123);
+        let mut a = r.split();
+        let mut b = r.split();
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

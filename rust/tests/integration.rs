@@ -1,0 +1,338 @@
+//! Cross-module integration tests: compiler -> simulator -> oracle over
+//! the full benchmark registry, harness smoke tests, and property-based
+//! invariants on the coordinator/compiler/simulator substrates.
+
+use coroamu::benchmarks::{self, Scale};
+use coroamu::compiler::analysis::{self, vs_contains, vs_iter};
+use coroamu::compiler::ast::*;
+use coroamu::compiler::{coalesce, compile, Variant};
+use coroamu::config::SimConfig;
+use coroamu::coordinator::{run_job, Job};
+use coroamu::harness::{self, FigOpts};
+use coroamu::ir::{AddrSpace, AluOp, Width};
+use coroamu::sim::{self, MemImage};
+use coroamu::util::proptest::Gen;
+
+/// Every benchmark, every variant, Tiny scale: oracle must pass.
+#[test]
+fn every_benchmark_every_variant_oracle_checked() {
+    let cfg = SimConfig::nh_g();
+    for b in benchmarks::all() {
+        for v in Variant::ALL {
+            let inst = b.instance(Scale::Tiny, 7).unwrap();
+            let tasks = if v.needs_amu() { 64 } else { 16 };
+            benchmarks::execute(&cfg, inst, v, tasks)
+                .unwrap_or_else(|e| panic!("{} under {}: {e:#}", b.spec().name, v.label()));
+        }
+    }
+}
+
+/// Benchmarks also run on the Skylake preset (no AMU): the static
+/// variants must work there; AMU variants are not applicable.
+#[test]
+fn skylake_preset_runs_static_variants() {
+    let cfg = SimConfig::skylake();
+    for b in benchmarks::all() {
+        for v in [Variant::Serial, Variant::Coroutine, Variant::CoroAmuS] {
+            let inst = b.instance(Scale::Tiny, 3).unwrap();
+            benchmarks::execute(&cfg, inst, v, 8)
+                .unwrap_or_else(|e| panic!("{} under {}: {e:#}", b.spec().name, v.label()));
+        }
+    }
+}
+
+/// All eight figures generate on Tiny scale without panicking.
+#[test]
+fn all_figures_generate_on_tiny() {
+    let opts = FigOpts {
+        scale: Scale::Tiny,
+        threads: 1,
+        seed: 1,
+        only: vec!["gups".into(), "stream".into()],
+    };
+    for f in harness::ALL_FIGURES {
+        let tables = harness::figure(f, &opts).unwrap_or_else(|e| panic!("fig {f}: {e:#}"));
+        assert!(!tables.is_empty(), "figure {f} produced no tables");
+        for t in tables {
+            assert!(!t.render().is_empty());
+        }
+    }
+}
+
+/// Config round-trip: load a config file with overrides.
+#[test]
+fn config_file_roundtrip() {
+    let path = "/tmp/coroamu_test_cfg.toml";
+    std::fs::write(
+        path,
+        "preset = \"nh-g\"\nname = \"custom\"\n[core]\nrob_entries = 192\n[mem]\nfar_latency_ns = 555\n",
+    )
+    .unwrap();
+    let cfg = SimConfig::load_file(path).unwrap();
+    assert_eq!(cfg.name, "custom");
+    assert_eq!(cfg.core.rob_entries, 192);
+    assert_eq!(cfg.mem.far_latency_ns, 555.0);
+}
+
+/// Property: the coordinator's run results are deterministic — same job,
+/// same stats.
+#[test]
+fn runs_are_deterministic() {
+    let job = Job {
+        bench: "bs".into(),
+        variant: Variant::CoroAmuFull,
+        tasks: 32,
+        cfg: SimConfig::nh_g(),
+        scale: Scale::Tiny,
+        seed: 5,
+        key: String::new(),
+    };
+    let a = run_job(&job).unwrap().stats;
+    let b = run_job(&job).unwrap().stats;
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.dyn_instrs, b.dyn_instrs);
+    assert_eq!(a.switches, b.switches);
+}
+
+/// Build a random straight-line kernel of remote loads with random
+/// dependence structure (some loads' addresses use earlier loads' values).
+fn random_load_kernel(g: &mut Gen) -> (Kernel, Vec<bool>) {
+    let nloads = g.usize_in(2, 7);
+    let mut kb = KernelBuilder::new("prop");
+    let p = kb.param_ptr("p", AddrSpace::Remote);
+    let n = kb.param_val("n");
+    kb.trip(n);
+    let vars: Vec<VarId> = (0..nloads).map(|i| kb.var(&format!("v{i}"))).collect();
+    let mut body = Vec::new();
+    let mut dependent = vec![false; nloads];
+    for i in 0..nloads {
+        // Depend on an earlier load's value with ~40% probability.
+        let addr = if i > 0 && g.usize_in(0, 10) < 4 {
+            let j = g.usize_in(0, i);
+            dependent[i] = true;
+            Expr::add(Expr::Param(p), Expr::shl(Expr::Var(vars[j]), Expr::Imm(3)))
+        } else {
+            Expr::add(
+                Expr::Param(p),
+                Expr::add(Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3)), Expr::Imm(g.i64_in(0, 64) * 8)),
+            )
+        };
+        body.push(Stmt::Load { var: vars[i], addr, width: Width::W8 });
+    }
+    (kb.build(body), dependent)
+}
+
+/// Property (§III-C safety): coalesce groups never contain a member whose
+/// address depends on another member's loaded value.
+#[test]
+fn coalescer_never_groups_dependent_loads() {
+    for seed in 0..300u64 {
+        let mut g = Gen::new(seed, 8);
+        let (k, _) = random_load_kernel(&mut g);
+        let an = analysis::analyze(&k).unwrap();
+        let plan = coalesce::plan(&an, 8, 4096);
+        for grp in &plan.groups {
+            let mut defs = 0u64;
+            for (i, m) in grp.members.iter().enumerate() {
+                let site = &an.sites[*m];
+                if i > 0 {
+                    assert_eq!(
+                        site.addr_deps & defs,
+                        0,
+                        "seed {seed}: member site {m} depends on earlier member defs\n{k:?}"
+                    );
+                }
+                if let Some(d) = site.def {
+                    defs |= 1 << d;
+                }
+            }
+        }
+    }
+}
+
+/// Property: every variant of a random load kernel executes and leaves
+/// memory identical to the serial variant (loads only — no write races).
+#[test]
+fn random_kernels_agree_across_variants() {
+    for seed in 0..40u64 {
+        let mut g = Gen::new(seed ^ 0xABCD, 8);
+        let (k, _) = random_load_kernel(&mut g);
+        let cfg = SimConfig::nh_g();
+        let words = 4096u64;
+        let run = |variant: Variant| {
+            let ck = compile(&k, &variant.opts(16), &cfg.amu).unwrap();
+            let mut mem = MemImage::new();
+            let p = mem.alloc("p", AddrSpace::Remote, words * 8 + 4096);
+            for j in 0..words {
+                // Values stay in-bounds as indices: v & 511.
+                mem.write(p + j * 8, Width::W8, (j as i64 * 7) % 512).unwrap();
+            }
+            let mut prog = sim::link(&cfg, &ck, mem, &[p as i64, 50]);
+            let st = sim::run(&cfg, &mut prog).unwrap();
+            (st.dyn_instrs, st.cycles)
+        };
+        let (serial_i, _) = run(Variant::Serial);
+        for v in [Variant::CoroAmuS, Variant::CoroAmuD, Variant::CoroAmuFull] {
+            let (vi, vc) = run(v);
+            assert!(vi >= serial_i, "seed {seed}: {} executed fewer instrs than serial", v.label());
+            assert!(vc > 0);
+        }
+    }
+}
+
+/// Property: context selection is monotone — the optimized save set is a
+/// subset of the basic one, at every site of every benchmark kernel.
+#[test]
+fn context_selection_is_monotone_subset() {
+    for b in benchmarks::all() {
+        let inst = b.instance(Scale::Tiny, 11).unwrap();
+        let an = match analysis::analyze(&inst.kernel) {
+            Ok(a) => a,
+            Err(_) => continue,
+        };
+        for site in &an.sites {
+            let basic = an.saved_vars(site, false);
+            let opt = an.saved_vars(site, true);
+            assert_eq!(opt & !basic, 0, "{}: optimized set not a subset at site {}", b.spec().name, site.id);
+            for v in vs_iter(opt) {
+                assert!(vs_contains(basic, v));
+            }
+        }
+    }
+}
+
+/// Failure injection: AMU misuse is rejected, not miscomputed.
+#[test]
+fn amu_misuse_rejected() {
+    use coroamu::sim::amu::Amu;
+    let mut amu = Amu::new(8, 1);
+    assert!(amu.asignal(3, 0).is_err(), "asignal without await must fail");
+    amu.await_register(3, 0).unwrap();
+    assert!(amu.await_register(3, 0).is_err(), "double await must fail");
+    assert!(amu.aset(1, 0).is_err(), "aset n=0 must fail");
+    amu.aset(1, 2).unwrap();
+    assert!(amu.aset(1, 2).is_err(), "nested aset on same id must fail");
+}
+
+/// Sequential-variable misuse is a compile error, not silent corruption.
+#[test]
+fn sequential_var_misuse_rejected() {
+    let mut kb = KernelBuilder::new("seqbad");
+    let p = kb.param_ptr("p", AddrSpace::Remote);
+    let n = kb.param_val("n");
+    kb.trip(n);
+    let s = kb.var("s");
+    let v = kb.var("v");
+    kb.sequential_var(s);
+    let k = kb.build(vec![
+        // Writes the sequential var *before* a remote access: unsupported
+        // (only a trailing serialized-update tail can touch it).
+        Stmt::Let { var: s, expr: Expr::Imm(1) },
+        Stmt::Load {
+            var: v,
+            addr: Expr::add(Expr::Param(p), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))),
+            width: Width::W8,
+        },
+    ]);
+    let cfg = SimConfig::nh_g();
+    assert!(compile(&k, &Variant::CoroAmuFull.opts(8), &cfg.amu).is_err());
+}
+
+/// The atomic lock hand-off preserves exactness under heavy contention:
+/// all keys hash to ONE bucket.
+#[test]
+fn atomic_handoff_under_max_contention() {
+    let mut kb = KernelBuilder::new("contend");
+    let keys = kb.param_ptr("keys", AddrSpace::Remote);
+    let hist = kb.param_ptr("hist", AddrSpace::Remote);
+    let n = kb.param_val("n");
+    kb.trip(n);
+    let kvar = kb.var("k");
+    let k = kb.build(vec![
+        Stmt::Load {
+            var: kvar,
+            addr: Expr::add(Expr::Param(keys), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))),
+            width: Width::W8,
+        },
+        Stmt::AtomicRmw {
+            op: AluOp::Add,
+            old: None,
+            addr: Expr::add(Expr::Param(hist), Expr::shl(Expr::Var(kvar), Expr::Imm(3))),
+            val: Expr::Imm(1),
+            width: Width::W8,
+        },
+    ]);
+    let cfg = SimConfig::nh_g();
+    let trip = 300i64;
+    for v in [Variant::Serial, Variant::CoroAmuD, Variant::CoroAmuFull] {
+        let ck = compile(&k, &v.opts(64), &cfg.amu).unwrap();
+        let mut mem = MemImage::new();
+        let kb_ = mem.alloc("keys", AddrSpace::Remote, trip as u64 * 8);
+        let hb = mem.alloc("hist", AddrSpace::Remote, 64);
+        for i in 0..trip as u64 {
+            mem.write(kb_ + i * 8, Width::W8, 3).unwrap(); // ALL to bucket 3
+        }
+        let mut prog = sim::link(&cfg, &ck, mem, &[kb_ as i64, hb as i64, trip]);
+        let st = sim::run(&cfg, &mut prog).unwrap();
+        let got = prog.mem.read(hb + 3 * 8, Width::W8).unwrap();
+        assert_eq!(got, trip, "{}: lost updates under contention", v.label());
+        if v.needs_amu() {
+            assert!(st.awaits > 0, "{}: expected lock waits under total contention", v.label());
+        }
+    }
+}
+
+/// Nested coroutines (§III-F): a callee with a remote access, called from
+/// the pragma loop, under the dynamic schedulers.
+#[test]
+fn nested_coroutine_roundtrip() {
+    // child(ptr, idx): return p[idx] (remote load inside the callee).
+    let mut kb = KernelBuilder::new("nested");
+    let p = kb.param_ptr("p", AddrSpace::Remote);
+    let out = kb.param_ptr("out", AddrSpace::Local);
+    let n = kb.param_val("n");
+    kb.trip(n);
+    let r = kb.var("r");
+    let child = kb.callee(NestedFn {
+        name: "child".into(),
+        params: vec![
+            Param { name: "cp".into(), kind: ParamKind::Ptr(AddrSpace::Remote) },
+            Param { name: "ci".into(), kind: ParamKind::Value },
+        ],
+        body: vec![Stmt::Load {
+            var: 0,
+            addr: Expr::add(Expr::Param(0), Expr::shl(Expr::Param(1), Expr::Imm(3))),
+            width: Width::W8,
+        }],
+        ret_var: Some(0),
+        nvars: 1,
+    });
+    let k = kb.build(vec![
+        Stmt::Call { callee: child, args: vec![Expr::Param(p), Expr::Var(ITER_VAR)], ret: Some(r) },
+        Stmt::Store {
+            val: Expr::Var(r),
+            addr: Expr::add(Expr::Param(out), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))),
+            width: Width::W8,
+        },
+    ]);
+    let cfg = SimConfig::nh_g();
+    let trip = 100u64;
+    for v in [Variant::Serial, Variant::CoroAmuS, Variant::CoroAmuD, Variant::CoroAmuFull] {
+        let ck = compile(&k, &v.opts(16), &cfg.amu).unwrap();
+        let mut mem = MemImage::new();
+        let pb = mem.alloc("p", AddrSpace::Remote, trip * 8);
+        let ob = mem.alloc("out", AddrSpace::Local, trip * 8);
+        for i in 0..trip {
+            mem.write(pb + i * 8, Width::W8, (i * i) as i64).unwrap();
+        }
+        let mut prog = sim::link(&cfg, &ck, mem, &[pb as i64, ob as i64, trip as i64]);
+        let st = sim::run(&cfg, &mut prog).unwrap();
+        for i in 0..trip {
+            let got = prog.mem.read(ob + i * 8, Width::W8).unwrap();
+            assert_eq!(got, (i * i) as i64, "{} out[{i}]", v.label());
+        }
+        if v.needs_amu() {
+            assert!(st.awaits > 0, "{}: nested calls should use await/asignal", v.label());
+        }
+    }
+}
