@@ -1,18 +1,22 @@
 //! End-to-end driver: the full CoroAMU evaluation pipeline on a real
 //! (small) workload suite — every Table II benchmark, all five
 //! configurations, across the paper's far-memory latency sweep, fanned
-//! over a worker pool, each run validated against its native oracle, with
-//! the AOT-artifact cross-check when `artifacts/` is built.
+//! over a worker pool by one `Engine` session, each run validated against
+//! its native oracle, with the AOT-artifact cross-check when `artifacts/`
+//! is built.
 //!
-//! This exercises all three layers end to end and reports the paper's
-//! headline metric (Fig. 12 speedups). Recorded in EXPERIMENTS.md.
+//! The single session means each (benchmark, variant) kernel compiles once
+//! for the whole 4-latency matrix. This exercises all three layers end to
+//! end and reports the paper's headline metric (Fig. 12 speedups).
+//! Recorded in EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example disaggregated_sweep [-- --scale full]`
 
 use coroamu::benchmarks::Scale;
 use coroamu::compiler::Variant;
 use coroamu::config::SimConfig;
-use coroamu::coordinator::{lookup, pool, run_matrix, Job};
+use coroamu::coordinator::pool;
+use coroamu::engine::{lookup, Engine, RunRequest};
 use coroamu::runtime;
 use coroamu::util::cli::Args;
 use coroamu::util::table::{geomean, speedup, Table};
@@ -27,10 +31,10 @@ fn main() -> anyhow::Result<()> {
     let latencies = [100.0, 200.0, 400.0, 800.0];
     let benches: Vec<String> = coroamu::benchmarks::all().iter().map(|b| b.spec().name.to_string()).collect();
 
-    // 1) Simulation matrix.
-    let mut jobs = Vec::new();
+    // 1) Simulation matrix through one engine session.
+    let engine = Engine::new(SimConfig::nh_g());
+    let mut matrix = Vec::new();
     for lat in latencies {
-        let cfg = SimConfig::nh_g().with_far_latency_ns(lat);
         for b in &benches {
             for (v, tasks) in [
                 (Variant::Serial, 1usize),
@@ -39,23 +43,28 @@ fn main() -> anyhow::Result<()> {
                 (Variant::CoroAmuD, 96),
                 (Variant::CoroAmuFull, 96),
             ] {
-                jobs.push(Job {
-                    bench: b.clone(),
-                    variant: v,
-                    tasks,
-                    cfg: cfg.clone(),
-                    scale,
-                    seed: 42,
-                    key: format!("{lat}"),
-                });
+                matrix.push(
+                    RunRequest::new(b.clone(), v)
+                        .tasks(tasks)
+                        .scale(scale)
+                        .seed(42)
+                        .key(format!("{lat}"))
+                        .latency_ns(lat),
+                );
             }
         }
     }
-    let n = jobs.len();
+    let n = matrix.len();
     eprintln!("running {n} simulations on {} threads...", pool::default_threads());
     let t0 = std::time::Instant::now();
-    let rs = run_matrix(jobs, pool::default_threads())?;
-    eprintln!("done in {:.1}s (every run oracle-checked)", t0.elapsed().as_secs_f64());
+    let rs = engine.sweep(&matrix, pool::default_threads())?;
+    let cs = engine.cache_stats();
+    eprintln!(
+        "done in {:.1}s (every run oracle-checked; {} kernel compilations served {} runs)",
+        t0.elapsed().as_secs_f64(),
+        cs.misses,
+        n
+    );
 
     // 2) Report speedups per latency.
     for lat in latencies {
@@ -81,15 +90,21 @@ fn main() -> anyhow::Result<()> {
         t.print();
     }
 
-    // 3) Three-layer cross-check against the AOT golden models.
-    if runtime::artifacts_available() {
-        let rt = runtime::Runtime::cpu()?;
-        for b in runtime::oracle::GOLDEN_BENCHES {
-            runtime::oracle::check_against_artifact(&rt, b, Variant::CoroAmuFull)?;
-        }
-        println!("\nPJRT cross-check: simulator memory == AOT JAX/Pallas golden models (4/4).");
-    } else {
+    // 3) Three-layer cross-check against the AOT golden models. Artifacts
+    // may exist while the runtime is stubbed out (default build): report,
+    // don't abort the sweep that already succeeded.
+    if !runtime::artifacts_available() {
         println!("\n(artifacts/ not built; run `make artifacts` for the PJRT cross-check)");
+        return Ok(());
+    }
+    match runtime::Runtime::cpu() {
+        Ok(rt) => {
+            for b in runtime::oracle::GOLDEN_BENCHES {
+                runtime::oracle::check_against_artifact(&rt, b, Variant::CoroAmuFull)?;
+            }
+            println!("\nPJRT cross-check: simulator memory == AOT JAX/Pallas golden models (4/4).");
+        }
+        Err(e) => println!("\n(PJRT cross-check skipped: {e:#})"),
     }
     Ok(())
 }

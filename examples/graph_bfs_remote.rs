@@ -1,13 +1,15 @@
 //! BFS over a disaggregated graph: expands the largest BFS frontier of a
 //! synthetic power-law-ish graph whose CSR arrays and level tree live in
 //! far memory, across the latency sweep — the paper's best-case irregular
-//! workload (GUPS aside).
+//! workload (GUPS aside). One `Engine` session serves the whole sweep, so
+//! each variant's kernel compiles exactly once across all four latencies.
 //!
 //! Run: `cargo run --release --example graph_bfs_remote`
 
-use coroamu::benchmarks::{self, bfs, Scale};
+use coroamu::benchmarks::{bfs, Scale};
 use coroamu::compiler::Variant;
 use coroamu::config::SimConfig;
+use coroamu::engine::{Engine, RunRequest};
 use coroamu::util::table::{speedup, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -21,15 +23,14 @@ fn main() -> anyhow::Result<()> {
         g.frontier.len()
     );
 
+    let engine = Engine::new(SimConfig::nh_g());
     let mut t = Table::new(
         "BFS level expansion: speedup vs serial across far-memory latency",
         &["latency", "Coroutine", "CoroAMU-S", "CoroAMU-D", "CoroAMU-Full", "Full far-MLP"],
     );
     for lat in [100.0, 200.0, 400.0, 800.0] {
-        let cfg = SimConfig::nh_g().with_far_latency_ns(lat);
         let run = |v: Variant, tasks: usize| -> anyhow::Result<coroamu::sim::RunStats> {
-            let inst = benchmarks::by_name("bfs").unwrap().instance(Scale::Small, 42)?;
-            benchmarks::execute(&cfg, inst, v, tasks)
+            Ok(engine.run(RunRequest::new("bfs", v).tasks(tasks).latency_ns(lat))?.stats)
         };
         let serial = run(Variant::Serial, 1)?.cycles as f64;
         let hand = serial / run(Variant::Coroutine, 16)?.cycles as f64;
@@ -47,6 +48,8 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
+    let cs = engine.cache_stats();
     println!("levels array validated against the native BFS oracle for every run.");
+    println!("({} kernel compilations served {} runs.)", cs.misses, cs.misses + cs.hits);
     Ok(())
 }

@@ -1,20 +1,22 @@
 //! Hash-join deep dive (paper Listing 1): shows what the compiler does to
 //! the probe loop — suspension sites, variable classification, coarse
 //! coalescing of the bucket fetch — and how each mechanism moves the
-//! needle at 400 ns far-memory latency.
+//! needle at 400 ns far-memory latency, all through one `Engine` session.
 //!
 //! Run: `cargo run --release --example hashjoin_coroutines`
 
-use coroamu::benchmarks::{self, Scale};
+use coroamu::benchmarks;
 use coroamu::compiler::analysis::{analyze, vs_len};
 use coroamu::compiler::ast::VarClass;
 use coroamu::compiler::codegen::{CodegenOpts, SchedKind};
 use coroamu::compiler::{coalesce, Variant};
 use coroamu::config::SimConfig;
+use coroamu::engine::{Engine, RunRequest};
 use coroamu::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
-    let cfg = SimConfig::nh_g().with_far_latency_ns(400.0);
+    let engine = Engine::new(SimConfig::nh_g().with_far_latency_ns(400.0));
+    let cfg = engine.config();
     let kernel = benchmarks::hj::kernel();
 
     // --- What AsyncMark sees -------------------------------------------
@@ -46,10 +48,7 @@ fn main() -> anyhow::Result<()> {
         "HJ @400ns: mechanism ablation",
         &["config", "cycles", "switches", "ctx ops/switch", "speedup vs serial"],
     );
-    let serial = {
-        let inst = benchmarks::by_name("hj").unwrap().instance(Scale::Small, 42)?;
-        benchmarks::execute(&cfg, inst, Variant::Serial, 1)?.cycles
-    };
+    let serial = engine.run(RunRequest::new("hj", Variant::Serial).tasks(1))?.stats.cycles;
     let base = CodegenOpts {
         sched: SchedKind::Bafin,
         context_opt: false,
@@ -64,8 +63,8 @@ fn main() -> anyhow::Result<()> {
         ("+ context selection", CodegenOpts { context_opt: true, ..base.clone() }),
         ("+ request coalescing", CodegenOpts { context_opt: true, coalesce: true, ..base }),
     ] {
-        let inst = benchmarks::by_name("hj").unwrap().instance(Scale::Small, 42)?;
-        let st = benchmarks::execute_opts(&cfg, inst, &opts)?;
+        let req = RunRequest::new("hj", Variant::CoroAmuFull).opts(opts, name);
+        let st = engine.run(req)?.stats;
         t.row(vec![
             name.into(),
             st.cycles.to_string(),

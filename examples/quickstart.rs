@@ -1,28 +1,29 @@
-//! Quickstart: compile one pragma-annotated kernel (GUPS) into all five of
-//! the paper's configurations, simulate them on the NH-G model at 200 ns
-//! far-memory latency, validate results, and print the comparison.
+//! Quickstart: open an `Engine` session, run one pragma-annotated kernel
+//! (GUPS) through all five of the paper's configurations on the NH-G model
+//! at 200 ns far-memory latency (each run oracle-checked), and print the
+//! comparison.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use coroamu::benchmarks::{self, Scale};
 use coroamu::compiler::Variant;
 use coroamu::config::SimConfig;
+use coroamu::engine::{Engine, RunRequest};
 use coroamu::util::table::{speedup, Table};
 
 fn main() -> anyhow::Result<()> {
-    let cfg = SimConfig::nh_g().with_far_latency_ns(200.0);
+    let engine = Engine::new(SimConfig::nh_g().with_far_latency_ns(200.0));
+    let cfg = engine.config();
     println!("CoroAMU quickstart — GUPS on {} @ {} ns far memory\n", cfg.name, cfg.mem.far_latency_ns);
 
-    let bench = benchmarks::by_name("gups").unwrap();
     let mut t = Table::new(
         "GUPS: five configurations (oracle-checked)",
         &["variant", "cycles", "dyn instrs", "IPC", "far MLP", "switches", "speedup"],
     );
     let mut serial_cycles = 0u64;
     for v in Variant::ALL {
-        let inst = bench.instance(Scale::Small, 42)?;
         let tasks = if v.needs_amu() { 96 } else { 32 };
-        let st = benchmarks::execute(&cfg, inst, v, tasks)?;
+        let r = engine.run(RunRequest::new("gups", v).tasks(tasks))?;
+        let st = &r.stats;
         if v == Variant::Serial {
             serial_cycles = st.cycles;
         }
@@ -37,7 +38,9 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
+    let cs = engine.cache_stats();
     println!("All five variants passed the native oracle (identical table contents).");
+    println!("Kernel cache: {} compilations, {} hits this session.", cs.misses, cs.hits);
     println!("Next: `coroamu report --fig 12` regenerates the paper's headline figure.");
     Ok(())
 }

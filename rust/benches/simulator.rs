@@ -5,10 +5,11 @@
 //!
 //! Run: `cargo bench --offline` (filter: `cargo bench -- interp`).
 
-use coroamu::benchmarks::{self, Scale};
-use coroamu::compiler::{compile, Variant};
+use coroamu::benchmarks::Scale;
+use coroamu::compiler::Variant;
 use coroamu::config::SimConfig;
-use coroamu::sim::{self, MemImage};
+use coroamu::engine::{Engine, RunRequest};
+use coroamu::sim::MemImage;
 use coroamu::util::benchkit::Bench;
 use coroamu::util::rng::Rng;
 
@@ -17,13 +18,13 @@ fn interp_throughput(b: &mut Bench, bench_name: &str, variant: Variant) {
     if !b.enabled(&name) {
         return;
     }
-    let cfg = SimConfig::nh_g();
+    // One engine session per entry: the first iteration compiles, the
+    // rest measure pure link+simulate throughput through the kernel cache.
+    let engine = Engine::new(SimConfig::nh_g());
     b.run(&name, "instr", || {
-        let inst = benchmarks::by_name(bench_name).unwrap().instance(Scale::Small, 42).unwrap();
-        let ck = compile(&inst.kernel, &variant.opts(64), &cfg.amu).unwrap();
-        let mut prog = sim::link(&cfg, &ck, inst.mem, &inst.params);
-        let st = sim::run(&cfg, &mut prog).unwrap();
-        st.dyn_instrs as f64
+        let req = RunRequest::new(bench_name, variant).tasks(64).scale(Scale::Small);
+        let r = engine.run(req).unwrap();
+        r.stats.dyn_instrs as f64
     });
 }
 

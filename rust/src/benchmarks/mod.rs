@@ -14,8 +14,8 @@
 //! | NPB          | IS        | keys, histogram              |
 //!
 //! mcf/lbm/IS are representative kernels of the SPEC/NPB originals (arc
-//! price scan, 5-point stream-collide step, key histogram); DESIGN.md §1
-//! documents the substitution.
+//! price scan, 5-point stream-collide step, key histogram); `DESIGN.md` §1
+//! (repo root) documents the substitution.
 
 pub mod bfs;
 pub mod bs;
@@ -27,9 +27,9 @@ pub mod mcf;
 pub mod stream;
 
 use crate::compiler::ast::Kernel;
-use crate::compiler::{compile, Variant};
+use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::sim::{self, MemImage, RunStats};
+use crate::sim::{MemImage, RunStats};
 use anyhow::Result;
 
 /// Problem scale. `Tiny` uses the fixed shapes shared with the AOT JAX
@@ -99,22 +99,24 @@ pub fn by_name(name: &str) -> Option<Box<dyn Benchmark>> {
 
 /// Compile an instance under explicit codegen options, run it on `cfg`,
 /// validate the result with the native oracle, and return the stats.
-/// Used by the ablation figures (14/15) which toggle individual
-/// optimizations rather than whole variants.
+///
+/// Thin shim kept for source compatibility: it opens a throwaway
+/// [`crate::engine::Engine`] session per call, so nothing is cached.
+#[deprecated(note = "use coroamu::engine::Engine (run / run_instance) — it caches compiled kernels")]
 pub fn execute_opts(
     cfg: &SimConfig,
     inst: Instance,
     opts: &crate::compiler::CodegenOpts,
 ) -> Result<RunStats> {
-    let ck = compile(&inst.kernel, opts, &cfg.amu)?;
-    let mut prog = sim::link(cfg, &ck, inst.mem, &inst.params);
-    let stats = sim::run(cfg, &mut prog)?;
-    (inst.check)(&prog.mem)?;
-    Ok(stats)
+    Ok(crate::engine::Engine::new(cfg.clone()).run_instance(inst, opts)?.stats)
 }
 
 /// Compile an instance under `variant`, run it on `cfg`, validate the
 /// result with the native oracle, and return the stats.
+///
+/// Thin shim kept for source compatibility; see [`execute_opts`].
+#[deprecated(note = "use coroamu::engine::Engine (run / run_instance) — it caches compiled kernels")]
+#[allow(deprecated)]
 pub fn execute(cfg: &SimConfig, inst: Instance, variant: Variant, tasks: usize) -> Result<RunStats> {
     execute_opts(cfg, inst, &variant.opts(tasks))
 }
@@ -136,18 +138,21 @@ pub fn table2() -> crate::util::table::Table {
 pub(crate) mod testutil {
     use super::*;
 
-    /// Run a benchmark at Small scale across all five variants, checking
-    /// the oracle each time; returns (variant, stats).
+    /// Run a benchmark at Small scale across all five variants through one
+    /// engine session, checking the oracle each time; returns
+    /// (variant, stats).
     pub fn run_all_variants(b: &dyn Benchmark) -> Vec<(Variant, RunStats)> {
-        let cfg = SimConfig::nh_g();
+        let engine = crate::engine::Engine::new(SimConfig::nh_g());
         Variant::ALL
             .iter()
             .map(|v| {
-                let inst = b.instance(Scale::Small, 42).unwrap();
+                let name = b.spec().name;
                 let tasks = if v.needs_amu() { 96 } else { 16 };
-                let st = execute(&cfg, inst, *v, tasks)
-                    .unwrap_or_else(|e| panic!("{} under {}: {e:#}", b.spec().name, v.label()));
-                (*v, st)
+                let req = crate::engine::RunRequest::new(name, *v).tasks(tasks).scale(Scale::Small);
+                let r = engine
+                    .run(req)
+                    .unwrap_or_else(|e| panic!("{} under {}: {e:#}", name, v.label()));
+                (*v, r.stats)
             })
             .collect()
     }

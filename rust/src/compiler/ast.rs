@@ -67,6 +67,12 @@ impl Expr {
     pub fn and(a: Expr, b: Expr) -> Expr {
         Expr::Bin(BinOp::I(AluOp::And), Box::new(a), Box::new(b))
     }
+    pub fn or(a: Expr, b: Expr) -> Expr {
+        Expr::Bin(BinOp::I(AluOp::Or), Box::new(a), Box::new(b))
+    }
+    pub fn xor(a: Expr, b: Expr) -> Expr {
+        Expr::Bin(BinOp::I(AluOp::Xor), Box::new(a), Box::new(b))
+    }
 
     /// Collect variables read by this expression.
     pub fn vars(&self, out: &mut Vec<VarId>) {
@@ -189,7 +195,11 @@ pub struct Kernel {
 }
 
 /// Convenience builder so benchmark definitions read like the paper's
-/// Listing 1.
+/// Listing 1. Statements can be accumulated fluently ([`KernelBuilder::let_`],
+/// [`KernelBuilder::load`], [`KernelBuilder::store`], …) and sealed with
+/// [`KernelBuilder::finish`], or passed wholesale to
+/// [`KernelBuilder::build`]; mixing both appends the `build` body after the
+/// fluent one.
 pub struct KernelBuilder {
     name: String,
     params: Vec<Param>,
@@ -197,6 +207,7 @@ pub struct KernelBuilder {
     pragma: Pragma,
     vars: Vec<String>,
     callees: Vec<NestedFn>,
+    body: Vec<Stmt>,
 }
 
 impl KernelBuilder {
@@ -208,6 +219,7 @@ impl KernelBuilder {
             pragma: Pragma::default(),
             vars: vec!["i".to_string()], // ITER_VAR
             callees: Vec::new(),
+            body: Vec::new(),
         }
     }
 
@@ -247,12 +259,57 @@ impl KernelBuilder {
         self.callees.len() - 1
     }
 
-    pub fn build(self, body: Vec<Stmt>) -> Kernel {
+    // --- Fluent statement helpers: the loop body reads top-to-bottom like
+    // --- the paper's pragma-annotated C (Listing 1).
+
+    /// Append an arbitrary statement.
+    pub fn push(&mut self, s: Stmt) -> &mut Self {
+        self.body.push(s);
+        self
+    }
+
+    /// `var = expr`
+    pub fn let_(&mut self, var: VarId, expr: Expr) -> &mut Self {
+        self.push(Stmt::Let { var, expr })
+    }
+
+    /// `var = *(width*)addr`
+    pub fn load(&mut self, var: VarId, addr: Expr, width: Width) -> &mut Self {
+        self.push(Stmt::Load { var, addr, width })
+    }
+
+    /// `*(width*)addr = val`
+    pub fn store(&mut self, val: Expr, addr: Expr, width: Width) -> &mut Self {
+        self.push(Stmt::Store { val, addr, width })
+    }
+
+    /// `atomic_op(addr, val)` with the old value discarded.
+    pub fn atomic_rmw(&mut self, op: AluOp, addr: Expr, val: Expr, width: Width) -> &mut Self {
+        self.push(Stmt::AtomicRmw { op, old: None, addr, val, width })
+    }
+
+    /// `if (cond) { then_ } else { else_ }`
+    pub fn if_(&mut self, cond: Expr, then_: Vec<Stmt>, else_: Vec<Stmt>) -> &mut Self {
+        self.push(Stmt::If { cond, then_, else_ })
+    }
+
+    /// `while (cond) { body }`
+    pub fn while_(&mut self, cond: Expr, body: Vec<Stmt>) -> &mut Self {
+        self.push(Stmt::While { cond, body })
+    }
+
+    /// Seal a fluently-built kernel.
+    pub fn finish(self) -> Kernel {
+        self.build(Vec::new())
+    }
+
+    pub fn build(mut self, body: Vec<Stmt>) -> Kernel {
+        self.body.extend(body);
         Kernel {
             name: self.name,
             trip_param: self.trip_param.expect("trip count parameter not set"),
             params: self.params,
-            body,
+            body: self.body,
             pragma: self.pragma,
             nvars: self.vars.len() as u32,
             var_names: self.vars,
@@ -316,5 +373,51 @@ mod tests {
     #[should_panic(expected = "trip count")]
     fn missing_trip_panics() {
         KernelBuilder::new("x").build(vec![]);
+    }
+
+    #[test]
+    fn fluent_builder_matches_explicit_body() {
+        // The same GUPS-ish loop, written both ways, must produce
+        // identical kernels.
+        let explicit = {
+            let mut kb = KernelBuilder::new("fluent");
+            let tab = kb.param_ptr("table", AddrSpace::Remote);
+            let n = kb.param_val("n");
+            kb.trip(n);
+            kb.num_tasks(32);
+            let v = kb.var("val");
+            let addr = Expr::add(Expr::Param(tab), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3)));
+            kb.build(vec![
+                Stmt::Load { var: v, addr: addr.clone(), width: Width::W8 },
+                Stmt::Store { val: Expr::xor(Expr::Var(v), Expr::Var(ITER_VAR)), addr, width: Width::W8 },
+            ])
+        };
+        let fluent = {
+            let mut kb = KernelBuilder::new("fluent");
+            let tab = kb.param_ptr("table", AddrSpace::Remote);
+            let n = kb.param_val("n");
+            kb.trip(n);
+            kb.num_tasks(32);
+            let v = kb.var("val");
+            let addr = Expr::add(Expr::Param(tab), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3)));
+            kb.load(v, addr.clone(), Width::W8)
+                .store(Expr::xor(Expr::Var(v), Expr::Var(ITER_VAR)), addr, Width::W8);
+            kb.finish()
+        };
+        assert_eq!(explicit, fluent);
+    }
+
+    #[test]
+    fn build_appends_after_fluent_body() {
+        let mut kb = KernelBuilder::new("mix");
+        let n = kb.param_val("n");
+        kb.trip(n);
+        let a = kb.var("a");
+        let b = kb.var("b");
+        kb.let_(a, Expr::Imm(1));
+        let k = kb.build(vec![Stmt::Let { var: b, expr: Expr::Imm(2) }]);
+        assert_eq!(k.body.len(), 2);
+        assert_eq!(k.body[0], Stmt::Let { var: a, expr: Expr::Imm(1) });
+        assert_eq!(k.body[1], Stmt::Let { var: b, expr: Expr::Imm(2) });
     }
 }

@@ -1,18 +1,21 @@
-//! The evaluation coordinator: builds (benchmark x variant x config)
-//! job matrices, fans them across a worker pool, validates every run
-//! against its native oracle, and aggregates results for the figure
-//! harness. This is the L3 "leader" of the reproduction: it owns process
-//! topology, run lifecycle and metric collection.
+//! Legacy evaluation coordinator, now a thin compatibility layer over
+//! [`crate::engine`]. The [`pool`] worker pool still lives here (the
+//! engine's sweep fans out over it), but job execution is delegated to an
+//! [`Engine`] session: new code should construct an `Engine` and call
+//! [`Engine::run`] / [`Engine::sweep`] directly, which additionally shares
+//! one compiled-kernel cache across the whole matrix.
 
 pub mod pool;
 
-use crate::benchmarks::{self, Scale};
+use crate::benchmarks::Scale;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
+use crate::engine::{Engine, RunRequest};
 use crate::sim::RunStats;
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-/// One simulation job.
+/// One simulation job (legacy shape; [`RunRequest`] is the engine-native
+/// equivalent).
 #[derive(Debug, Clone)]
 pub struct Job {
     pub bench: String,
@@ -26,28 +29,42 @@ pub struct Job {
     pub key: String,
 }
 
+impl Job {
+    /// The engine-native form of this job. The job's `cfg` becomes the
+    /// engine session config, so no latency override is needed.
+    pub fn to_request(&self) -> RunRequest {
+        RunRequest::new(self.bench.clone(), self.variant)
+            .tasks(self.tasks)
+            .scale(self.scale)
+            .seed(self.seed)
+            .key(self.key.clone())
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunResult {
     pub job: Job,
     pub stats: RunStats,
 }
 
-/// Execute a single job (compile -> link -> simulate -> oracle-check).
+/// Execute a single job (compile -> link -> simulate -> oracle-check)
+/// through a throwaway engine session.
 pub fn run_job(job: &Job) -> Result<RunResult> {
-    let bench = benchmarks::by_name(&job.bench)
-        .ok_or_else(|| anyhow!("unknown benchmark {}", job.bench))?;
-    let inst = bench.instance(job.scale, job.seed)?;
-    let tasks = if job.tasks == 0 { inst.default_tasks } else { job.tasks };
-    let stats = benchmarks::execute(&job.cfg, inst, job.variant, tasks)?;
-    Ok(RunResult { job: job.clone(), stats })
+    let engine = Engine::new(job.cfg.clone());
+    let report = engine.run(job.to_request())?;
+    Ok(RunResult { job: job.clone(), stats: report.stats })
 }
 
 /// Run a job matrix across the worker pool; any failure aborts with the
-/// offending job named.
+/// offending job named. Jobs may carry heterogeneous configs, so each gets
+/// its own engine session — prefer [`Engine::sweep`], which shares one
+/// session (and one kernel cache) across the matrix.
 pub fn run_matrix(jobs: Vec<Job>, threads: usize) -> Result<Vec<RunResult>> {
     let results = pool::parallel_map(jobs.len(), threads, |i| {
         let j = &jobs[i];
-        run_job(j).map_err(|e| anyhow!("{} [{} / {} / {}]: {e:#}", j.bench, j.variant.label(), j.key, j.cfg.name))
+        run_job(j).map_err(|e| {
+            anyhow::anyhow!("{} [{} / {} / {}]: {e:#}", j.bench, j.variant.label(), j.key, j.cfg.name)
+        })
     });
     results.into_iter().collect()
 }
@@ -82,6 +99,17 @@ mod tests {
     #[test]
     fn unknown_bench_errors() {
         assert!(run_job(&tiny_job("nope", Variant::Serial)).is_err());
+    }
+
+    #[test]
+    fn job_converts_to_request() {
+        let j = tiny_job("gups", Variant::CoroAmuD);
+        let r = j.to_request();
+        assert_eq!(r.bench, "gups");
+        assert_eq!(r.variant, Variant::CoroAmuD);
+        assert_eq!(r.scale, Scale::Tiny);
+        assert_eq!((r.seed, r.key.as_str()), (1, "t"));
+        assert_eq!(r.latency_ns, None, "job cfg is the session cfg");
     }
 
     #[test]

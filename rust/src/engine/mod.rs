@@ -1,0 +1,517 @@
+//! The execution engine: a session-style facade over the whole pipeline
+//! (compile → link → simulate → oracle-check) with a compiled-kernel cache.
+//!
+//! The paper's pitch is a *simple interface* over latency-aware decoupled
+//! operations; this module is that interface on the reproduction side.
+//! Instead of hand-chaining `compiler::compile` → `sim::link` → `sim::run`,
+//! callers open an [`Engine`] session over a [`SimConfig`] and issue
+//! [`RunRequest`]s:
+//!
+//! ```no_run
+//! use coroamu::benchmarks::Scale;
+//! use coroamu::compiler::Variant;
+//! use coroamu::config::SimConfig;
+//! use coroamu::engine::{Engine, RunRequest};
+//!
+//! let engine = Engine::new(SimConfig::nh_g());
+//! let report = engine
+//!     .run(RunRequest::new("gups", Variant::CoroAmuFull)
+//!         .scale(Scale::Small)
+//!         .latency_ns(400.0))
+//!     .unwrap();
+//! println!("{}", report.render());
+//! ```
+//!
+//! Compiled kernels are cached on (kernel fingerprint, codegen options,
+//! AMU config), so a figure matrix that sweeps latencies and seeds compiles
+//! each (benchmark, variant) kernel exactly once — the compile-once /
+//! issue-many amortization the AMU line of work calls for. [`Engine::sweep`]
+//! fans a request matrix across the worker pool and subsumes the old
+//! `coordinator::run_matrix`.
+
+use crate::benchmarks::{self, Instance, Scale};
+use crate::compiler::{compile, CodegenOpts, CompiledKernel, Variant};
+use crate::config::SimConfig;
+use crate::coordinator::pool;
+use crate::sim::{self, MemImage, RunStats};
+use anyhow::{anyhow, Result};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cache key: identity of a compilation. The kernel is fingerprinted
+/// structurally (not just by name) so a kernel whose AST ever depended on
+/// scale or seed would simply miss rather than alias.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    kernel: String,
+    kernel_fp: u64,
+    opts_fp: u64,
+    amu_fp: u64,
+}
+
+fn fingerprint<T: std::fmt::Debug>(t: &T) -> u64 {
+    let mut h = DefaultHasher::new();
+    format!("{t:?}").hash(&mut h);
+    h.finish()
+}
+
+/// Hit/miss accounting for the compiled-kernel cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+/// A reusable handle to a compiled kernel, owned by the engine's cache.
+#[derive(Debug, Clone)]
+pub struct Prepared {
+    /// Kernel name (benchmark kernels use the benchmark name).
+    pub kernel: String,
+    pub ck: Arc<CompiledKernel>,
+    /// Whether this preparation was served from the cache.
+    pub cache_hit: bool,
+}
+
+/// One simulation request: what to run and under which knobs. Builder
+/// pattern; every field has a sensible default except bench + variant.
+#[derive(Debug, Clone)]
+pub struct RunRequest {
+    pub bench: String,
+    pub variant: Variant,
+    /// Coroutine concurrency; 0 = the benchmark's default.
+    pub tasks: usize,
+    pub scale: Scale,
+    pub seed: u64,
+    /// Free-form key for grouping results in sweeps (e.g. the latency).
+    pub key: String,
+    /// Override the session config's far-memory latency for this run only.
+    /// Does not affect compilation (latency is a link/simulate-time knob).
+    pub latency_ns: Option<f64>,
+    /// Explicit codegen options (ablation figures); overrides `variant`'s
+    /// canonical options when set.
+    pub opts: Option<CodegenOpts>,
+    /// Display label for an `opts` override (e.g. "D+bafin").
+    pub label: Option<String>,
+}
+
+impl RunRequest {
+    pub fn new(bench: impl Into<String>, variant: Variant) -> Self {
+        RunRequest {
+            bench: bench.into(),
+            variant,
+            tasks: 0,
+            scale: Scale::Small,
+            seed: 42,
+            key: String::new(),
+            latency_ns: None,
+            opts: None,
+            label: None,
+        }
+    }
+
+    pub fn tasks(mut self, n: usize) -> Self {
+        self.tasks = n;
+        self
+    }
+
+    pub fn scale(mut self, s: Scale) -> Self {
+        self.scale = s;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn key(mut self, k: impl Into<String>) -> Self {
+        self.key = k.into();
+        self
+    }
+
+    pub fn latency_ns(mut self, ns: f64) -> Self {
+        self.latency_ns = Some(ns);
+        self
+    }
+
+    /// Run under explicit codegen options instead of the variant's
+    /// canonical ones (the ablation figures toggle single optimizations).
+    pub fn opts(mut self, opts: CodegenOpts, label: impl Into<String>) -> Self {
+        self.opts = Some(opts);
+        self.label = Some(label.into());
+        self
+    }
+
+    /// Human-readable configuration label for reports.
+    pub fn config_label(&self) -> String {
+        self.label.clone().unwrap_or_else(|| self.variant.label().to_string())
+    }
+}
+
+/// Stats plus provenance for one completed, oracle-checked run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub bench: String,
+    pub variant: Variant,
+    /// `variant.label()`, or the request's custom opts label.
+    pub variant_label: String,
+    /// Name of the session config the run executed under.
+    pub cfg_name: String,
+    /// Effective far-memory latency of the run, ns.
+    pub far_latency_ns: f64,
+    pub scale: Scale,
+    pub seed: u64,
+    pub key: String,
+    /// Whether the kernel came from the compiled-kernel cache.
+    pub cache_hit: bool,
+    pub stats: RunStats,
+}
+
+impl RunReport {
+    /// The human-readable summary previously inlined in the CLI's `run`
+    /// command; one line of provenance, then the stat block.
+    pub fn render(&self) -> String {
+        let st = &self.stats;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "bench={} variant={} cfg={} far={}ns scale={:?} seed={}{}\n",
+            self.bench,
+            self.variant_label,
+            self.cfg_name,
+            self.far_latency_ns,
+            self.scale,
+            self.seed,
+            if self.cache_hit { " kernel=cached" } else { " kernel=compiled" },
+        ));
+        out.push_str(&format!("  cycles            {}\n", st.cycles));
+        out.push_str(&format!("  dyn instrs        {} (ipc {:.2})\n", st.dyn_instrs, st.ipc()));
+        out.push_str(&format!(
+            "  switches          {} (ctx ops/switch {:.1})\n",
+            st.switches,
+            st.ctx_ops_per_switch()
+        ));
+        out.push_str(&format!(
+            "  cond branches     {} ({} mispredicted)\n",
+            st.cond_branches, st.cond_mispredicts
+        ));
+        out.push_str(&format!(
+            "  indirect jumps    {} ({} mispredicted)\n",
+            st.indirect_jumps, st.indirect_mispredicts
+        ));
+        out.push_str(&format!(
+            "  bafin             {} taken / {} fallthrough / {} mispredicted\n",
+            st.bafins_taken, st.bafins_fallthrough, st.bafin_mispredicts
+        ));
+        out.push_str(&format!(
+            "  aloads/astores    {}/{} (awaits {})\n",
+            st.aloads, st.astores, st.awaits
+        ));
+        out.push_str(&format!(
+            "  far MLP           {:.1} (busy {:.0}%)\n",
+            st.far_mlp,
+            st.far_busy_frac * 100.0
+        ));
+        out.push_str(&format!("  l1 hits/misses    {}/{}\n", st.l1_hits, st.l1_misses));
+        let brk = st.cycle_breakdown();
+        let s: Vec<String> = brk.iter().map(|(n, v)| format!("{n} {:.0}%", v * 100.0)).collect();
+        out.push_str(&format!("  breakdown         {}\n", s.join(", ")));
+        out.push_str("  oracle            PASS");
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Result of running a caller-supplied [`Instance`] (memory image included,
+/// for callers that inspect the final memory — oracles, tests).
+pub struct InstanceRun {
+    pub stats: RunStats,
+    pub mem: MemImage,
+    pub cache_hit: bool,
+}
+
+/// Find the report for (bench, variant, key) in a sweep result.
+pub fn lookup<'a>(
+    rs: &'a [RunReport],
+    bench: &str,
+    variant: Variant,
+    key: &str,
+) -> Option<&'a RunReport> {
+    rs.iter().find(|r| r.bench == bench && r.variant == variant && r.key == key)
+}
+
+/// A session over one simulator configuration, owning the full pipeline
+/// and the compiled-kernel cache. `Engine` is `Sync`: sweeps share one
+/// session (and one cache) across the worker pool.
+pub struct Engine {
+    cfg: SimConfig,
+    cache: Mutex<HashMap<CacheKey, Arc<CompiledKernel>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Engine {
+    pub fn new(cfg: SimConfig) -> Engine {
+        Engine {
+            cfg,
+            cache: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The session's base configuration (requests may override latency).
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.cache.lock().unwrap().len(),
+        }
+    }
+
+    /// Compile (or fetch) the kernel of a registered benchmark under a
+    /// variant's canonical options at the benchmark's default concurrency.
+    ///
+    /// Note: this materializes a full instance at the requested scale to
+    /// obtain the kernel, because some kernel ASTs are scale-dependent
+    /// (lbm bakes the lattice width in as constant offsets) — substituting
+    /// a smaller scale here would compile the wrong kernel. Prefer
+    /// [`Engine::run`]/[`Engine::sweep`] on hot paths; they reuse the
+    /// instance they must build anyway.
+    pub fn prepare(
+        &self,
+        bench: &str,
+        variant: Variant,
+        scale: Scale,
+        seed: u64,
+    ) -> Result<Prepared> {
+        let b = benchmarks::by_name(bench).ok_or_else(|| anyhow!("unknown benchmark {bench}"))?;
+        let inst = b.instance(scale, seed)?;
+        self.prepare_kernel(&inst.kernel, &variant.opts(inst.default_tasks))
+    }
+
+    /// Compile (or fetch) an arbitrary kernel under explicit options.
+    pub fn prepare_kernel(
+        &self,
+        kernel: &crate::compiler::ast::Kernel,
+        opts: &CodegenOpts,
+    ) -> Result<Prepared> {
+        let (ck, cache_hit) = self.cached_compile(kernel, opts)?;
+        Ok(Prepared { kernel: kernel.name.clone(), ck, cache_hit })
+    }
+
+    /// Execute one request end to end: resolve the benchmark instance,
+    /// compile through the cache, link, simulate, and validate against the
+    /// benchmark's native oracle.
+    pub fn run(&self, req: RunRequest) -> Result<RunReport> {
+        self.run_ref(&req)
+    }
+
+    fn run_ref(&self, req: &RunRequest) -> Result<RunReport> {
+        let bench =
+            benchmarks::by_name(&req.bench).ok_or_else(|| anyhow!("unknown benchmark {}", req.bench))?;
+        let inst = bench.instance(req.scale, req.seed)?;
+        let tasks = if req.tasks == 0 { inst.default_tasks } else { req.tasks };
+        let opts = match &req.opts {
+            Some(o) => o.clone(),
+            None => req.variant.opts(tasks),
+        };
+        let cfg = self.effective_cfg(req.latency_ns);
+        let run = self.exec(&cfg, inst, &opts)?;
+        Ok(RunReport {
+            bench: req.bench.clone(),
+            variant: req.variant,
+            variant_label: req.config_label(),
+            cfg_name: cfg.name.clone(),
+            far_latency_ns: cfg.mem.far_latency_ns,
+            scale: req.scale,
+            seed: req.seed,
+            key: req.key.clone(),
+            cache_hit: run.cache_hit,
+            stats: run.stats,
+        })
+    }
+
+    /// Run a caller-materialized [`Instance`] under explicit options,
+    /// returning the stats and the final memory image. This is the
+    /// primitive behind [`Engine::run`]; tests and the PJRT oracle use it
+    /// directly for kernels outside the benchmark registry.
+    pub fn run_instance(&self, inst: Instance, opts: &CodegenOpts) -> Result<InstanceRun> {
+        self.exec(&self.cfg, inst, opts)
+    }
+
+    fn exec(&self, cfg: &SimConfig, inst: Instance, opts: &CodegenOpts) -> Result<InstanceRun> {
+        let (ck, cache_hit) = self.cached_compile(&inst.kernel, opts)?;
+        let mut prog = sim::link(cfg, &ck, inst.mem, &inst.params);
+        let stats = sim::run(cfg, &mut prog)?;
+        (inst.check)(&prog.mem)?;
+        Ok(InstanceRun { stats, mem: prog.mem, cache_hit })
+    }
+
+    /// Fan a request matrix across `threads` workers, sharing this
+    /// session's kernel cache; any failure aborts with the offending
+    /// request named. Results come back in matrix order.
+    pub fn sweep(&self, matrix: &[RunRequest], threads: usize) -> Result<Vec<RunReport>> {
+        let results = pool::parallel_map(matrix.len(), threads, |i| {
+            let r = &matrix[i];
+            self.run_ref(r).map_err(|e| {
+                anyhow!("{} [{} / {} / seed {}]: {e:#}", r.bench, r.config_label(), r.key, r.seed)
+            })
+        });
+        results.into_iter().collect()
+    }
+
+    fn effective_cfg(&self, latency_ns: Option<f64>) -> SimConfig {
+        match latency_ns {
+            Some(ns) => self.cfg.clone().with_far_latency_ns(ns),
+            None => self.cfg.clone(),
+        }
+    }
+
+    /// The cache proper. The lock is held across `compile` so concurrent
+    /// sweep workers never compile the same kernel twice — compilation is
+    /// microseconds against simulations that are seconds, and the "exactly
+    /// one compilation per distinct kernel" accounting is part of the API
+    /// contract (tested below and in the integration suite).
+    fn cached_compile(
+        &self,
+        kernel: &crate::compiler::ast::Kernel,
+        opts: &CodegenOpts,
+    ) -> Result<(Arc<CompiledKernel>, bool)> {
+        let key = CacheKey {
+            kernel: kernel.name.clone(),
+            kernel_fp: fingerprint(kernel),
+            opts_fp: fingerprint(opts),
+            amu_fp: fingerprint(&self.cfg.amu),
+        };
+        let mut map = self.cache.lock().unwrap();
+        if let Some(ck) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((ck.clone(), true));
+        }
+        let ck = Arc::new(compile(kernel, opts, &self.cfg.amu)?);
+        map.insert(key, ck.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok((ck, false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_builder_defaults() {
+        let r = RunRequest::new("gups", Variant::CoroAmuFull);
+        assert_eq!(r.bench, "gups");
+        assert_eq!(r.variant, Variant::CoroAmuFull);
+        assert_eq!(r.tasks, 0, "0 = benchmark default");
+        assert_eq!(r.scale, Scale::Small);
+        assert_eq!(r.seed, 42);
+        assert_eq!(r.key, "");
+        assert_eq!(r.latency_ns, None);
+        assert!(r.opts.is_none() && r.label.is_none());
+        assert_eq!(r.config_label(), "CoroAMU-Full");
+    }
+
+    #[test]
+    fn request_builder_setters() {
+        let r = RunRequest::new("bs", Variant::Serial)
+            .tasks(7)
+            .scale(Scale::Tiny)
+            .seed(9)
+            .key("k")
+            .latency_ns(800.0);
+        assert_eq!((r.tasks, r.scale, r.seed), (7, Scale::Tiny, 9));
+        assert_eq!(r.key, "k");
+        assert_eq!(r.latency_ns, Some(800.0));
+    }
+
+    #[test]
+    fn prepare_twice_hits_cache() {
+        let engine = Engine::new(SimConfig::nh_g());
+        let a = engine.prepare("gups", Variant::CoroAmuFull, Scale::Tiny, 42).unwrap();
+        assert!(!a.cache_hit);
+        // Different seed, same kernel AST: still a hit.
+        let b = engine.prepare("gups", Variant::CoroAmuFull, Scale::Tiny, 7).unwrap();
+        assert!(b.cache_hit);
+        assert_eq!(a.ck.num_tasks, b.ck.num_tasks);
+        let cs = engine.cache_stats();
+        assert_eq!((cs.hits, cs.misses, cs.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_opts_miss() {
+        let engine = Engine::new(SimConfig::nh_g());
+        engine.prepare("gups", Variant::Serial, Scale::Tiny, 1).unwrap();
+        engine.prepare("gups", Variant::CoroAmuFull, Scale::Tiny, 1).unwrap();
+        let cs = engine.cache_stats();
+        assert_eq!((cs.hits, cs.misses, cs.entries), (0, 2, 2));
+    }
+
+    #[test]
+    fn run_reports_provenance_and_latency_override() {
+        let engine = Engine::new(SimConfig::nh_g());
+        let r = engine
+            .run(RunRequest::new("gups", Variant::Serial).scale(Scale::Tiny).latency_ns(800.0))
+            .unwrap();
+        assert_eq!(r.bench, "gups");
+        assert_eq!(r.far_latency_ns, 800.0);
+        assert_eq!(r.cfg_name, "nh-g");
+        assert!(!r.cache_hit, "first run compiles");
+        assert!(r.stats.cycles > 0);
+        let text = r.render();
+        assert!(text.contains("bench=gups"), "{text}");
+        assert!(text.contains("far=800ns"), "{text}");
+        assert!(text.contains("oracle            PASS"), "{text}");
+        // Same request again: served from cache, flagged as such.
+        let r2 = engine
+            .run(RunRequest::new("gups", Variant::Serial).scale(Scale::Tiny).latency_ns(800.0))
+            .unwrap();
+        assert!(r2.cache_hit);
+        assert!(r2.render().contains("kernel=cached"));
+    }
+
+    #[test]
+    fn latency_override_does_not_fork_cache() {
+        let engine = Engine::new(SimConfig::nh_g());
+        for lat in [100.0, 200.0, 400.0] {
+            engine
+                .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny).latency_ns(lat))
+                .unwrap();
+        }
+        let cs = engine.cache_stats();
+        assert_eq!(cs.misses, 1, "latency is link-time, not compile-time");
+        assert_eq!(cs.hits, 2);
+    }
+
+    #[test]
+    fn unknown_bench_errors() {
+        let engine = Engine::new(SimConfig::nh_g());
+        assert!(engine.run(RunRequest::new("nope", Variant::Serial)).is_err());
+        assert!(engine.prepare("nope", Variant::Serial, Scale::Tiny, 1).is_err());
+    }
+
+    #[test]
+    fn lookup_finds_by_bench_variant_key() {
+        let engine = Engine::new(SimConfig::nh_g());
+        let matrix = vec![
+            RunRequest::new("gups", Variant::Serial).scale(Scale::Tiny).key("a"),
+            RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny).key("a"),
+        ];
+        let rs = engine.sweep(&matrix, 2).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert!(lookup(&rs, "gups", Variant::Serial, "a").is_some());
+        assert!(lookup(&rs, "gups", Variant::CoroAmuD, "a").is_none());
+    }
+}

@@ -5,48 +5,39 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::coordinator::{lookup, run_matrix, Job};
+use crate::engine::{lookup, Engine, RunRequest};
 use crate::util::table::{speedup, Table};
 use anyhow::Result;
 
 const CORO_TASKS: usize = 8; // the paper's typical sweet spot on Xeon
 
-fn cfg_local() -> SimConfig {
-    // "local": far tier collapses to local DRAM distance.
-    SimConfig::skylake().with_far_latency_ns(90.0)
-}
-
-fn cfg_numa() -> SimConfig {
-    SimConfig::skylake().with_far_latency_ns(130.0)
-}
-
-fn cfg_perfect() -> SimConfig {
-    // Perfect cache: remote data at L2-like distance.
-    SimConfig::skylake().with_far_latency_ns(8.0)
-}
+// Placement → emulated far-memory latency on the Xeon preset. "local"
+// collapses the far tier to DRAM distance; "perfect" models a perfect
+// cache at L2-like distance.
+const PLACEMENTS: [(&str, f64, Variant, usize); 5] = [
+    ("serial-local", 90.0, Variant::Serial, 1),
+    ("coro-local", 90.0, Variant::Coroutine, CORO_TASKS),
+    ("serial-numa", 130.0, Variant::Serial, 1),
+    ("coro-numa", 130.0, Variant::Coroutine, CORO_TASKS),
+    ("perfect", 8.0, Variant::Serial, 1),
+];
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let mut jobs = Vec::new();
+    let engine = Engine::new(SimConfig::skylake());
+    let mut matrix = Vec::new();
     for b in opts.bench_names() {
-        for (key, cfg, variant, tasks) in [
-            ("serial-local", cfg_local(), Variant::Serial, 1),
-            ("coro-local", cfg_local(), Variant::Coroutine, CORO_TASKS),
-            ("serial-numa", cfg_numa(), Variant::Serial, 1),
-            ("coro-numa", cfg_numa(), Variant::Coroutine, CORO_TASKS),
-            ("perfect", cfg_perfect(), Variant::Serial, 1),
-        ] {
-            jobs.push(Job {
-                bench: b.clone(),
-                variant,
-                tasks,
-                cfg,
-                scale: opts.scale,
-                seed: opts.seed,
-                key: key.into(),
-            });
+        for (key, lat, variant, tasks) in PLACEMENTS {
+            matrix.push(
+                RunRequest::new(b.clone(), variant)
+                    .tasks(tasks)
+                    .scale(opts.scale)
+                    .seed(opts.seed)
+                    .key(key)
+                    .latency_ns(lat),
+            );
         }
     }
-    let rs = run_matrix(jobs, opts.threads)?;
+    let rs = engine.sweep(&matrix, opts.threads)?;
     let mut t = Table::new(
         format!("Fig 2: coroutine speedup over serial on Xeon preset ({CORO_TASKS} coroutines)"),
         &["bench", "coro/serial (local)", "coro/serial (numa)", "perfect-cache bound (numa)"],

@@ -6,26 +6,24 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::coordinator::{run_matrix, Job};
+use crate::engine::{Engine, RunRequest};
 use crate::util::table::{pct, Table};
 use anyhow::Result;
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let cfg = SimConfig::skylake().with_far_latency_ns(130.0);
-    let jobs: Vec<Job> = opts
+    let engine = Engine::new(SimConfig::skylake().with_far_latency_ns(130.0));
+    let matrix: Vec<RunRequest> = opts
         .bench_names()
         .into_iter()
-        .map(|b| Job {
-            bench: b,
-            variant: Variant::Coroutine,
-            tasks: 8,
-            cfg: cfg.clone(),
-            scale: opts.scale,
-            seed: opts.seed,
-            key: "numa".into(),
+        .map(|b| {
+            RunRequest::new(b, Variant::Coroutine)
+                .tasks(8)
+                .scale(opts.scale)
+                .seed(opts.seed)
+                .key("numa")
         })
         .collect();
-    let rs = run_matrix(jobs, opts.threads)?;
+    let rs = engine.sweep(&matrix, opts.threads)?;
     let mut t = Table::new(
         "Fig 3: cycle breakdown of hand-coroutine apps (Xeon, cross-NUMA)",
         &["bench", "compute", "local/ctx", "remote", "scheduler", "mispredict"],
@@ -37,7 +35,7 @@ pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
             sums[i] += v;
         }
         t.row(vec![
-            r.job.bench.clone(),
+            r.bench.clone(),
             pct(b[0].1),
             pct(b[1].1),
             pct(b[2].1),

@@ -7,42 +7,42 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::coordinator::{lookup, run_matrix, Job};
+use crate::engine::{lookup, Engine, RunRequest};
 use crate::util::table::{geomean, speedup, Table};
 use anyhow::Result;
 
 pub const COUNTS: [usize; 6] = [2, 4, 8, 16, 32, 64];
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let mut jobs = Vec::new();
+    // One engine session for both placements: each (variant, n) kernel
+    // compiles once and is reused across benches' latency points.
+    let engine = Engine::new(SimConfig::skylake());
+    let mut matrix = Vec::new();
     for (loc, lat) in [("local", 90.0), ("numa", 130.0)] {
-        let cfg = SimConfig::skylake().with_far_latency_ns(lat);
         for b in opts.bench_names() {
-            jobs.push(Job {
-                bench: b.clone(),
-                variant: Variant::Serial,
-                tasks: 1,
-                cfg: cfg.clone(),
-                scale: opts.scale,
-                seed: opts.seed,
-                key: loc.into(),
-            });
+            matrix.push(
+                RunRequest::new(b.clone(), Variant::Serial)
+                    .tasks(1)
+                    .scale(opts.scale)
+                    .seed(opts.seed)
+                    .key(loc)
+                    .latency_ns(lat),
+            );
             for n in COUNTS {
                 for v in [Variant::Coroutine, Variant::CoroAmuS] {
-                    jobs.push(Job {
-                        bench: b.clone(),
-                        variant: v,
-                        tasks: n,
-                        cfg: cfg.clone(),
-                        scale: opts.scale,
-                        seed: opts.seed,
-                        key: format!("{loc}/{n}"),
-                    });
+                    matrix.push(
+                        RunRequest::new(b.clone(), v)
+                            .tasks(n)
+                            .scale(opts.scale)
+                            .seed(opts.seed)
+                            .key(format!("{loc}/{n}"))
+                            .latency_ns(lat),
+                    );
                 }
             }
         }
     }
-    let rs = run_matrix(jobs, opts.threads)?;
+    let rs = engine.sweep(&matrix, opts.threads)?;
     let mut tables = Vec::new();
     for loc in ["local", "numa"] {
         let mut t = Table::new(

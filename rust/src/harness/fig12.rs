@@ -5,7 +5,7 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::coordinator::{lookup, run_matrix, Job};
+use crate::engine::{lookup, Engine, RunRequest};
 use crate::util::table::{geomean, speedup, Table};
 use anyhow::Result;
 
@@ -15,34 +15,37 @@ pub const LATENCIES_NS: [f64; 4] = [100.0, 200.0, 400.0, 800.0];
 const S_TASKS: [usize; 3] = [16, 32, 64];
 const DYN_TASKS: usize = 96;
 
-pub fn jobs(opts: &FigOpts) -> Vec<Job> {
-    let mut jobs = Vec::new();
+/// The full request matrix: 4 latencies x benches x 7 configurations.
+/// Latency is a link-time override, so the engine compiles each
+/// (bench, variant, tasks) kernel once for the whole figure instead of
+/// once per latency point.
+pub fn requests(opts: &FigOpts) -> Vec<RunRequest> {
+    let mut matrix = Vec::new();
     for lat in LATENCIES_NS {
-        let cfg = SimConfig::nh_g().with_far_latency_ns(lat);
         for b in opts.bench_names() {
-            let mk = |variant: Variant, tasks: usize, key: String| Job {
-                bench: b.clone(),
-                variant,
-                tasks,
-                cfg: cfg.clone(),
-                scale: opts.scale,
-                seed: opts.seed,
-                key,
+            let mk = |variant: Variant, tasks: usize, key: String| {
+                RunRequest::new(b.clone(), variant)
+                    .tasks(tasks)
+                    .scale(opts.scale)
+                    .seed(opts.seed)
+                    .key(key)
+                    .latency_ns(lat)
             };
-            jobs.push(mk(Variant::Serial, 1, format!("{lat}")));
-            jobs.push(mk(Variant::Coroutine, 16, format!("{lat}")));
+            matrix.push(mk(Variant::Serial, 1, format!("{lat}")));
+            matrix.push(mk(Variant::Coroutine, 16, format!("{lat}")));
             for t in S_TASKS {
-                jobs.push(mk(Variant::CoroAmuS, t, format!("{lat}/{t}")));
+                matrix.push(mk(Variant::CoroAmuS, t, format!("{lat}/{t}")));
             }
-            jobs.push(mk(Variant::CoroAmuD, DYN_TASKS, format!("{lat}")));
-            jobs.push(mk(Variant::CoroAmuFull, DYN_TASKS, format!("{lat}")));
+            matrix.push(mk(Variant::CoroAmuD, DYN_TASKS, format!("{lat}")));
+            matrix.push(mk(Variant::CoroAmuFull, DYN_TASKS, format!("{lat}")));
         }
     }
-    jobs
+    matrix
 }
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let rs = run_matrix(jobs(opts), opts.threads)?;
+    let engine = Engine::new(SimConfig::nh_g());
+    let rs = engine.sweep(&requests(opts), opts.threads)?;
     let benches = opts.bench_names();
     let mut tables = Vec::new();
     for lat in LATENCIES_NS {
@@ -110,11 +113,11 @@ mod tests {
     use crate::benchmarks::Scale;
 
     #[test]
-    fn job_matrix_covers_all_cells() {
+    fn request_matrix_covers_all_cells() {
         let opts = FigOpts { scale: Scale::Tiny, ..FigOpts::quick() };
-        let js = jobs(&opts);
+        let m = requests(&opts);
         // 4 latencies x 8 benches x (serial + hand + 3xS + D + Full).
-        assert_eq!(js.len(), 4 * 8 * 7);
+        assert_eq!(m.len(), 4 * 8 * 7);
     }
 
     #[test]

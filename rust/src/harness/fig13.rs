@@ -5,33 +5,31 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::coordinator::{lookup, run_matrix, Job};
+use crate::engine::{lookup, Engine, RunRequest};
 use crate::util::table::{geomean, Table};
 use anyhow::Result;
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let cfg = SimConfig::nh_g().with_far_latency_ns(100.0);
+    let engine = Engine::new(SimConfig::nh_g().with_far_latency_ns(100.0));
     let variants = [
         (Variant::Serial, 1usize),
         (Variant::CoroAmuS, 64),
         (Variant::CoroAmuD, 96),
         (Variant::CoroAmuFull, 96),
     ];
-    let mut jobs = Vec::new();
+    let mut matrix = Vec::new();
     for b in opts.bench_names() {
         for (v, tasks) in variants {
-            jobs.push(Job {
-                bench: b.clone(),
-                variant: v,
-                tasks,
-                cfg: cfg.clone(),
-                scale: opts.scale,
-                seed: opts.seed,
-                key: "100".into(),
-            });
+            matrix.push(
+                RunRequest::new(b.clone(), v)
+                    .tasks(tasks)
+                    .scale(opts.scale)
+                    .seed(opts.seed)
+                    .key("100"),
+            );
         }
     }
-    let rs = run_matrix(jobs, opts.threads)?;
+    let rs = engine.sweep(&matrix, opts.threads)?;
     let mut t = Table::new(
         "Fig 13: dynamic instruction expansion vs serial @100ns (paper avg: S 6.70x, D 5.98x, Full 3.91x)",
         &["bench", "CoroAMU-S", "CoroAMU-D", "CoroAMU-Full"],

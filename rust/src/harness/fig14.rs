@@ -4,10 +4,10 @@
 //! eliminates them in (3).
 
 use super::FigOpts;
-use crate::benchmarks::{self};
 use crate::compiler::codegen::{CodegenOpts, SchedKind};
+use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::coordinator::pool;
+use crate::engine::{Engine, RunRequest};
 use crate::util::table::{pct, Table};
 use anyhow::Result;
 
@@ -18,33 +18,37 @@ pub fn d_with_bafin(tasks: usize) -> CodegenOpts {
 }
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let cfg = SimConfig::nh_g().with_far_latency_ns(200.0);
+    let engine = Engine::new(SimConfig::nh_g().with_far_latency_ns(200.0));
     let benches = opts.bench_names();
-    let configs: Vec<(&str, CodegenOpts)> = vec![
-        ("serial", CodegenOpts::serial()),
-        ("CoroAMU-D", CodegenOpts::coroamu_d(96)),
-        ("D+bafin", d_with_bafin(96)),
+    let configs: Vec<(&str, Variant, CodegenOpts)> = vec![
+        ("serial", Variant::Serial, CodegenOpts::serial()),
+        ("CoroAMU-D", Variant::CoroAmuD, CodegenOpts::coroamu_d(96)),
+        ("D+bafin", Variant::CoroAmuD, d_with_bafin(96)),
     ];
-    let cells: Vec<(String, String)> = benches
+    // Explicit-opts requests; sweep preserves matrix order, so results are
+    // consumed positionally (bench-major, config-minor).
+    let matrix: Vec<RunRequest> = benches
         .iter()
-        .flat_map(|b| configs.iter().map(move |(n, _)| (b.clone(), n.to_string())))
+        .flat_map(|b| {
+            configs.iter().map(move |(cname, v, co)| {
+                RunRequest::new(b.clone(), *v)
+                    .scale(opts.scale)
+                    .seed(opts.seed)
+                    .key(cname.to_string())
+                    .opts(co.clone(), cname.to_string())
+            })
+        })
         .collect();
-    let stats = pool::parallel_map(cells.len(), opts.threads, |i| {
-        let (b, cname) = &cells[i];
-        let co = &configs.iter().find(|(n, _)| n == cname).unwrap().1;
-        let inst = benchmarks::by_name(b).unwrap().instance(opts.scale, opts.seed).unwrap();
-        benchmarks::execute_opts(&cfg, inst, co)
-            .unwrap_or_else(|e| panic!("fig14 {b}/{cname}: {e:#}"))
-    });
+    let rs = engine.sweep(&matrix, opts.threads)?;
     let mut t = Table::new(
         "Fig 14: cycle breakdown @200ns — serial / CoroAMU-D / D+bafin",
         &["bench", "config", "compute", "local/ctx", "remote", "scheduler", "mispredict"],
     );
-    for (i, (b, cname)) in cells.iter().enumerate() {
-        let brk = stats[i].cycle_breakdown();
+    for r in &rs {
+        let brk = r.stats.cycle_breakdown();
         t.row(vec![
-            b.clone(),
-            cname.clone(),
+            r.bench.clone(),
+            r.variant_label.clone(),
             pct(brk[0].1),
             pct(brk[1].1),
             pct(brk[2].1),

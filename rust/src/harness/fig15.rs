@@ -7,10 +7,10 @@
 
 use super::fig14::d_with_bafin;
 use super::FigOpts;
-use crate::benchmarks;
 use crate::compiler::codegen::CodegenOpts;
+use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::coordinator::pool;
+use crate::engine::{Engine, RunRequest};
 use crate::util::table::Table;
 use anyhow::Result;
 
@@ -22,32 +22,37 @@ pub fn configs() -> Vec<(&'static str, CodegenOpts)> {
 }
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let cfg = SimConfig::nh_g().with_far_latency_ns(100.0);
+    let engine = Engine::new(SimConfig::nh_g().with_far_latency_ns(100.0));
     let benches = opts.bench_names();
     let cfgs = configs();
-    let cells: Vec<(String, usize)> =
-        benches.iter().flat_map(|b| (0..cfgs.len()).map(move |i| (b.clone(), i))).collect();
-    let stats = pool::parallel_map(cells.len(), opts.threads, |i| {
-        let (b, ci) = &cells[i];
-        let inst = benchmarks::by_name(b).unwrap().instance(opts.scale, opts.seed).unwrap();
-        benchmarks::execute_opts(&cfg, inst, &cfgs[*ci].1)
-            .unwrap_or_else(|e| panic!("fig15 {b}/{}: {e:#}", cfgs[*ci].0))
-    });
+    // Bench-major, config-minor; consumed positionally below.
+    let matrix: Vec<RunRequest> = benches
+        .iter()
+        .flat_map(|b| {
+            cfgs.iter().map(move |(cname, co)| {
+                RunRequest::new(b.clone(), Variant::CoroAmuFull)
+                    .scale(opts.scale)
+                    .seed(opts.seed)
+                    .key(cname.to_string())
+                    .opts(co.clone(), cname.to_string())
+            })
+        })
+        .collect();
+    let rs = engine.sweep(&matrix, opts.threads)?;
     let mut t = Table::new(
         "Fig 15: ablation @100ns (normalized to bafin-basic)",
         &["bench", "config", "perf", "switches", "ctx ops/switch"],
     );
-    for b in &benches {
-        let idx = |ci: usize| cells.iter().position(|(bb, c)| bb == b && *c == ci).unwrap();
-        let base = &stats[idx(0)];
-        for (ci, (cname, _)) in cfgs.iter().enumerate() {
-            let s = &stats[idx(ci)];
+    for (bi, b) in benches.iter().enumerate() {
+        let base = &rs[bi * cfgs.len()].stats;
+        for ci in 0..cfgs.len() {
+            let r = &rs[bi * cfgs.len() + ci];
             t.row(vec![
                 b.clone(),
-                cname.to_string(),
-                format!("{:.2}x", base.cycles as f64 / s.cycles as f64),
-                format!("{:.2}", s.switches as f64 / base.switches.max(1) as f64),
-                format!("{:.1}", s.ctx_ops_per_switch()),
+                r.variant_label.clone(),
+                format!("{:.2}x", base.cycles as f64 / r.stats.cycles as f64),
+                format!("{:.2}", r.stats.switches as f64 / base.switches.max(1) as f64),
+                format!("{:.1}", r.stats.ctx_ops_per_switch()),
             ]);
         }
     }

@@ -6,30 +6,28 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::coordinator::{lookup, run_matrix, Job};
+use crate::engine::{lookup, Engine, RunRequest};
 use crate::util::table::{mean, Table};
 use anyhow::Result;
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let cfg = SimConfig::nh_g().with_far_latency_ns(800.0);
+    let engine = Engine::new(SimConfig::nh_g().with_far_latency_ns(800.0));
     // CoroAMU-S at its typical best concurrency (16-32, Fig 11/12); more
     // tasks do not help prefetching past the MSHR/locality limits.
     let variants = [(Variant::Serial, 1usize), (Variant::CoroAmuS, 32), (Variant::CoroAmuFull, 96)];
-    let mut jobs = Vec::new();
+    let mut matrix = Vec::new();
     for b in opts.bench_names() {
         for (v, tasks) in variants {
-            jobs.push(Job {
-                bench: b.clone(),
-                variant: v,
-                tasks,
-                cfg: cfg.clone(),
-                scale: opts.scale,
-                seed: opts.seed,
-                key: "mlp".into(),
-            });
+            matrix.push(
+                RunRequest::new(b.clone(), v)
+                    .tasks(tasks)
+                    .scale(opts.scale)
+                    .seed(opts.seed)
+                    .key("mlp"),
+            );
         }
     }
-    let rs = run_matrix(jobs, opts.threads)?;
+    let rs = engine.sweep(&matrix, opts.threads)?;
     let mut t = Table::new(
         "Fig 16: MLP at the far-memory controller @800ns (paper: serial <5, prefetch <20, AMU ~64)",
         &["bench", "Serial", "CoroAMU-S (prefetch)", "CoroAMU-Full (decoupled)"],

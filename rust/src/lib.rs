@@ -11,12 +11,17 @@
 //! The Rust side is Layer 3 of the rust+JAX+Pallas stack; Layers 1/2 live
 //! in `python/compile` and are AOT-lowered to `artifacts/*.hlo.txt`, which
 //! [`runtime`] loads through PJRT to cross-validate the simulator's
-//! functional outputs. See DESIGN.md for the full inventory.
+//! functional outputs. See `DESIGN.md` (repo root) for the full inventory.
+//!
+//! The public entry point is [`engine`]: an [`engine::Engine`] session owns
+//! the compile → link → simulate → oracle pipeline behind a compiled-kernel
+//! cache, so callers never chain the stages by hand.
 
 pub mod benchmarks;
 pub mod compiler;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod harness;
 pub mod ir;
 pub mod runtime;

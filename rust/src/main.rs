@@ -1,4 +1,5 @@
-//! `coroamu` — CLI for the CoroAMU reproduction.
+//! `coroamu` — CLI for the CoroAMU reproduction. All verbs route through
+//! the [`coroamu::engine::Engine`] session facade.
 //!
 //! ```text
 //! coroamu report [--fig N | --all] [--scale tiny|small|full] [--only a,b]
@@ -10,9 +11,9 @@
 
 use anyhow::{bail, Context, Result};
 use coroamu::benchmarks::{self, Scale};
-use coroamu::compiler::{compile, Variant};
+use coroamu::compiler::Variant;
 use coroamu::config::SimConfig;
-use coroamu::coordinator::{run_job, Job};
+use coroamu::engine::{Engine, RunRequest};
 use coroamu::harness::{self, FigOpts};
 use coroamu::ir::printer;
 use coroamu::runtime;
@@ -50,6 +51,10 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
         None => SimConfig::preset(args.get_or("preset", "nh-g"))?,
     };
     if let Some(lat) = args.get_f64("latency") {
+        // `!(lat > 0.0)` rather than `lat <= 0.0`: also rejects NaN.
+        if !(lat > 0.0) {
+            bail!("--latency must be positive (got {lat})");
+        }
         cfg = cfg.with_far_latency_ns(lat);
     }
     Ok(cfg)
@@ -84,42 +89,24 @@ fn cmd_report(args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let bench = args.get("bench").context("--bench required")?.to_string();
     let variant = Variant::parse(args.get_or("variant", "full")).context("bad --variant")?;
-    let job = Job {
-        bench,
-        variant,
-        tasks: args.get_usize("tasks").unwrap_or(0),
-        cfg: cfg_from(args)?,
-        scale: parse_scale(args.get_or("scale", "small"))?,
-        seed: args.get_u64("seed").unwrap_or(42),
-        key: String::new(),
-    };
-    let r = run_job(&job)?;
-    let st = &r.stats;
-    println!("bench={} variant={} cfg={} far={}ns", r.job.bench, variant.label(), r.job.cfg.name, r.job.cfg.mem.far_latency_ns);
-    println!("  cycles            {}", st.cycles);
-    println!("  dyn instrs        {} (ipc {:.2})", st.dyn_instrs, st.ipc());
-    println!("  switches          {} (ctx ops/switch {:.1})", st.switches, st.ctx_ops_per_switch());
-    println!("  cond branches     {} ({} mispredicted)", st.cond_branches, st.cond_mispredicts);
-    println!("  indirect jumps    {} ({} mispredicted)", st.indirect_jumps, st.indirect_mispredicts);
-    println!("  bafin             {} taken / {} fallthrough / {} mispredicted", st.bafins_taken, st.bafins_fallthrough, st.bafin_mispredicts);
-    println!("  aloads/astores    {}/{} (awaits {})", st.aloads, st.astores, st.awaits);
-    println!("  far MLP           {:.1} (busy {:.0}%)", st.far_mlp, st.far_busy_frac * 100.0);
-    println!("  l1 hits/misses    {}/{}", st.l1_hits, st.l1_misses);
-    let brk = st.cycle_breakdown();
-    let s: Vec<String> = brk.iter().map(|(n, v)| format!("{n} {:.0}%", v * 100.0)).collect();
-    println!("  breakdown         {}", s.join(", "));
-    println!("  oracle            PASS");
+    let engine = Engine::new(cfg_from(args)?);
+    let req = RunRequest::new(bench, variant)
+        .tasks(args.get_usize("tasks").unwrap_or(0))
+        .scale(parse_scale(args.get_or("scale", "small"))?)
+        .seed(args.get_u64("seed").unwrap_or(42));
+    engine.run(req)?.print();
     Ok(())
 }
 
 fn cmd_dump(args: &Args) -> Result<()> {
     let bench = args.get("bench").context("--bench required")?;
     let variant = Variant::parse(args.get_or("variant", "full")).context("bad --variant")?;
-    let cfg = cfg_from(args)?;
+    let engine = Engine::new(cfg_from(args)?);
     let b = benchmarks::by_name(bench).context("unknown benchmark")?;
     let inst = b.instance(Scale::Tiny, 42)?;
     let tasks = args.get_usize("tasks").unwrap_or(inst.default_tasks);
-    let ck = compile(&inst.kernel, &variant.opts(tasks), &cfg.amu)?;
+    let prep = engine.prepare_kernel(&inst.kernel, &variant.opts(tasks))?;
+    let ck = &prep.ck;
     println!("{}", printer::function_to_string(&ck.func));
     println!(
         "// tasks={} ctx={}B spm_slot={}B sites={} groups={}",
@@ -147,18 +134,28 @@ const USAGE: &str = "usage: coroamu <report|run|dump|oracle> [options]
   report --fig N | --all | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
   run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--tasks N] [--scale ...]
   dump   --bench NAME [--variant ...]     print generated CoroIR
-  oracle                                  cross-check simulator vs PJRT artifacts";
+  oracle                                  cross-check simulator vs PJRT artifacts
+  help | --help                           print this message";
 
 fn main() {
     let args = Args::from_env();
+    // `--help` anywhere (or the `help` verb) prints usage and succeeds.
+    if args.flag("help") || args.subcommand.as_deref() == Some("help") {
+        println!("{USAGE}");
+        return;
+    }
     let r = match args.subcommand.as_deref() {
         Some("report") => cmd_report(&args),
         Some("run") => cmd_run(&args),
         Some("dump") => cmd_dump(&args),
         Some("oracle") => cmd_oracle(&args),
-        _ => {
-            println!("{USAGE}");
-            Ok(())
+        Some(other) => {
+            eprintln!("error: unknown subcommand '{other}'\n{USAGE}");
+            std::process::exit(1);
+        }
+        None => {
+            eprintln!("{USAGE}");
+            std::process::exit(1);
         }
     };
     if let Err(e) = r {

@@ -6,10 +6,11 @@
 
 use super::Runtime;
 use crate::benchmarks::{self, Benchmark, Scale};
-use crate::compiler::{compile, Variant};
+use crate::compiler::Variant;
 use crate::config::SimConfig;
+use crate::engine::Engine;
 use crate::ir::Width;
-use crate::sim::{self, MemImage};
+use crate::sim::MemImage;
 use anyhow::{bail, ensure, Context, Result};
 
 fn region_i64(mem: &MemImage, name: &str) -> Result<Vec<i64>> {
@@ -21,18 +22,16 @@ fn region_f64(mem: &MemImage, name: &str) -> Result<Vec<f64>> {
     Ok(region_i64(mem, name)?.into_iter().map(|v| f64::from_bits(v as u64)).collect())
 }
 
-/// Run `bench` at Tiny scale under `variant` and return the memory image
-/// before and after simulation.
+/// Run `bench` at Tiny scale under `variant` through an [`Engine`] session
+/// (oracle-checked) and return the memory image before and after
+/// simulation.
 fn simulate(bench: &dyn Benchmark, variant: Variant) -> Result<(MemImage, MemImage)> {
-    let cfg = SimConfig::nh_g();
+    let engine = Engine::new(SimConfig::nh_g());
     let inst = bench.instance(Scale::Tiny, 42)?;
     // Snapshot inputs by building a second identical instance.
     let before = bench.instance(Scale::Tiny, 42)?.mem;
-    let ck = compile(&inst.kernel, &variant.opts(64), &cfg.amu)?;
-    let mut prog = sim::link(&cfg, &ck, inst.mem, &inst.params);
-    sim::run(&cfg, &mut prog)?;
-    (inst.check)(&prog.mem)?;
-    Ok((before, prog.mem))
+    let run = engine.run_instance(inst, &variant.opts(64))?;
+    Ok((before, run.mem))
 }
 
 /// Cross-check one benchmark against its artifact. Supported: gups,
@@ -91,14 +90,22 @@ mod tests {
     use super::*;
 
     /// Full three-layer integration — skipped when `make artifacts` has
-    /// not been run yet.
+    /// not been run yet, or when the build carries the PJRT stub (the
+    /// default): artifacts can exist on disk while the runtime is
+    /// unavailable, and that must skip, not fail.
     #[test]
     fn simulator_matches_pjrt_golden_models() {
         if !super::super::artifacts_available() {
             eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
             return;
         }
-        let rt = Runtime::cpu().unwrap();
+        let rt = match Runtime::cpu() {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: {e:#}");
+                return;
+            }
+        };
         for b in GOLDEN_BENCHES {
             for v in [Variant::Serial, Variant::CoroAmuFull] {
                 check_against_artifact(&rt, b, v)

@@ -1,0 +1,95 @@
+//! Offline stand-in for the `xla` (xla-rs) PJRT bindings.
+//!
+//! The build environment has no XLA extension library, so the real
+//! bindings cannot link. This stub mirrors exactly the API surface
+//! `runtime` uses — same types, same signatures — and fails gracefully at
+//! the first entry point (`PjRtClient::cpu`), so everything downstream
+//! typechecks but reports "PJRT unavailable" at runtime. Build with
+//! `--features pjrt` (after adding the `xla` crate and an
+//! XLA_EXTENSION install) to swap in the real bindings; see DESIGN.md §5.
+
+use std::fmt;
+
+/// Error produced by every stub entry point.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT unavailable: coroamu was built without XLA bindings \
+         (enable the `pjrt` feature and provide xla-rs + XLA_EXTENSION)"
+            .to_string(),
+    )
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable())
+    }
+}

@@ -6,7 +6,8 @@
 //! [`core`] (dataflow + ROB pipeline spine), [`memsys`] (L1/L2/L3 + MSHRs +
 //! BOP + far-memory delayer/bandwidth regulator, Fig. 10), [`bpu`]
 //! (TAGE/ITTAGE/BPT) and [`amu`] (Request Table / Finished Queue / groups /
-//! await-asignal). See DESIGN.md for the substitution argument.
+//! await-asignal). See `DESIGN.md` §1 (repo root) for the substitution
+//! argument.
 
 pub mod amu;
 pub mod bpu;
@@ -66,12 +67,16 @@ pub fn link(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::benchmarks::Instance;
     use crate::compiler::ast::*;
-    use crate::compiler::{compile, Variant};
-    use crate::ir::{AluOp, Width};
+    use crate::compiler::Variant;
+    use crate::engine::Engine;
+    use crate::ir::Width;
 
     /// End-to-end: a GUPS-like kernel compiled in all five variants must
     /// produce identical memory contents and sensible relative timing.
+    /// Written with the fluent [`KernelBuilder`] statement helpers, so it
+    /// reads like the paper's pragma-annotated loop.
     fn gups_kernel() -> Kernel {
         let mut kb = KernelBuilder::new("gups_e2e");
         let tab = kb.param_ptr("tab", AddrSpace::Remote);
@@ -82,23 +87,12 @@ mod tests {
         let v = kb.var("v");
         let addr = Expr::add(Expr::Param(tab), Expr::shl(Expr::Var(idx), Expr::Imm(3)));
         kb.num_tasks(32);
-        kb.build(vec![
-            // Bijective multiplicative permutation: collision-free random
-            // scatter so every execution order gives identical memory.
-            Stmt::Let {
-                var: idx,
-                expr: Expr::and(
-                    Expr::mul(Expr::Var(ITER_VAR), Expr::Imm(0x9E37_79B9)),
-                    Expr::Param(mask),
-                ),
-            },
-            Stmt::Load { var: v, addr: addr.clone(), width: Width::W8 },
-            Stmt::Store {
-                val: Expr::Bin(BinOp::I(AluOp::Xor), Box::new(Expr::Var(v)), Box::new(Expr::Var(idx))),
-                addr,
-                width: Width::W8,
-            },
-        ])
+        // Bijective multiplicative permutation: collision-free random
+        // scatter so every execution order gives identical memory.
+        kb.let_(idx, Expr::and(Expr::mul(Expr::Var(ITER_VAR), Expr::Imm(0x9E37_79B9)), Expr::Param(mask)))
+            .load(v, addr.clone(), Width::W8)
+            .store(Expr::xor(Expr::Var(v), Expr::Var(idx)), addr, Width::W8);
+        kb.finish()
     }
 
     fn run_variant_cfg(
@@ -108,15 +102,20 @@ mod tests {
         n: i64,
         table_words: u64,
     ) -> (RunStats, Vec<i64>) {
-        let k = gups_kernel();
-        let ck = compile(&k, &variant.opts(tasks), &cfg.amu).unwrap();
+        let engine = Engine::new(cfg.clone());
         let mut mem = MemImage::new();
         let tab = mem.alloc("tab", AddrSpace::Remote, table_words * 8);
-        let mut prog = link(cfg, &ck, mem, &[tab as i64, (table_words - 1) as i64, n]);
-        let st = run(cfg, &mut prog).unwrap();
+        let inst = Instance {
+            kernel: gups_kernel(),
+            mem,
+            params: vec![tab as i64, (table_words - 1) as i64, n],
+            check: Box::new(|_| Ok(())),
+            default_tasks: tasks,
+        };
+        let r = engine.run_instance(inst, &variant.opts(tasks)).unwrap();
         let out: Vec<i64> =
-            (0..table_words).map(|i| prog.mem.read(tab + i * 8, Width::W8).unwrap()).collect();
-        (st, out)
+            (0..table_words).map(|i| r.mem.read(tab + i * 8, Width::W8).unwrap()).collect();
+        (r.stats, out)
     }
 
     fn run_variant(variant: Variant, n: i64, table_words: u64) -> (RunStats, Vec<i64>) {

@@ -12,6 +12,13 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
+/// Is this token a negative numeric literal (`-1`, `-2.5`) rather than a
+/// short flag (`-v`)? Negative values must be consumable as option values:
+/// `--offset -1`.
+fn is_negative_number(s: &str) -> bool {
+    s.len() > 1 && s.starts_with('-') && s[1..].parse::<f64>().is_ok()
+}
+
 impl Args {
     /// Parse from an iterator of argument strings (without argv[0]).
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
@@ -28,10 +35,11 @@ impl Args {
                 if let Some(eq) = body.find('=') {
                     out.options.insert(body[..eq].to_string(), body[eq + 1..].to_string());
                 } else {
-                    // `--key value` if the next token is not another option,
+                    // `--key value` if the next token is a value (anything
+                    // not dash-prefixed, or a negative number like `-1`),
                     // else a boolean flag.
                     match iter.peek() {
-                        Some(next) if !next.starts_with("--") => {
+                        Some(next) if !next.starts_with('-') || is_negative_number(next) => {
                             let val = iter.next().unwrap();
                             out.options.insert(body.to_string(), val);
                         }
@@ -70,6 +78,10 @@ impl Args {
     }
 
     pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_i64(&self, name: &str) -> Option<i64> {
         self.get(name).and_then(|v| v.parse().ok())
     }
 
@@ -131,5 +143,30 @@ mod tests {
         let a = parse(&["--help"]);
         assert_eq!(a.subcommand, None);
         assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse(&["run", "--latency", "-1", "--offset", "-2.5"]);
+        assert_eq!(a.get_f64("latency"), Some(-1.0));
+        assert_eq!(a.get_i64("latency"), Some(-1));
+        assert_eq!(a.get_f64("offset"), Some(-2.5));
+        assert!(a.flags.is_empty(), "negative values must not become flags: {:?}", a.flags);
+    }
+
+    #[test]
+    fn negative_number_in_equals_form() {
+        let a = parse(&["run", "--latency=-800"]);
+        assert_eq!(a.get_f64("latency"), Some(-800.0));
+    }
+
+    #[test]
+    fn short_dash_token_is_not_a_value() {
+        // `-x` is not numeric, so `--verbose` stays a flag and `-x` falls
+        // through to positionals.
+        let a = parse(&["run", "--verbose", "-x"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+        assert_eq!(a.positional, vec!["-x".to_string()]);
     }
 }

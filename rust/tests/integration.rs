@@ -1,42 +1,54 @@
-//! Cross-module integration tests: compiler -> simulator -> oracle over
-//! the full benchmark registry, harness smoke tests, and property-based
-//! invariants on the coordinator/compiler/simulator substrates.
+//! Cross-module integration tests: the Engine facade over
+//! compiler -> simulator -> oracle across the full benchmark registry,
+//! harness smoke tests, and property-based invariants on the
+//! coordinator/compiler/simulator substrates.
 
-use coroamu::benchmarks::{self, Scale};
+use coroamu::benchmarks::{self, Instance, Scale};
 use coroamu::compiler::analysis::{self, vs_contains, vs_iter};
 use coroamu::compiler::ast::*;
-use coroamu::compiler::{coalesce, compile, Variant};
+use coroamu::compiler::{coalesce, Variant};
 use coroamu::config::SimConfig;
 use coroamu::coordinator::{run_job, Job};
+use coroamu::engine::{lookup, Engine, RunRequest};
 use coroamu::harness::{self, FigOpts};
 use coroamu::ir::{AddrSpace, AluOp, Width};
-use coroamu::sim::{self, MemImage};
+use coroamu::sim::MemImage;
 use coroamu::util::proptest::Gen;
 
-/// Every benchmark, every variant, Tiny scale: oracle must pass.
+/// Every benchmark, every variant, Tiny scale: oracle must pass. One
+/// engine session per config; each (bench, variant) kernel compiles once.
 #[test]
 fn every_benchmark_every_variant_oracle_checked() {
-    let cfg = SimConfig::nh_g();
+    let engine = Engine::new(SimConfig::nh_g());
     for b in benchmarks::all() {
         for v in Variant::ALL {
-            let inst = b.instance(Scale::Tiny, 7).unwrap();
+            let name = b.spec().name;
             let tasks = if v.needs_amu() { 64 } else { 16 };
-            benchmarks::execute(&cfg, inst, v, tasks)
-                .unwrap_or_else(|e| panic!("{} under {}: {e:#}", b.spec().name, v.label()));
+            engine
+                .run(RunRequest::new(name, v).tasks(tasks).scale(Scale::Tiny).seed(7))
+                .unwrap_or_else(|e| panic!("{} under {}: {e:#}", name, v.label()));
         }
     }
+    let cs = engine.cache_stats();
+    assert_eq!(cs.misses as usize, cs.entries);
+    assert_eq!(
+        cs.entries,
+        benchmarks::all().len() * Variant::ALL.len(),
+        "one compilation per (bench, variant)"
+    );
 }
 
 /// Benchmarks also run on the Skylake preset (no AMU): the static
 /// variants must work there; AMU variants are not applicable.
 #[test]
 fn skylake_preset_runs_static_variants() {
-    let cfg = SimConfig::skylake();
+    let engine = Engine::new(SimConfig::skylake());
     for b in benchmarks::all() {
         for v in [Variant::Serial, Variant::Coroutine, Variant::CoroAmuS] {
-            let inst = b.instance(Scale::Tiny, 3).unwrap();
-            benchmarks::execute(&cfg, inst, v, 8)
-                .unwrap_or_else(|e| panic!("{} under {}: {e:#}", b.spec().name, v.label()));
+            let name = b.spec().name;
+            engine
+                .run(RunRequest::new(name, v).tasks(8).scale(Scale::Tiny).seed(3))
+                .unwrap_or_else(|e| panic!("{} under {}: {e:#}", name, v.label()));
         }
     }
 }
@@ -74,10 +86,18 @@ fn config_file_roundtrip() {
     assert_eq!(cfg.mem.far_latency_ns, 555.0);
 }
 
-/// Property: the coordinator's run results are deterministic — same job,
-/// same stats.
+/// Property: engine runs are deterministic — same request, same stats —
+/// and the legacy coordinator shim agrees with the engine it wraps.
 #[test]
 fn runs_are_deterministic() {
+    let engine = Engine::new(SimConfig::nh_g());
+    let req = || RunRequest::new("bs", Variant::CoroAmuFull).tasks(32).scale(Scale::Tiny).seed(5);
+    let a = engine.run(req()).unwrap().stats;
+    let b = engine.run(req()).unwrap().stats;
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.dyn_instrs, b.dyn_instrs);
+    assert_eq!(a.switches, b.switches);
+    // Legacy path produces identical numbers.
     let job = Job {
         bench: "bs".into(),
         variant: Variant::CoroAmuFull,
@@ -87,12 +107,82 @@ fn runs_are_deterministic() {
         seed: 5,
         key: String::new(),
     };
-    let a = run_job(&job).unwrap().stats;
-    let b = run_job(&job).unwrap().stats;
-    assert_eq!(a.cycles, b.cycles);
-    assert_eq!(a.dyn_instrs, b.dyn_instrs);
-    assert_eq!(a.switches, b.switches);
+    let c = run_job(&job).unwrap().stats;
+    assert_eq!((a.cycles, a.dyn_instrs), (c.cycles, c.dyn_instrs));
 }
+
+// --- Engine cache + sweep contract ------------------------------------
+
+/// The API-redesign acceptance test: a five-variant sweep over one
+/// benchmark performs exactly five kernel compilations regardless of how
+/// many (latency, seed) points it runs.
+#[test]
+fn five_variant_sweep_compiles_exactly_five_kernels() {
+    let engine = Engine::new(SimConfig::nh_g());
+    let variants = [
+        (Variant::Serial, 1usize),
+        (Variant::Coroutine, 16),
+        (Variant::CoroAmuS, 16),
+        (Variant::CoroAmuD, 64),
+        (Variant::CoroAmuFull, 64),
+    ];
+    let mut matrix = Vec::new();
+    for lat in [100.0, 200.0, 400.0] {
+        for seed in [1u64, 2] {
+            for (v, tasks) in variants {
+                matrix.push(
+                    RunRequest::new("gups", v)
+                        .tasks(tasks)
+                        .scale(Scale::Tiny)
+                        .seed(seed)
+                        .key(format!("{lat}/{seed}"))
+                        .latency_ns(lat),
+                );
+            }
+        }
+    }
+    let rs = engine.sweep(&matrix, 4).unwrap();
+    assert_eq!(rs.len(), 3 * 2 * 5);
+    let cs = engine.cache_stats();
+    assert_eq!(cs.misses, 5, "each variant's kernel compiles exactly once");
+    assert_eq!(cs.hits, (3 * 2 * 5) - 5, "every other point reuses the cache");
+    assert_eq!(cs.entries, 5);
+    // Exactly one report per variant carries the compile; the rest are hits.
+    let compiles = rs.iter().filter(|r| !r.cache_hit).count();
+    assert_eq!(compiles, 5);
+}
+
+/// engine.sweep end-to-end smoke test at Tiny scale: results come back in
+/// matrix order, lookup works, oracle runs on every cell.
+#[test]
+fn engine_sweep_smoke_tiny() {
+    let engine = Engine::new(SimConfig::nh_g());
+    let matrix: Vec<RunRequest> = ["gups", "stream", "bs"]
+        .iter()
+        .flat_map(|b| {
+            [Variant::Serial, Variant::CoroAmuFull]
+                .iter()
+                .map(|v| RunRequest::new(*b, *v).scale(Scale::Tiny).key("smoke"))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let rs = engine.sweep(&matrix, 3).unwrap();
+    assert_eq!(rs.len(), 6);
+    for (req, rep) in matrix.iter().zip(rs.iter()) {
+        assert_eq!(req.bench, rep.bench, "sweep preserves matrix order");
+        assert_eq!(req.variant, rep.variant);
+        assert!(rep.stats.cycles > 0);
+    }
+    let serial = lookup(&rs, "gups", Variant::Serial, "smoke").unwrap();
+    let full = lookup(&rs, "gups", Variant::CoroAmuFull, "smoke").unwrap();
+    assert!(serial.stats.cycles >= full.stats.cycles / 100, "sanity");
+    // A failing cell aborts the sweep with the request named.
+    let bad = vec![RunRequest::new("nope", Variant::Serial)];
+    let err = engine.sweep(&bad, 1).unwrap_err();
+    assert!(format!("{err:#}").contains("nope"));
+}
+
+// --- Property-based invariants ----------------------------------------
 
 /// Build a random straight-line kernel of remote loads with random
 /// dependence structure (some loads' addresses use earlier loads' values).
@@ -103,7 +193,6 @@ fn random_load_kernel(g: &mut Gen) -> (Kernel, Vec<bool>) {
     let n = kb.param_val("n");
     kb.trip(n);
     let vars: Vec<VarId> = (0..nloads).map(|i| kb.var(&format!("v{i}"))).collect();
-    let mut body = Vec::new();
     let mut dependent = vec![false; nloads];
     for i in 0..nloads {
         // Depend on an earlier load's value with ~40% probability.
@@ -117,9 +206,9 @@ fn random_load_kernel(g: &mut Gen) -> (Kernel, Vec<bool>) {
                 Expr::add(Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3)), Expr::Imm(g.i64_in(0, 64) * 8)),
             )
         };
-        body.push(Stmt::Load { var: vars[i], addr, width: Width::W8 });
+        kb.load(vars[i], addr, Width::W8);
     }
-    (kb.build(body), dependent)
+    (kb.finish(), dependent)
 }
 
 /// Property (§III-C safety): coalesce groups never contain a member whose
@@ -152,24 +241,30 @@ fn coalescer_never_groups_dependent_loads() {
 
 /// Property: every variant of a random load kernel executes and leaves
 /// memory identical to the serial variant (loads only — no write races).
+/// All runs route through one engine session.
 #[test]
 fn random_kernels_agree_across_variants() {
+    let engine = Engine::new(SimConfig::nh_g());
     for seed in 0..40u64 {
         let mut g = Gen::new(seed ^ 0xABCD, 8);
         let (k, _) = random_load_kernel(&mut g);
-        let cfg = SimConfig::nh_g();
         let words = 4096u64;
         let run = |variant: Variant| {
-            let ck = compile(&k, &variant.opts(16), &cfg.amu).unwrap();
             let mut mem = MemImage::new();
             let p = mem.alloc("p", AddrSpace::Remote, words * 8 + 4096);
             for j in 0..words {
                 // Values stay in-bounds as indices: v & 511.
                 mem.write(p + j * 8, Width::W8, (j as i64 * 7) % 512).unwrap();
             }
-            let mut prog = sim::link(&cfg, &ck, mem, &[p as i64, 50]);
-            let st = sim::run(&cfg, &mut prog).unwrap();
-            (st.dyn_instrs, st.cycles)
+            let inst = Instance {
+                kernel: k.clone(),
+                mem,
+                params: vec![p as i64, 50],
+                check: Box::new(|_| Ok(())),
+                default_tasks: 16,
+            };
+            let r = engine.run_instance(inst, &variant.opts(16)).unwrap();
+            (r.stats.dyn_instrs, r.stats.cycles)
         };
         let (serial_i, _) = run(Variant::Serial);
         for v in [Variant::CoroAmuS, Variant::CoroAmuD, Variant::CoroAmuFull] {
@@ -214,7 +309,8 @@ fn amu_misuse_rejected() {
     assert!(amu.aset(1, 2).is_err(), "nested aset on same id must fail");
 }
 
-/// Sequential-variable misuse is a compile error, not silent corruption.
+/// Sequential-variable misuse is a compile error (surfaced through
+/// `Engine::prepare_kernel`), not silent corruption.
 #[test]
 fn sequential_var_misuse_rejected() {
     let mut kb = KernelBuilder::new("seqbad");
@@ -224,18 +320,16 @@ fn sequential_var_misuse_rejected() {
     let s = kb.var("s");
     let v = kb.var("v");
     kb.sequential_var(s);
-    let k = kb.build(vec![
-        // Writes the sequential var *before* a remote access: unsupported
-        // (only a trailing serialized-update tail can touch it).
-        Stmt::Let { var: s, expr: Expr::Imm(1) },
-        Stmt::Load {
-            var: v,
-            addr: Expr::add(Expr::Param(p), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))),
-            width: Width::W8,
-        },
-    ]);
-    let cfg = SimConfig::nh_g();
-    assert!(compile(&k, &Variant::CoroAmuFull.opts(8), &cfg.amu).is_err());
+    // Writes the sequential var *before* a remote access: unsupported
+    // (only a trailing serialized-update tail can touch it).
+    kb.let_(s, Expr::Imm(1)).load(
+        v,
+        Expr::add(Expr::Param(p), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))),
+        Width::W8,
+    );
+    let k = kb.finish();
+    let engine = Engine::new(SimConfig::nh_g());
+    assert!(engine.prepare_kernel(&k, &Variant::CoroAmuFull.opts(8)).is_err());
 }
 
 /// The atomic lock hand-off preserves exactness under heavy contention:
@@ -248,36 +342,39 @@ fn atomic_handoff_under_max_contention() {
     let n = kb.param_val("n");
     kb.trip(n);
     let kvar = kb.var("k");
-    let k = kb.build(vec![
-        Stmt::Load {
-            var: kvar,
-            addr: Expr::add(Expr::Param(keys), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))),
-            width: Width::W8,
-        },
-        Stmt::AtomicRmw {
-            op: AluOp::Add,
-            old: None,
-            addr: Expr::add(Expr::Param(hist), Expr::shl(Expr::Var(kvar), Expr::Imm(3))),
-            val: Expr::Imm(1),
-            width: Width::W8,
-        },
-    ]);
-    let cfg = SimConfig::nh_g();
+    kb.load(
+        kvar,
+        Expr::add(Expr::Param(keys), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))),
+        Width::W8,
+    )
+    .atomic_rmw(
+        AluOp::Add,
+        Expr::add(Expr::Param(hist), Expr::shl(Expr::Var(kvar), Expr::Imm(3))),
+        Expr::Imm(1),
+        Width::W8,
+    );
+    let k = kb.finish();
+    let engine = Engine::new(SimConfig::nh_g());
     let trip = 300i64;
     for v in [Variant::Serial, Variant::CoroAmuD, Variant::CoroAmuFull] {
-        let ck = compile(&k, &v.opts(64), &cfg.amu).unwrap();
         let mut mem = MemImage::new();
         let kb_ = mem.alloc("keys", AddrSpace::Remote, trip as u64 * 8);
         let hb = mem.alloc("hist", AddrSpace::Remote, 64);
         for i in 0..trip as u64 {
             mem.write(kb_ + i * 8, Width::W8, 3).unwrap(); // ALL to bucket 3
         }
-        let mut prog = sim::link(&cfg, &ck, mem, &[kb_ as i64, hb as i64, trip]);
-        let st = sim::run(&cfg, &mut prog).unwrap();
-        let got = prog.mem.read(hb + 3 * 8, Width::W8).unwrap();
+        let inst = Instance {
+            kernel: k.clone(),
+            mem,
+            params: vec![kb_ as i64, hb as i64, trip],
+            check: Box::new(|_| Ok(())),
+            default_tasks: 64,
+        };
+        let r = engine.run_instance(inst, &v.opts(64)).unwrap();
+        let got = r.mem.read(hb + 3 * 8, Width::W8).unwrap();
         assert_eq!(got, trip, "{}: lost updates under contention", v.label());
         if v.needs_amu() {
-            assert!(st.awaits > 0, "{}: expected lock waits under total contention", v.label());
+            assert!(r.stats.awaits > 0, "{}: expected lock waits under total contention", v.label());
         }
     }
 }
@@ -307,32 +404,36 @@ fn nested_coroutine_roundtrip() {
         ret_var: Some(0),
         nvars: 1,
     });
-    let k = kb.build(vec![
-        Stmt::Call { callee: child, args: vec![Expr::Param(p), Expr::Var(ITER_VAR)], ret: Some(r) },
-        Stmt::Store {
-            val: Expr::Var(r),
-            addr: Expr::add(Expr::Param(out), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))),
-            width: Width::W8,
-        },
-    ]);
-    let cfg = SimConfig::nh_g();
+    kb.push(Stmt::Call { callee: child, args: vec![Expr::Param(p), Expr::Var(ITER_VAR)], ret: Some(r) })
+        .store(
+            Expr::Var(r),
+            Expr::add(Expr::Param(out), Expr::shl(Expr::Var(ITER_VAR), Expr::Imm(3))),
+            Width::W8,
+        );
+    let k = kb.finish();
+    let engine = Engine::new(SimConfig::nh_g());
     let trip = 100u64;
     for v in [Variant::Serial, Variant::CoroAmuS, Variant::CoroAmuD, Variant::CoroAmuFull] {
-        let ck = compile(&k, &v.opts(16), &cfg.amu).unwrap();
         let mut mem = MemImage::new();
         let pb = mem.alloc("p", AddrSpace::Remote, trip * 8);
         let ob = mem.alloc("out", AddrSpace::Local, trip * 8);
         for i in 0..trip {
             mem.write(pb + i * 8, Width::W8, (i * i) as i64).unwrap();
         }
-        let mut prog = sim::link(&cfg, &ck, mem, &[pb as i64, ob as i64, trip as i64]);
-        let st = sim::run(&cfg, &mut prog).unwrap();
+        let inst = Instance {
+            kernel: k.clone(),
+            mem,
+            params: vec![pb as i64, ob as i64, trip as i64],
+            check: Box::new(|_| Ok(())),
+            default_tasks: 16,
+        };
+        let run = engine.run_instance(inst, &v.opts(16)).unwrap();
         for i in 0..trip {
-            let got = prog.mem.read(ob + i * 8, Width::W8).unwrap();
+            let got = run.mem.read(ob + i * 8, Width::W8).unwrap();
             assert_eq!(got, (i * i) as i64, "{} out[{i}]", v.label());
         }
         if v.needs_amu() {
-            assert!(st.awaits > 0, "{}: nested calls should use await/asignal", v.label());
+            assert!(run.stats.awaits > 0, "{}: nested calls should use await/asignal", v.label());
         }
     }
 }

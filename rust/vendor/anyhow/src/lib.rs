@@ -1,0 +1,162 @@
+//! Minimal, API-compatible shim for the subset of [`anyhow`] that coroamu
+//! uses. The build environment has no network/registry access, so the real
+//! crate cannot be fetched; this path dependency keeps `use anyhow::...`
+//! call sites untouched while remaining fully self-contained.
+//!
+//! Covered surface:
+//! * [`Error`] / [`Result`] (with the `E = Error` default),
+//! * [`anyhow!`], [`bail!`], [`ensure!`] (format-string forms),
+//! * [`Context::context`] / [`Context::with_context`] on `Result` and
+//!   `Option`,
+//! * `{e}` / `{e:#}` formatting (both render the full context chain,
+//!   outermost first, joined by `": "` — the same shape the real crate
+//!   produces for `{:#}`).
+//!
+//! Not covered (unused here): downcasting, backtraces, source() chains.
+
+use std::fmt;
+
+/// A string-backed error with an outermost-first context chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap with an outer context layer, like `anyhow::Error::context`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors the real crate: any std error converts via `?`. `Error` itself
+// deliberately does not implement `std::error::Error`, which is what makes
+// this blanket impl coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, like `anyhow::Context`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fail() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fail().unwrap_err();
+        assert_eq!(format!("{e}"), "inner 42");
+        assert_eq!(format!("{e:#}"), "inner 42");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: Result<()> = fail().context("outer");
+        assert_eq!(format!("{:#}", r.unwrap_err()), "outer: inner 42");
+        let r: Result<()> = fail().with_context(|| format!("outer {}", 1));
+        assert_eq!(format!("{:#}", r.unwrap_err()), "outer 1: inner 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert_eq!(format!("{}", none.context("missing").unwrap_err()), "missing");
+        assert_eq!(Some(7).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(v: i64) -> Result<i64> {
+            ensure!(v > 0, "v = {v}, want positive");
+            Ok(v)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(format!("{}", check(-1).unwrap_err()), "v = -1, want positive");
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}
