@@ -1,17 +1,94 @@
 //! Micro-benchmarks of the simulator substrate itself (the L3 hot path):
+//! per-sweep-point simulated MIPS (decode-once vs reference interpreter),
 //! interpreter throughput per variant, cache-model probe rate, predictor
-//! update rate. This is the §Perf instrumentation — before/after numbers
-//! are recorded in EXPERIMENTS.md §Perf.
+//! update rate. The `sim_mips/*` before/after numbers are recorded in
+//! BENCH_sim.json at the repo root.
 //!
-//! Run: `cargo bench --offline` (filter: `cargo bench -- interp`).
+//! Run: `cargo bench --offline` (filter: `cargo bench -- sim_mips`).
 
-use coroamu::benchmarks::Scale;
+use coroamu::benchmarks::{self, Scale};
 use coroamu::compiler::Variant;
 use coroamu::config::SimConfig;
 use coroamu::engine::{Engine, RunRequest};
-use coroamu::sim::MemImage;
+use coroamu::sim::{self, MemImage};
 use coroamu::util::benchkit::Bench;
 use coroamu::util::rng::Rng;
+
+/// Simulated-MIPS per sweep point, before/after this repo's decode-once
+/// pipeline. Both sides run the complete per-point work the engine
+/// performs in a sweep (kernel through the compile cache, link, simulate,
+/// native-oracle check):
+///
+/// * `reference` — the pre-change shape: the benchmark instance (dataset
+///   synthesis + oracle precomputation) is rebuilt for every point and
+///   the program runs on the tree-walking reference interpreter.
+/// * `decoded` — the current engine path: dataset restored from the
+///   copy-on-write cache, program run on the decode-once interpreter.
+///
+/// The throughput metric is simulated dynamic instructions per
+/// wall-second (printed as M instr/s == simulated MIPS); results land in
+/// BENCH_sim.json at the repo root.
+fn sim_mips(b: &mut Bench, bench_name: &str, variant: Variant) {
+    let scale = Scale::Small;
+    let seed = 42u64;
+
+    let dec_name = format!("sim_mips/{}/{}/decoded", bench_name, variant.label());
+    if b.enabled(&dec_name) {
+        let engine = Engine::new(SimConfig::nh_g());
+        b.run(&dec_name, "instr", || {
+            let req = RunRequest::new(bench_name, variant).scale(scale).seed(seed);
+            let r = engine.run(req).unwrap();
+            r.stats.dyn_instrs as f64
+        });
+    }
+
+    let ref_name = format!("sim_mips/{}/{}/reference", bench_name, variant.label());
+    if b.enabled(&ref_name) {
+        let engine = Engine::new(SimConfig::nh_g());
+        let cfg = engine.config().clone();
+        b.run(&ref_name, "instr", || {
+            let bench = benchmarks::by_name(bench_name).unwrap();
+            let inst = bench.instance(scale, seed).unwrap();
+            let prepared = engine
+                .prepare_kernel(&inst.kernel, &variant.opts(inst.default_tasks))
+                .unwrap();
+            let mut prog = sim::link(&cfg, &prepared.ck, inst.mem, &inst.params);
+            let stats = sim::run_reference(&cfg, &mut prog).unwrap();
+            (inst.check)(&prog.mem).unwrap();
+            stats.dyn_instrs as f64
+        });
+    }
+}
+
+/// Speedup summary + BENCH_sim.json at the repo root.
+fn record_sim_mips(b: &Bench) {
+    let group = b.subset("sim_mips/");
+    if group.samples.is_empty() {
+        return;
+    }
+    for s in &group.samples {
+        let Some(rest) = s.name.strip_suffix("/decoded") else { continue };
+        let refname = format!("{rest}/reference");
+        let (Some((dec, _)), Some((rf, _))) = (
+            s.throughput,
+            group.samples.iter().find(|r| r.name == refname).and_then(|r| r.throughput),
+        ) else {
+            continue;
+        };
+        println!(
+            "speedup {:<38} {:.2}x  ({:.2} -> {:.2} simulated MIPS)",
+            rest.trim_start_matches("sim_mips/"),
+            dec / rf,
+            rf / 1e6,
+            dec / 1e6
+        );
+    }
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sim.json");
+    match group.write_json(&path) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+}
 
 fn interp_throughput(b: &mut Bench, bench_name: &str, variant: Variant) {
     let name = format!("interp/{}/{}", bench_name, variant.label());
@@ -77,6 +154,9 @@ fn mem_image_rw(b: &mut Bench) {
 fn main() {
     let mut b = Bench::from_env();
     println!("== simulator substrate micro-benchmarks ==");
+    sim_mips(&mut b, "gups", Variant::Serial);
+    sim_mips(&mut b, "gups", Variant::CoroAmuFull);
+    sim_mips(&mut b, "bfs", Variant::CoroAmuFull);
     interp_throughput(&mut b, "gups", Variant::Serial);
     interp_throughput(&mut b, "gups", Variant::CoroAmuFull);
     interp_throughput(&mut b, "bs", Variant::CoroAmuD);
@@ -85,4 +165,5 @@ fn main() {
     bpu_update_rate(&mut b);
     mem_image_rw(&mut b);
     b.finish();
+    record_sim_mips(&b);
 }

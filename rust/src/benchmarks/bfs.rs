@@ -217,7 +217,7 @@ impl Benchmark for Bfs {
                 g.next_level,
                 g.frontier.len() as i64,
             ],
-            check: Box::new(check),
+            check: std::sync::Arc::new(check),
             default_tasks: 64,
         })
     }

@@ -106,7 +106,7 @@ impl Benchmark for BinarySearch {
             kernel: kernel(),
             mem,
             params: vec![arr as i64, out as i64, kmask, n as i64],
-            check: Box::new(check),
+            check: std::sync::Arc::new(check),
             default_tasks: 64,
         })
     }

@@ -81,7 +81,7 @@ impl Benchmark for Gups {
             kernel: kernel(),
             mem,
             params: vec![tab as i64, mask, n as i64],
-            check: Box::new(check),
+            check: std::sync::Arc::new(check),
             default_tasks: 64,
         })
     }

@@ -188,7 +188,7 @@ impl Benchmark for HashJoin {
             kernel: kernel(),
             mem,
             params: vec![tuples as i64, buckets as i64, res as i64, (nbuckets - 1) as i64, ntuples as i64],
-            check: Box::new(check),
+            check: std::sync::Arc::new(check),
             default_tasks: 64,
         })
     }

@@ -77,7 +77,7 @@ impl Benchmark for IntSort {
             kernel: kernel(),
             mem,
             params: vec![keys as i64, hist as i64, nkeys as i64],
-            check: Box::new(check),
+            check: std::sync::Arc::new(check),
             default_tasks: 48,
         })
     }

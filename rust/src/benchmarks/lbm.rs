@@ -115,7 +115,7 @@ impl Benchmark for Lbm {
             kernel: kernel(w),
             mem,
             params: vec![src as i64, dst as i64, trip as i64],
-            check: Box::new(check),
+            check: std::sync::Arc::new(check),
             default_tasks: 48,
         })
     }

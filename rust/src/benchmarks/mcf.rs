@@ -106,7 +106,7 @@ impl Benchmark for Mcf {
             kernel: kernel(),
             mem,
             params: vec![arcs as i64, nodes as i64, res as i64, narcs as i64],
-            check: Box::new(check),
+            check: std::sync::Arc::new(check),
             default_tasks: 64,
         })
     }

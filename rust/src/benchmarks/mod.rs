@@ -31,11 +31,12 @@ use crate::compiler::Variant;
 use crate::config::SimConfig;
 use crate::sim::{MemImage, RunStats};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Problem scale. `Tiny` uses the fixed shapes shared with the AOT JAX
 /// oracle artifacts (see [`oracle_shapes`]); `Small` runs in unit tests;
 /// `Full` is used by the figure harness (datasets exceed the LLC).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Scale {
     Tiny,
     Small,
@@ -56,12 +57,17 @@ pub mod oracle_shapes {
 }
 
 /// A fully materialized benchmark run: kernel + datasets + oracle.
+///
+/// The oracle is `Arc`-shared (and the memory image copy-on-write), so
+/// the engine's dataset cache can hand out per-run instances without
+/// regenerating datasets or recomputing expected results — see
+/// `Engine::sweep`.
 pub struct Instance {
     pub kernel: Kernel,
     pub mem: MemImage,
     pub params: Vec<i64>,
     /// Native oracle: validates the final memory image.
-    pub check: Box<dyn Fn(&MemImage) -> Result<()> + Send>,
+    pub check: Arc<dyn Fn(&MemImage) -> Result<()> + Send + Sync>,
     /// Default concurrency used by the paper for this workload.
     pub default_tasks: usize,
 }

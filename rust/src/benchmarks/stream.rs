@@ -78,7 +78,7 @@ impl Benchmark for Stream {
             kernel: kernel(),
             mem,
             params: vec![a as i64, b as i64, c as i64, SCALAR.to_bits() as i64, n as i64],
-            check: Box::new(check),
+            check: std::sync::Arc::new(check),
             default_tasks: 64,
         })
     }

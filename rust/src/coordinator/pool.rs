@@ -1,17 +1,50 @@
 //! Worker-thread pool for fanning simulation jobs across cores (no tokio
 //! in the offline environment; simulations are CPU-bound anyway).
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Number of worker threads to use by default.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
 }
 
+/// One pre-allocated result slot. Workers write slots lock-free: the
+/// atomic work cursor hands each index to exactly one worker, so every
+/// slot has exactly one writer, and the `join` at the end of the scope
+/// publishes the writes to the collecting thread.
+struct Slot<T>(UnsafeCell<Option<T>>);
+
+// SAFETY: slots are shared across worker threads, but the index
+// uniqueness invariant above guarantees no slot is ever written by two
+// threads (and never read until all writers have been joined).
+unsafe impl<T: Send> Sync for Slot<T> {}
+
+impl<T> Slot<T> {
+    fn new() -> Self {
+        Slot(UnsafeCell::new(None))
+    }
+
+    /// Write the slot's value.
+    ///
+    /// SAFETY: the caller must be the unique writer of this slot, and no
+    /// reads may occur before the writer thread is joined.
+    unsafe fn set(&self, v: T) {
+        *self.0.get() = Some(v);
+    }
+
+    fn into_inner(self) -> Option<T> {
+        self.0.into_inner()
+    }
+}
+
 /// Evaluate `f(0..n)` across `threads` workers (work-stealing via an
 /// atomic cursor); results are returned in index order. Panics in workers
 /// propagate.
+///
+/// Results land lock-free in per-index slots — there is no shared results
+/// mutex for completed items to serialize on, so high-thread sweeps of
+/// short jobs scale with the worker count.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -22,7 +55,7 @@ where
         return (0..n).map(&f).collect();
     }
     let cursor = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    let slots: Vec<Slot<T>> = (0..n).map(|_| Slot::new()).collect();
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
             .map(|_| {
@@ -32,7 +65,9 @@ where
                         break;
                     }
                     let r = f(i);
-                    results.lock().unwrap()[i] = Some(r);
+                    // SAFETY: `fetch_add` returned `i` to this worker
+                    // alone, and the main thread only reads after join.
+                    unsafe { slots[i].set(r) };
                 })
             })
             .collect();
@@ -40,7 +75,7 @@ where
             h.join().expect("worker panicked");
         }
     });
-    results.into_inner().unwrap().into_iter().map(|r| r.expect("missing result")).collect()
+    slots.into_iter().map(|s| s.into_inner().expect("missing result")).collect()
 }
 
 #[cfg(test)]
@@ -63,6 +98,20 @@ mod tests {
     fn empty_input() {
         let out: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn high_thread_stress_fills_every_slot() {
+        // Many short jobs over many workers: the pre-change global mutex
+        // serialized exactly this shape. Every slot must come back, in
+        // order, with no loss under contention.
+        for _ in 0..8 {
+            let out = parallel_map(1000, 16, |i| i * 3);
+            assert_eq!(out.len(), 1000);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * 3);
+            }
+        }
     }
 
     #[test]

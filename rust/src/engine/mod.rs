@@ -28,6 +28,13 @@
 //! issue-many amortization the AMU line of work calls for. [`Engine::sweep`]
 //! fans a request matrix across the worker pool and subsumes the old
 //! `coordinator::run_matrix`.
+//!
+//! Datasets are cached the same way: the first run of a (bench, scale,
+//! seed) triple materializes the benchmark instance — dataset synthesis
+//! plus the oracle's expected-result computation — and every subsequent
+//! run restores it from a copy-on-write [`MemImage`] snapshot instead of
+//! regenerating it. A latency sweep therefore builds each dataset exactly
+//! once (see [`Engine::dataset_stats`]), mirroring the kernel cache.
 
 use crate::benchmarks::{self, Instance, Scale};
 use crate::compiler::{compile, CodegenOpts, CompiledKernel, Variant};
@@ -36,7 +43,7 @@ use crate::coordinator::pool;
 use crate::sim::{self, MemImage, RunStats};
 use anyhow::{anyhow, Result};
 use std::collections::hash_map::DefaultHasher;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -56,6 +63,58 @@ fn fingerprint<T: std::fmt::Debug>(t: &T) -> u64 {
     let mut h = DefaultHasher::new();
     format!("{t:?}").hash(&mut h);
     h.finish()
+}
+
+/// Dataset-cache key: one benchmark instance per (bench, scale, seed).
+/// Latency, variant and codegen options are simulate-time knobs that do
+/// not affect the dataset, so they are deliberately absent.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct DatasetKey {
+    bench: String,
+    scale: Scale,
+    seed: u64,
+}
+
+/// A materialized benchmark instance held by the dataset cache: the
+/// kernel AST, the pristine memory image (copy-on-write master), the
+/// parameter bindings and the shared oracle.
+struct DatasetTemplate {
+    kernel: crate::compiler::ast::Kernel,
+    mem: MemImage,
+    params: Vec<i64>,
+    check: Arc<dyn Fn(&MemImage) -> Result<()> + Send + Sync>,
+    default_tasks: usize,
+}
+
+impl DatasetTemplate {
+    /// Hand out a per-run instance: O(#regions) snapshot, no dataset
+    /// regeneration, no oracle recomputation.
+    fn instantiate(&self) -> Instance {
+        Instance {
+            kernel: self.kernel.clone(),
+            mem: self.mem.snapshot(),
+            params: self.params.clone(),
+            check: self.check.clone(),
+            default_tasks: self.default_tasks,
+        }
+    }
+}
+
+/// Per-key build cell: workers needing the same dataset serialize on the
+/// cell's own mutex (each dataset is materialized exactly once), while
+/// workers after *different* datasets never contend with a build.
+type DatasetCell = Arc<Mutex<Option<Arc<DatasetTemplate>>>>;
+
+/// Bound on retained dataset templates (FIFO eviction). Sized for the
+/// harness's worst case — all eight benchmarks at two seeds live in one
+/// figure sweep — while keeping Scale::Full memory bounded.
+const DATASET_CACHE_CAP: usize = 16;
+
+#[derive(Default)]
+struct DatasetCache {
+    map: HashMap<DatasetKey, DatasetCell>,
+    /// Insertion order, for FIFO eviction once the cap is reached.
+    order: VecDeque<DatasetKey>,
 }
 
 /// Hit/miss accounting for the compiled-kernel cache.
@@ -254,6 +313,9 @@ pub struct Engine {
     cache: Mutex<HashMap<CacheKey, Arc<CompiledKernel>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    datasets: Mutex<DatasetCache>,
+    ds_hits: AtomicU64,
+    ds_misses: AtomicU64,
 }
 
 impl Engine {
@@ -263,6 +325,9 @@ impl Engine {
             cache: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            datasets: Mutex::new(DatasetCache::default()),
+            ds_hits: AtomicU64::new(0),
+            ds_misses: AtomicU64::new(0),
         }
     }
 
@@ -279,15 +344,88 @@ impl Engine {
         }
     }
 
+    /// Hit/miss accounting for the dataset cache: a miss is one full
+    /// benchmark-instance materialization (dataset synthesis + oracle
+    /// precomputation); a hit is a copy-on-write snapshot restore.
+    pub fn dataset_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.ds_hits.load(Ordering::Relaxed),
+            misses: self.ds_misses.load(Ordering::Relaxed),
+            entries: self.datasets.lock().unwrap().map.len(),
+        }
+    }
+
+    /// Fetch (or build) the dataset template for a (bench, scale, seed)
+    /// triple. The global map lock is only held to look up / insert the
+    /// per-key cell; the (potentially expensive) materialization runs
+    /// under that cell's own mutex, so each dataset is still built
+    /// exactly once but a slow build never stalls workers hitting other,
+    /// already-built datasets.
+    fn dataset(&self, bench: &str, scale: Scale, seed: u64) -> Result<Arc<DatasetTemplate>> {
+        let key = DatasetKey { bench: bench.to_ascii_lowercase(), scale, seed };
+        let cell: DatasetCell = {
+            let mut cache = self.datasets.lock().unwrap();
+            match cache.map.get(&key) {
+                Some(cell) => cell.clone(),
+                None => {
+                    if cache.map.len() >= DATASET_CACHE_CAP {
+                        if let Some(old) = cache.order.pop_front() {
+                            cache.map.remove(&old);
+                        }
+                    }
+                    let cell: DatasetCell = Arc::new(Mutex::new(None));
+                    cache.map.insert(key.clone(), cell.clone());
+                    cache.order.push_back(key.clone());
+                    cell
+                }
+            }
+        };
+        let mut slot = cell.lock().unwrap();
+        if let Some(t) = slot.as_ref() {
+            self.ds_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(t.clone());
+        }
+        let built = (|| -> Result<Arc<DatasetTemplate>> {
+            let b =
+                benchmarks::by_name(bench).ok_or_else(|| anyhow!("unknown benchmark {bench}"))?;
+            let inst = b.instance(scale, seed)?;
+            Ok(Arc::new(DatasetTemplate {
+                kernel: inst.kernel,
+                mem: inst.mem,
+                params: inst.params,
+                check: inst.check,
+                default_tasks: inst.default_tasks,
+            }))
+        })();
+        let t = match built {
+            Ok(t) => t,
+            Err(e) => {
+                // Don't let a failed build squat in the bounded cache: a
+                // never-built cell would consume a FIFO slot and inflate
+                // the entries accounting.
+                drop(slot);
+                let mut cache = self.datasets.lock().unwrap();
+                if cache.map.get(&key).map(|c| Arc::ptr_eq(c, &cell)).unwrap_or(false) {
+                    cache.map.remove(&key);
+                    cache.order.retain(|k| k != &key);
+                }
+                return Err(e);
+            }
+        };
+        *slot = Some(t.clone());
+        self.ds_misses.fetch_add(1, Ordering::Relaxed);
+        Ok(t)
+    }
+
     /// Compile (or fetch) the kernel of a registered benchmark under a
     /// variant's canonical options at the benchmark's default concurrency.
     ///
-    /// Note: this materializes a full instance at the requested scale to
+    /// Note: this resolves a full instance at the requested scale to
     /// obtain the kernel, because some kernel ASTs are scale-dependent
     /// (lbm bakes the lattice width in as constant offsets) — substituting
-    /// a smaller scale here would compile the wrong kernel. Prefer
-    /// [`Engine::run`]/[`Engine::sweep`] on hot paths; they reuse the
-    /// instance they must build anyway.
+    /// a smaller scale here would compile the wrong kernel. The instance
+    /// comes from the dataset cache, so repeated preparations only pay
+    /// the materialization once.
     pub fn prepare(
         &self,
         bench: &str,
@@ -295,9 +433,8 @@ impl Engine {
         scale: Scale,
         seed: u64,
     ) -> Result<Prepared> {
-        let b = benchmarks::by_name(bench).ok_or_else(|| anyhow!("unknown benchmark {bench}"))?;
-        let inst = b.instance(scale, seed)?;
-        self.prepare_kernel(&inst.kernel, &variant.opts(inst.default_tasks))
+        let tmpl = self.dataset(bench, scale, seed)?;
+        self.prepare_kernel(&tmpl.kernel, &variant.opts(tmpl.default_tasks))
     }
 
     /// Compile (or fetch) an arbitrary kernel under explicit options.
@@ -318,9 +455,8 @@ impl Engine {
     }
 
     fn run_ref(&self, req: &RunRequest) -> Result<RunReport> {
-        let bench =
-            benchmarks::by_name(&req.bench).ok_or_else(|| anyhow!("unknown benchmark {}", req.bench))?;
-        let inst = bench.instance(req.scale, req.seed)?;
+        let tmpl = self.dataset(&req.bench, req.scale, req.seed)?;
+        let inst = tmpl.instantiate();
         let tasks = if req.tasks == 0 { inst.default_tasks } else { req.tasks };
         let opts = match &req.opts {
             Some(o) => o.clone(),
@@ -496,10 +632,79 @@ mod tests {
     }
 
     #[test]
+    fn sweep_builds_each_dataset_exactly_once() {
+        let engine = Engine::new(SimConfig::nh_g());
+        let matrix: Vec<RunRequest> = [100.0, 200.0, 400.0, 800.0, 1600.0]
+            .iter()
+            .map(|lat| {
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .latency_ns(*lat)
+                    .key(format!("{lat}"))
+            })
+            .collect();
+        let rs = engine.sweep(&matrix, 4).unwrap();
+        assert_eq!(rs.len(), 5);
+        for r in &rs {
+            assert!(r.stats.cycles > 0);
+        }
+        let ds = engine.dataset_stats();
+        assert_eq!(ds.misses, 1, "a 5-point sweep must build the dataset exactly once");
+        assert_eq!(ds.hits, 4, "the other four points restore the snapshot");
+        assert_eq!(ds.entries, 1);
+        // The oracle ran on all five restored images (Engine::exec always
+        // checks), so restore fidelity is covered by the sweep passing.
+    }
+
+    #[test]
+    fn dataset_cache_forks_on_scale_and_seed() {
+        let engine = Engine::new(SimConfig::nh_g());
+        engine.run(RunRequest::new("gups", Variant::Serial).scale(Scale::Tiny).seed(1)).unwrap();
+        engine.run(RunRequest::new("gups", Variant::Serial).scale(Scale::Tiny).seed(2)).unwrap();
+        engine.run(RunRequest::new("gups", Variant::Serial).scale(Scale::Small).seed(1)).unwrap();
+        let ds = engine.dataset_stats();
+        assert_eq!((ds.hits, ds.misses, ds.entries), (0, 3, 3));
+    }
+
+    #[test]
+    fn dataset_cache_is_bounded() {
+        let engine = Engine::new(SimConfig::nh_g());
+        for seed in 0..20u64 {
+            engine
+                .run(RunRequest::new("gups", Variant::Serial).scale(Scale::Tiny).seed(seed))
+                .unwrap();
+        }
+        let ds = engine.dataset_stats();
+        assert_eq!(ds.misses, 20, "distinct seeds are distinct datasets");
+        assert!(
+            ds.entries <= super::DATASET_CACHE_CAP,
+            "dataset cache must stay bounded, got {} entries",
+            ds.entries
+        );
+    }
+
+    #[test]
+    fn dataset_restore_is_pure() {
+        // The first run mutates its snapshot (GUPS updates the table);
+        // the second must see the pristine dataset again and reproduce
+        // the run bit-for-bit.
+        let engine = Engine::new(SimConfig::nh_g());
+        let req = || RunRequest::new("gups", Variant::Serial).scale(Scale::Tiny).seed(9);
+        let a = engine.run(req()).unwrap().stats;
+        let b = engine.run(req()).unwrap().stats;
+        assert_eq!(a, b, "restored dataset must reproduce the run exactly");
+        let ds = engine.dataset_stats();
+        assert_eq!((ds.hits, ds.misses), (1, 1));
+    }
+
+    #[test]
     fn unknown_bench_errors() {
         let engine = Engine::new(SimConfig::nh_g());
         assert!(engine.run(RunRequest::new("nope", Variant::Serial)).is_err());
         assert!(engine.prepare("nope", Variant::Serial, Scale::Tiny, 1).is_err());
+        let ds = engine.dataset_stats();
+        assert_eq!(ds.entries, 0, "failed builds must not occupy dataset-cache slots");
+        assert_eq!(ds.misses, 0);
     }
 
     #[test]

@@ -156,6 +156,13 @@ impl Core {
         r
     }
 
+    /// Scoreboard ready cycle of a single register (decode-once hot path;
+    /// avoids building an operand slice per dynamic instruction).
+    #[inline(always)]
+    pub fn ready_of(&self, r: Reg) -> u64 {
+        self.reg_ready[r as usize]
+    }
+
     /// Acquire a load-queue slot at `t` (delayed if full).
     pub fn lq_acquire(&mut self, t: u64) -> u64 {
         Self::queue_acquire(&mut self.lq, self.lq_cap, t, &mut self.stats.stalls)

@@ -1,0 +1,279 @@
+//! Decode-once lowering: CoroIR [`Function`]s flattened into a dense
+//! micro-op array the interpreter walks without per-instruction enum
+//! plumbing.
+//!
+//! The reference interpreter re-derives everything per dynamic
+//! instruction: it chases the block vector, matches the nested `Inst`
+//! enum, builds operand slices for readiness checks, and looks up ALU
+//! latencies. At `Program` link time this module resolves all of that
+//! once per *static* instruction: operands become [`Src`] slots (register
+//! index or inlined immediate), per-op latencies and block tags are
+//! precomputed, and terminators become ordinary micro-ops whose targets
+//! are indices into the same flat array. The hot loop in
+//! [`super::interp`] is then a program-counter walk over `ops`.
+
+use crate::ir::*;
+
+/// Sentinel register index marking an immediate [`Src`].
+pub const NO_REG: u32 = u32::MAX;
+
+/// A pre-resolved operand: register slot or inlined immediate.
+#[derive(Debug, Clone, Copy)]
+pub struct Src {
+    /// Register index, or [`NO_REG`] for an immediate.
+    pub reg: u32,
+    pub imm: i64,
+}
+
+impl Src {
+    fn of(o: Operand) -> Src {
+        match o {
+            Operand::Reg(r) => Src { reg: r, imm: 0 },
+            Operand::Imm(v) => Src { reg: NO_REG, imm: v },
+        }
+    }
+
+    /// Current value of the operand.
+    #[inline(always)]
+    pub fn value(self, regs: &[i64]) -> i64 {
+        if self.reg == NO_REG {
+            self.imm
+        } else {
+            regs[self.reg as usize]
+        }
+    }
+}
+
+/// Micro-op payload. Operands common to most ops live in [`UOp::a`] /
+/// [`UOp::b`]; the mapping per kind is documented on each variant.
+#[derive(Debug, Clone, Copy)]
+pub enum UKind {
+    /// a, b = operands; latency precomputed.
+    Alu { op: AluOp, dst: Reg, lat: u64 },
+    /// a, b = operands; latency precomputed.
+    Falu { op: FaluOp, dst: Reg, lat: u64 },
+    /// a = base.
+    Load { dst: Reg, off: i64, width: Width },
+    /// a = val, b = base.
+    Store { off: i64, width: Width },
+    /// a = val, b = base.
+    AtomicRmw { op: AluOp, dst: Reg, off: i64, width: Width },
+    /// a = base.
+    Prefetch { off: i64 },
+    /// a = id, b = base.
+    Aload { off: i64, bytes: u32, spm_off: u32, resume: BlockId },
+    /// a = id, b = base.
+    Astore { off: i64, bytes: u32, spm_off: u32, resume: BlockId },
+    /// a = id, b = n.
+    Aset,
+    Getfin { dst: Reg },
+    /// a = base, b = size.
+    Aconfig,
+    /// a = id.
+    Await { resume: BlockId },
+    /// a = id.
+    Asignal,
+    // ---- terminators ----
+    /// a = cond.
+    Br { then_: BlockId, else_: BlockId },
+    Jmp { target: BlockId },
+    /// a = target (holds a BlockId as a value).
+    IndirectJmp,
+    Bafin { handler_dst: Reg, id_dst: Reg, fallthrough: BlockId },
+    Halt,
+}
+
+/// One pre-decoded micro-op: payload plus everything the timing loop
+/// would otherwise re-derive from the enclosing block.
+#[derive(Debug, Clone, Copy)]
+pub struct UOp {
+    pub kind: UKind,
+    pub a: Src,
+    pub b: Src,
+    /// Source block (branch-history keys + error context).
+    pub bb: BlockId,
+    pub tag: CodeTag,
+    /// Precomputed `tag == CodeTag::CtxSwitch` (ctx-traffic accounting).
+    pub is_ctx: bool,
+}
+
+/// A [`Function`] lowered to a flat micro-op array. Block ids survive as
+/// indices into [`DecodedFunc::block_start`], so dynamic targets
+/// (indirect jumps, AMU resume blocks) translate with one array load.
+#[derive(Debug, Clone)]
+pub struct DecodedFunc {
+    pub name: String,
+    pub ops: Vec<UOp>,
+    /// BlockId -> index of that block's first op in `ops`.
+    pub block_start: Vec<u32>,
+    pub entry: BlockId,
+}
+
+impl DecodedFunc {
+    /// Flat-array index of a block's first op.
+    #[inline(always)]
+    pub fn start_of(&self, bb: BlockId) -> usize {
+        self.block_start[bb as usize] as usize
+    }
+}
+
+/// Integer-op execute latency (single source of truth — the reference
+/// interpreter reads the same table, so the two paths cannot drift).
+pub(crate) fn alu_latency(op: AluOp) -> u64 {
+    match op {
+        AluOp::Mul => 3,
+        AluOp::Div | AluOp::Rem => 20,
+        AluOp::Hash => 3,
+        _ => 1,
+    }
+}
+
+/// Float-op execute latency; see [`alu_latency`].
+pub(crate) fn falu_latency(op: FaluOp) -> u64 {
+    match op {
+        FaluOp::FDiv => 18,
+        FaluOp::IToF | FaluOp::FToI => 2,
+        _ => 4,
+    }
+}
+
+const IMM0: Src = Src { reg: NO_REG, imm: 0 };
+
+/// Lower `f` into its decode-once form. O(static instructions); called
+/// once per [`super::Program`] construction.
+pub fn decode(f: &Function) -> DecodedFunc {
+    let mut ops = Vec::with_capacity(f.static_len());
+    let mut block_start = Vec::with_capacity(f.blocks.len());
+    for (bi, blk) in f.blocks.iter().enumerate() {
+        let bb = bi as BlockId;
+        let tag = blk.tag;
+        let is_ctx = tag == CodeTag::CtxSwitch;
+        block_start.push(ops.len() as u32);
+        let uop = |kind: UKind, a: Src, b: Src| UOp { kind, a, b, bb, tag, is_ctx };
+        for inst in &blk.insts {
+            ops.push(match inst {
+                Inst::Alu { op, dst, a, b } => uop(
+                    UKind::Alu { op: *op, dst: *dst, lat: alu_latency(*op) },
+                    Src::of(*a),
+                    Src::of(*b),
+                ),
+                Inst::Falu { op, dst, a, b } => uop(
+                    UKind::Falu { op: *op, dst: *dst, lat: falu_latency(*op) },
+                    Src::of(*a),
+                    Src::of(*b),
+                ),
+                Inst::Load { dst, base, off, width, space: _ } => uop(
+                    UKind::Load { dst: *dst, off: *off, width: *width },
+                    Src::of(*base),
+                    IMM0,
+                ),
+                Inst::Store { val, base, off, width, space: _ } => uop(
+                    UKind::Store { off: *off, width: *width },
+                    Src::of(*val),
+                    Src::of(*base),
+                ),
+                Inst::AtomicRmw { op, dst, val, base, off, width, space: _ } => uop(
+                    UKind::AtomicRmw { op: *op, dst: *dst, off: *off, width: *width },
+                    Src::of(*val),
+                    Src::of(*base),
+                ),
+                Inst::Prefetch { base, off, space: _ } => {
+                    uop(UKind::Prefetch { off: *off }, Src::of(*base), IMM0)
+                }
+                Inst::Aload { id, base, off, bytes, spm_off, resume } => uop(
+                    UKind::Aload { off: *off, bytes: *bytes, spm_off: *spm_off, resume: *resume },
+                    Src::of(*id),
+                    Src::of(*base),
+                ),
+                Inst::Astore { id, base, off, bytes, spm_off, resume } => uop(
+                    UKind::Astore { off: *off, bytes: *bytes, spm_off: *spm_off, resume: *resume },
+                    Src::of(*id),
+                    Src::of(*base),
+                ),
+                Inst::Aset { id, n } => uop(UKind::Aset, Src::of(*id), Src::of(*n)),
+                Inst::Getfin { dst } => uop(UKind::Getfin { dst: *dst }, IMM0, IMM0),
+                Inst::Aconfig { base, size } => {
+                    uop(UKind::Aconfig, Src::of(*base), Src::of(*size))
+                }
+                Inst::Await { id, resume } => {
+                    uop(UKind::Await { resume: *resume }, Src::of(*id), IMM0)
+                }
+                Inst::Asignal { id } => uop(UKind::Asignal, Src::of(*id), IMM0),
+            });
+        }
+        ops.push(match &blk.term {
+            Term::Br { cond, then_, else_ } => {
+                uop(UKind::Br { then_: *then_, else_: *else_ }, Src::of(*cond), IMM0)
+            }
+            Term::Jmp(t) => uop(UKind::Jmp { target: *t }, IMM0, IMM0),
+            Term::IndirectJmp { target } => uop(UKind::IndirectJmp, Src::of(*target), IMM0),
+            Term::Bafin { handler_dst, id_dst, fallthrough } => uop(
+                UKind::Bafin {
+                    handler_dst: *handler_dst,
+                    id_dst: *id_dst,
+                    fallthrough: *fallthrough,
+                },
+                IMM0,
+                IMM0,
+            ),
+            Term::Halt => uop(UKind::Halt, IMM0, IMM0),
+        });
+    }
+    DecodedFunc { name: f.name.clone(), ops, block_start, entry: f.entry }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::FuncBuilder;
+    use crate::ir::Operand::{Imm, Reg as R};
+
+    #[test]
+    fn decode_flattens_blocks_with_inline_terminators() {
+        let mut b = FuncBuilder::new("d");
+        let x = b.reg();
+        b.mov(x, Imm(5));
+        let next = b.new_block("next", CodeTag::Scheduler);
+        b.jmp(next);
+        b.switch_to(next);
+        let y = b.alu(AluOp::Mul, R(x), Imm(3));
+        let _ = y;
+        b.halt();
+        let f = b.build();
+        let d = decode(&f);
+        // entry: mov + jmp; next: mul + halt.
+        assert_eq!(d.ops.len(), f.static_len());
+        assert_eq!(d.block_start, vec![0, 2]);
+        assert_eq!(d.start_of(1), 2);
+        assert!(matches!(d.ops[1].kind, UKind::Jmp { target: 1 }));
+        match d.ops[2].kind {
+            UKind::Alu { op: AluOp::Mul, lat, .. } => assert_eq!(lat, 3, "mul latency precomputed"),
+            ref k => panic!("expected mul, got {k:?}"),
+        }
+        assert_eq!(d.ops[2].tag, CodeTag::Scheduler);
+        assert_eq!(d.ops[2].bb, 1);
+        assert!(matches!(d.ops[3].kind, UKind::Halt));
+    }
+
+    #[test]
+    fn src_resolves_imm_and_reg() {
+        let regs = [10i64, 20];
+        assert_eq!(Src { reg: NO_REG, imm: -7 }.value(&regs), -7);
+        assert_eq!(Src { reg: 1, imm: 0 }.value(&regs), 20);
+    }
+
+    #[test]
+    fn ctx_flag_precomputed() {
+        let mut b = FuncBuilder::new("c");
+        let ctx = b.new_block("ctx", CodeTag::CtxSwitch);
+        b.jmp(ctx);
+        b.switch_to(ctx);
+        let v = b.load(Imm(0x1000_0000), 0, Width::W8, AddrSpace::Local);
+        let _ = v;
+        b.halt();
+        let d = decode(&b.build());
+        let load = d.ops.iter().find(|o| matches!(o.kind, UKind::Load { .. })).unwrap();
+        assert!(load.is_ctx);
+        assert!(!d.ops[0].is_ctx);
+    }
+}

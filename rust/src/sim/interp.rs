@@ -4,21 +4,40 @@
 //! simultaneously passed through the [`Core`] dataflow/ROB spine, the
 //! [`MemSys`] hierarchy, the BPU and the [`Amu`]. One CoroIR instruction
 //! models one machine instruction.
+//!
+//! Two execution paths share the timing model:
+//!
+//! * [`run`] — the decode-once path: the [`Program`]'s pre-lowered
+//!   [`DecodedFunc`] micro-op array is walked by program counter, with
+//!   operands, latencies and block metadata resolved at link time
+//!   (`sim::decode`). This is the hot path every figure sweep runs.
+//! * [`run_reference`] — the original tree-walking interpreter over
+//!   `Function`'s block/`Inst` enums, kept as the semantic baseline. The
+//!   differential suite (`tests/differential.rs` and the proptest in this
+//!   file's tests) pins that both paths produce bit-identical cycles,
+//!   stats and memory images.
 
 use super::amu::Amu;
 use super::bpu::{BafinPredictTable, Ittage, Tage};
 use super::core::{Cause, Core};
+use super::decode::{alu_latency, decode, falu_latency, DecodedFunc, Src, UKind, NO_REG};
 use super::mem::MemImage;
 use super::memsys::{AccessKind, MemSys};
 use super::stats::RunStats;
 use crate::config::SimConfig;
 use crate::ir::*;
 use anyhow::{bail, Context, Result};
+use std::sync::Arc;
 
-/// A runnable program: compiled function + memory image + register
-/// bindings (params, runtime area bases, SPM base).
+/// A runnable program: compiled function + its decode-once lowering +
+/// memory image + register bindings (params, runtime area bases, SPM
+/// base). Construct through [`Program::new`], which performs the
+/// link-time decode.
 pub struct Program {
     pub func: Function,
+    /// Decode-once lowering of `func` (shared so sweeps can clone the
+    /// program cheaply).
+    pub decoded: Arc<DecodedFunc>,
     pub mem: MemImage,
     pub reg_init: Vec<(Reg, i64)>,
     /// SPM slot stride for aload/astore placement (0 when no AMU).
@@ -27,6 +46,21 @@ pub struct Program {
     pub spm_base_reg: Option<Reg>,
     /// Safety valve: abort after this many dynamic instructions.
     pub max_dyn_instrs: u64,
+}
+
+impl Program {
+    /// Assemble a program, lowering `func` to its micro-op form once.
+    pub fn new(
+        func: Function,
+        mem: MemImage,
+        reg_init: Vec<(Reg, i64)>,
+        spm_slot_bytes: u32,
+        spm_base_reg: Option<Reg>,
+        max_dyn_instrs: u64,
+    ) -> Program {
+        let decoded = Arc::new(decode(&func));
+        Program { func, decoded, mem, reg_init, spm_slot_bytes, spm_base_reg, max_dyn_instrs }
+    }
 }
 
 fn alu_eval(op: AluOp, a: i64, b: i64) -> i64 {
@@ -92,23 +126,6 @@ fn falu_eval(op: FaluOp, a: i64, b: i64) -> i64 {
     out.to_bits() as i64
 }
 
-fn alu_latency(op: AluOp) -> u64 {
-    match op {
-        AluOp::Mul => 3,
-        AluOp::Div | AluOp::Rem => 20,
-        AluOp::Hash => 3,
-        _ => 1,
-    }
-}
-
-fn falu_latency(op: FaluOp) -> u64 {
-    match op {
-        FaluOp::FDiv => 18,
-        FaluOp::IToF | FaluOp::FToI => 2,
-        _ => 4,
-    }
-}
-
 struct Machine<'p> {
     func: &'p Function,
     mem: &'p mut MemImage,
@@ -126,6 +143,34 @@ struct Machine<'p> {
 }
 
 impl<'p> Machine<'p> {
+    /// Shared setup for both execution paths: timing structures + the
+    /// register file seeded from the link-time bindings.
+    fn new(cfg: &SimConfig, prog: &'p mut Program) -> Machine<'p> {
+        let nregs = prog.func.nregs;
+        let mut m = Machine {
+            func: &prog.func,
+            regs: vec![0i64; nregs as usize],
+            core: Core::new(&cfg.core, nregs),
+            msys: MemSys::new(cfg),
+            tage: Tage::new(&cfg.bpu),
+            ittage: Ittage::new(&cfg.bpu),
+            bpt: BafinPredictTable::new(&cfg.bpu),
+            amu: Amu::new(cfg.amu.request_table.max(1), cfg.l1d.latency_cycles),
+            aconfig_base: 0,
+            aconfig_size: 0,
+            spm_base: 0,
+            spm_slot: prog.spm_slot_bytes.max(1) as u64,
+            mem: &mut prog.mem,
+        };
+        for (r, v) in &prog.reg_init {
+            m.regs[*r as usize] = *v;
+        }
+        if let Some(sr) = prog.spm_base_reg {
+            m.spm_base = m.regs[sr as usize] as u64;
+        }
+        m
+    }
+
     #[inline]
     fn val(&self, o: Operand) -> i64 {
         match o {
@@ -145,6 +190,21 @@ impl<'p> Machine<'p> {
         t
     }
 
+    /// Earliest cycle at or after `d` that decoded source `a` is ready.
+    #[inline(always)]
+    fn ready1(&self, d: u64, a: Src) -> u64 {
+        if a.reg == NO_REG {
+            d
+        } else {
+            d.max(self.core.ready_of(a.reg))
+        }
+    }
+
+    #[inline(always)]
+    fn ready2(&self, d: u64, a: Src, b: Src) -> u64 {
+        self.ready1(self.ready1(d, a), b)
+    }
+
     fn mem_cause(&self, space: AddrSpace) -> Cause {
         match space {
             AddrSpace::Remote => Cause::RemoteMem,
@@ -155,36 +215,271 @@ impl<'p> Machine<'p> {
     fn spm_addr(&self, id: i64, off: u32) -> u64 {
         self.spm_base + id as u64 * self.spm_slot + off as u64
     }
+
+    /// Drain the pipeline and collect the run statistics.
+    fn finish(mut self) -> RunStats {
+        self.core.finish();
+        let mut stats = std::mem::take(&mut self.core.stats);
+        stats.l1_hits = self.msys.l1.stat_hits;
+        stats.l1_misses = self.msys.l1.stat_misses;
+        stats.far_lines = self.msys.far.lines_transferred;
+        let (mlp, busy) = self.msys.far.mlp(stats.cycles);
+        stats.far_mlp = mlp;
+        stats.far_busy_frac = busy;
+        stats.aloads = self.amu.stat_aloads;
+        stats.astores = self.amu.stat_astores;
+        stats.amu_max_inflight = self.amu.stat_max_inflight;
+        stats
+    }
 }
 
-/// Execute `prog` under `cfg`; returns the run statistics. The memory
-/// image is mutated in place (callers read results out for validation).
+/// Execute `prog` under `cfg` on the decode-once path; returns the run
+/// statistics. The memory image is mutated in place (callers read
+/// results out for validation). Semantically identical to
+/// [`run_reference`] — the differential suite pins this.
 pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
-    let nregs = prog.func.nregs;
-    let mut m = Machine {
-        func: &prog.func,
-        regs: vec![0i64; nregs as usize],
-        core: Core::new(&cfg.core, nregs),
-        msys: MemSys::new(cfg),
-        tage: Tage::new(&cfg.bpu),
-        ittage: Ittage::new(&cfg.bpu),
-        bpt: BafinPredictTable::new(&cfg.bpu),
-        amu: Amu::new(cfg.amu.request_table.max(1), cfg.l1d.latency_cycles),
-        aconfig_base: 0,
-        aconfig_size: 0,
-        spm_base: 0,
-        spm_slot: prog.spm_slot_bytes.max(1) as u64,
-        mem: &mut prog.mem,
-    };
-    for (r, v) in &prog.reg_init {
-        m.regs[*r as usize] = *v;
-    }
-    if let Some(sr) = prog.spm_base_reg {
-        m.spm_base = m.regs[sr as usize] as u64;
+    let dec = prog.decoded.clone();
+    let mut budget = prog.max_dyn_instrs;
+    let mut m = Machine::new(cfg, prog);
+
+    let mut pc = dec.start_of(dec.entry);
+    'run: loop {
+        let op = &dec.ops[pc];
+        if budget == 0 {
+            bail!("dynamic instruction budget exhausted in {} at bb{}", dec.name, op.bb);
+        }
+        budget -= 1;
+        let d = m.core.dispatch(op.tag);
+        match op.kind {
+            UKind::Alu { op: aop, dst, lat } => {
+                let v = alu_eval(aop, op.a.value(&m.regs), op.b.value(&m.regs));
+                m.regs[dst as usize] = v;
+                let exec = m.ready2(d, op.a, op.b);
+                m.core.commit(Some(dst), exec + lat, Cause::Compute);
+                pc += 1;
+            }
+            UKind::Falu { op: fop, dst, lat } => {
+                let v = falu_eval(fop, op.a.value(&m.regs), op.b.value(&m.regs));
+                m.regs[dst as usize] = v;
+                let exec = m.ready2(d, op.a, op.b);
+                m.core.commit(Some(dst), exec + lat, Cause::Compute);
+                pc += 1;
+            }
+            UKind::Load { dst, off, width } => {
+                let addr = (op.a.value(&m.regs).wrapping_add(off)) as u64;
+                let (v, space) = m
+                    .mem
+                    .read_ws(addr, width)
+                    .with_context(|| format!("load in bb{}", op.bb))?;
+                m.regs[dst as usize] = v;
+                let exec = m.ready1(d, op.a);
+                let t = m.core.lq_acquire(exec);
+                let done = m.msys.access(addr, space, AccessKind::Load, t);
+                m.core.lq_hold(done);
+                m.core.commit(Some(dst), done, m.mem_cause(space));
+                m.core.stats.loads += 1;
+                if op.is_ctx {
+                    m.core.stats.ctx_ops += 1;
+                }
+                pc += 1;
+            }
+            UKind::Store { off, width } => {
+                let addr = (op.b.value(&m.regs).wrapping_add(off)) as u64;
+                let space = m
+                    .mem
+                    .write_ws(addr, width, op.a.value(&m.regs))
+                    .with_context(|| format!("store in bb{}", op.bb))?;
+                let exec = m.ready2(d, op.a, op.b);
+                let t = m.core.sq_acquire(exec);
+                let drain = m.msys.access(addr, space, AccessKind::Store, t);
+                m.core.sq_hold(drain);
+                // Stores retire once queued; drain happens behind.
+                m.core.commit(None, exec + 1, Cause::Compute);
+                m.core.stats.stores += 1;
+                if op.is_ctx {
+                    m.core.stats.ctx_ops += 1;
+                }
+                pc += 1;
+            }
+            UKind::AtomicRmw { op: aop, dst, off, width } => {
+                let addr = (op.b.value(&m.regs).wrapping_add(off)) as u64;
+                let valv = op.a.value(&m.regs);
+                let (old, space) = m.mem.rmw_ws(addr, width, |old| alu_eval(aop, old, valv))?;
+                m.regs[dst as usize] = old;
+                let exec = m.ready2(d, op.a, op.b);
+                let t = m.core.lq_acquire(exec);
+                // Atomics serialize: full round trip + write drain.
+                let done = m.msys.access(addr, space, AccessKind::Atomic, t);
+                let drain = m.msys.access(addr, space, AccessKind::Store, done);
+                m.core.lq_hold(drain);
+                m.core.commit(Some(dst), done, m.mem_cause(space));
+                m.core.stats.loads += 1;
+                m.core.stats.stores += 1;
+                pc += 1;
+            }
+            UKind::Prefetch { off } => {
+                let addr = (op.a.value(&m.regs).wrapping_add(off)) as u64;
+                let space = m.mem.space_of(addr).unwrap_or(AddrSpace::Local);
+                let exec = m.ready1(d, op.a);
+                // Non-binding, non-blocking; occupies MSHRs while the
+                // fill is in flight.
+                m.msys.access(addr, space, AccessKind::Prefetch, exec);
+                m.core.commit(None, exec + 1, Cause::Compute);
+                m.core.stats.prefetches += 1;
+                pc += 1;
+            }
+            UKind::Aload { off, bytes, spm_off, resume } => {
+                let idv = op.a.value(&m.regs);
+                let addr = (op.b.value(&m.regs).wrapping_add(off)) as u64;
+                let spm_dst = m.spm_addr(idv, spm_off);
+                let (space, _) = m
+                    .mem
+                    .copy_ws(addr, spm_dst, bytes as u64)
+                    .with_context(|| format!("aload id={idv} in bb{}", op.bb))?;
+                let exec = m.ready2(d, op.a, op.b);
+                let msys = &mut m.msys;
+                let issue = m.amu.transfer(idv, resume, exec, false, |t| {
+                    msys.amu_transfer(addr, bytes, space, t)
+                });
+                m.core.commit(
+                    None,
+                    issue + 1,
+                    if issue > exec { Cause::Backpressure } else { Cause::Compute },
+                );
+                pc += 1;
+            }
+            UKind::Astore { off, bytes, spm_off, resume } => {
+                let idv = op.a.value(&m.regs);
+                let addr = (op.b.value(&m.regs).wrapping_add(off)) as u64;
+                let spm_src = m.spm_addr(idv, spm_off);
+                let (_, space) = m
+                    .mem
+                    .copy_ws(spm_src, addr, bytes as u64)
+                    .with_context(|| format!("astore id={idv} in bb{}", op.bb))?;
+                let exec = m.ready2(d, op.a, op.b);
+                let msys = &mut m.msys;
+                let issue = m.amu.transfer(idv, resume, exec, true, |t| {
+                    msys.amu_transfer(addr, bytes, space, t)
+                });
+                m.core.commit(
+                    None,
+                    issue + 1,
+                    if issue > exec { Cause::Backpressure } else { Cause::Compute },
+                );
+                pc += 1;
+            }
+            UKind::Aset => {
+                m.amu.aset(op.a.value(&m.regs), op.b.value(&m.regs) as u32)?;
+                let exec = m.ready2(d, op.a, op.b);
+                m.core.commit(None, exec + 1, Cause::Compute);
+                pc += 1;
+            }
+            UKind::Getfin { dst } => {
+                let exec = d;
+                let v = match m.amu.pop_finished(exec) {
+                    Some((id, _resume)) => id,
+                    None => -1,
+                };
+                m.regs[dst as usize] = v;
+                m.core.commit(Some(dst), exec + 3, Cause::Compute);
+                pc += 1;
+            }
+            UKind::Aconfig => {
+                m.aconfig_base = op.a.value(&m.regs);
+                m.aconfig_size = op.b.value(&m.regs);
+                let exec = m.ready2(d, op.a, op.b);
+                m.core.commit(None, exec + 1, Cause::Compute);
+                pc += 1;
+            }
+            UKind::Await { resume } => {
+                m.amu.await_register(op.a.value(&m.regs), resume)?;
+                let exec = m.ready1(d, op.a);
+                m.core.commit(None, exec + 1, Cause::Compute);
+                m.core.stats.awaits += 1;
+                pc += 1;
+            }
+            UKind::Asignal => {
+                let exec = m.ready1(d, op.a);
+                m.amu.asignal(op.a.value(&m.regs), exec)?;
+                m.core.commit(None, exec + 1, Cause::Compute);
+                pc += 1;
+            }
+            // ---- terminators ----
+            UKind::Br { then_, else_ } => {
+                let taken = op.a.value(&m.regs) != 0;
+                let exec = m.ready1(d, op.a);
+                m.core.commit(None, exec + 1, Cause::Compute);
+                m.core.stats.cond_branches += 1;
+                if m.tage.predict_and_update(op.bb as u64, taken) {
+                    m.core.stats.cond_mispredicts += 1;
+                    m.core.redirect(exec + 1);
+                }
+                pc = dec.start_of(if taken { then_ } else { else_ });
+            }
+            UKind::Jmp { target } => {
+                m.core.commit(None, d + 1, Cause::Compute);
+                pc = dec.start_of(target);
+            }
+            UKind::IndirectJmp => {
+                let tv = op.a.value(&m.regs);
+                if tv < 0 || tv as usize >= dec.block_start.len() {
+                    bail!("indirect jump to invalid block {tv} from bb{}", op.bb);
+                }
+                let exec = m.ready1(d, op.a);
+                m.core.commit(None, exec + 1, Cause::Compute);
+                m.core.stats.indirect_jumps += 1;
+                if m.ittage.predict_and_update(op.bb as u64, tv as u64) {
+                    m.core.stats.indirect_mispredicts += 1;
+                    m.core.redirect(exec + 1);
+                }
+                if op.tag == CodeTag::Scheduler {
+                    m.core.stats.switches += 1;
+                }
+                pc = dec.start_of(tv as BlockId);
+            }
+            UKind::Bafin { handler_dst, id_dst, fallthrough } => {
+                // §IV-A oracle: outcome decided by the Finished-Queue state
+                // at *fetch* time; the BTQ carries the id to the front end,
+                // so a covered bafin never mispredicts.
+                let fetch = d.saturating_sub(m.core.frontend_depth);
+                let covered = m.bpt.covered(op.bb as u64);
+                match m.amu.pop_finished(fetch) {
+                    Some((id, resume)) => {
+                        m.regs[id_dst as usize] = id;
+                        m.regs[handler_dst as usize] =
+                            m.aconfig_base.wrapping_add(id.wrapping_mul(m.aconfig_size));
+                        m.core.commit(Some(handler_dst), d + 1, Cause::Compute);
+                        m.core.stats.bafins_taken += 1;
+                        m.core.stats.switches += 1;
+                        if !covered {
+                            m.core.stats.bafin_mispredicts += 1;
+                            m.core.redirect(d + 1);
+                        }
+                        pc = dec.start_of(resume);
+                    }
+                    None => {
+                        m.core.commit(None, d + 1, Cause::Compute);
+                        m.core.stats.bafins_fallthrough += 1;
+                        pc = dec.start_of(fallthrough);
+                    }
+                }
+            }
+            UKind::Halt => break 'run,
+        }
     }
 
-    let mut bb: BlockId = prog.func.entry;
+    Ok(m.finish())
+}
+
+/// Execute `prog` on the reference (tree-walking) interpreter. This is
+/// the pre-decode implementation, kept verbatim as the semantic baseline
+/// for differential testing and as the "before" side of the simulator
+/// throughput benchmark.
+pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
     let mut budget = prog.max_dyn_instrs;
+    let mut m = Machine::new(cfg, prog);
+
+    let mut bb: BlockId = m.func.entry;
     'outer: loop {
         let blk = &m.func.blocks[bb as usize];
         let tag = blk.tag;
@@ -398,18 +693,7 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
         }
     }
 
-    m.core.finish();
-    let mut stats = std::mem::take(&mut m.core.stats);
-    stats.l1_hits = m.msys.l1.stat_hits;
-    stats.l1_misses = m.msys.l1.stat_misses;
-    stats.far_lines = m.msys.far.lines_transferred;
-    let (mlp, busy) = m.msys.far.mlp(stats.cycles);
-    stats.far_mlp = mlp;
-    stats.far_busy_frac = busy;
-    stats.aloads = m.amu.stat_aloads;
-    stats.astores = m.amu.stat_astores;
-    stats.amu_max_inflight = m.amu.stat_max_inflight;
-    Ok(stats)
+    Ok(m.finish())
 }
 
 #[cfg(test)]
@@ -418,17 +702,23 @@ mod tests {
     use crate::ir::builder::FuncBuilder;
     use crate::ir::Operand::{Imm, Reg as R};
 
+    fn make_prog(f: Function, mem: MemImage, init: Vec<(Reg, i64)>) -> Program {
+        Program::new(f, mem, init, 64, None, 10_000_000)
+    }
+
+    /// Run on the decoded path, then assert the reference path agrees
+    /// bit-for-bit on stats and memory — the per-test differential check.
     fn run_simple(f: Function, mem: MemImage, init: Vec<(Reg, i64)>) -> (RunStats, MemImage) {
-        let mut p = Program {
-            func: f,
-            mem,
-            reg_init: init,
-            spm_slot_bytes: 64,
-            spm_base_reg: None,
-            max_dyn_instrs: 10_000_000,
-        };
         let cfg = SimConfig::nh_g();
+        let mut p = make_prog(f.clone(), mem.snapshot(), init.clone());
         let st = run(&cfg, &mut p).unwrap();
+        let mut pref = make_prog(f, mem, init);
+        let st_ref = run_reference(&cfg, &mut pref).unwrap();
+        assert_eq!(st, st_ref, "decoded and reference stats diverge");
+        for (a, b) in p.mem.regions.iter().zip(pref.mem.regions.iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.data, b.data, "memory diverges in region {}", a.name);
+        }
         (st, p.mem)
     }
 
@@ -489,21 +779,17 @@ mod tests {
     }
 
     #[test]
-    fn budget_guard_fires() {
+    fn budget_guard_fires_on_both_paths() {
         let mut b = FuncBuilder::new("inf");
         let l = b.new_block("l", CodeTag::Compute);
         b.jmp(l);
         b.switch_to(l);
         b.jmp(l);
-        let mut p = Program {
-            func: b.build(),
-            mem: MemImage::new(),
-            reg_init: vec![],
-            spm_slot_bytes: 64,
-            spm_base_reg: None,
-            max_dyn_instrs: 1000,
-        };
+        let f = b.build();
+        let mut p = Program::new(f.clone(), MemImage::new(), vec![], 64, None, 1000);
         assert!(run(&SimConfig::nh_g(), &mut p).is_err());
+        let mut pref = Program::new(f, MemImage::new(), vec![], 64, None, 1000);
+        assert!(run_reference(&SimConfig::nh_g(), &mut pref).is_err());
     }
 
     #[test]
@@ -532,16 +818,15 @@ mod tests {
         let out = b2.alu(AluOp::Add, R(v), Imm(1));
         let _ = out;
         b2.halt();
-        let mut p = Program {
-            func: b2.build(),
-            mem,
-            reg_init: vec![(pr, rem as i64), (ps, spm as i64)],
-            spm_slot_bytes: 64,
-            spm_base_reg: Some(ps),
-            max_dyn_instrs: 1_000_000,
-        };
+        let f = b2.build();
+        let init = vec![(pr, rem as i64), (ps, spm as i64)];
         let cfg = SimConfig::nh_g();
+        let mut p = Program::new(f.clone(), mem.snapshot(), init.clone(), 64, Some(ps), 1_000_000);
         let st = run(&cfg, &mut p).unwrap();
+        // Reference path must agree exactly (AMU timing included).
+        let mut pref = Program::new(f, mem, init, 64, Some(ps), 1_000_000);
+        let st_ref = run_reference(&cfg, &mut pref).unwrap();
+        assert_eq!(st, st_ref, "decoded and reference stats diverge on the AMU path");
         assert_eq!(st.aloads, 1);
         assert_eq!(st.bafins_taken, 1);
         assert!(st.bafins_fallthrough > 0, "should spin while the transfer is in flight");
@@ -557,5 +842,116 @@ mod tests {
         assert_eq!(mix64(1), 0xb456bcfc34c2cb2c);
         assert_eq!(mix64(42), 0x810879608e4259cc);
         assert_eq!(mix64(0xdeadbeef), 0xd24bd59f862a1dac);
+    }
+
+    /// Property: random small IR kernels (loops of ALU ops, loads and
+    /// stores with data-dependent addresses) produce bit-identical stats
+    /// and memory under the decoded and reference interpreters.
+    #[test]
+    fn proptest_decoded_matches_reference() {
+        use crate::util::proptest::{check, Config};
+        check(
+            Config { cases: 48, ..Config::default() },
+            |g| g.rng.next_u64(),
+            |seed: &u64| {
+                let (f, mem, init) = random_program(*seed);
+                let cfg = SimConfig::nh_g();
+                let mut pd = Program::new(f.clone(), mem.snapshot(), init.clone(), 64, None, 200_000);
+                let mut pr = Program::new(f, mem, init, 64, None, 200_000);
+                let rd = run(&cfg, &mut pd);
+                let rr = run_reference(&cfg, &mut pr);
+                match (rd, rr) {
+                    (Ok(sd), Ok(sr)) => {
+                        if sd != sr {
+                            return Err(format!("stats diverge:\n  decoded {sd:?}\n  reference {sr:?}"));
+                        }
+                        for (a, b) in pd.mem.regions.iter().zip(pr.mem.regions.iter()) {
+                            if a.data != b.data {
+                                return Err(format!("memory diverges in region {}", a.name));
+                            }
+                        }
+                        Ok(())
+                    }
+                    (Err(_), Err(_)) => Ok(()), // both reject identically-shaped inputs
+                    (d, r) => Err(format!(
+                        "paths disagree on failure: decoded ok={} reference ok={}",
+                        d.is_ok(),
+                        r.is_ok()
+                    )),
+                }
+            },
+        );
+    }
+
+    /// Deterministic random kernel: a bounded loop whose body mixes ALU
+    /// ops, loads and stores over a small remote array, with addresses
+    /// masked in-bounds so both paths always succeed.
+    fn random_program(seed: u64) -> (Function, MemImage, Vec<(Reg, i64)>) {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let words: u64 = 64;
+        let mut mem = MemImage::new();
+        let base = mem.alloc("arr", AddrSpace::Remote, words * 8);
+        for j in 0..words {
+            mem.write(base + j * 8, Width::W8, (rng.next_u64() & 0xFFFF) as i64).unwrap();
+        }
+        let mut b = FuncBuilder::new("rand");
+        let pb = b.reg();
+        let pn = b.reg();
+        let i = b.reg();
+        b.mov(i, Imm(0));
+        // A small pool of value registers the random body reads/writes.
+        let pool: Vec<Reg> = (0..4).map(|_| b.reg()).collect();
+        for (k, r) in pool.iter().enumerate() {
+            b.mov(*r, Imm(k as i64 + 1));
+        }
+        let head = b.new_block("head", CodeTag::Compute);
+        let body = b.new_block("body", CodeTag::Compute);
+        let exit = b.new_block("exit", CodeTag::Compute);
+        b.jmp(head);
+        b.switch_to(head);
+        let c = b.alu(AluOp::Slt, R(i), R(pn));
+        b.br(R(c), body, exit);
+        b.switch_to(body);
+        let nops = 2 + (rng.below(6) as usize);
+        let alu_ops = [AluOp::Add, AluOp::Sub, AluOp::Mul, AluOp::Xor, AluOp::And, AluOp::Or, AluOp::Hash, AluOp::Min];
+        for _ in 0..nops {
+            let dst = pool[rng.below(pool.len() as u64) as usize];
+            match rng.below(4) {
+                0 | 1 => {
+                    let op = alu_ops[rng.below(alu_ops.len() as u64) as usize];
+                    let a = pool[rng.below(pool.len() as u64) as usize];
+                    let bo = if rng.bool() {
+                        R(pool[rng.below(pool.len() as u64) as usize])
+                    } else {
+                        Imm(rng.below(100) as i64)
+                    };
+                    b.alu_into(dst, op, R(a), bo);
+                }
+                2 => {
+                    // Load from a data-dependent, masked index.
+                    let src = pool[rng.below(pool.len() as u64) as usize];
+                    let idx = b.alu(AluOp::And, R(src), Imm((words - 1) as i64));
+                    let off = b.alu(AluOp::Shl, R(idx), Imm(3));
+                    let addr = b.alu(AluOp::Add, R(pb), R(off));
+                    b.load_into(dst, R(addr), 0, Width::W8, AddrSpace::Remote);
+                }
+                _ => {
+                    // Store a pool value to a masked index.
+                    let sv = pool[rng.below(pool.len() as u64) as usize];
+                    let si = pool[rng.below(pool.len() as u64) as usize];
+                    let idx = b.alu(AluOp::And, R(si), Imm((words - 1) as i64));
+                    let off = b.alu(AluOp::Shl, R(idx), Imm(3));
+                    let addr = b.alu(AluOp::Add, R(pb), R(off));
+                    b.store(R(sv), R(addr), 0, Width::W8, AddrSpace::Remote);
+                }
+            }
+        }
+        b.alu_into(i, AluOp::Add, R(i), Imm(1));
+        b.jmp(head);
+        b.switch_to(exit);
+        b.halt();
+        let trip = 4 + (rng.below(28) as i64);
+        (b.build(), mem, vec![(pb, base as i64), (pn, trip)])
     }
 }

@@ -2,9 +2,24 @@
 //! space, each tagged Local / Remote / SPM. The benchmark harness
 //! allocates datasets into regions; the interpreter and the timing model
 //! translate addresses through the region table.
+//!
+//! Translation is O(1): the three address spaces live in disjoint base
+//! bands (`LOCAL_BASE` / `SPM_BASE` / `REMOTE_BASE`), so a single band
+//! compare recovers the space, and a per-space index (direct when the
+//! space holds one region — the common case — else a binary search over
+//! the sorted bases) recovers the region. [`MemImage::resolve`] performs
+//! the whole translation in one step; the fused `*_ws` accessors hand the
+//! interpreter the value *and* the space without a second lookup.
+//!
+//! Region bytes are copy-on-write (`Arc`-backed): [`MemImage::snapshot`]
+//! is O(#regions), and a restored image only pays for the regions a run
+//! actually writes. `Engine::sweep` leans on this to build each dataset
+//! once and restore it per (latency, seed) point.
 
 use crate::ir::{AddrSpace, Width};
 use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Region base addresses by space (regions of one space are packed
 /// consecutively above these bases, 4 KB aligned).
@@ -12,28 +27,80 @@ pub const LOCAL_BASE: u64 = 0x1000_0000;
 pub const SPM_BASE: u64 = 0x4000_0000;
 pub const REMOTE_BASE: u64 = 0x8000_0000;
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Region {
     pub name: String,
     pub base: u64,
     pub space: AddrSpace,
-    pub data: Vec<u8>,
+    /// Copy-on-write bytes: snapshots share the allocation until either
+    /// side writes (mutate through [`Region::bytes_mut`]).
+    pub data: Arc<Vec<u8>>,
 }
 
 impl Region {
     pub fn end(&self) -> u64 {
         self.base + self.data.len() as u64
     }
+
+    /// Mutable view of the region bytes, unsharing from snapshots first.
+    pub fn bytes_mut(&mut self) -> &mut Vec<u8> {
+        Arc::make_mut(&mut self.data)
+    }
 }
 
-#[derive(Debug, Default)]
+#[inline]
+fn space_slot(space: AddrSpace) -> usize {
+    match space {
+        AddrSpace::Local => 0,
+        AddrSpace::Spm => 1,
+        AddrSpace::Remote => 2,
+    }
+}
+
+/// Sign-extend a little-endian raw load to i64 (RV64 LW/LH/LB semantics).
+#[inline(always)]
+fn sign_extend(raw: u64, width: Width) -> i64 {
+    match width {
+        Width::W1 => raw as u8 as i8 as i64,
+        Width::W2 => raw as u16 as i16 as i64,
+        Width::W4 => raw as u32 as i32 as i64,
+        Width::W8 => raw as i64,
+    }
+}
+
+/// The space whose base band contains `addr` (bands are disjoint by
+/// construction, so this needs no table walk).
+#[inline]
+fn band_of(addr: u64) -> Option<AddrSpace> {
+    if addr >= REMOTE_BASE {
+        Some(AddrSpace::Remote)
+    } else if addr >= SPM_BASE {
+        Some(AddrSpace::Spm)
+    } else if addr >= LOCAL_BASE {
+        Some(AddrSpace::Local)
+    } else {
+        None
+    }
+}
+
+#[derive(Debug, Clone)]
 pub struct MemImage {
     pub regions: Vec<Region>,
     next_local: u64,
     next_spm: u64,
     next_remote: u64,
-    /// Last region hit (locality cache for translation).
-    last: std::cell::Cell<usize>,
+    /// Region indices per space, in base order (alloc bases only grow, so
+    /// append order is sorted order).
+    by_space: [Vec<u32>; 3],
+    /// name -> region index (first allocation wins, matching the old
+    /// linear-scan semantics for duplicate names).
+    by_name: HashMap<String, u32>,
+}
+
+impl Default for MemImage {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 fn align4k(x: u64) -> u64 {
@@ -47,104 +114,169 @@ impl MemImage {
             next_local: LOCAL_BASE,
             next_spm: SPM_BASE,
             next_remote: REMOTE_BASE,
-            last: std::cell::Cell::new(0),
+            by_space: [Vec::new(), Vec::new(), Vec::new()],
+            by_name: HashMap::new(),
         }
+    }
+
+    /// Cheap copy-on-write snapshot: O(#regions), sharing every region's
+    /// bytes until either image writes them. Restoring a dataset for the
+    /// next sweep point is `template.snapshot()` — no regeneration.
+    pub fn snapshot(&self) -> MemImage {
+        self.clone()
     }
 
     /// Allocate a zeroed region; returns its base address.
+    ///
+    /// Panics if the space's allocations would overflow its base band —
+    /// band-derived translation ([`MemImage::resolve`]) depends on every
+    /// region living inside its space's band, so crossing it must be a
+    /// loud failure at alloc time, not silent misrouting later.
     pub fn alloc(&mut self, name: &str, space: AddrSpace, bytes: u64) -> u64 {
-        let base = match space {
-            AddrSpace::Local => &mut self.next_local,
-            AddrSpace::Spm => &mut self.next_spm,
-            AddrSpace::Remote => &mut self.next_remote,
+        let (base, limit) = match space {
+            AddrSpace::Local => (&mut self.next_local, SPM_BASE),
+            AddrSpace::Spm => (&mut self.next_spm, REMOTE_BASE),
+            AddrSpace::Remote => (&mut self.next_remote, u64::MAX),
         };
         let addr = *base;
         *base = align4k(*base + bytes.max(1));
-        self.regions.push(Region { name: name.into(), base: addr, space, data: vec![0u8; bytes as usize] });
+        assert!(
+            *base <= limit,
+            "region {name:?} overflows the {space:?} address band ({bytes} bytes at {addr:#x})"
+        );
+        let idx = self.regions.len() as u32;
+        self.regions.push(Region {
+            name: name.into(),
+            base: addr,
+            space,
+            data: Arc::new(vec![0u8; bytes as usize]),
+        });
+        self.by_space[space_slot(space)].push(idx);
+        self.by_name.entry(name.into()).or_insert(idx);
         addr
     }
 
+    /// O(1) translation: region index, byte offset within it, and the
+    /// address space — all from one lookup. The band compare picks the
+    /// space; within a space, a single region (the common case) resolves
+    /// directly and multiple regions binary-search their sorted bases.
     #[inline]
-    fn region_idx(&self, addr: u64) -> Option<usize> {
-        let li = self.last.get();
-        if let Some(r) = self.regions.get(li) {
-            if addr >= r.base && addr < r.end() {
-                return Some(li);
+    pub fn resolve(&self, addr: u64) -> Option<(usize, usize, AddrSpace)> {
+        let space = band_of(addr)?;
+        let list = &self.by_space[space_slot(space)];
+        let ri = match list.len() {
+            0 => return None,
+            1 => list[0] as usize,
+            _ => {
+                // Last region whose base is <= addr.
+                let pos = list.partition_point(|&i| self.regions[i as usize].base <= addr);
+                if pos == 0 {
+                    return None;
+                }
+                list[pos - 1] as usize
             }
+        };
+        let r = &self.regions[ri];
+        if addr < r.base || addr >= r.end() {
+            return None;
         }
-        for (i, r) in self.regions.iter().enumerate() {
-            if addr >= r.base && addr < r.end() {
-                self.last.set(i);
-                return Some(i);
-            }
-        }
-        None
+        Some((ri, (addr - r.base) as usize, space))
     }
 
     /// Address space an address belongs to (for the timing model).
     #[inline]
     pub fn space_of(&self, addr: u64) -> Option<AddrSpace> {
-        self.region_idx(addr).map(|i| self.regions[i].space)
+        self.resolve(addr).map(|(_, _, s)| s)
     }
 
     pub fn read(&self, addr: u64, width: Width) -> Result<i64> {
-        let Some(i) = self.region_idx(addr) else {
+        self.read_ws(addr, width).map(|(v, _)| v)
+    }
+
+    /// Fused read: value plus the address space, one translation.
+    #[inline]
+    pub fn read_ws(&self, addr: u64, width: Width) -> Result<(i64, AddrSpace)> {
+        let Some((i, off, space)) = self.resolve(addr) else {
             bail!("read from unmapped address {addr:#x}");
         };
         let r = &self.regions[i];
-        let off = (addr - r.base) as usize;
         let n = width.bytes() as usize;
         if off + n > r.data.len() {
             bail!("read past end of region {} at {addr:#x}", r.name);
         }
         let mut buf = [0u8; 8];
         buf[..n].copy_from_slice(&r.data[off..off + n]);
-        let raw = u64::from_le_bytes(buf);
-        // Sign-extend sub-word reads (RV64 LW/LH/LB semantics).
-        Ok(match width {
-            Width::W1 => raw as u8 as i8 as i64,
-            Width::W2 => raw as u16 as i16 as i64,
-            Width::W4 => raw as u32 as i32 as i64,
-            Width::W8 => raw as i64,
-        })
+        Ok((sign_extend(u64::from_le_bytes(buf), width), space))
+    }
+
+    /// Fused read-modify-write: one translation covers both the load and
+    /// the store of an AtomicRmw. Returns the *old* value plus the space.
+    /// Error messages match a plain `read` so the decoded and reference
+    /// interpreters fail identically.
+    #[inline]
+    pub fn rmw_ws(
+        &mut self,
+        addr: u64,
+        width: Width,
+        f: impl FnOnce(i64) -> i64,
+    ) -> Result<(i64, AddrSpace)> {
+        let Some((i, off, space)) = self.resolve(addr) else {
+            bail!("read from unmapped address {addr:#x}");
+        };
+        let r = &mut self.regions[i];
+        let n = width.bytes() as usize;
+        if off + n > r.data.len() {
+            bail!("read past end of region {} at {addr:#x}", r.name);
+        }
+        let mut buf = [0u8; 8];
+        buf[..n].copy_from_slice(&r.data[off..off + n]);
+        let old = sign_extend(u64::from_le_bytes(buf), width);
+        let new = f(old);
+        r.bytes_mut()[off..off + n].copy_from_slice(&(new as u64).to_le_bytes()[..n]);
+        Ok((old, space))
     }
 
     pub fn write(&mut self, addr: u64, width: Width, val: i64) -> Result<()> {
-        let Some(i) = self.region_idx(addr) else {
+        self.write_ws(addr, width, val).map(|_| ())
+    }
+
+    /// Fused write: performs the store and returns the address space.
+    #[inline]
+    pub fn write_ws(&mut self, addr: u64, width: Width, val: i64) -> Result<AddrSpace> {
+        let Some((i, off, space)) = self.resolve(addr) else {
             bail!("write to unmapped address {addr:#x}");
         };
         let r = &mut self.regions[i];
-        let off = (addr - r.base) as usize;
         let n = width.bytes() as usize;
         if off + n > r.data.len() {
             bail!("write past end of region {} at {addr:#x}", r.name);
         }
-        r.data[off..off + n].copy_from_slice(&(val as u64).to_le_bytes()[..n]);
-        Ok(())
+        r.bytes_mut()[off..off + n].copy_from_slice(&(val as u64).to_le_bytes()[..n]);
+        Ok(space)
     }
 
     /// Bulk copy (AMU aload/astore transfers). Byte-exact.
     pub fn copy(&mut self, src: u64, dst: u64, bytes: u64) -> Result<()> {
-        // Straightforward byte loop through the region API would be slow;
-        // resolve both regions once.
-        let Some(si) = self.region_idx(src) else { bail!("copy src unmapped {src:#x}") };
-        let Some(di) = self.region_idx(dst) else { bail!("copy dst unmapped {dst:#x}") };
-        let so = (src - self.regions[si].base) as usize;
-        let do_ = (dst - self.regions[di].base) as usize;
+        self.copy_ws(src, dst, bytes).map(|_| ())
+    }
+
+    /// Fused bulk copy: returns the (source, destination) address spaces.
+    pub fn copy_ws(&mut self, src: u64, dst: u64, bytes: u64) -> Result<(AddrSpace, AddrSpace)> {
+        let Some((si, so, ss)) = self.resolve(src) else { bail!("copy src unmapped {src:#x}") };
+        let Some((di, do_, ds)) = self.resolve(dst) else { bail!("copy dst unmapped {dst:#x}") };
         let n = bytes as usize;
         if so + n > self.regions[si].data.len() || do_ + n > self.regions[di].data.len() {
             bail!("copy out of bounds ({src:#x} -> {dst:#x}, {bytes}B)");
         }
         if si == di {
-            self.regions[si].data.copy_within(so..so + n, do_);
-        } else if si < di {
-            let (l, r) = self.regions.split_at_mut(di);
-            r[0].data[do_..do_ + n].copy_from_slice(&l[si].data[so..so + n]);
+            self.regions[si].bytes_mut().copy_within(so..so + n, do_);
         } else {
-            let (l, r) = self.regions.split_at_mut(si);
-            l[di].data[do_..do_ + n].copy_from_slice(&r[0].data[so..so + n]);
+            // Arc-clone the source bytes (pointer copy) so the borrow on
+            // the destination region is unentangled from the source's.
+            let src_data = self.regions[si].data.clone();
+            self.regions[di].bytes_mut()[do_..do_ + n].copy_from_slice(&src_data[so..so + n]);
         }
-        Ok(())
+        Ok((ss, ds))
     }
 
     /// Allocate a region and bulk-initialize it from i64 words (fast path
@@ -152,7 +284,7 @@ impl MemImage {
     pub fn alloc_init_i64(&mut self, name: &str, space: AddrSpace, data: &[i64]) -> u64 {
         let base = self.alloc(name, space, (data.len() as u64) * 8);
         let r = self.regions.last_mut().expect("just allocated");
-        for (chunk, v) in r.data.chunks_exact_mut(8).zip(data.iter()) {
+        for (chunk, v) in r.bytes_mut().chunks_exact_mut(8).zip(data.iter()) {
             chunk.copy_from_slice(&v.to_le_bytes());
         }
         base
@@ -171,11 +303,13 @@ impl MemImage {
 
     /// Fill a region's bytes directly (dataset initialization).
     pub fn region_mut(&mut self, name: &str) -> Option<&mut Region> {
-        self.regions.iter_mut().find(|r| r.name == name)
+        let i = *self.by_name.get(name)?;
+        self.regions.get_mut(i as usize)
     }
 
     pub fn region(&self, name: &str) -> Option<&Region> {
-        self.regions.iter().find(|r| r.name == name)
+        let i = *self.by_name.get(name)?;
+        self.regions.get(i as usize)
     }
 }
 
@@ -232,5 +366,87 @@ mod tests {
         }
         m.copy(r, s, 128).unwrap();
         assert_eq!(m.read(s + 40, Width::W8).unwrap(), 15);
+    }
+
+    #[test]
+    fn resolve_is_fused_and_band_accurate() {
+        let mut m = MemImage::new();
+        let l = m.alloc("l", AddrSpace::Local, 64);
+        let s = m.alloc("s", AddrSpace::Spm, 64);
+        let r1 = m.alloc("r1", AddrSpace::Remote, 100);
+        let r2 = m.alloc("r2", AddrSpace::Remote, 64);
+        let r3 = m.alloc("r3", AddrSpace::Remote, 64);
+        for (addr, want) in [
+            (l, AddrSpace::Local),
+            (s + 63, AddrSpace::Spm),
+            (r1 + 99, AddrSpace::Remote),
+            (r2 + 8, AddrSpace::Remote),
+            (r3, AddrSpace::Remote),
+        ] {
+            let (ri, off, space) = m.resolve(addr).unwrap();
+            assert_eq!(space, want);
+            assert_eq!(m.regions[ri].base + off as u64, addr);
+        }
+        // Gaps between regions (4 KB alignment slack) are unmapped.
+        assert!(m.resolve(r1 + 100).is_none(), "alignment slack must not resolve");
+        assert!(m.resolve(LOCAL_BASE - 1).is_none());
+        assert!(m.resolve(0).is_none());
+        m.write(r2, Width::W8, 9).unwrap();
+        assert_eq!(m.read_ws(r2, Width::W8).unwrap(), (9, AddrSpace::Remote));
+    }
+
+    #[test]
+    fn rmw_is_one_lookup_and_matches_read_write() {
+        let mut m = MemImage::new();
+        let a = m.alloc("t", AddrSpace::Remote, 16);
+        m.write(a, Width::W8, 40).unwrap();
+        let (old, space) = m.rmw_ws(a, Width::W8, |v| v + 2).unwrap();
+        assert_eq!((old, space), (40, AddrSpace::Remote));
+        assert_eq!(m.read(a, Width::W8).unwrap(), 42);
+        // Sub-word: sign-extended old value, truncated store.
+        m.write(a, Width::W4, -5).unwrap();
+        let (old4, _) = m.rmw_ws(a, Width::W4, |v| v - 1).unwrap();
+        assert_eq!(old4, -5);
+        assert_eq!(m.read(a, Width::W4).unwrap(), -6);
+        // Errors match plain reads.
+        assert!(m.rmw_ws(0xdead, Width::W8, |v| v).is_err());
+        assert!(m.rmw_ws(a + 12, Width::W8, |v| v).is_err());
+    }
+
+    #[test]
+    fn name_index_matches_first_allocation() {
+        let mut m = MemImage::new();
+        let a = m.alloc("x", AddrSpace::Remote, 32);
+        let _b = m.alloc("x", AddrSpace::Remote, 32); // duplicate name
+        assert_eq!(m.region("x").unwrap().base, a, "first allocation wins");
+        assert!(m.region("nope").is_none());
+        m.region_mut("x").unwrap().bytes_mut()[0] = 7;
+        assert_eq!(m.read(a, Width::W1).unwrap(), 7);
+        assert_eq!(m.region_as_i64("x").unwrap()[0], 7);
+    }
+
+    #[test]
+    fn snapshot_is_cow() {
+        let mut m = MemImage::new();
+        let a = m.alloc("a", AddrSpace::Remote, 64);
+        let b = m.alloc("b", AddrSpace::Remote, 64);
+        m.write(a, Width::W8, 11).unwrap();
+        m.write(b, Width::W8, 22).unwrap();
+        let snap = m.snapshot();
+        // Bytes shared until a write.
+        assert!(Arc::ptr_eq(&m.regions[0].data, &snap.regions[0].data));
+        m.write(a, Width::W8, 99).unwrap();
+        assert_eq!(m.read(a, Width::W8).unwrap(), 99);
+        assert_eq!(snap.read(a, Width::W8).unwrap(), 11, "snapshot unaffected by write");
+        assert!(Arc::ptr_eq(&m.regions[1].data, &snap.regions[1].data), "untouched region still shared");
+        // Restoring from the snapshot reproduces the original bytes and
+        // layout (bases, cursors) exactly.
+        let restored = snap.snapshot();
+        assert_eq!(restored.read(a, Width::W8).unwrap(), 11);
+        assert_eq!(restored.read(b, Width::W8).unwrap(), 22);
+        let mut r2 = restored;
+        let c = r2.alloc("c", AddrSpace::Remote, 8);
+        let mut m2 = m.snapshot();
+        assert_eq!(c, m2.alloc("c", AddrSpace::Remote, 8), "alloc cursors survive snapshot");
     }
 }

@@ -13,12 +13,14 @@ pub mod amu;
 pub mod bpu;
 pub mod cache;
 pub mod core;
+pub mod decode;
 pub mod interp;
 pub mod mem;
 pub mod memsys;
 pub mod stats;
 
-pub use interp::{mix64, run, Program};
+pub use decode::DecodedFunc;
+pub use interp::{mix64, run, run_reference, Program};
 pub use mem::MemImage;
 pub use stats::RunStats;
 
@@ -28,7 +30,8 @@ use crate::ir::AddrSpace;
 
 /// Assemble a runnable [`Program`] from a compiled kernel: allocates the
 /// runtime areas (handler array, queues, lock tables) and the SPM region,
-/// and binds their base addresses plus the kernel parameters.
+/// binds their base addresses plus the kernel parameters, and lowers the
+/// function to its decode-once micro-op form ([`decode`]).
 pub fn link(
     cfg: &SimConfig,
     ck: &CompiledKernel,
@@ -54,14 +57,14 @@ pub fn link(
         reg_init.push((sr, base as i64));
         spm_base_reg = Some(sr);
     }
-    Program {
-        func: ck.func.clone(),
+    Program::new(
+        ck.func.clone(),
         mem,
         reg_init,
-        spm_slot_bytes: ck.spm_slot_bytes.max(64),
+        ck.spm_slot_bytes.max(64),
         spm_base_reg,
-        max_dyn_instrs: 3_000_000_000,
-    }
+        3_000_000_000,
+    )
 }
 
 #[cfg(test)]
@@ -109,7 +112,7 @@ mod tests {
             kernel: gups_kernel(),
             mem,
             params: vec![tab as i64, (table_words - 1) as i64, n],
-            check: Box::new(|_| Ok(())),
+            check: std::sync::Arc::new(|_| Ok(())),
             default_tasks: tasks,
         };
         let r = engine.run_instance(inst, &variant.opts(tasks)).unwrap();

@@ -3,7 +3,9 @@
 use crate::ir::CodeTag;
 
 /// Where dispatch-stall cycles went (Figs 3 and 14 buckets).
-#[derive(Debug, Clone, Copy, Default)]
+/// `PartialEq` compares exact values — deterministic runs produce
+/// bit-identical buckets, which the differential suite relies on.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct StallBuckets {
     /// Waiting on a remote-memory access at the ROB head.
     pub remote_mem: f64,
@@ -15,7 +17,7 @@ pub struct StallBuckets {
     pub backpressure: f64,
 }
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunStats {
     /// Total simulated cycles (last retirement).
     pub cycles: u64,

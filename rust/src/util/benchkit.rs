@@ -93,6 +93,76 @@ impl Bench {
     pub fn finish(&self) {
         println!("\n{} benchmarks complete", self.samples.len());
     }
+
+    /// An empty unfiltered runner, for callers that measure externally
+    /// and push [`Sample`]s directly (e.g. the test-suite throughput
+    /// smoke) so every producer of bench JSON shares one schema.
+    pub fn for_recording() -> Bench {
+        Bench { filter: None, warmup_iters: 0, measure_iters: 0, samples: Vec::new() }
+    }
+
+    /// A runner holding only the samples whose name starts with `prefix`
+    /// (to serialize one group's results, e.g. `sim_mips/`).
+    pub fn subset(&self, prefix: &str) -> Bench {
+        Bench {
+            filter: None,
+            warmup_iters: self.warmup_iters,
+            measure_iters: self.measure_iters,
+            samples: self.samples.iter().filter(|s| s.name.starts_with(prefix)).cloned().collect(),
+        }
+    }
+
+    /// Serialize the recorded samples as JSON (hand-rolled — no `serde`
+    /// in the offline environment). Used by the simulator-throughput
+    /// bench to record the perf trajectory in `BENCH_sim.json`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"mode\": \"{}\",\n", build_mode()));
+        out.push_str("  \"samples\": [\n");
+        for (i, s) in self.samples.iter().enumerate() {
+            out.push_str("    {");
+            out.push_str(&format!("\"name\": \"{}\", ", json_escape(&s.name)));
+            out.push_str(&format!("\"iters\": {}, ", s.iters));
+            out.push_str(&format!("\"mean_ns\": {:.1}, ", s.mean_ns));
+            out.push_str(&format!("\"median_ns\": {:.1}, ", s.median_ns));
+            out.push_str(&format!("\"min_ns\": {:.1}, ", s.min_ns));
+            out.push_str(&format!("\"max_ns\": {:.1}", s.max_ns));
+            if let Some((rate, unit)) = s.throughput {
+                out.push_str(&format!(
+                    ", \"rate_per_s\": {:.1}, \"unit\": \"{}\", \"mrate\": {:.3}",
+                    rate,
+                    json_escape(unit),
+                    rate / 1e6
+                ));
+            }
+            out.push('}');
+            if i + 1 < self.samples.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write [`Bench::to_json`] to `path`.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// Build profile tag recorded alongside throughput numbers, so debug-mode
+/// smoke runs are never mistaken for release measurements.
+pub fn build_mode() -> &'static str {
+    if cfg!(debug_assertions) {
+        "debug"
+    } else {
+        "release"
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 pub fn human_ns(ns: f64) -> String {
@@ -153,6 +223,17 @@ mod tests {
         });
         assert_eq!(b.samples.len(), 1);
         assert!(b.samples[0].throughput.is_some());
+    }
+
+    #[test]
+    fn json_serializes_samples() {
+        let mut b = Bench { filter: None, warmup_iters: 0, measure_iters: 1, samples: Vec::new() };
+        b.run("sim_mips/gups/decoded", "instr", || 1000.0);
+        let j = b.to_json();
+        assert!(j.contains("\"name\": \"sim_mips/gups/decoded\""), "{j}");
+        assert!(j.contains("\"mode\": "), "{j}");
+        assert!(j.contains("\"mrate\": "), "{j}");
+        assert!(j.contains("\"samples\": ["), "{j}");
     }
 
     #[test]

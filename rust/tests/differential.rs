@@ -1,0 +1,233 @@
+//! Differential suite for the decode-once execution pipeline: the
+//! decoded interpreter must be bit-identical — cycles, every stat
+//! bucket, and the final memory image — to the reference tree-walking
+//! interpreter, for all five compile variants. Also pins that sweeps
+//! with dataset reuse reproduce fresh-engine results exactly, and
+//! records the simulated-MIPS perf trajectory in BENCH_sim.json.
+
+use coroamu::benchmarks::{self, Scale};
+use coroamu::compiler::Variant;
+use coroamu::config::SimConfig;
+use coroamu::engine::{Engine, RunRequest};
+use coroamu::sim::{self, MemImage};
+
+/// Run `bench` under `variant` on both interpreter paths from identical
+/// snapshots and assert bit-identical stats + memory, then run the
+/// benchmark's native oracle on both final images.
+fn assert_paths_agree(bench: &str, variant: Variant, scale: Scale, seed: u64) {
+    let engine = Engine::new(SimConfig::nh_g());
+    let b = benchmarks::by_name(bench).unwrap();
+    let inst = b.instance(scale, seed).unwrap();
+    let opts = variant.opts(inst.default_tasks);
+    let prepared = engine.prepare_kernel(&inst.kernel, &opts).unwrap();
+    let cfg = engine.config();
+    let mem_ref = inst.mem.snapshot();
+    let mut pd = sim::link(cfg, &prepared.ck, inst.mem, &inst.params);
+    let mut pr = sim::link(cfg, &prepared.ck, mem_ref, &inst.params);
+    let sd = sim::run(cfg, &mut pd)
+        .unwrap_or_else(|e| panic!("{bench}/{}: decoded path failed: {e:#}", variant.label()));
+    let sr = sim::run_reference(cfg, &mut pr)
+        .unwrap_or_else(|e| panic!("{bench}/{}: reference path failed: {e:#}", variant.label()));
+    assert_eq!(sd.cycles, sr.cycles, "{bench}/{}: cycles diverge", variant.label());
+    assert_eq!(sd, sr, "{bench}/{}: stats diverge", variant.label());
+    assert_identical_memory(&pd.mem, &pr.mem, bench, variant);
+    (inst.check)(&pd.mem)
+        .unwrap_or_else(|e| panic!("{bench}/{}: decoded image fails oracle: {e:#}", variant.label()));
+    (inst.check)(&pr.mem)
+        .unwrap_or_else(|e| panic!("{bench}/{}: reference image fails oracle: {e:#}", variant.label()));
+}
+
+fn assert_identical_memory(a: &MemImage, b: &MemImage, bench: &str, variant: Variant) {
+    assert_eq!(a.regions.len(), b.regions.len(), "{bench}/{}: region count", variant.label());
+    for (ra, rb) in a.regions.iter().zip(b.regions.iter()) {
+        assert_eq!(ra.name, rb.name);
+        assert_eq!(ra.base, rb.base);
+        assert_eq!(
+            ra.data, rb.data,
+            "{bench}/{}: memory diverges in region {}",
+            variant.label(),
+            ra.name
+        );
+    }
+}
+
+/// The acceptance differential: all five compile variants, identical
+/// cycles/stats/memory between the decoded and reference interpreters.
+#[test]
+fn gups_five_variants_bit_identical() {
+    for v in Variant::ALL {
+        assert_paths_agree("gups", v, Scale::Small, 7);
+    }
+}
+
+/// Same equivalence on an irregular-graph workload (pointer-chasing BFS
+/// exercises bafin/getfin scheduling and the SPM copy paths harder).
+#[test]
+fn bfs_five_variants_bit_identical() {
+    for v in Variant::ALL {
+        assert_paths_agree("bfs", v, Scale::Tiny, 11);
+    }
+}
+
+/// Atomics + await/asignal lock hand-off path (IS histogram) agrees too.
+#[test]
+fn is_dynamic_variants_bit_identical() {
+    for v in [Variant::Serial, Variant::CoroAmuD, Variant::CoroAmuFull] {
+        assert_paths_agree("is", v, Scale::Tiny, 3);
+    }
+}
+
+/// Sweep-level dataset reuse is invisible to results: every point of a
+/// latency sweep through one engine (datasets restored from the COW
+/// cache) matches a fresh engine that materializes its own dataset.
+#[test]
+fn sweep_with_dataset_reuse_matches_fresh_runs() {
+    let engine = Engine::new(SimConfig::nh_g());
+    let matrix: Vec<RunRequest> = [150.0, 300.0, 600.0]
+        .iter()
+        .map(|l| {
+            RunRequest::new("gups", Variant::CoroAmuFull)
+                .scale(Scale::Tiny)
+                .latency_ns(*l)
+                .key(format!("{l}"))
+        })
+        .collect();
+    let rs = engine.sweep(&matrix, 3).unwrap();
+    assert_eq!(engine.dataset_stats().misses, 1, "one dataset build for the whole sweep");
+    for (req, rep) in matrix.iter().zip(&rs) {
+        let fresh = Engine::new(SimConfig::nh_g()).run(req.clone()).unwrap();
+        assert_eq!(
+            rep.stats, fresh.stats,
+            "sweep point {} diverges from a fresh engine",
+            req.key
+        );
+    }
+}
+
+/// Throughput smoke: measure simulated-MIPS per sweep point on the
+/// decoded path (dataset cache + decode-once interpreter) against the
+/// pre-change shape (per-point instance rebuild + reference
+/// interpreter), and record the numbers in BENCH_sim.json at the repo
+/// root. `cargo bench --bench simulator -- sim_mips` records the
+/// release-mode numbers over the same schema; this smoke keeps the file
+/// and the speedup invariant alive under plain `cargo test`.
+#[test]
+fn sim_mips_smoke_records_bench_json() {
+    use coroamu::util::benchkit::{build_mode, Bench, Sample};
+    use std::time::Instant;
+    let scale = Scale::Small;
+    let seed = 42u64;
+    let iters = 4u32;
+
+    let engine = Engine::new(SimConfig::nh_g());
+    let req = || RunRequest::new("gups", Variant::CoroAmuFull).scale(scale).seed(seed);
+    // Warm the kernel + dataset caches (the sweep steady state).
+    let instrs = engine.run(req()).unwrap().stats.dyn_instrs as f64;
+    let cfg = engine.config().clone();
+
+    let measure_decoded = || -> Vec<f64> {
+        (0..iters)
+            .map(|_| {
+                let t0 = Instant::now();
+                let r = engine.run(req()).unwrap();
+                assert_eq!(r.stats.dyn_instrs as f64, instrs);
+                t0.elapsed().as_nanos() as f64
+            })
+            .collect()
+    };
+    let measure_reference = || -> Vec<f64> {
+        (0..iters)
+            .map(|_| {
+                let t0 = Instant::now();
+                let b = benchmarks::by_name("gups").unwrap();
+                let inst = b.instance(scale, seed).unwrap();
+                let prepared = engine
+                    .prepare_kernel(&inst.kernel, &Variant::CoroAmuFull.opts(inst.default_tasks))
+                    .unwrap();
+                let mut prog = sim::link(&cfg, &prepared.ck, inst.mem, &inst.params);
+                let st = sim::run_reference(&cfg, &mut prog).unwrap();
+                (inst.check)(&prog.mem).unwrap();
+                assert_eq!(st.dyn_instrs as f64, instrs, "paths simulate the same stream");
+                t0.elapsed().as_nanos() as f64
+            })
+            .collect()
+    };
+
+    // Best-of timing, re-measured up to 3 times: the suite runs under a
+    // parallel test harness, so a single noisy attempt must not fail the
+    // build — only a consistently slower decoded path should.
+    let (mut dec_ns, mut ref_ns) = (Vec::new(), Vec::new());
+    for attempt in 0..3 {
+        dec_ns = measure_decoded();
+        ref_ns = measure_reference();
+        let ratio = best(&ref_ns) / best(&dec_ns);
+        if ratio >= 1.05 {
+            break;
+        }
+        println!("sim_mips smoke: attempt {attempt} noisy (ratio {ratio:.2}), re-measuring");
+    }
+    let (dec_best, ref_best) = (best(&dec_ns), best(&ref_ns));
+    let dec_mips = instrs / (dec_best / 1e9) / 1e6;
+    let ref_mips = instrs / (ref_best / 1e9) / 1e6;
+    println!(
+        "sim_mips smoke ({}): decoded {dec_mips:.2} MIPS, reference {ref_mips:.2} MIPS ({:.2}x)",
+        build_mode(),
+        dec_mips / ref_mips
+    );
+
+    // Record the trajectory through benchkit's serializer (one schema for
+    // bench + test writers). The bench binary owns the release-mode file:
+    // this smoke only writes debug-mode numbers, and never over a
+    // release-mode recording, so `cargo bench` results are never
+    // clobbered by any flavor of `cargo test`.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sim.json");
+    let release_recorded = std::fs::read_to_string(&path)
+        .map(|s| s.contains("\"mode\": \"release\""))
+        .unwrap_or(false);
+    if build_mode() == "debug" && !release_recorded {
+        let mut rec = Bench::for_recording();
+        for (name, times) in [
+            ("sim_mips/gups/CoroAMU-Full/decoded", &dec_ns),
+            ("sim_mips/gups/CoroAMU-Full/reference", &ref_ns),
+        ] {
+            rec.samples.push(sample_from(name, times, instrs));
+        }
+        rec.write_json(&path).unwrap();
+    }
+
+    // The hard speedup gate only applies under optimization — the real
+    // acceptance invariant is defined on the release-mode bench, and a
+    // debug-mode suite on a loaded runner must not flake the build.
+    if cfg!(debug_assertions) {
+        if dec_mips <= ref_mips * 1.05 {
+            println!(
+                "WARNING: debug-mode smoke shows no decode-once speedup \
+                 ({dec_mips:.2} vs {ref_mips:.2} MIPS); check `cargo bench -- sim_mips`"
+            );
+        }
+    } else {
+        assert!(
+            dec_mips > ref_mips * 1.05,
+            "decode-once pipeline must beat the pre-change path: {dec_mips:.2} vs {ref_mips:.2} simulated MIPS"
+        );
+    }
+
+    fn best(times: &[f64]) -> f64 {
+        times.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    fn sample_from(name: &str, times: &[f64], work: f64) -> Sample {
+        let mut sorted = times.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+        Sample {
+            name: name.to_string(),
+            iters: sorted.len() as u32,
+            mean_ns: mean,
+            median_ns: sorted[sorted.len() / 2],
+            min_ns: sorted[0],
+            max_ns: *sorted.last().unwrap(),
+            throughput: Some((work / (mean / 1e9), "instr")),
+        }
+    }
+}

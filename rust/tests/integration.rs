@@ -260,7 +260,7 @@ fn random_kernels_agree_across_variants() {
                 kernel: k.clone(),
                 mem,
                 params: vec![p as i64, 50],
-                check: Box::new(|_| Ok(())),
+                check: std::sync::Arc::new(|_| Ok(())),
                 default_tasks: 16,
             };
             let r = engine.run_instance(inst, &variant.opts(16)).unwrap();
@@ -367,7 +367,7 @@ fn atomic_handoff_under_max_contention() {
             kernel: k.clone(),
             mem,
             params: vec![kb_ as i64, hb as i64, trip],
-            check: Box::new(|_| Ok(())),
+            check: std::sync::Arc::new(|_| Ok(())),
             default_tasks: 64,
         };
         let r = engine.run_instance(inst, &v.opts(64)).unwrap();
@@ -424,7 +424,7 @@ fn nested_coroutine_roundtrip() {
             kernel: k.clone(),
             mem,
             params: vec![pb as i64, ob as i64, trip as i64],
-            check: Box::new(|_| Ok(())),
+            check: std::sync::Arc::new(|_| Ok(())),
             default_tasks: 16,
         };
         let run = engine.run_instance(inst, &v.opts(16)).unwrap();
