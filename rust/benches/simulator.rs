@@ -14,16 +14,21 @@ use coroamu::sim::{self, MemImage};
 use coroamu::util::benchkit::Bench;
 use coroamu::util::rng::Rng;
 
-/// Simulated-MIPS per sweep point, before/after this repo's decode-once
-/// pipeline. Both sides run the complete per-point work the engine
-/// performs in a sweep (kernel through the compile cache, link, simulate,
-/// native-oracle check):
+/// Simulated-MIPS per sweep point, before/after this repo's execution
+/// pipeline work. Four rows per (benchmark, variant):
 ///
-/// * `reference` — the pre-change shape: the benchmark instance (dataset
-///   synthesis + oracle precomputation) is rebuilt for every point and
-///   the program runs on the tree-walking reference interpreter.
-/// * `decoded` — the current engine path: dataset restored from the
-///   copy-on-write cache, program run on the decode-once interpreter.
+/// * `reference` — the pre-decode-once shape: the benchmark instance
+///   (dataset synthesis + oracle precomputation) is rebuilt for every
+///   point and the program runs on the tree-walking reference
+///   interpreter.
+/// * `decoded` — the engine steady state: dataset restored from the
+///   copy-on-write cache, program run on the decode-once interpreter
+///   with superop fusion (the session default).
+/// * `decoded-fused` / `decoded-unfused` — interpreter-only columns:
+///   identical per-iteration work (COW snapshot → link → simulate),
+///   differing only in the decode-time fusion knob. Their ratio is the
+///   superop win in isolation; CI fails if it regresses below 1x on
+///   GUPS (see [`record_sim_mips`]).
 ///
 /// The throughput metric is simulated dynamic instructions per
 /// wall-second (printed as M instr/s == simulated MIPS); results land in
@@ -40,6 +45,29 @@ fn sim_mips(b: &mut Bench, bench_name: &str, variant: Variant) {
             let r = engine.run(req).unwrap();
             r.stats.dyn_instrs as f64
         });
+    }
+
+    let fused_name = format!("sim_mips/{}/{}/decoded-fused", bench_name, variant.label());
+    let unfused_name = format!("sim_mips/{}/{}/decoded-unfused", bench_name, variant.label());
+    if b.enabled(&fused_name) || b.enabled(&unfused_name) {
+        let engine = Engine::new(SimConfig::nh_g());
+        let bench = benchmarks::by_name(bench_name).unwrap();
+        let inst = bench.instance(scale, seed).unwrap();
+        let prepared = engine
+            .prepare_kernel(&inst.kernel, &variant.opts(inst.default_tasks))
+            .unwrap();
+        let mem = inst.mem;
+        let params = inst.params.clone();
+        for (name, fuse) in [(&fused_name, true), (&unfused_name, false)] {
+            if !b.enabled(name) {
+                continue;
+            }
+            let cfg = SimConfig::nh_g().with_fuse(fuse);
+            b.run(name, "instr", || {
+                let mut prog = sim::link(&cfg, &prepared.ck, mem.snapshot(), &params);
+                sim::run(&cfg, &mut prog).unwrap().dyn_instrs as f64
+            });
+        }
     }
 
     let ref_name = format!("sim_mips/{}/{}/reference", bench_name, variant.label());
@@ -60,19 +88,20 @@ fn sim_mips(b: &mut Bench, bench_name: &str, variant: Variant) {
     }
 }
 
-/// Speedup summary + BENCH_sim.json at the repo root.
-fn record_sim_mips(b: &Bench) {
+/// Speedup summary + BENCH_sim.json at the repo root. Returns false if
+/// the release-mode fusion guard tripped: decoded-fused must not
+/// regress below decoded-unfused on GUPS (3% noise floor).
+fn record_sim_mips(b: &Bench) -> bool {
     let group = b.subset("sim_mips/");
     if group.samples.is_empty() {
-        return;
+        return true;
     }
+    let rate = |name: &str| -> Option<f64> {
+        group.samples.iter().find(|r| r.name == name).and_then(|r| r.throughput).map(|(v, _)| v)
+    };
     for s in &group.samples {
         let Some(rest) = s.name.strip_suffix("/decoded") else { continue };
-        let refname = format!("{rest}/reference");
-        let (Some((dec, _)), Some((rf, _))) = (
-            s.throughput,
-            group.samples.iter().find(|r| r.name == refname).and_then(|r| r.throughput),
-        ) else {
+        let (Some((dec, _)), Some(rf)) = (s.throughput, rate(&format!("{rest}/reference"))) else {
             continue;
         };
         println!(
@@ -83,11 +112,44 @@ fn record_sim_mips(b: &Bench) {
             dec / 1e6
         );
     }
+    let mut ok = true;
+    for s in &group.samples {
+        let Some(rest) = s.name.strip_suffix("/decoded-fused") else { continue };
+        let Some(su) = group.samples.iter().find(|r| r.name == format!("{rest}/decoded-unfused"))
+        else {
+            continue;
+        };
+        let (Some((fused, _)), Some((unfused, _))) = (s.throughput, su.throughput) else {
+            continue;
+        };
+        println!(
+            "fusion  {:<38} {:.2}x  ({:.2} -> {:.2} simulated MIPS)",
+            rest.trim_start_matches("sim_mips/"),
+            fused / unfused,
+            unfused / 1e6,
+            fused / 1e6
+        );
+        // Release-mode guard against fusion pessimization on the
+        // headline kernel (debug builds are too noisy to gate on).
+        // Gate on best-of-iteration throughput, not the mean: one noisy
+        // outlier on a loaded CI runner must not fail the build.
+        let fused_best = fused * s.mean_ns / s.min_ns.max(1.0);
+        let unfused_best = unfused * su.mean_ns / su.min_ns.max(1.0);
+        if rest.contains("/gups/") && !cfg!(debug_assertions) && fused_best < unfused_best * 0.97 {
+            eprintln!(
+                "FAIL: superop fusion regresses GUPS: {:.2} fused vs {:.2} unfused simulated MIPS (best-of)",
+                fused_best / 1e6,
+                unfused_best / 1e6
+            );
+            ok = false;
+        }
+    }
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sim.json");
     match group.write_json(&path) {
         Ok(()) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("failed to write {}: {e}", path.display()),
     }
+    ok
 }
 
 fn interp_throughput(b: &mut Bench, bench_name: &str, variant: Variant) {
@@ -157,6 +219,10 @@ fn main() {
     sim_mips(&mut b, "gups", Variant::Serial);
     sim_mips(&mut b, "gups", Variant::CoroAmuFull);
     sim_mips(&mut b, "bfs", Variant::CoroAmuFull);
+    // Irregular-workload coverage: hash-join probe (dependent hashing +
+    // bucket walk) and an MCF-style pointer chase (serialized loads).
+    sim_mips(&mut b, "hj", Variant::CoroAmuFull);
+    sim_mips(&mut b, "mcf", Variant::Serial);
     interp_throughput(&mut b, "gups", Variant::Serial);
     interp_throughput(&mut b, "gups", Variant::CoroAmuFull);
     interp_throughput(&mut b, "bs", Variant::CoroAmuD);
@@ -165,5 +231,7 @@ fn main() {
     bpu_update_rate(&mut b);
     mem_image_rw(&mut b);
     b.finish();
-    record_sim_mips(&b);
+    if !record_sim_mips(&b) {
+        std::process::exit(1);
+    }
 }

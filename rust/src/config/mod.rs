@@ -114,6 +114,12 @@ pub struct SimConfig {
     pub mem: MemConfig,
     /// Enable the L2 Best-Offset prefetcher (Table I).
     pub l2_bop: bool,
+    /// Simulator-implementation knob (not a modelled-hardware parameter):
+    /// enable the decode-time superop fusion peephole. Timing-transparent
+    /// — cycles/stats/memory are bit-identical either way (pinned by the
+    /// differential suite); off exists so fused vs unfused interpreter
+    /// throughput stays measurable.
+    pub fuse_superops: bool,
 }
 
 impl SimConfig {
@@ -161,6 +167,7 @@ impl SimConfig {
                 local_bw_bytes_per_cycle: 32.0,
             },
             l2_bop: true,
+            fuse_superops: true,
         }
     }
 
@@ -199,6 +206,7 @@ impl SimConfig {
                 local_bw_bytes_per_cycle: 32.0,
             },
             l2_bop: false,
+            fuse_superops: true,
         }
     }
 
@@ -226,6 +234,13 @@ impl SimConfig {
     /// Set the emulated far-memory latency (the paper's delayer knob).
     pub fn with_far_latency_ns(mut self, ns: f64) -> Self {
         self.mem.far_latency_ns = ns;
+        self
+    }
+
+    /// Toggle the decode-time superop fusion peephole (timing-transparent
+    /// interpreter optimization; see `sim::decode::decode_with`).
+    pub fn with_fuse(mut self, on: bool) -> Self {
+        self.fuse_superops = on;
         self
     }
 
@@ -282,6 +297,7 @@ impl SimConfig {
         ov!("mem.far_latency_ns", self.mem.far_latency_ns, f64);
         ov!("mem.far_bw_bytes_per_cycle", self.mem.far_bw_bytes_per_cycle, f64);
         ov!("l2_bop", self.l2_bop, bool);
+        ov!("fuse_superops", self.fuse_superops, bool);
         self.validate()
     }
 

@@ -9,6 +9,7 @@
 //! finds all MSHRs busy waits for the earliest release (the resource
 //! contention that limits MLP in Fig. 16).
 
+use super::slots::SlotQueue;
 use crate::config::CacheLevelConfig;
 
 pub const LINE_SHIFT: u64 = 6;
@@ -32,9 +33,8 @@ pub struct Cache {
     /// Fill-completion cycle per way.
     ready: Vec<u64>,
     tick: u64,
-    // MSHRs: release times, unsorted small vec (<= 64 entries).
-    mshr_release: Vec<u64>,
-    mshr_cap: usize,
+    /// MSHRs: fixed-size release-time slot pool (no per-miss allocation).
+    mshr: SlotQueue,
     pub stat_hits: u64,
     pub stat_misses: u64,
     pub stat_mshr_stall_cycles: u64,
@@ -52,8 +52,7 @@ impl Cache {
             stamps: vec![0; (sets as usize) * ways],
             ready: vec![0; (sets as usize) * ways],
             tick: 0,
-            mshr_release: Vec::with_capacity(cfg.mshrs),
-            mshr_cap: cfg.mshrs,
+            mshr: SlotQueue::new(cfg.mshrs),
             stat_hits: 0,
             stat_misses: 0,
             stat_mshr_stall_cycles: 0,
@@ -121,34 +120,19 @@ impl Cache {
     /// issued downstream (>= t, delayed if all MSHRs busy). The MSHR is
     /// held until `release` (passed later via [`Cache::mshr_hold`]).
     pub fn mshr_acquire(&mut self, t: u64) -> u64 {
-        // Drop expired entries only when apparently full (fast path).
-        if self.mshr_release.len() >= self.mshr_cap {
-            self.mshr_release.retain(|&r| r > t);
-        }
-        if self.mshr_release.len() < self.mshr_cap {
-            return t;
-        }
-        // Wait for the earliest release.
-        let (idx, &earliest) = self
-            .mshr_release
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, r)| **r)
-            .expect("non-empty");
-        self.mshr_release.swap_remove(idx);
-        self.stat_mshr_stall_cycles += earliest - t;
-        earliest
+        let (grant, stall) = self.mshr.acquire(t);
+        self.stat_mshr_stall_cycles += stall;
+        grant
     }
 
-    /// Record that an MSHR acquired earlier is held until `release`.
+    /// Record that the MSHR acquired last is held until `release`.
     pub fn mshr_hold(&mut self, release: u64) {
-        self.mshr_release.push(release);
+        self.mshr.hold(release);
     }
 
     /// Current occupied MSHRs at cycle `t` (for MLP accounting).
     pub fn mshr_busy(&mut self, t: u64) -> usize {
-        self.mshr_release.retain(|&r| r > t);
-        self.mshr_release.len()
+        self.mshr.busy_gc(t)
     }
 }
 
@@ -290,10 +274,14 @@ mod tests {
     #[test]
     fn mshrs_expire() {
         let mut c = small();
+        assert_eq!(c.mshr_acquire(0), 0);
         c.mshr_hold(50);
+        assert_eq!(c.mshr_acquire(0), 0);
         c.mshr_hold(60);
         assert_eq!(c.mshr_busy(55), 1);
         assert_eq!(c.mshr_acquire(70), 70);
+        c.mshr_hold(80);
+        assert_eq!(c.stat_mshr_stall_cycles, 0);
     }
 
     #[test]

@@ -11,7 +11,8 @@
 //! simulation literature); DESIGN.md §1 argues why it preserves the
 //! paper's effects.
 
-use super::stats::{tag_index, RunStats, StallBuckets};
+use super::slots::SlotQueue;
+use super::stats::{tag_index, RunStats};
 use crate::config::CoreConfig;
 use crate::ir::{CodeTag, Reg};
 
@@ -35,8 +36,6 @@ pub struct Core {
     width: usize,
     retire_width: usize,
     rob_cap: usize,
-    lq_cap: usize,
-    sq_cap: usize,
     pub mispredict_penalty: u64,
     /// Front-end depth: fetch happens this many cycles before dispatch
     /// (used for the bafin fetch-time oracle).
@@ -53,9 +52,9 @@ pub struct Core {
     rob_len: usize,
     last_retire_cycle: u64,
     retired_this_cycle: usize,
-    // Queues (completion times).
-    lq: Vec<u64>,
-    sq: Vec<u64>,
+    // Load/store queues: fixed-size release-time slot pools.
+    lq: SlotQueue,
+    sq: SlotQueue,
     // Register scoreboard.
     reg_ready: Vec<u64>,
     // High-water completion (program end time).
@@ -69,8 +68,6 @@ impl Core {
             width: cfg.dispatch_width,
             retire_width: cfg.retire_width,
             rob_cap: cfg.rob_entries,
-            lq_cap: cfg.load_queue,
-            sq_cap: cfg.store_queue,
             mispredict_penalty: cfg.mispredict_penalty,
             frontend_depth: 5,
             dispatch_cycle: 0,
@@ -81,8 +78,8 @@ impl Core {
             rob_len: 0,
             last_retire_cycle: 0,
             retired_this_cycle: 0,
-            lq: Vec::with_capacity(cfg.load_queue),
-            sq: Vec::with_capacity(cfg.store_queue),
+            lq: SlotQueue::new(cfg.load_queue),
+            sq: SlotQueue::new(cfg.store_queue),
             reg_ready: vec![0; nregs as usize],
             max_complete: 0,
             stats: RunStats::default(),
@@ -165,35 +162,24 @@ impl Core {
 
     /// Acquire a load-queue slot at `t` (delayed if full).
     pub fn lq_acquire(&mut self, t: u64) -> u64 {
-        Self::queue_acquire(&mut self.lq, self.lq_cap, t, &mut self.stats.stalls)
+        let (grant, stall) = self.lq.acquire(t);
+        self.stats.stalls.backpressure += stall as f64;
+        grant
     }
 
     /// Acquire a store-queue slot at `t`.
     pub fn sq_acquire(&mut self, t: u64) -> u64 {
-        Self::queue_acquire(&mut self.sq, self.sq_cap, t, &mut self.stats.stalls)
-    }
-
-    fn queue_acquire(q: &mut Vec<u64>, cap: usize, t: u64, stalls: &mut StallBuckets) -> u64 {
-        // Fast path: only sweep expired entries once the queue looks full
-        // (entries whose release has passed are semantically free).
-        if q.len() >= cap {
-            q.retain(|&r| r > t);
-        }
-        if q.len() < cap {
-            return t;
-        }
-        let (idx, &earliest) = q.iter().enumerate().min_by_key(|(_, r)| **r).expect("nonempty");
-        q.swap_remove(idx);
-        stalls.backpressure += (earliest - t) as f64;
-        earliest
+        let (grant, stall) = self.sq.acquire(t);
+        self.stats.stalls.backpressure += stall as f64;
+        grant
     }
 
     pub fn lq_hold(&mut self, release: u64) {
-        self.lq.push(release);
+        self.lq.hold(release);
     }
 
     pub fn sq_hold(&mut self, release: u64) {
-        self.sq.push(release);
+        self.sq.hold(release);
     }
 
     /// Commit an instruction: completion time, destination write, ROB entry.

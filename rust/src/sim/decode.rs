@@ -81,6 +81,27 @@ pub enum UKind {
     IndirectJmp,
     Bafin { handler_dst: Reg, id_dst: Reg, fallthrough: BlockId },
     Halt,
+    // ---- superops (decode-time peephole fusion, `decode_with`) ----
+    //
+    // Each fused variant stands for TWO adjacent micro-ops of the same
+    // block where the second consumes the first ALU's destination. The
+    // handler performs *both* ops' dispatch/ROB/scoreboard accounting
+    // inline — two `Core::dispatch` calls, two commits, both register
+    // writes — so simulated timing and stats are bit-identical to the
+    // unfused pair; only the interpreter's per-op overhead (op fetch,
+    // match dispatch, operand re-decode, scoreboard re-read) is halved.
+    // In every fused variant `UOp::a` / `UOp::b` are the first ALU's
+    // operands; the second op's extra operands live in the payload.
+    /// Alu feeding a dependent Alu (`a2`/`b2` = second op's operands).
+    FusedAluAlu { op1: AluOp, dst1: Reg, lat1: u64, op2: AluOp, dst2: Reg, lat2: u64, a2: Src, b2: Src },
+    /// Address-gen Alu feeding a Load whose base is the Alu destination.
+    FusedAluLoad { op: AluOp, dst: Reg, lat: u64, ld_dst: Reg, off: i64, width: Width },
+    /// Alu feeding a Store (as value and/or base address).
+    FusedAluStore { op: AluOp, dst: Reg, lat: u64, off: i64, width: Width, val: Src, base: Src },
+    /// Compare (any Alu) feeding the block's conditional branch.
+    FusedAluBr { op: AluOp, dst: Reg, lat: u64, then_: BlockId, else_: BlockId },
+    /// Alu with both operands immediate, folded at decode time.
+    AluConst { dst: Reg, val: i64, lat: u64 },
 }
 
 /// One pre-decoded micro-op: payload plus everything the timing loop
@@ -107,6 +128,8 @@ pub struct DecodedFunc {
     /// BlockId -> index of that block's first op in `ops`.
     pub block_start: Vec<u32>,
     pub entry: BlockId,
+    /// Superop pairs formed by the fusion peephole (0 when unfused).
+    pub fused_pairs: u32,
 }
 
 impl DecodedFunc {
@@ -139,19 +162,38 @@ pub(crate) fn falu_latency(op: FaluOp) -> u64 {
 
 const IMM0: Src = Src { reg: NO_REG, imm: 0 };
 
+/// Lower `f` into its decode-once form without superop fusion. The
+/// unfused lowering is the differential baseline for the fusion knob;
+/// see [`decode_with`].
+pub fn decode(f: &Function) -> DecodedFunc {
+    decode_with(f, false)
+}
+
 /// Lower `f` into its decode-once form. O(static instructions); called
 /// once per [`super::Program`] construction.
-pub fn decode(f: &Function) -> DecodedFunc {
+///
+/// With `fuse` set, a peephole pass runs over each block after lowering
+/// and fuses adjacent dependent pairs into superop [`UKind`] variants
+/// (Alu→Alu, addr-gen Alu→Load/Store, compare→Br) and constant-folds
+/// Alu ops whose operands are both immediates. Fusion never crosses a
+/// block boundary, so every branch/resume target remains a valid op
+/// index, and the fused handlers replay both constituent ops' timing
+/// accounting exactly — `fuse` on/off is invisible in cycles, stats and
+/// memory (pinned by the differential suite).
+pub fn decode_with(f: &Function, fuse: bool) -> DecodedFunc {
     let mut ops = Vec::with_capacity(f.static_len());
     let mut block_start = Vec::with_capacity(f.blocks.len());
+    let mut fused_pairs = 0u32;
+    let mut scratch: Vec<UOp> = Vec::new();
     for (bi, blk) in f.blocks.iter().enumerate() {
         let bb = bi as BlockId;
         let tag = blk.tag;
         let is_ctx = tag == CodeTag::CtxSwitch;
         block_start.push(ops.len() as u32);
+        scratch.clear();
         let uop = |kind: UKind, a: Src, b: Src| UOp { kind, a, b, bb, tag, is_ctx };
         for inst in &blk.insts {
-            ops.push(match inst {
+            scratch.push(match inst {
                 Inst::Alu { op, dst, a, b } => uop(
                     UKind::Alu { op: *op, dst: *dst, lat: alu_latency(*op) },
                     Src::of(*a),
@@ -201,7 +243,7 @@ pub fn decode(f: &Function) -> DecodedFunc {
                 Inst::Asignal { id } => uop(UKind::Asignal, Src::of(*id), IMM0),
             });
         }
-        ops.push(match &blk.term {
+        scratch.push(match &blk.term {
             Term::Br { cond, then_, else_ } => {
                 uop(UKind::Br { then_: *then_, else_: *else_ }, Src::of(*cond), IMM0)
             }
@@ -218,8 +260,74 @@ pub fn decode(f: &Function) -> DecodedFunc {
             ),
             Term::Halt => uop(UKind::Halt, IMM0, IMM0),
         });
+        if fuse {
+            fused_pairs += fuse_block(&scratch, &mut ops);
+        } else {
+            ops.extend_from_slice(&scratch);
+        }
     }
-    DecodedFunc { name: f.name.clone(), ops, block_start, entry: f.entry }
+    DecodedFunc { name: f.name.clone(), ops, block_start, entry: f.entry, fused_pairs }
+}
+
+/// Peephole over one lowered block: constant-fold immediate-only ALU
+/// ops, then greedily fuse adjacent dependent pairs (left to right,
+/// non-overlapping). Returns the number of pairs formed.
+fn fuse_block(block: &[UOp], out: &mut Vec<UOp>) -> u32 {
+    let mut pairs = 0u32;
+    let mut i = 0;
+    while i < block.len() {
+        let cur = fold_const(block[i]);
+        if i + 1 < block.len() {
+            if let Some(fused) = try_fuse(&cur, &block[i + 1]) {
+                out.push(fused);
+                pairs += 1;
+                i += 2;
+                continue;
+            }
+        }
+        out.push(cur);
+        i += 1;
+    }
+    pairs
+}
+
+/// Alu with both operands immediate → [`UKind::AluConst`], evaluated at
+/// decode time through the interpreter's own [`super::interp::alu_eval`]
+/// so folded values cannot diverge. Timing is unchanged: an
+/// immediate-only op executes at its dispatch cycle either way.
+fn fold_const(op: UOp) -> UOp {
+    if let UKind::Alu { op: aop, dst, lat } = op.kind {
+        if op.a.reg == NO_REG && op.b.reg == NO_REG {
+            let val = super::interp::alu_eval(aop, op.a.imm, op.b.imm);
+            return UOp { kind: UKind::AluConst { dst, val, lat }, ..op };
+        }
+    }
+    op
+}
+
+/// Fuse `p` (an ALU op) with its block successor `n` when `n` consumes
+/// `p`'s destination. The pair stays within one block (callers only
+/// hand in same-block neighbours), so no branch target can land between
+/// the two halves.
+fn try_fuse(p: &UOp, n: &UOp) -> Option<UOp> {
+    let UKind::Alu { op, dst, lat } = p.kind else { return None };
+    debug_assert_eq!(p.bb, n.bb, "fusion must not cross blocks");
+    let kind = match n.kind {
+        UKind::Alu { op: op2, dst: dst2, lat: lat2 } if n.a.reg == dst || n.b.reg == dst => {
+            UKind::FusedAluAlu { op1: op, dst1: dst, lat1: lat, op2, dst2, lat2, a2: n.a, b2: n.b }
+        }
+        UKind::Load { dst: ld_dst, off, width } if n.a.reg == dst => {
+            UKind::FusedAluLoad { op, dst, lat, ld_dst, off, width }
+        }
+        UKind::Store { off, width } if n.a.reg == dst || n.b.reg == dst => {
+            UKind::FusedAluStore { op, dst, lat, off, width, val: n.a, base: n.b }
+        }
+        UKind::Br { then_, else_ } if n.a.reg == dst => {
+            UKind::FusedAluBr { op, dst, lat, then_, else_ }
+        }
+        _ => return None,
+    };
+    Some(UOp { kind, ..*p })
 }
 
 #[cfg(test)]
@@ -260,6 +368,91 @@ mod tests {
         let regs = [10i64, 20];
         assert_eq!(Src { reg: NO_REG, imm: -7 }.value(&regs), -7);
         assert_eq!(Src { reg: 1, imm: 0 }.value(&regs), 20);
+    }
+
+    /// The canonical GUPS-shaped block: addr-gen chain + load + store +
+    /// loop bookkeeping. Fusion must form the expected superops and
+    /// leave every block start pointing at a real op.
+    #[test]
+    fn fusion_forms_superops_on_addr_gen_chains() {
+        let mut b = FuncBuilder::new("f");
+        let pb = b.reg();
+        let i = b.reg();
+        b.mov(i, Imm(0)); // imm+imm -> AluConst
+        let head = b.new_block("head", CodeTag::Compute);
+        let body = b.new_block("body", CodeTag::Compute);
+        let exit = b.new_block("exit", CodeTag::Compute);
+        b.jmp(head);
+        b.switch_to(head);
+        let c = b.alu(AluOp::Slt, R(i), Imm(100));
+        b.br(R(c), body, exit); // cmp -> br fuses
+        b.switch_to(body);
+        let off = b.alu(AluOp::Shl, R(i), Imm(3));
+        let addr = b.alu(AluOp::Add, R(pb), R(off)); // shl -> add fuses
+        let v = b.load(R(addr), 0, Width::W8, AddrSpace::Remote); // (unpaired: addr taken)
+        let sv = b.alu(AluOp::Xor, R(v), R(i));
+        b.store(R(sv), R(addr), 0, Width::W8, AddrSpace::Remote); // xor -> store fuses
+        b.alu_into(i, AluOp::Add, R(i), Imm(1));
+        b.jmp(body); // placeholder target; structure is what matters
+        b.switch_to(exit);
+        b.halt();
+        let f = b.build();
+        let unfused = decode_with(&f, false);
+        let fused = decode_with(&f, true);
+        assert_eq!(unfused.fused_pairs, 0);
+        assert!(fused.fused_pairs >= 3, "expected >=3 pairs, got {}", fused.fused_pairs);
+        assert_eq!(
+            fused.ops.len() + fused.fused_pairs as usize,
+            unfused.ops.len(),
+            "every pair shortens the array by exactly one"
+        );
+        assert!(fused.ops.iter().any(|o| matches!(o.kind, UKind::AluConst { val: 0, .. })));
+        assert!(fused.ops.iter().any(|o| matches!(o.kind, UKind::FusedAluBr { .. })));
+        assert!(fused.ops.iter().any(|o| matches!(o.kind, UKind::FusedAluAlu { .. })));
+        assert!(fused.ops.iter().any(|o| matches!(o.kind, UKind::FusedAluStore { .. })));
+        // Block starts remain in-bounds and block-aligned.
+        for (bi, &s) in fused.block_start.iter().enumerate() {
+            assert!((s as usize) < fused.ops.len());
+            assert_eq!(fused.ops[s as usize].bb, bi as BlockId);
+        }
+    }
+
+    #[test]
+    fn fusion_pairs_alu_with_dependent_load() {
+        let mut b = FuncBuilder::new("l");
+        let pb = b.reg();
+        let addr = b.alu(AluOp::Add, R(pb), Imm(8));
+        let v = b.load(R(addr), 0, Width::W8, AddrSpace::Remote);
+        let _ = v;
+        b.halt();
+        let d = decode_with(&b.build(), true);
+        assert_eq!(d.fused_pairs, 1);
+        assert!(matches!(d.ops[0].kind, UKind::FusedAluLoad { off: 0, .. }));
+        // Independent neighbours must NOT fuse.
+        let mut b2 = FuncBuilder::new("nl");
+        let p1 = b2.reg();
+        let p2 = b2.reg();
+        let x = b2.alu(AluOp::Add, R(p1), Imm(1));
+        let _ = x;
+        let v2 = b2.load(R(p2), 0, Width::W8, AddrSpace::Remote);
+        let _ = v2;
+        b2.halt();
+        let d2 = decode_with(&b2.build(), true);
+        assert_eq!(d2.fused_pairs, 0, "load base is not the alu dst");
+    }
+
+    #[test]
+    fn const_fold_uses_interpreter_semantics() {
+        // Div-by-zero folds to the interpreter's defined -1, not a trap.
+        let mut b = FuncBuilder::new("cf");
+        let q = b.alu(AluOp::Div, Imm(7), Imm(0));
+        let _ = q;
+        b.halt();
+        let d = decode_with(&b.build(), true);
+        match d.ops[0].kind {
+            UKind::AluConst { val, .. } => assert_eq!(val, -1),
+            ref k => panic!("expected AluConst, got {k:?}"),
+        }
     }
 
     #[test]

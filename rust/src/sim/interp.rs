@@ -20,7 +20,7 @@
 use super::amu::Amu;
 use super::bpu::{BafinPredictTable, Ittage, Tage};
 use super::core::{Cause, Core};
-use super::decode::{alu_latency, decode, falu_latency, DecodedFunc, Src, UKind, NO_REG};
+use super::decode::{alu_latency, decode_with, falu_latency, DecodedFunc, Src, UKind, NO_REG};
 use super::mem::MemImage;
 use super::memsys::{AccessKind, MemSys};
 use super::stats::RunStats;
@@ -50,6 +50,9 @@ pub struct Program {
 
 impl Program {
     /// Assemble a program, lowering `func` to its micro-op form once.
+    /// `fuse` enables the decode-time superop peephole (see
+    /// `sim::decode::decode_with`); it is timing-transparent, so the
+    /// knob only trades decode work for interpreter throughput.
     pub fn new(
         func: Function,
         mem: MemImage,
@@ -57,13 +60,17 @@ impl Program {
         spm_slot_bytes: u32,
         spm_base_reg: Option<Reg>,
         max_dyn_instrs: u64,
+        fuse: bool,
     ) -> Program {
-        let decoded = Arc::new(decode(&func));
+        let decoded = Arc::new(decode_with(&func, fuse));
         Program { func, decoded, mem, reg_init, spm_slot_bytes, spm_base_reg, max_dyn_instrs }
     }
 }
 
-fn alu_eval(op: AluOp, a: i64, b: i64) -> i64 {
+/// Evaluate an integer op. `pub(crate)` because the decode-time
+/// constant-folder reuses it, so folded results cannot drift from the
+/// interpreter's semantics.
+pub(crate) fn alu_eval(op: AluOp, a: i64, b: i64) -> i64 {
     match op {
         AluOp::Add => a.wrapping_add(b),
         AluOp::Sub => a.wrapping_sub(b),
@@ -243,6 +250,18 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
     let mut m = Machine::new(cfg, prog);
 
     let mut pc = dec.start_of(dec.entry);
+    // Budget charge for the second half of a fused superop: the bail
+    // message matches the per-op check above (same block, same name), so
+    // a budget that expires mid-pair fails identically to the unfused
+    // and reference paths.
+    macro_rules! take_budget {
+        ($op:expr) => {
+            if budget == 0 {
+                bail!("dynamic instruction budget exhausted in {} at bb{}", dec.name, $op.bb);
+            }
+            budget -= 1;
+        };
+    }
     'run: loop {
         let op = &dec.ops[pc];
         if budget == 0 {
@@ -465,6 +484,99 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 }
             }
             UKind::Halt => break 'run,
+            // ---- superops: both halves' accounting inline, in the exact
+            // order the unfused pair would perform it. `d` is the first
+            // half's dispatch cycle; the second half dispatches its own.
+            UKind::FusedAluAlu { op1, dst1, lat1, op2, dst2, lat2, a2, b2 } => {
+                let v1 = alu_eval(op1, op.a.value(&m.regs), op.b.value(&m.regs));
+                m.regs[dst1 as usize] = v1;
+                let exec1 = m.ready2(d, op.a, op.b);
+                m.core.commit(Some(dst1), exec1 + lat1, Cause::Compute);
+                take_budget!(op);
+                let d2 = m.core.dispatch(op.tag);
+                let v2 = alu_eval(op2, a2.value(&m.regs), b2.value(&m.regs));
+                m.regs[dst2 as usize] = v2;
+                let exec2 = m.ready2(d2, a2, b2);
+                m.core.commit(Some(dst2), exec2 + lat2, Cause::Compute);
+                pc += 1;
+            }
+            UKind::FusedAluLoad { op: aop, dst, lat, ld_dst, off, width } => {
+                let v1 = alu_eval(aop, op.a.value(&m.regs), op.b.value(&m.regs));
+                m.regs[dst as usize] = v1;
+                let exec1 = m.ready2(d, op.a, op.b);
+                let addr_ready = exec1 + lat;
+                m.core.commit(Some(dst), addr_ready, Cause::Compute);
+                take_budget!(op);
+                let d2 = m.core.dispatch(op.tag);
+                // The load's base register IS the alu destination: its
+                // value (v1) and ready cycle (addr_ready) are in hand, so
+                // neither the register file nor the scoreboard is re-read.
+                let addr = (v1.wrapping_add(off)) as u64;
+                let (v2, space) = m
+                    .mem
+                    .read_ws(addr, width)
+                    .with_context(|| format!("load in bb{}", op.bb))?;
+                m.regs[ld_dst as usize] = v2;
+                let exec2 = d2.max(addr_ready);
+                let t = m.core.lq_acquire(exec2);
+                let done = m.msys.access(addr, space, AccessKind::Load, t);
+                m.core.lq_hold(done);
+                m.core.commit(Some(ld_dst), done, m.mem_cause(space));
+                m.core.stats.loads += 1;
+                if op.is_ctx {
+                    m.core.stats.ctx_ops += 1;
+                }
+                pc += 1;
+            }
+            UKind::FusedAluStore { op: aop, dst, lat, off, width, val, base } => {
+                let v1 = alu_eval(aop, op.a.value(&m.regs), op.b.value(&m.regs));
+                m.regs[dst as usize] = v1;
+                let exec1 = m.ready2(d, op.a, op.b);
+                m.core.commit(Some(dst), exec1 + lat, Cause::Compute);
+                take_budget!(op);
+                let d2 = m.core.dispatch(op.tag);
+                let addr = (base.value(&m.regs).wrapping_add(off)) as u64;
+                let space = m
+                    .mem
+                    .write_ws(addr, width, val.value(&m.regs))
+                    .with_context(|| format!("store in bb{}", op.bb))?;
+                let exec2 = m.ready2(d2, val, base);
+                let t = m.core.sq_acquire(exec2);
+                let drain = m.msys.access(addr, space, AccessKind::Store, t);
+                m.core.sq_hold(drain);
+                // Stores retire once queued; drain happens behind.
+                m.core.commit(None, exec2 + 1, Cause::Compute);
+                m.core.stats.stores += 1;
+                if op.is_ctx {
+                    m.core.stats.ctx_ops += 1;
+                }
+                pc += 1;
+            }
+            UKind::FusedAluBr { op: aop, dst, lat, then_, else_ } => {
+                let v1 = alu_eval(aop, op.a.value(&m.regs), op.b.value(&m.regs));
+                m.regs[dst as usize] = v1;
+                let exec1 = m.ready2(d, op.a, op.b);
+                let cond_ready = exec1 + lat;
+                m.core.commit(Some(dst), cond_ready, Cause::Compute);
+                take_budget!(op);
+                let d2 = m.core.dispatch(op.tag);
+                let taken = v1 != 0;
+                let exec2 = d2.max(cond_ready);
+                m.core.commit(None, exec2 + 1, Cause::Compute);
+                m.core.stats.cond_branches += 1;
+                if m.tage.predict_and_update(op.bb as u64, taken) {
+                    m.core.stats.cond_mispredicts += 1;
+                    m.core.redirect(exec2 + 1);
+                }
+                pc = dec.start_of(if taken { then_ } else { else_ });
+            }
+            UKind::AluConst { dst, val, lat } => {
+                // Both operands immediate: exec == dispatch, value folded
+                // at decode time through the same alu_eval.
+                m.regs[dst as usize] = val;
+                m.core.commit(Some(dst), d + lat, Cause::Compute);
+                pc += 1;
+            }
         }
     }
 
@@ -702,22 +814,29 @@ mod tests {
     use crate::ir::builder::FuncBuilder;
     use crate::ir::Operand::{Imm, Reg as R};
 
-    fn make_prog(f: Function, mem: MemImage, init: Vec<(Reg, i64)>) -> Program {
-        Program::new(f, mem, init, 64, None, 10_000_000)
+    fn make_prog(f: Function, mem: MemImage, init: Vec<(Reg, i64)>, fuse: bool) -> Program {
+        Program::new(f, mem, init, 64, None, 10_000_000, fuse)
     }
 
-    /// Run on the decoded path, then assert the reference path agrees
-    /// bit-for-bit on stats and memory — the per-test differential check.
+    /// Run on the decoded path (fused and unfused), then assert the
+    /// reference path agrees bit-for-bit on stats and memory — the
+    /// per-test differential check.
     fn run_simple(f: Function, mem: MemImage, init: Vec<(Reg, i64)>) -> (RunStats, MemImage) {
         let cfg = SimConfig::nh_g();
-        let mut p = make_prog(f.clone(), mem.snapshot(), init.clone());
+        let mut p = make_prog(f.clone(), mem.snapshot(), init.clone(), true);
         let st = run(&cfg, &mut p).unwrap();
-        let mut pref = make_prog(f, mem, init);
+        let mut pu = make_prog(f.clone(), mem.snapshot(), init.clone(), false);
+        let st_u = run(&cfg, &mut pu).unwrap();
+        assert_eq!(st, st_u, "fused and unfused decoded stats diverge");
+        let mut pref = make_prog(f, mem, init, false);
         let st_ref = run_reference(&cfg, &mut pref).unwrap();
         assert_eq!(st, st_ref, "decoded and reference stats diverge");
         for (a, b) in p.mem.regions.iter().zip(pref.mem.regions.iter()) {
             assert_eq!(a.name, b.name);
             assert_eq!(a.data, b.data, "memory diverges in region {}", a.name);
+        }
+        for (a, b) in pu.mem.regions.iter().zip(pref.mem.regions.iter()) {
+            assert_eq!(a.data, b.data, "unfused memory diverges in region {}", a.name);
         }
         (st, p.mem)
     }
@@ -786,9 +905,9 @@ mod tests {
         b.switch_to(l);
         b.jmp(l);
         let f = b.build();
-        let mut p = Program::new(f.clone(), MemImage::new(), vec![], 64, None, 1000);
+        let mut p = Program::new(f.clone(), MemImage::new(), vec![], 64, None, 1000, true);
         assert!(run(&SimConfig::nh_g(), &mut p).is_err());
-        let mut pref = Program::new(f, MemImage::new(), vec![], 64, None, 1000);
+        let mut pref = Program::new(f, MemImage::new(), vec![], 64, None, 1000, false);
         assert!(run_reference(&SimConfig::nh_g(), &mut pref).is_err());
     }
 
@@ -821,10 +940,10 @@ mod tests {
         let f = b2.build();
         let init = vec![(pr, rem as i64), (ps, spm as i64)];
         let cfg = SimConfig::nh_g();
-        let mut p = Program::new(f.clone(), mem.snapshot(), init.clone(), 64, Some(ps), 1_000_000);
+        let mut p = Program::new(f.clone(), mem.snapshot(), init.clone(), 64, Some(ps), 1_000_000, true);
         let st = run(&cfg, &mut p).unwrap();
         // Reference path must agree exactly (AMU timing included).
-        let mut pref = Program::new(f, mem, init, 64, Some(ps), 1_000_000);
+        let mut pref = Program::new(f, mem, init, 64, Some(ps), 1_000_000, false);
         let st_ref = run_reference(&cfg, &mut pref).unwrap();
         assert_eq!(st, st_ref, "decoded and reference stats diverge on the AMU path");
         assert_eq!(st.aloads, 1);
@@ -846,9 +965,11 @@ mod tests {
 
     /// Property: random small IR kernels (loops of ALU ops, loads and
     /// stores with data-dependent addresses) produce bit-identical stats
-    /// and memory under the decoded and reference interpreters.
+    /// and memory across all four execution paths: reference,
+    /// decoded-unfused, decoded-fused, and decoded-fused re-run from a
+    /// copy-on-write snapshot restore.
     #[test]
-    fn proptest_decoded_matches_reference() {
+    fn proptest_all_four_paths_agree() {
         use crate::util::proptest::{check, Config};
         check(
             Config { cases: 48, ..Config::default() },
@@ -856,29 +977,46 @@ mod tests {
             |seed: &u64| {
                 let (f, mem, init) = random_program(*seed);
                 let cfg = SimConfig::nh_g();
-                let mut pd = Program::new(f.clone(), mem.snapshot(), init.clone(), 64, None, 200_000);
-                let mut pr = Program::new(f, mem, init, 64, None, 200_000);
-                let rd = run(&cfg, &mut pd);
-                let rr = run_reference(&cfg, &mut pr);
-                match (rd, rr) {
-                    (Ok(sd), Ok(sr)) => {
-                        if sd != sr {
-                            return Err(format!("stats diverge:\n  decoded {sd:?}\n  reference {sr:?}"));
-                        }
-                        for (a, b) in pd.mem.regions.iter().zip(pr.mem.regions.iter()) {
-                            if a.data != b.data {
-                                return Err(format!("memory diverges in region {}", a.name));
-                            }
-                        }
-                        Ok(())
-                    }
-                    (Err(_), Err(_)) => Ok(()), // both reject identically-shaped inputs
-                    (d, r) => Err(format!(
-                        "paths disagree on failure: decoded ok={} reference ok={}",
-                        d.is_ok(),
-                        r.is_ok()
-                    )),
+                let mut progs = [
+                    Program::new(f.clone(), mem.snapshot(), init.clone(), 64, None, 200_000, false),
+                    Program::new(f.clone(), mem.snapshot(), init.clone(), 64, None, 200_000, true),
+                    Program::new(f.clone(), mem.snapshot(), init.clone(), 64, None, 200_000, true),
+                    Program::new(f, mem, init, 64, None, 200_000, false),
+                ];
+                let [pu, pf, ps, pr] = &mut progs;
+                let results = [
+                    ("decoded-unfused", run(&cfg, pu)),
+                    ("decoded-fused", run(&cfg, pf)),
+                    ("fused-after-restore", run(&cfg, ps)),
+                    ("reference", run_reference(&cfg, pr)),
+                ];
+                let n_ok = results.iter().filter(|(_, r)| r.is_ok()).count();
+                if n_ok == 0 {
+                    return Ok(()); // all paths reject identically-shaped inputs
                 }
+                if n_ok != results.len() {
+                    let states: Vec<String> =
+                        results.iter().map(|(n, r)| format!("{n} ok={}", r.is_ok())).collect();
+                    return Err(format!("paths disagree on failure: {}", states.join(", ")));
+                }
+                let base = results[0].1.as_ref().unwrap();
+                for (name, r) in &results[1..] {
+                    let s = r.as_ref().unwrap();
+                    if s != base {
+                        return Err(format!(
+                            "stats diverge ({name} vs decoded-unfused):\n  {s:?}\n  {base:?}"
+                        ));
+                    }
+                }
+                let [pu, pf, ps, pr] = &progs;
+                for other in [pf, ps, pr] {
+                    for (a, b) in pu.mem.regions.iter().zip(other.mem.regions.iter()) {
+                        if a.data != b.data {
+                            return Err(format!("memory diverges in region {}", a.name));
+                        }
+                    }
+                }
+                Ok(())
             },
         );
     }

@@ -8,6 +8,7 @@
 //! MSHR-bound prefetching of Fig. 16.
 
 use super::cache::{BestOffset, Cache, LINE_BYTES, LINE_SHIFT};
+use super::stats::IntervalUnion;
 use crate::config::SimConfig;
 use crate::ir::AddrSpace;
 
@@ -27,19 +28,23 @@ pub struct Channel {
     cycles_per_line: f64,
     next_free: f64,
     pub lines_transferred: u64,
-    /// (issue, completion) per request, for MLP accounting.
-    pub intervals: Vec<(u64, u64)>,
+    /// Online (issue, completion) union/integral for MLP accounting —
+    /// O(1) memory, no per-request allocation (see [`IntervalUnion`]).
+    union: IntervalUnion,
     record: bool,
 }
 
 impl Channel {
-    pub fn new(latency: u64, bytes_per_cycle: f64, record: bool) -> Self {
+    /// `window` sizes the MLP accumulator's reorder tolerance; pass the
+    /// maximum number of simultaneously in-flight requests this channel
+    /// can see (AMU request table + MSHRs + margin for the far tier).
+    pub fn new(latency: u64, bytes_per_cycle: f64, record: bool, window: usize) -> Self {
         Channel {
             latency,
             cycles_per_line: LINE_BYTES as f64 / bytes_per_cycle.max(0.01),
             next_free: 0.0,
             lines_transferred: 0,
-            intervals: Vec::new(),
+            union: IntervalUnion::with_window(window),
             record,
         }
     }
@@ -53,34 +58,23 @@ impl Channel {
         self.lines_transferred += lines;
         let completion = (start + xfer) as u64 + self.latency;
         if self.record {
-            self.intervals.push((t, completion));
+            self.union.push(t, completion);
         }
         completion
     }
 
     /// Average in-flight requests over the busy period, and the busy
-    /// fraction of `total_cycles` (Fig. 16's MLP metric).
+    /// fraction of `total_cycles` (Fig. 16's MLP metric). Reads the
+    /// accumulator — O(reorder window), independent of request count.
     pub fn mlp(&self, total_cycles: u64) -> (f64, f64) {
-        if self.intervals.is_empty() || total_cycles == 0 {
+        if self.union.count() == 0 || total_cycles == 0 {
             return (0.0, 0.0);
         }
-        let mut iv = self.intervals.clone();
-        iv.sort_unstable();
-        let mut busy = 0u64;
-        let mut integral = 0u64;
-        let (mut cs, mut ce) = iv[0];
-        for &(s, e) in &iv {
-            integral += e - s;
-            if s > ce {
-                busy += ce - cs;
-                cs = s;
-                ce = e;
-            } else {
-                ce = ce.max(e);
-            }
-        }
-        busy += ce - cs;
-        (integral as f64 / busy.max(1) as f64, busy as f64 / total_cycles as f64)
+        let busy = self.union.busy();
+        (
+            self.union.integral() as f64 / busy.max(1) as f64,
+            busy as f64 / total_cycles as f64,
+        )
     }
 }
 
@@ -97,13 +91,20 @@ pub struct MemSys {
 
 impl MemSys {
     pub fn new(cfg: &SimConfig) -> Self {
+        // The far channel's reorder window must cover every request that
+        // can be in flight at once: AMU decoupled transfers (bounded by
+        // the Request Table, they bypass the caches entirely), demand
+        // fills (bounded by the L3 MSHRs), and BOP prefetch fills (which
+        // hold only an L2 MSHR on their way down), with slack for the
+        // ROB-induced issue-time skew of demand misses.
+        let far_window = cfg.amu.request_table + cfg.l3.mshrs + cfg.l2.mshrs + 64;
         MemSys {
             l1: Cache::new(&cfg.l1d),
             l2: Cache::new(&cfg.l2),
             l3: Cache::new(&cfg.l3),
             bop: cfg.l2_bop.then(BestOffset::new),
-            local: Channel::new(cfg.local_latency_cycles(), cfg.mem.local_bw_bytes_per_cycle, false),
-            far: Channel::new(cfg.far_latency_cycles(), cfg.mem.far_bw_bytes_per_cycle, true),
+            local: Channel::new(cfg.local_latency_cycles(), cfg.mem.local_bw_bytes_per_cycle, false, 1),
+            far: Channel::new(cfg.far_latency_cycles(), cfg.mem.far_bw_bytes_per_cycle, true, far_window),
             spm_latency: cfg.l2.latency_cycles,
         }
     }
@@ -276,7 +277,7 @@ mod tests {
 
     #[test]
     fn bandwidth_serializes_channel() {
-        let mut ch = Channel::new(100, 16.0, true); // 4 cycles per line
+        let mut ch = Channel::new(100, 16.0, true, 64); // 4 cycles per line
         let c1 = ch.request(0, 1);
         let c2 = ch.request(0, 1);
         assert_eq!(c1, 104);
@@ -284,6 +285,52 @@ mod tests {
         let (mlp, busy) = ch.mlp(c2);
         assert!(mlp > 1.5, "two overlapped requests should give MLP ~2, got {mlp}");
         assert!(busy > 0.9);
+    }
+
+    /// MLP/busy regression against hand-computed interval unions. With
+    /// 100-cycle latency and 4 cycles/line, a request at `t` occupies
+    /// `[t, start + 4·lines + 100)`.
+    #[test]
+    fn mlp_pinned_against_hand_computed_union() {
+        let mut ch = Channel::new(100, 16.0, true, 64);
+        // Two overlapped requests at t=0: intervals (0,104) and (0,108).
+        // Union = 108, integral = 212.
+        let c1 = ch.request(0, 1);
+        let c2 = ch.request(0, 1);
+        assert_eq!((c1, c2), (104, 108));
+        let (mlp, busy) = ch.mlp(108);
+        assert!((mlp - 212.0 / 108.0).abs() < 1e-12, "mlp {mlp}");
+        assert!((busy - 1.0).abs() < 1e-12, "busy {busy}");
+        // A third request after a gap: (500, 604). Union = 108 + 104.
+        ch.request(500, 1);
+        let (mlp, busy) = ch.mlp(1000);
+        assert!((mlp - 316.0 / 212.0).abs() < 1e-12, "mlp {mlp}");
+        assert!((busy - 212.0 / 1000.0).abs() < 1e-12, "busy {busy}");
+    }
+
+    /// Out-of-order issue times (a later request carries an earlier
+    /// issue stamp, the in-flight-window pattern) still produce the
+    /// exact union the old clone-and-sort computed.
+    #[test]
+    fn mlp_exact_under_out_of_order_issue() {
+        let mut ch = Channel::new(100, 16.0, true, 64);
+        // Issue stamps 200, 40, 190 in that arrival order. Transfer
+        // serialization: starts 200, 204, 208 → completions 304, 308, 312.
+        // Intervals: (200,304), (40,308), (190,312).
+        // Union = [40,312) = 272; integral = 104 + 268 + 122 = 494.
+        ch.request(200, 1);
+        ch.request(40, 1);
+        ch.request(190, 1);
+        let (mlp, busy) = ch.mlp(312);
+        assert!((mlp - 494.0 / 272.0).abs() < 1e-12, "mlp {mlp}");
+        assert!((busy - 272.0 / 312.0).abs() < 1e-12, "busy {busy}");
+    }
+
+    #[test]
+    fn unrecorded_channel_reports_zero_mlp() {
+        let mut ch = Channel::new(100, 16.0, false, 64);
+        ch.request(0, 1);
+        assert_eq!(ch.mlp(1000), (0.0, 0.0));
     }
 
     #[test]

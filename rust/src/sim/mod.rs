@@ -17,6 +17,7 @@ pub mod decode;
 pub mod interp;
 pub mod mem;
 pub mod memsys;
+pub mod slots;
 pub mod stats;
 
 pub use decode::DecodedFunc;
@@ -64,6 +65,7 @@ pub fn link(
         ck.spm_slot_bytes.max(64),
         spm_base_reg,
         3_000_000_000,
+        cfg.fuse_superops,
     )
 }
 

@@ -1,0 +1,177 @@
+//! Fixed-size release-time slot pools for bounded hardware resources
+//! (MSHRs, load/store queues).
+//!
+//! The previous implementation kept a `Vec<u64>` of release cycles per
+//! resource and, when the queue looked full, `retain`ed expired entries
+//! and linear-scanned for the minimum — correct, but the push/retain
+//! churn showed up in the interpreter hot loop and the `Vec` is one more
+//! heap object per resource. [`SlotQueue`] replaces it with a fixed slot
+//! array threaded by a free list: acquire/hold are O(1) off the fast
+//! path, expiry and min-scan are O(cap) only when the pool is actually
+//! full (exactly when the old code paid its `retain` + min scan), and
+//! nothing allocates after construction.
+//!
+//! The semantics are bit-for-bit those of the old queue: an entry is
+//! live while `release > t` for the probing cycle `t`, expired entries
+//! are only collected when the pool looks full (or on an explicit
+//! [`SlotQueue::busy_gc`] probe), and a full pool grants at the earliest
+//! release among live entries. Timing-transparency of the swap is pinned
+//! by the differential suite.
+
+const NONE: u32 = u32::MAX;
+
+/// A bounded pool of release times with acquire/hold alternation:
+/// [`SlotQueue::acquire`] reserves a slot (possibly stalling until the
+/// earliest release when all slots are live), and the following
+/// [`SlotQueue::hold`] publishes the reservation's release cycle.
+#[derive(Debug)]
+pub struct SlotQueue {
+    /// Per-slot release cycle + 1; 0 marks a free slot.
+    rel: Box<[u64]>,
+    /// Free-list threading: `next[i]` = next free slot after `i`.
+    next: Box<[u32]>,
+    free_head: u32,
+    /// Number of live slots (`rel[i] != 0`).
+    occupied: usize,
+    /// Slot reserved by the last `acquire`, to be filled by `hold`.
+    reserved: u32,
+}
+
+impl SlotQueue {
+    pub fn new(cap: usize) -> SlotQueue {
+        assert!(cap > 0, "SlotQueue capacity must be nonzero");
+        let next: Vec<u32> =
+            (0..cap).map(|i| if i + 1 < cap { i as u32 + 1 } else { NONE }).collect();
+        SlotQueue {
+            rel: vec![0u64; cap].into_boxed_slice(),
+            next: next.into_boxed_slice(),
+            free_head: 0,
+            occupied: 0,
+            reserved: NONE,
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.rel.len()
+    }
+
+    fn free_slot(&mut self, i: usize) {
+        self.rel[i] = 0;
+        self.next[i] = self.free_head;
+        self.free_head = i as u32;
+        self.occupied -= 1;
+    }
+
+    /// Collect entries whose release has passed (`release <= t`). Called
+    /// only when the pool looks full, mirroring the old retain-on-full.
+    fn expire(&mut self, t: u64) {
+        for i in 0..self.rel.len() {
+            let r = self.rel[i];
+            if r != 0 && r - 1 <= t {
+                self.free_slot(i);
+            }
+        }
+    }
+
+    /// Reserve a slot at cycle `t`. Returns `(grant, stall)`: the cycle
+    /// the slot is available and the stall the caller should attribute
+    /// (`grant - t`, 0 on the fast path). The reservation is completed by
+    /// the next [`SlotQueue::hold`].
+    pub fn acquire(&mut self, t: u64) -> (u64, u64) {
+        debug_assert_eq!(self.reserved, NONE, "acquire without intervening hold");
+        if self.occupied == self.cap() {
+            self.expire(t);
+        }
+        if self.free_head != NONE {
+            self.reserved = self.free_head;
+            self.free_head = self.next[self.reserved as usize];
+            return (t, 0);
+        }
+        // Every slot holds a live entry: wait for the earliest release.
+        let mut mi = 0usize;
+        let mut mv = self.rel[0];
+        for (i, &r) in self.rel.iter().enumerate().skip(1) {
+            if r < mv {
+                mv = r;
+                mi = i;
+            }
+        }
+        self.rel[mi] = 0;
+        self.occupied -= 1;
+        self.reserved = mi as u32;
+        let earliest = mv - 1;
+        (earliest, earliest - t)
+    }
+
+    /// Publish the reservation made by the last [`SlotQueue::acquire`]:
+    /// the slot is held until `release`.
+    pub fn hold(&mut self, release: u64) {
+        debug_assert_ne!(self.reserved, NONE, "hold without acquire");
+        let i = self.reserved as usize;
+        self.reserved = NONE;
+        self.rel[i] = release.saturating_add(1);
+        self.occupied += 1;
+    }
+
+    /// Live entries at cycle `t`, collecting expired ones (the old
+    /// mutating `retain` probe).
+    pub fn busy_gc(&mut self, t: u64) -> usize {
+        self.expire(t);
+        self.occupied
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_path_grants_immediately() {
+        let mut q = SlotQueue::new(2);
+        assert_eq!(q.acquire(10), (10, 0));
+        q.hold(100);
+        assert_eq!(q.acquire(10), (10, 0));
+        q.hold(120);
+        assert_eq!(q.busy_gc(10), 2);
+    }
+
+    #[test]
+    fn full_pool_stalls_until_earliest_release() {
+        let mut q = SlotQueue::new(2);
+        q.acquire(10);
+        q.hold(100);
+        q.acquire(10);
+        q.hold(120);
+        // Third acquire at t=10: both slots live, earliest release 100.
+        assert_eq!(q.acquire(10), (100, 90));
+        q.hold(250);
+        // The popped slot was replaced: live entries are {120, 250}.
+        assert_eq!(q.busy_gc(119), 2);
+        assert_eq!(q.busy_gc(120), 1);
+        assert_eq!(q.busy_gc(250), 0);
+    }
+
+    #[test]
+    fn expired_entries_are_collected_when_full() {
+        let mut q = SlotQueue::new(2);
+        q.acquire(0);
+        q.hold(50);
+        q.acquire(0);
+        q.hold(60);
+        // At t=55 the 50-release slot has expired: no stall.
+        assert_eq!(q.acquire(55), (55, 0));
+        q.hold(200);
+        assert_eq!(q.busy_gc(55), 2, "60 and 200 still live");
+    }
+
+    #[test]
+    fn capacity_reached_after_churn() {
+        let mut q = SlotQueue::new(3);
+        for k in 0..50u64 {
+            let (g, _) = q.acquire(k);
+            q.hold(g + 5);
+        }
+        // Pool never exceeds capacity and still grants correctly.
+        assert!(q.busy_gc(49) <= 3);
+    }
+}

@@ -53,6 +53,170 @@ pub struct RunStats {
     pub tasks_completed: u64,
 }
 
+/// Default reorder window of [`IntervalUnion`] (see
+/// [`IntervalUnion::with_window`] for how channels size it to their
+/// actual in-flight depth).
+const UNION_WINDOW: usize = 64;
+
+/// Exact online interval-union accumulator with fixed memory.
+///
+/// Replaces the old per-channel `Vec<(issue, completion)>` that grew by
+/// one entry per far-memory request and was cloned + sorted on every
+/// MLP report. The accumulator keeps the running `integral` (Σ lengths,
+/// order-independent) and folds intervals into a running union through
+/// a bounded reorder window kept as a min-heap: once the window fills,
+/// each push flushes the minimum-start pending interval into the union
+/// (O(log window), no allocation). As long as every arrival is within
+/// `window` pushes of its start-sorted position the flush order equals
+/// the fully-sorted order and the result is bit-identical to the old
+/// clone-and-sort; the channel sizes the window to its maximum
+/// simultaneous in-flight request count (AMU request table + MSHRs +
+/// margin), which bounds exactly that skew. A straggler beyond the
+/// window can still extend the open run backward; only one disjointly
+/// *before* the open run would be bridged into it. Both interpreter
+/// paths feed identical request streams through this same accumulator,
+/// so the differential suite's bit-identity is unconditional.
+#[derive(Debug, Clone)]
+pub struct IntervalUnion {
+    /// Σ (end - start) over all pushed intervals.
+    integral: u64,
+    /// Union length of fully-merged (closed) runs.
+    closed: u64,
+    /// The open run still being extended, as (start, end).
+    cur: Option<(u64, u64)>,
+    /// Min-heap (by (start, end)) of pending intervals awaiting flush.
+    /// Capacity is reserved once at construction; steady state never
+    /// allocates.
+    pending: Vec<(u64, u64)>,
+    window: usize,
+    count: u64,
+}
+
+impl Default for IntervalUnion {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IntervalUnion {
+    pub fn new() -> IntervalUnion {
+        Self::with_window(UNION_WINDOW)
+    }
+
+    /// An accumulator whose reorder window holds `window` intervals.
+    /// Exactness vs the sort-everything oracle is guaranteed while no
+    /// interval arrives more than `window` pushes after an interval
+    /// with a larger start — callers should size this to the maximum
+    /// number of simultaneously in-flight requests.
+    pub fn with_window(window: usize) -> IntervalUnion {
+        let window = window.max(1);
+        IntervalUnion {
+            integral: 0,
+            closed: 0,
+            cur: None,
+            pending: Vec::with_capacity(window),
+            window,
+            count: 0,
+        }
+    }
+
+    /// Record one interval. O(log window) once saturated; no heap
+    /// allocation after construction.
+    pub fn push(&mut self, start: u64, end: u64) {
+        debug_assert!(end >= start, "inverted interval {start}..{end}");
+        self.integral += end - start;
+        self.count += 1;
+        let iv = (start, end);
+        if self.pending.len() < self.window {
+            self.pending.push(iv);
+            self.sift_up(self.pending.len() - 1);
+            return;
+        }
+        // Window full: flush the minimum of (pending ∪ {iv}).
+        let root = self.pending[0];
+        if iv < root {
+            // The incoming interval is itself the minimum.
+            Self::merge(&mut self.closed, &mut self.cur, iv);
+        } else {
+            self.pending[0] = iv;
+            self.sift_down(0);
+            Self::merge(&mut self.closed, &mut self.cur, root);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.pending[i] < self.pending[parent] {
+                self.pending.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.pending.len();
+        loop {
+            let l = 2 * i + 1;
+            let r = l + 1;
+            let mut smallest = i;
+            if l < n && self.pending[l] < self.pending[smallest] {
+                smallest = l;
+            }
+            if r < n && self.pending[r] < self.pending[smallest] {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.pending.swap(i, smallest);
+            i = smallest;
+        }
+    }
+
+    fn merge(closed: &mut u64, cur: &mut Option<(u64, u64)>, (s, e): (u64, u64)) {
+        match *cur {
+            None => *cur = Some((s, e)),
+            Some((cs, ce)) => {
+                if s > ce {
+                    *closed += ce - cs;
+                    *cur = Some((s, e));
+                } else {
+                    // In-window reordering can hand us an interval that
+                    // starts before the open run; extend it backward.
+                    *cur = Some((cs.min(s), ce.max(e)));
+                }
+            }
+        }
+    }
+
+    /// Total union (busy) length. Flushes a sorted copy of the pending
+    /// window into the union; called once per report, not per request,
+    /// so its O(window log window) copy+sort is off the hot path.
+    pub fn busy(&self) -> u64 {
+        let mut tmp = self.pending.clone();
+        tmp.sort_unstable();
+        let mut closed = self.closed;
+        let mut cur = self.cur;
+        for &iv in &tmp {
+            Self::merge(&mut closed, &mut cur, iv);
+        }
+        closed + cur.map_or(0, |(s, e)| e - s)
+    }
+
+    /// Σ interval lengths (the MLP numerator).
+    pub fn integral(&self) -> u64 {
+        self.integral
+    }
+
+    /// Number of intervals pushed.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
 pub fn tag_index(t: CodeTag) -> usize {
     match t {
         CodeTag::Compute => 0,
@@ -121,6 +285,111 @@ mod tests {
         let sum: f64 = b.iter().map(|(_, v)| v).sum();
         assert!((sum - 1.0).abs() < 1e-9, "breakdown sums to {sum}");
         assert!(b.iter().all(|(_, v)| *v >= 0.0));
+    }
+
+    /// Reference union: the old clone-and-sort merge, kept here as the
+    /// oracle the online accumulator is pinned against.
+    fn brute_union(iv: &[(u64, u64)]) -> (u64, u64) {
+        if iv.is_empty() {
+            return (0, 0);
+        }
+        let mut v = iv.to_vec();
+        v.sort_unstable();
+        let mut busy = 0u64;
+        let mut integral = 0u64;
+        let (mut cs, mut ce) = v[0];
+        for &(s, e) in &v {
+            integral += e - s;
+            if s > ce {
+                busy += ce - cs;
+                cs = s;
+                ce = e;
+            } else {
+                ce = ce.max(e);
+            }
+        }
+        busy += ce - cs;
+        (integral, busy)
+    }
+
+    #[test]
+    fn interval_union_hand_computed() {
+        // Disjoint + overlapping + contained, in order:
+        //   [0,10) ∪ [5,20) ∪ [30,40) ∪ [32,35) = [0,20) ∪ [30,40) → 30
+        let mut u = IntervalUnion::new();
+        for (s, e) in [(0, 10), (5, 20), (30, 40), (32, 35)] {
+            u.push(s, e);
+        }
+        assert_eq!(u.integral(), 10 + 15 + 10 + 3);
+        assert_eq!(u.busy(), 30);
+        assert_eq!(u.count(), 4);
+    }
+
+    #[test]
+    fn interval_union_out_of_order_issue() {
+        // Out-of-order arrival (the MSHR-overlap pattern): a later-issued
+        // request completes first and is pushed first.
+        let iv = [(100u64, 700u64), (40, 600), (90, 95), (800, 900), (750, 820)];
+        let mut u = IntervalUnion::new();
+        for &(s, e) in &iv {
+            u.push(s, e);
+        }
+        // Union: [40,700) ∪ [750,900) = 660 + 150 = 810.
+        assert_eq!(u.busy(), 810);
+        assert_eq!((u.integral(), u.busy()), brute_union(&iv));
+    }
+
+    #[test]
+    fn interval_union_empty_and_single() {
+        let u = IntervalUnion::new();
+        assert_eq!((u.integral(), u.busy(), u.count()), (0, 0, 0));
+        let mut u = IntervalUnion::new();
+        u.push(7, 7); // zero-length interval
+        assert_eq!((u.integral(), u.busy()), (0, 0));
+        u.push(10, 25);
+        assert_eq!((u.integral(), u.busy()), (15, 15));
+    }
+
+    #[test]
+    fn interval_union_tiny_window_stays_exact_in_order() {
+        // Window 2, sorted arrival: exact regardless of window size.
+        // Exercises both heap paths (replace-root and incoming-is-min).
+        let iv = [(0u64, 5u64), (3, 8), (20, 21), (22, 30), (25, 40), (100, 101)];
+        let mut u = IntervalUnion::with_window(2);
+        for &(s, e) in &iv {
+            u.push(s, e);
+        }
+        assert_eq!((u.integral(), u.busy()), brute_union(&iv));
+        // Union: [0,8) ∪ [20,21) ∪ [22,40) ∪ [100,101) = 8+1+18+1 = 28.
+        assert_eq!(u.busy(), 28);
+    }
+
+    #[test]
+    fn interval_union_matches_brute_force_past_window() {
+        // Many more intervals than the reorder window, with bounded
+        // local shuffling — the accumulator must agree with the old
+        // clone-and-sort exactly while holding O(1) state.
+        let mut rng = crate::util::rng::Rng::new(0xC0FFEE);
+        let mut iv: Vec<(u64, u64)> = Vec::new();
+        let mut t = 0u64;
+        for _ in 0..1000 {
+            t += rng.below(50);
+            let len = 1 + rng.below(400);
+            iv.push((t, t + len));
+        }
+        // Shuffle each run of 32 (within the 64-entry window).
+        for chunk in iv.chunks_mut(32) {
+            let n = chunk.len() as u64;
+            for i in (1..chunk.len()).rev() {
+                chunk.swap(i, rng.below(n.min(i as u64 + 1)) as usize);
+            }
+        }
+        let mut u = IntervalUnion::new();
+        for &(s, e) in &iv {
+            u.push(s, e);
+        }
+        assert_eq!((u.integral(), u.busy()), brute_union(&iv));
+        assert_eq!(u.count(), 1000);
     }
 
     #[test]

@@ -11,9 +11,11 @@ use coroamu::config::SimConfig;
 use coroamu::engine::{Engine, RunRequest};
 use coroamu::sim::{self, MemImage};
 
-/// Run `bench` under `variant` on both interpreter paths from identical
-/// snapshots and assert bit-identical stats + memory, then run the
-/// benchmark's native oracle on both final images.
+/// Run `bench` under `variant` on all three interpreter paths —
+/// decoded with superop fusion on (the session default), decoded with
+/// fusion off, and the tree-walking reference — from identical
+/// snapshots, and assert bit-identical stats + memory, then run the
+/// benchmark's native oracle on every final image.
 fn assert_paths_agree(bench: &str, variant: Variant, scale: Scale, seed: u64) {
     let engine = Engine::new(SimConfig::nh_g());
     let b = benchmarks::by_name(bench).unwrap();
@@ -21,18 +23,36 @@ fn assert_paths_agree(bench: &str, variant: Variant, scale: Scale, seed: u64) {
     let opts = variant.opts(inst.default_tasks);
     let prepared = engine.prepare_kernel(&inst.kernel, &opts).unwrap();
     let cfg = engine.config();
+    assert!(cfg.fuse_superops, "the session default must exercise fusion");
+    let cfg_unfused = cfg.clone().with_fuse(false);
+    let mem_unfused = inst.mem.snapshot();
     let mem_ref = inst.mem.snapshot();
     let mut pd = sim::link(cfg, &prepared.ck, inst.mem, &inst.params);
+    let mut pu = sim::link(&cfg_unfused, &prepared.ck, mem_unfused, &inst.params);
     let mut pr = sim::link(cfg, &prepared.ck, mem_ref, &inst.params);
+    // The serial lowering provably contains a compare→br loop head
+    // (adjacent, dependent), so fusion must engage there; other variants'
+    // lowered shapes are not guaranteed to place fusible pairs adjacently
+    // and only need to stay bit-identical.
+    if variant == Variant::Serial {
+        assert!(pd.decoded.fused_pairs > 0, "{bench}/Serial: fusion found no pairs");
+    }
+    assert_eq!(pu.decoded.fused_pairs, 0, "unfused lowering must not fuse");
     let sd = sim::run(cfg, &mut pd)
-        .unwrap_or_else(|e| panic!("{bench}/{}: decoded path failed: {e:#}", variant.label()));
+        .unwrap_or_else(|e| panic!("{bench}/{}: fused path failed: {e:#}", variant.label()));
+    let su = sim::run(&cfg_unfused, &mut pu)
+        .unwrap_or_else(|e| panic!("{bench}/{}: unfused path failed: {e:#}", variant.label()));
     let sr = sim::run_reference(cfg, &mut pr)
         .unwrap_or_else(|e| panic!("{bench}/{}: reference path failed: {e:#}", variant.label()));
     assert_eq!(sd.cycles, sr.cycles, "{bench}/{}: cycles diverge", variant.label());
+    assert_eq!(sd, su, "{bench}/{}: fused vs unfused stats diverge", variant.label());
     assert_eq!(sd, sr, "{bench}/{}: stats diverge", variant.label());
+    assert_identical_memory(&pd.mem, &pu.mem, bench, variant);
     assert_identical_memory(&pd.mem, &pr.mem, bench, variant);
     (inst.check)(&pd.mem)
         .unwrap_or_else(|e| panic!("{bench}/{}: decoded image fails oracle: {e:#}", variant.label()));
+    (inst.check)(&pu.mem)
+        .unwrap_or_else(|e| panic!("{bench}/{}: unfused image fails oracle: {e:#}", variant.label()));
     (inst.check)(&pr.mem)
         .unwrap_or_else(|e| panic!("{bench}/{}: reference image fails oracle: {e:#}", variant.label()));
 }
