@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Bench regression gate for BENCH_sim.json.
+
+Compares a freshly measured BENCH_sim.json against the committed
+baseline and enforces a tolerance on simulated-MIPS throughput:
+
+  * FAIL (exit 1) when any gated row regresses by more than --fail-pct
+    (default 15%).
+  * WARN (exit 0, annotated) when a gated row regresses by more than
+    --warn-pct (default 5%).
+
+Gated rows are the per-kernel decoded-interpreter measurements
+(names ending in `/decoded`, `/decoded-fused` or `/decoded-unfused`
+under `sim_mips/`): they are the simulator's product throughput. The
+`reference` rows are informational (the pre-change baseline shape) and
+rows present on only one side are reported but never gate — adding or
+renaming a kernel must not break CI.
+
+Degenerate baselines never gate: a placeholder (no samples) or a
+debug-mode recording against a release-mode measurement just prints a
+notice and exits 0, so the first real measurement can land and become
+the baseline (the CI workflow commits it).
+
+Usage:
+  python3 ci/check_bench_regression.py BASELINE.json FRESH.json \
+      [--fail-pct 15] [--warn-pct 5]
+"""
+
+import argparse
+import json
+import sys
+
+GATED_SUFFIXES = ("/decoded", "/decoded-fused", "/decoded-unfused")
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+    except json.JSONDecodeError as e:
+        print(f"ERROR: {path} is not valid JSON: {e}")
+        sys.exit(1)
+
+
+def rates(doc):
+    """name -> simulated rate (instr/s) for rows that carry throughput."""
+    out = {}
+    for s in doc.get("samples", []):
+        name, rate = s.get("name"), s.get("rate_per_s")
+        if name and isinstance(rate, (int, float)) and rate > 0:
+            out[name] = float(rate)
+    return out
+
+
+def gated(name):
+    return name.startswith("sim_mips/") and name.endswith(GATED_SUFFIXES)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--fail-pct", type=float, default=15.0)
+    ap.add_argument("--warn-pct", type=float, default=5.0)
+    args = ap.parse_args()
+
+    base_doc, fresh_doc = load(args.baseline), load(args.fresh)
+    if fresh_doc is None:
+        print(f"ERROR: fresh measurement {args.fresh} not found — did the bench step run?")
+        return 1
+    fresh = rates(fresh_doc)
+    if not fresh:
+        print(f"ERROR: fresh measurement {args.fresh} has no throughput samples")
+        return 1
+
+    if base_doc is None:
+        print(f"NOTICE: no baseline at {args.baseline}; gate skipped")
+        return 0
+    base = rates(base_doc)
+    if not base:
+        print("NOTICE: baseline is a placeholder (no samples); gate skipped — "
+              "the workflow records this run as the first measured baseline")
+        return 0
+    base_mode, fresh_mode = base_doc.get("mode"), fresh_doc.get("mode")
+    if base_mode != fresh_mode:
+        print(f"NOTICE: baseline mode '{base_mode}' != fresh mode '{fresh_mode}'; "
+              "gate skipped (build profiles are not comparable)")
+        return 0
+
+    failures, warnings = [], []
+    compared = 0
+    for name in sorted(set(base) | set(fresh)):
+        if name not in base:
+            print(f"  new row (not gated):      {name}")
+            continue
+        if name not in fresh:
+            print(f"  removed row (not gated):  {name}")
+            continue
+        b, f = base[name], fresh[name]
+        delta = (f - b) / b * 100.0
+        marker = " "
+        if gated(name):
+            compared += 1
+            if delta < -args.fail_pct:
+                failures.append((name, b, f, delta))
+                marker = "F"
+            elif delta < -args.warn_pct:
+                warnings.append((name, b, f, delta))
+                marker = "W"
+        print(f"  [{marker}] {name}: {b / 1e6:.2f} -> {f / 1e6:.2f} simulated MIPS ({delta:+.1f}%)")
+
+    for name, b, f, delta in warnings:
+        print(f"::warning::bench regression >{args.warn_pct:.0f}%: {name} "
+              f"{b / 1e6:.2f} -> {f / 1e6:.2f} MIPS ({delta:+.1f}%)")
+    for name, b, f, delta in failures:
+        print(f"::error::bench regression >{args.fail_pct:.0f}%: {name} "
+              f"{b / 1e6:.2f} -> {f / 1e6:.2f} MIPS ({delta:+.1f}%)")
+
+    if compared == 0:
+        print("NOTICE: no gated rows in common; gate skipped")
+        return 0
+    if failures:
+        print(f"FAIL: {len(failures)} kernel(s) regressed beyond {args.fail_pct:.0f}%")
+        return 1
+    print(f"OK: {compared} gated row(s) within tolerance "
+          f"({len(warnings)} warning(s) past {args.warn_pct:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -152,6 +152,48 @@ fn record_sim_mips(b: &Bench) -> bool {
     ok
 }
 
+/// The acceptance sweep as a throughput row: {fifo, arrival, batched,
+/// latency} x {200, 800} ns on GUPS/CoroAMU-Full through one engine
+/// session (policy and latency are simulate-time, so the whole matrix is
+/// one compile + one dataset build). Plus one row per policy so a policy
+/// whose scheduling work regresses interpreter throughput is visible.
+fn sched_policy_sweep(b: &mut Bench) {
+    use coroamu::sim::sched::SchedPolicyKind;
+    let matrix_name = "sched/sweep/gups/CoroAMU-Full";
+    if b.enabled(matrix_name) {
+        let engine = Engine::new(SimConfig::nh_g());
+        b.run(matrix_name, "instr", || {
+            let mut matrix = Vec::new();
+            for p in SchedPolicyKind::ALL {
+                for lat in [200.0, 800.0] {
+                    matrix.push(
+                        RunRequest::new("gups", Variant::CoroAmuFull)
+                            .scale(Scale::Small)
+                            .latency_ns(lat)
+                            .policy(p)
+                            .key(format!("{lat}/{}", p.label())),
+                    );
+                }
+            }
+            let rs = engine.sweep(&matrix, 4).unwrap();
+            rs.iter().map(|r| r.stats.dyn_instrs as f64).sum()
+        });
+    }
+    for p in SchedPolicyKind::ALL {
+        let name = format!("sched/policy/{}/gups", p.label());
+        if !b.enabled(&name) {
+            continue;
+        }
+        let engine = Engine::new(SimConfig::nh_g().with_sched_policy(p));
+        b.run(&name, "instr", || {
+            let r = engine
+                .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Small))
+                .unwrap();
+            r.stats.dyn_instrs as f64
+        });
+    }
+}
+
 fn interp_throughput(b: &mut Bench, bench_name: &str, variant: Variant) {
     let name = format!("interp/{}/{}", bench_name, variant.label());
     if !b.enabled(&name) {
@@ -223,6 +265,7 @@ fn main() {
     // bucket walk) and an MCF-style pointer chase (serialized loads).
     sim_mips(&mut b, "hj", Variant::CoroAmuFull);
     sim_mips(&mut b, "mcf", Variant::Serial);
+    sched_policy_sweep(&mut b);
     interp_throughput(&mut b, "gups", Variant::Serial);
     interp_throughput(&mut b, "gups", Variant::CoroAmuFull);
     interp_throughput(&mut b, "bs", Variant::CoroAmuD);

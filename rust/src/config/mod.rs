@@ -2,6 +2,7 @@
 //! preset used for the paper's Intel-server experiments (Figs 2/3/11), and a
 //! TOML-subset loader with CLI overrides.
 
+use crate::sim::sched::SchedPolicyKind;
 use crate::util::minitoml::{self, Doc};
 use anyhow::{bail, Context, Result};
 
@@ -120,6 +121,11 @@ pub struct SimConfig {
     /// differential suite); off exists so fused vs unfused interpreter
     /// throughput stays measurable.
     pub fuse_superops: bool,
+    /// Coroutine-resume policy over the AMU's Finished Queue
+    /// (`sim::sched`). A simulate-time knob like far latency: it never
+    /// forks the compiled-kernel cache. The default (`ArrivalOrder`)
+    /// reproduces the pre-subsystem behavior bit-for-bit.
+    pub sched_policy: SchedPolicyKind,
 }
 
 impl SimConfig {
@@ -168,6 +174,7 @@ impl SimConfig {
             },
             l2_bop: true,
             fuse_superops: true,
+            sched_policy: SchedPolicyKind::ArrivalOrder,
         }
     }
 
@@ -207,6 +214,7 @@ impl SimConfig {
             },
             l2_bop: false,
             fuse_superops: true,
+            sched_policy: SchedPolicyKind::ArrivalOrder,
         }
     }
 
@@ -241,6 +249,13 @@ impl SimConfig {
     /// interpreter optimization; see `sim::decode::decode_with`).
     pub fn with_fuse(mut self, on: bool) -> Self {
         self.fuse_superops = on;
+        self
+    }
+
+    /// Select the coroutine-scheduler policy (the `sim::sched` sweep
+    /// axis; see `SchedPolicyKind`).
+    pub fn with_sched_policy(mut self, policy: SchedPolicyKind) -> Self {
+        self.sched_policy = policy;
         self
     }
 
@@ -298,6 +313,9 @@ impl SimConfig {
         ov!("mem.far_bw_bytes_per_cycle", self.mem.far_bw_bytes_per_cycle, f64);
         ov!("l2_bop", self.l2_bop, bool);
         ov!("fuse_superops", self.fuse_superops, bool);
+        if let Some(v) = doc.str("sched.policy") {
+            self.sched_policy = SchedPolicyKind::parse(v)?;
+        }
         self.validate()
     }
 
@@ -405,6 +423,20 @@ mod tests {
         c.apply_doc(&doc).unwrap();
         assert_eq!(c.core.rob_entries, 128);
         assert_eq!(c.mem.far_latency_ns, 800.0);
+    }
+
+    #[test]
+    fn sched_policy_defaults_and_overrides() {
+        let c = SimConfig::nh_g();
+        assert_eq!(c.sched_policy, SchedPolicyKind::ArrivalOrder, "default must stay compatible");
+        let c = c.with_sched_policy(SchedPolicyKind::LatencyAware);
+        assert_eq!(c.sched_policy, SchedPolicyKind::LatencyAware);
+        let doc = crate::util::minitoml::parse("[sched]\npolicy = \"batched:8\"\n").unwrap();
+        let mut c = SimConfig::nh_g();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.sched_policy, SchedPolicyKind::BatchedWakeup(8));
+        let bad = crate::util::minitoml::parse("[sched]\npolicy = \"round-robin\"\n").unwrap();
+        assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
     }
 
     #[test]

@@ -40,6 +40,7 @@ use crate::benchmarks::{self, Instance, Scale};
 use crate::compiler::{compile, CodegenOpts, CompiledKernel, Variant};
 use crate::config::SimConfig;
 use crate::coordinator::pool;
+use crate::sim::sched::SchedPolicyKind;
 use crate::sim::{self, MemImage, RunStats};
 use anyhow::{anyhow, Result};
 use std::collections::hash_map::DefaultHasher;
@@ -150,6 +151,10 @@ pub struct RunRequest {
     /// Override the session config's far-memory latency for this run only.
     /// Does not affect compilation (latency is a link/simulate-time knob).
     pub latency_ns: Option<f64>,
+    /// Override the session config's coroutine-scheduler policy for this
+    /// run only (`sim::sched`). Simulate-time like latency: sweeping the
+    /// policy axis never forks the compiled-kernel cache.
+    pub sched_policy: Option<SchedPolicyKind>,
     /// Explicit codegen options (ablation figures); overrides `variant`'s
     /// canonical options when set.
     pub opts: Option<CodegenOpts>,
@@ -167,6 +172,7 @@ impl RunRequest {
             seed: 42,
             key: String::new(),
             latency_ns: None,
+            sched_policy: None,
             opts: None,
             label: None,
         }
@@ -197,6 +203,13 @@ impl RunRequest {
         self
     }
 
+    /// Run under an explicit coroutine-scheduler policy (the `sim::sched`
+    /// sweep axis) instead of the session config's default.
+    pub fn policy(mut self, p: SchedPolicyKind) -> Self {
+        self.sched_policy = Some(p);
+        self
+    }
+
     /// Run under explicit codegen options instead of the variant's
     /// canonical ones (the ablation figures toggle single optimizations).
     pub fn opts(mut self, opts: CodegenOpts, label: impl Into<String>) -> Self {
@@ -222,6 +235,8 @@ pub struct RunReport {
     pub cfg_name: String,
     /// Effective far-memory latency of the run, ns.
     pub far_latency_ns: f64,
+    /// Effective coroutine-scheduler policy of the run.
+    pub sched_policy: SchedPolicyKind,
     pub scale: Scale,
     pub seed: u64,
     pub key: String,
@@ -237,11 +252,12 @@ impl RunReport {
         let st = &self.stats;
         let mut out = String::new();
         out.push_str(&format!(
-            "bench={} variant={} cfg={} far={}ns scale={:?} seed={}{}\n",
+            "bench={} variant={} cfg={} far={}ns sched={} scale={:?} seed={}{}\n",
             self.bench,
             self.variant_label,
             self.cfg_name,
             self.far_latency_ns,
+            self.sched_policy.label(),
             self.scale,
             self.seed,
             if self.cache_hit { " kernel=cached" } else { " kernel=compiled" },
@@ -252,6 +268,10 @@ impl RunReport {
             "  switches          {} (ctx ops/switch {:.1})\n",
             st.switches,
             st.ctx_ops_per_switch()
+        ));
+        out.push_str(&format!(
+            "  scheduler         {} (picks {} / holds {})\n",
+            st.sched_policy, st.sched_picks, st.sched_holds
         ));
         out.push_str(&format!(
             "  cond branches     {} ({} mispredicted)\n",
@@ -462,7 +482,7 @@ impl Engine {
             Some(o) => o.clone(),
             None => req.variant.opts(tasks),
         };
-        let cfg = self.effective_cfg(req.latency_ns);
+        let cfg = self.effective_cfg(req);
         let run = self.exec(&cfg, inst, &opts)?;
         Ok(RunReport {
             bench: req.bench.clone(),
@@ -470,6 +490,7 @@ impl Engine {
             variant_label: req.config_label(),
             cfg_name: cfg.name.clone(),
             far_latency_ns: cfg.mem.far_latency_ns,
+            sched_policy: cfg.sched_policy,
             scale: req.scale,
             seed: req.seed,
             key: req.key.clone(),
@@ -507,11 +528,18 @@ impl Engine {
         results.into_iter().collect()
     }
 
-    fn effective_cfg(&self, latency_ns: Option<f64>) -> SimConfig {
-        match latency_ns {
-            Some(ns) => self.cfg.clone().with_far_latency_ns(ns),
-            None => self.cfg.clone(),
+    /// The session config with the request's simulate-time overrides
+    /// (far latency, scheduler policy) applied. Neither override touches
+    /// compilation, so the kernel cache is shared across the whole sweep.
+    fn effective_cfg(&self, req: &RunRequest) -> SimConfig {
+        let mut cfg = self.cfg.clone();
+        if let Some(ns) = req.latency_ns {
+            cfg = cfg.with_far_latency_ns(ns);
         }
+        if let Some(p) = req.sched_policy {
+            cfg.sched_policy = p;
+        }
+        cfg
     }
 
     /// The cache proper. The lock is held across `compile` so concurrent
@@ -556,6 +584,7 @@ mod tests {
         assert_eq!(r.seed, 42);
         assert_eq!(r.key, "");
         assert_eq!(r.latency_ns, None);
+        assert_eq!(r.sched_policy, None, "default = session policy");
         assert!(r.opts.is_none() && r.label.is_none());
         assert_eq!(r.config_label(), "CoroAMU-Full");
     }
@@ -629,6 +658,52 @@ mod tests {
         let cs = engine.cache_stats();
         assert_eq!(cs.misses, 1, "latency is link-time, not compile-time");
         assert_eq!(cs.hits, 2);
+    }
+
+    #[test]
+    fn policy_sweep_completes_and_shares_the_kernel_cache() {
+        // The acceptance matrix shape: policies x latencies, one compile.
+        let engine = Engine::new(SimConfig::nh_g());
+        let mut matrix = Vec::new();
+        for p in SchedPolicyKind::ALL {
+            for lat in [200.0, 800.0] {
+                matrix.push(
+                    RunRequest::new("gups", Variant::CoroAmuFull)
+                        .scale(Scale::Tiny)
+                        .latency_ns(lat)
+                        .policy(p)
+                        .key(format!("{lat}/{}", p.label())),
+                );
+            }
+        }
+        let rs = engine.sweep(&matrix, 4).unwrap();
+        assert_eq!(rs.len(), 8);
+        for (req, rep) in matrix.iter().zip(&rs) {
+            assert_eq!(Some(rep.sched_policy), req.sched_policy);
+            assert_eq!(rep.stats.sched_policy, rep.sched_policy.label());
+            assert!(rep.stats.cycles > 0);
+            assert!(rep.render().contains(&format!("sched={}", rep.sched_policy.label())));
+        }
+        let cs = engine.cache_stats();
+        assert_eq!(cs.misses, 1, "policy/latency are simulate-time: one compile for 8 runs");
+        assert_eq!(cs.hits, 7);
+    }
+
+    #[test]
+    fn explicit_default_policy_is_invisible() {
+        let engine = Engine::new(SimConfig::nh_g());
+        let base = engine
+            .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny))
+            .unwrap();
+        let explicit = engine
+            .run(
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .policy(SchedPolicyKind::ArrivalOrder),
+            )
+            .unwrap();
+        assert_eq!(base.stats, explicit.stats, "explicit ArrivalOrder must not move a cycle");
+        assert_eq!(base.sched_policy, SchedPolicyKind::ArrivalOrder);
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! Scheduler-policy comparison table (`coroamu report --sched`): the
+//! `sim::sched` axis — {fifo, arrival, batched, latency} × far-memory
+//! latency {200, 800} ns × {gups, bfs, hj} — swept through one engine
+//! session. This is the scenario-diversity companion to Fig. 12: instead
+//! of sweeping the *variant* it sweeps *which coroutine resumes next*,
+//! plus the memory-guided prediction coverage each policy keeps (§IV-A).
+
+use super::FigOpts;
+use crate::compiler::Variant;
+use crate::config::SimConfig;
+use crate::engine::{lookup, Engine, RunRequest};
+use crate::sim::sched::SchedPolicyKind;
+use crate::util::table::{geomean, speedup, Table};
+use anyhow::Result;
+
+pub const LATENCIES_NS: [f64; 2] = [200.0, 800.0];
+
+/// The irregular subset the policy axis discriminates on: random scatter
+/// (gups), pointer chasing (bfs) and dependent hashing (hj).
+pub const DEFAULT_BENCHES: [&str; 3] = ["gups", "bfs", "hj"];
+
+fn benches(opts: &FigOpts) -> Vec<String> {
+    if opts.only.is_empty() {
+        DEFAULT_BENCHES.iter().map(|s| s.to_string()).collect()
+    } else {
+        opts.only.clone()
+    }
+}
+
+/// The request matrix: per (latency, bench) a serial baseline plus one
+/// CoroAMU-Full run per policy; per policy one CoroAMU-D (getfin) run at
+/// the low latency for the prediction-coverage table. Policy and latency
+/// are simulate-time knobs, so the whole matrix compiles each kernel
+/// exactly once per variant.
+pub fn requests(opts: &FigOpts) -> Vec<RunRequest> {
+    let mut matrix = Vec::new();
+    for lat in LATENCIES_NS {
+        for b in benches(opts) {
+            matrix.push(
+                RunRequest::new(b.clone(), Variant::Serial)
+                    .scale(opts.scale)
+                    .seed(opts.seed)
+                    .latency_ns(lat)
+                    .key(format!("{lat}")),
+            );
+            for p in SchedPolicyKind::ALL {
+                matrix.push(
+                    RunRequest::new(b.clone(), Variant::CoroAmuFull)
+                        .scale(opts.scale)
+                        .seed(opts.seed)
+                        .latency_ns(lat)
+                        .policy(p)
+                        .key(format!("{lat}/{}", p.label())),
+                );
+            }
+        }
+    }
+    // Prediction-coverage rows: the getfin scheduler's indirect jump
+    // under each policy, on the first benchmark at the low latency.
+    if let Some(b) = benches(opts).first() {
+        for p in SchedPolicyKind::ALL {
+            matrix.push(
+                RunRequest::new(b.clone(), Variant::CoroAmuD)
+                    .scale(opts.scale)
+                    .seed(opts.seed)
+                    .latency_ns(LATENCIES_NS[0])
+                    .policy(p)
+                    .key(format!("pred/{}", p.label())),
+            );
+        }
+    }
+    matrix
+}
+
+pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
+    let engine = Engine::new(SimConfig::nh_g());
+    let rs = engine.sweep(&requests(opts), opts.threads)?;
+    let benches = benches(opts);
+    let mut tables = Vec::new();
+
+    for lat in LATENCIES_NS {
+        let mut cols: Vec<String> = vec!["policy".into()];
+        cols.extend(benches.iter().cloned());
+        cols.push("geomean".into());
+        let mut t = Table::new(
+            format!("Scheduler-policy sweep: CoroAMU-Full speedup vs serial, far latency {lat} ns"),
+            &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        for p in SchedPolicyKind::ALL {
+            let mut row = vec![p.label()];
+            let mut sp = Vec::new();
+            for b in &benches {
+                let serial =
+                    lookup(&rs, b, Variant::Serial, &format!("{lat}")).unwrap().stats.cycles as f64;
+                let full = lookup(&rs, b, Variant::CoroAmuFull, &format!("{lat}/{}", p.label()))
+                    .unwrap()
+                    .stats
+                    .cycles as f64;
+                sp.push(serial / full);
+                row.push(speedup(serial / full));
+            }
+            row.push(speedup(geomean(&sp)));
+            t.row(row);
+        }
+        tables.push(t);
+    }
+
+    // Scheduler behavior at the low latency: how each policy spends its
+    // polls, and what it costs the front end.
+    let lat = LATENCIES_NS[0];
+    let mut bt = Table::new(
+        format!("Scheduler behavior (CoroAMU-Full, {lat} ns)"),
+        &["policy", "bench", "switches", "picks", "holds", "bafin mispred"],
+    );
+    for p in SchedPolicyKind::ALL {
+        for b in &benches {
+            let key = format!("{lat}/{}", p.label());
+            let st = &lookup(&rs, b, Variant::CoroAmuFull, &key).unwrap().stats;
+            bt.row(vec![
+                p.label(),
+                b.clone(),
+                st.switches.to_string(),
+                st.sched_picks.to_string(),
+                st.sched_holds.to_string(),
+                st.bafin_mispredicts.to_string(),
+            ]);
+        }
+    }
+    tables.push(bt);
+
+    // Memory-guided prediction coverage (§IV-A as a policy property):
+    // getfin dispatches through ITTAGE (policy shapes the target stream),
+    // bafin keeps its oracle only under memory-guided policies.
+    if let Some(b) = benches.first() {
+        let mut pt = Table::new(
+            format!("Memory-guided prediction coverage ({b}, {lat} ns)"),
+            &[
+                "policy",
+                "getfin sched jumps",
+                "getfin sched mispred",
+                "bafin taken",
+                "bafin mispred",
+            ],
+        );
+        for p in SchedPolicyKind::ALL {
+            let dkey = format!("pred/{}", p.label());
+            let fkey = format!("{lat}/{}", p.label());
+            let d = &lookup(&rs, b, Variant::CoroAmuD, &dkey).unwrap().stats;
+            let f = &lookup(&rs, b, Variant::CoroAmuFull, &fkey).unwrap().stats;
+            pt.row(vec![
+                p.label(),
+                d.sched_indirect_jumps.to_string(),
+                d.sched_indirect_mispredicts.to_string(),
+                f.bafins_taken.to_string(),
+                f.bafin_mispredicts.to_string(),
+            ]);
+        }
+        tables.push(pt);
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Scale;
+
+    #[test]
+    fn request_matrix_covers_the_acceptance_axis() {
+        let opts = FigOpts { scale: Scale::Tiny, ..FigOpts::quick() };
+        let m = requests(&opts);
+        // 2 latencies x 3 benches x (serial + 4 policies) + 4 prediction rows.
+        assert_eq!(m.len(), 2 * 3 * 5 + 4);
+        for p in SchedPolicyKind::ALL {
+            assert!(
+                m.iter().filter(|r| r.sched_policy == Some(p)).count() >= 2 * 3,
+                "{} missing from the matrix",
+                p.label()
+            );
+        }
+    }
+
+    #[test]
+    fn runs_on_tiny_scale_single_bench() {
+        let opts = FigOpts { scale: Scale::Tiny, only: vec!["gups".into()], ..FigOpts::quick() };
+        let tables = run(&opts).unwrap();
+        // 2 speedup tables + behavior + prediction coverage.
+        assert_eq!(tables.len(), 4);
+        let all: String = tables.iter().map(|t| t.render()).collect();
+        for p in SchedPolicyKind::ALL {
+            assert!(all.contains(&p.label()), "policy {} missing from tables", p.label());
+        }
+        assert!(all.contains("bafin mispred"));
+    }
+}

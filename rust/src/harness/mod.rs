@@ -15,6 +15,7 @@
 //! | Fig 14   | [`fig14`] | cycle breakdown serial / getfin / bafin |
 //! | Fig 15   | [`fig15`] | context + aggregation ablation |
 //! | Fig 16   | [`fig16`] | memory-level parallelism |
+//! | sched    | [`fig_sched`] | scheduler-policy sweep (`report --sched`) |
 
 pub mod fig02;
 pub mod fig03;
@@ -24,6 +25,7 @@ pub mod fig13;
 pub mod fig14;
 pub mod fig15;
 pub mod fig16;
+pub mod fig_sched;
 
 use crate::benchmarks::Scale;
 use crate::coordinator::pool;

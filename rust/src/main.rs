@@ -2,8 +2,8 @@
 //! the [`coroamu::engine::Engine`] session facade.
 //!
 //! ```text
-//! coroamu report [--fig N | --all] [--scale tiny|small|full] [--only a,b]
-//! coroamu run --bench gups --variant full [--latency 200] [--tasks 96]
+//! coroamu report [--fig N | --all | --sched] [--scale tiny|small|full] [--only a,b]
+//! coroamu run --bench gups --variant full [--latency 200] [--policy arrival] [--tasks 96]
 //! coroamu report --table1 | --table2
 //! coroamu oracle            # PJRT cross-check against artifacts/
 //! coroamu dump --bench gups --variant full   # CoroIR disassembly
@@ -17,6 +17,7 @@ use coroamu::engine::{Engine, RunRequest};
 use coroamu::harness::{self, FigOpts};
 use coroamu::ir::printer;
 use coroamu::runtime;
+use coroamu::sim::sched::SchedPolicyKind;
 use coroamu::util::cli::Args;
 
 fn parse_scale(s: &str) -> Result<Scale> {
@@ -57,6 +58,9 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
         }
         cfg = cfg.with_far_latency_ns(lat);
     }
+    if let Some(p) = args.get("policy") {
+        cfg = cfg.with_sched_policy(SchedPolicyKind::parse(p)?);
+    }
     Ok(cfg)
 }
 
@@ -70,12 +74,22 @@ fn cmd_report(args: &Args) -> Result<()> {
         benchmarks::table2().print();
         return Ok(());
     }
+    if args.flag("sched") {
+        eprintln!(
+            "[coroamu] generating scheduler-policy sweep (scale {:?}, {} threads)...",
+            opts.scale, opts.threads
+        );
+        for t in harness::fig_sched::run(&opts)? {
+            t.print();
+        }
+        return Ok(());
+    }
     let figs: Vec<u32> = if args.flag("all") {
         harness::ALL_FIGURES.to_vec()
     } else if let Some(n) = args.get_u64("fig") {
         vec![n as u32]
     } else {
-        bail!("report needs --fig N, --all, --table1 or --table2");
+        bail!("report needs --fig N, --all, --sched, --table1 or --table2");
     };
     for f in figs {
         eprintln!("[coroamu] generating figure {f} (scale {:?}, {} threads)...", opts.scale, opts.threads);
@@ -131,8 +145,8 @@ fn cmd_oracle(_args: &Args) -> Result<()> {
 }
 
 const USAGE: &str = "usage: coroamu <report|run|dump|oracle> [options]
-  report --fig N | --all | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
-  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--tasks N] [--scale ...]
+  report --fig N | --all | --sched | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
+  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--policy fifo|arrival|batched[:N]|latency] [--tasks N] [--scale ...]
   dump   --bench NAME [--variant ...]     print generated CoroIR
   oracle                                  cross-check simulator vs PJRT artifacts
   help | --help                           print this message";

@@ -7,23 +7,33 @@
 //! structures as non-access requests (§IV-C). Timing is analytic: each
 //! entry carries its completion cycle, and polls are answered relative to
 //! the asking cycle (for `bafin`, the *fetch* cycle — the §IV-A oracle).
+//!
+//! *Which* finished id a poll returns is no longer hardwired: the queue
+//! is policy-queried ([`super::sched::SchedPolicy`]), so the coroutine
+//! resume order — suspension order, memory-arrival order, batched,
+//! latency-aware — is a sweepable axis. The default policy
+//! (`ArrivalOrder`) reproduces the old earliest-ready scan bit-for-bit.
 
+use super::sched::{Pending, SchedPolicy, SchedPolicyKind};
 use crate::ir::BlockId;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 
 #[derive(Debug, Clone, Copy)]
-struct FinEntry {
-    ready: u64,
-    id: i64,
+struct GroupState {
+    remaining: u32,
+    ready_max: u64,
+    /// Earliest member issue (the group's suspension point for
+    /// latency-aware scheduling).
+    issue_min: u64,
     resume: BlockId,
 }
 
 #[derive(Debug, Clone, Copy)]
-struct GroupState {
-    remaining: u32,
-    ready_max: u64,
+struct AwaitState {
     resume: BlockId,
+    /// Registration cycle (the hung coroutine's suspension point).
+    issue: u64,
 }
 
 #[derive(Debug)]
@@ -32,10 +42,14 @@ pub struct Amu {
     table_cap: usize,
     /// Completion times of in-flight transfers (slot release).
     slots: Vec<u64>,
-    finished: Vec<FinEntry>,
+    finished: Vec<Pending>,
     groups: HashMap<i64, GroupState>,
-    /// Pending `await` registrations: id -> resume block.
-    awaiting: HashMap<i64, BlockId>,
+    /// Pending `await` registrations: id -> resume block + issue cycle.
+    awaiting: HashMap<i64, AwaitState>,
+    /// Resume-order policy over the Finished Queue.
+    policy: Box<dyn SchedPolicy>,
+    /// Monotone enqueue sequence (suspension/completion order key).
+    next_seq: u64,
     /// Small fixed consume latency for getfin/asignal paths.
     unit_latency: u64,
     pub stat_aloads: u64,
@@ -45,16 +59,32 @@ pub struct Amu {
     pub stat_asignals: u64,
     pub stat_issue_stall_cycles: u64,
     pub stat_max_inflight: usize,
+    /// Finished-Queue polls (getfin/bafin asks, including empty-queue).
+    pub stat_sched_polls: u64,
+    /// Polls the policy answered with a resume.
+    pub stat_sched_picks: u64,
+    /// Polls the policy deferred although a completion was visible
+    /// (FIFO head-of-line blocks, batched-wakeup coalescing holds).
+    pub stat_sched_holds: u64,
 }
 
 impl Amu {
+    /// An AMU under the default (`ArrivalOrder`) policy — the paper's
+    /// native Finished-Queue order.
     pub fn new(table_cap: usize, unit_latency: u64) -> Self {
+        Self::with_policy(table_cap, unit_latency, SchedPolicyKind::default().build())
+    }
+
+    /// An AMU whose Finished Queue is ordered by `policy`.
+    pub fn with_policy(table_cap: usize, unit_latency: u64, policy: Box<dyn SchedPolicy>) -> Self {
         Amu {
             table_cap: table_cap.max(1),
             slots: Vec::new(),
             finished: Vec::new(),
             groups: HashMap::new(),
             awaiting: HashMap::new(),
+            policy,
+            next_seq: 0,
             unit_latency,
             stat_aloads: 0,
             stat_astores: 0,
@@ -63,7 +93,28 @@ impl Amu {
             stat_asignals: 0,
             stat_issue_stall_cycles: 0,
             stat_max_inflight: 0,
+            stat_sched_polls: 0,
+            stat_sched_picks: 0,
+            stat_sched_holds: 0,
         }
+    }
+
+    /// The active policy's kind (provenance / BPU coverage wiring).
+    pub fn policy_kind(&self) -> SchedPolicyKind {
+        self.policy.kind()
+    }
+
+    /// Whether the active policy keeps the §IV-A BTQ oracle (see
+    /// [`SchedPolicy::btq_guided`]).
+    pub fn btq_guided(&self) -> bool {
+        self.policy.btq_guided()
+    }
+
+    fn enqueue(&mut self, id: i64, ready: u64, issue: u64, resume: BlockId) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.finished.push(Pending { id, ready, issue, seq, resume });
+        self.policy.on_complete(id, ready);
     }
 
     /// Acquire a Request Table slot at cycle `t`; returns the actual issue
@@ -90,7 +141,8 @@ impl Amu {
         if n == 0 {
             bail!("aset with n=0");
         }
-        if self.groups.insert(id, GroupState { remaining: n, ready_max: 0, resume: 0 }).is_some() {
+        let g = GroupState { remaining: n, ready_max: 0, issue_min: u64::MAX, resume: 0 };
+        if self.groups.insert(id, g).is_some() {
             bail!("aset on id {id} with a group already open");
         }
         self.stat_groups += 1;
@@ -112,6 +164,7 @@ impl Amu {
         let issue = self.slot_acquire(t);
         let completion = completion_of(issue);
         self.slots.push(completion);
+        self.policy.on_suspend(id, issue);
         if is_store {
             self.stat_astores += 1;
         } else {
@@ -121,49 +174,62 @@ impl Amu {
             Some(g) => {
                 g.remaining -= 1;
                 g.ready_max = g.ready_max.max(completion);
+                g.issue_min = g.issue_min.min(issue);
                 g.resume = resume;
                 if g.remaining == 0 {
                     let g = self.groups.remove(&id).unwrap();
-                    self.finished.push(FinEntry { ready: g.ready_max, id, resume: g.resume });
+                    self.enqueue(id, g.ready_max, g.issue_min, g.resume);
                 }
             }
-            None => self.finished.push(FinEntry { ready: completion, id, resume }),
+            None => self.enqueue(id, completion, issue, resume),
         }
         issue
     }
 
-    /// §IV-C: register `id` as hung (non-access Request Table entry).
-    pub fn await_register(&mut self, id: i64, resume: BlockId) -> Result<()> {
-        if self.awaiting.insert(id, resume).is_some() {
+    /// §IV-C: register `id` as hung (non-access Request Table entry) at
+    /// cycle `t`.
+    pub fn await_register(&mut self, id: i64, resume: BlockId, t: u64) -> Result<()> {
+        if self.awaiting.insert(id, AwaitState { resume, issue: t }).is_some() {
             bail!("await on id {id} already awaiting");
         }
+        self.policy.on_suspend(id, t);
         self.stat_awaits += 1;
         Ok(())
     }
 
     /// §IV-C: complete a pending await, making `id` visible to polls.
     pub fn asignal(&mut self, id: i64, t: u64) -> Result<()> {
-        let Some(resume) = self.awaiting.remove(&id) else {
+        let Some(st) = self.awaiting.remove(&id) else {
             bail!("asignal({id}) without matching await");
         };
         self.stat_asignals += 1;
-        self.finished.push(FinEntry { ready: t + self.unit_latency, id, resume });
+        self.enqueue(id, t + self.unit_latency, st.issue, st.resume);
         Ok(())
     }
 
-    /// Pop the oldest finished id whose completion is visible at cycle
-    /// `t` (for `bafin`, `t` is the fetch cycle — §IV-A's oracle property).
+    /// Ask the scheduler policy for the next coroutine to resume at cycle
+    /// `t` (for `bafin`, `t` is the fetch cycle — §IV-A's oracle
+    /// property). Under the default `ArrivalOrder` policy this is exactly
+    /// the historical oldest-ready pop.
     pub fn pop_finished(&mut self, t: u64) -> Option<(i64, BlockId)> {
-        let mut best: Option<usize> = None;
-        for (i, e) in self.finished.iter().enumerate() {
-            if e.ready <= t && best.map(|b| e.ready < self.finished[b].ready).unwrap_or(true) {
-                best = Some(i);
+        self.stat_sched_polls += 1;
+        if self.finished.is_empty() {
+            return None;
+        }
+        match self.policy.pick_next(&self.finished, t) {
+            Some(i) => {
+                let e = self.finished.remove(i);
+                debug_assert!(e.ready <= t, "policy resumed id {} before its data arrived", e.id);
+                self.stat_sched_picks += 1;
+                Some((e.id, e.resume))
+            }
+            None => {
+                if self.finished.iter().any(|e| e.ready <= t) {
+                    self.stat_sched_holds += 1;
+                }
+                None
             }
         }
-        best.map(|i| {
-            let e = self.finished.remove(i);
-            (e.id, e.resume)
-        })
     }
 
     /// Ids currently in the request table (diagnostics).
@@ -181,6 +247,7 @@ impl Amu {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::sched::SchedPolicyKind as K;
 
     #[test]
     fn transfer_completes_and_pops_in_ready_order() {
@@ -191,6 +258,8 @@ mod tests {
         assert_eq!(a.pop_finished(300), Some((1, 11)), "earliest-ready pops first");
         assert_eq!(a.pop_finished(1000), Some((0, 10)));
         assert_eq!(a.pop_finished(1000), None);
+        assert_eq!(a.stat_sched_picks, 2);
+        assert_eq!(a.stat_sched_holds, 0, "arrival order never defers visible work");
     }
 
     #[test]
@@ -219,7 +288,7 @@ mod tests {
     #[test]
     fn await_asignal_roundtrip() {
         let mut a = Amu::new(16, 2);
-        a.await_register(7, 33).unwrap();
+        a.await_register(7, 33, 40).unwrap();
         assert_eq!(a.pop_finished(u64::MAX), None, "awaiting id is not ready");
         a.asignal(7, 50).unwrap();
         assert_eq!(a.pop_finished(51), None, "unit latency applies");
@@ -243,5 +312,55 @@ mod tests {
         assert!(a.quiescent());
         a.aset(1, 2).unwrap();
         assert!(!a.quiescent());
+    }
+
+    #[test]
+    fn fifo_policy_blocks_behind_suspension_head() {
+        let mut a = Amu::with_policy(16, 2, K::Fifo.build());
+        a.transfer(0, 10, 0, false, |t| t + 900); // suspended first, arrives last
+        a.transfer(1, 11, 0, false, |t| t + 100);
+        assert_eq!(a.pop_finished(500), None, "younger arrival must not overtake");
+        assert!(a.stat_sched_holds > 0, "the deferral is accounted");
+        assert_eq!(a.pop_finished(900), Some((0, 10)), "head resumes in suspension order");
+        assert_eq!(a.pop_finished(900), Some((1, 11)));
+        assert!(!a.btq_guided());
+    }
+
+    #[test]
+    fn batched_policy_coalesces_wakeups() {
+        let mut a = Amu::with_policy(16, 2, K::BatchedWakeup(2).build());
+        a.transfer(0, 10, 0, false, |t| t + 100);
+        a.transfer(1, 11, 0, false, |t| t + 800);
+        assert_eq!(a.pop_finished(200), None, "one visible < batch of two");
+        assert_eq!(a.pop_finished(800), Some((0, 10)), "batch releases in arrival order");
+        assert_eq!(a.pop_finished(800), Some((1, 11)), "tail of one drains immediately");
+        assert!(a.btq_guided());
+    }
+
+    #[test]
+    fn latency_aware_resumes_longest_suspended() {
+        let mut a = Amu::with_policy(2, 2, K::LatencyAware.build());
+        // Fill the table so the third transfer issues late (issue 100),
+        // then make the late-issued one arrive first.
+        a.transfer(0, 10, 0, false, |t| t + 400);
+        a.transfer(1, 11, 0, false, |t| t + 100);
+        a.transfer(2, 12, 0, false, |t| t + 150); // issue 100, ready 250
+        assert_eq!(a.pop_finished(260), Some((1, 11)), "earliest-issued of the visible");
+        // At 400 both id 0 (issue 0) and id 2 (issue 100) are visible:
+        // the earliest-issued (longest-suspended) coroutine wins.
+        assert_eq!(a.pop_finished(400), Some((0, 10)));
+        assert_eq!(a.pop_finished(400), Some((2, 12)));
+    }
+
+    #[test]
+    fn group_issue_is_earliest_member() {
+        let mut a = Amu::with_policy(16, 2, K::LatencyAware.build());
+        a.aset(5, 2).unwrap();
+        a.transfer(5, 20, 30, false, |t| t + 100); // issue 30
+        a.transfer(5, 20, 60, false, |t| t + 100); // issue 60
+        a.transfer(9, 21, 40, false, |t| t + 500); // plain, issue 40
+        // Both visible at 600: group's issue_min (30) beats 40.
+        assert_eq!(a.pop_finished(600), Some((5, 20)));
+        assert_eq!(a.pop_finished(600), Some((9, 21)));
     }
 }

@@ -135,6 +135,12 @@ pub struct Ittage {
     log_entries: usize,
     pub stat_lookups: u64,
     pub stat_mispredicts: u64,
+    /// Subset of lookups/mispredicts on *scheduler* indirect jumps (the
+    /// coroutine-resume dispatch) — the Fig. 14 overhead the scheduler
+    /// policy controls: a static-order policy produces a learnable
+    /// target stream, a memory-arrival one degrades ITTAGE to chance.
+    pub stat_sched_lookups: u64,
+    pub stat_sched_mispredicts: u64,
 }
 
 impl Ittage {
@@ -150,6 +156,8 @@ impl Ittage {
             log_entries: cfg.ittage_log_entries,
             stat_lookups: 0,
             stat_mispredicts: 0,
+            stat_sched_lookups: 0,
+            stat_sched_mispredicts: 0,
         }
     }
 
@@ -161,8 +169,15 @@ impl Ittage {
         (idx, tag)
     }
 
-    pub fn predict_and_update(&mut self, pc: Pc, actual: u64) -> bool {
+    /// Predict, train, and return whether the prediction was wrong.
+    /// `sched` marks the scheduler's coroutine-resume dispatch so its
+    /// mispredicts are attributable separately from data-dependent
+    /// indirect jumps.
+    pub fn predict_and_update(&mut self, pc: Pc, actual: u64, sched: bool) -> bool {
         self.stat_lookups += 1;
+        if sched {
+            self.stat_sched_lookups += 1;
+        }
         let mut pred = self.base[pc as usize & 1023];
         let mut provider: Option<usize> = None;
         for ti in (0..self.tables.len()).rev() {
@@ -177,6 +192,9 @@ impl Ittage {
         let mispredict = pred != actual;
         if mispredict {
             self.stat_mispredicts += 1;
+            if sched {
+                self.stat_sched_mispredicts += 1;
+            }
         }
         // Train.
         self.base[pc as usize & 1023] = actual;
@@ -217,30 +235,47 @@ impl Ittage {
 /// BTQ delivers exactly that id to the front end, so prediction is always
 /// correct. We model the structure (entries indexed by PC) so that programs
 /// with more distinct bafin PCs than entries would lose coverage.
+///
+/// Coverage is additionally a property of the scheduler policy
+/// (`sim::sched`): the BTQ forwards the id the AMU's *memory-guided*
+/// resume order will pop. A software-imposed static order (the `Fifo`
+/// policy) is not derivable from Finished-Queue state at fetch, so the
+/// table is built unguided and every dispatching bafin mispredicts.
 #[derive(Debug)]
 pub struct BafinPredictTable {
     pcs: Vec<Pc>,
     cap: usize,
+    /// Whether the active scheduler policy is memory-guided
+    /// ([`crate::sim::sched::SchedPolicy::btq_guided`]).
+    guided: bool,
     pub stat_lookups: u64,
     pub stat_mispredicts: u64,
 }
 
 impl BafinPredictTable {
-    pub fn new(cfg: &BpuConfig) -> Self {
-        BafinPredictTable { pcs: Vec::new(), cap: cfg.bpt_entries.max(1), stat_lookups: 0, stat_mispredicts: 0 }
+    pub fn new(cfg: &BpuConfig, guided: bool) -> Self {
+        BafinPredictTable {
+            pcs: Vec::new(),
+            cap: cfg.bpt_entries.max(1),
+            guided,
+            stat_lookups: 0,
+            stat_mispredicts: 0,
+        }
     }
 
     /// Returns true if this bafin PC is covered by the BPT (tracked or
-    /// allocatable); uncovered bafins predict like a plain not-taken
-    /// branch and mispredict whenever they dispatch a coroutine.
+    /// allocatable, under a memory-guided policy); uncovered bafins
+    /// predict like a plain not-taken branch and mispredict whenever
+    /// they dispatch a coroutine. Allocation/replacement runs regardless
+    /// of guidance so the table's occupancy sequence is policy-blind.
     pub fn covered(&mut self, pc: Pc) -> bool {
         self.stat_lookups += 1;
         if self.pcs.contains(&pc) {
-            return true;
+            return self.guided;
         }
         if self.pcs.len() < self.cap {
             self.pcs.push(pc);
-            return true;
+            return self.guided;
         }
         // FIFO replacement on overflow.
         self.pcs.remove(0);
@@ -285,7 +320,7 @@ mod tests {
     fn ittage_learns_fixed_target() {
         let mut it = Ittage::new(&cfg());
         for _ in 0..10_000 {
-            it.predict_and_update(7, 0x1234);
+            it.predict_and_update(7, 0x1234, false);
         }
         let rate = it.stat_mispredicts as f64 / it.stat_lookups as f64;
         assert!(rate < 0.01);
@@ -296,7 +331,7 @@ mod tests {
         let mut it = Ittage::new(&cfg());
         let targets = [10u64, 20, 30, 40];
         for i in 0..40_000usize {
-            it.predict_and_update(7, targets[i % 4]);
+            it.predict_and_update(7, targets[i % 4], false);
         }
         let rate = it.stat_mispredicts as f64 / it.stat_lookups as f64;
         assert!(rate < 0.15, "periodic indirect pattern should be learnable, got {rate}");
@@ -311,7 +346,7 @@ mod tests {
         let targets: Vec<u64> = (0..16).map(|i| 100 + i * 10).collect();
         for _ in 0..40_000 {
             let t = targets[rng.below(16) as usize];
-            it.predict_and_update(7, t);
+            it.predict_and_update(7, t, true);
         }
         let rate = it.stat_mispredicts as f64 / it.stat_lookups as f64;
         assert!(rate > 0.5, "random 16-target indirect jump should mispredict often, got {rate}");
@@ -319,7 +354,7 @@ mod tests {
 
     #[test]
     fn bpt_covers_few_bafins() {
-        let mut b = BafinPredictTable::new(&cfg());
+        let mut b = BafinPredictTable::new(&cfg(), true);
         assert!(b.covered(1));
         assert!(b.covered(1));
         for pc in 2..=4 {

@@ -116,6 +116,9 @@ pub struct UOp {
     pub tag: CodeTag,
     /// Precomputed `tag == CodeTag::CtxSwitch` (ctx-traffic accounting).
     pub is_ctx: bool,
+    /// Precomputed `tag == CodeTag::Scheduler` (switch accounting + the
+    /// scheduler-attributed ITTAGE stream, `sim::sched`).
+    pub is_sched: bool,
 }
 
 /// A [`Function`] lowered to a flat micro-op array. Block ids survive as
@@ -189,9 +192,10 @@ pub fn decode_with(f: &Function, fuse: bool) -> DecodedFunc {
         let bb = bi as BlockId;
         let tag = blk.tag;
         let is_ctx = tag == CodeTag::CtxSwitch;
+        let is_sched = tag == CodeTag::Scheduler;
         block_start.push(ops.len() as u32);
         scratch.clear();
-        let uop = |kind: UKind, a: Src, b: Src| UOp { kind, a, b, bb, tag, is_ctx };
+        let uop = |kind: UKind, a: Src, b: Src| UOp { kind, a, b, bb, tag, is_ctx, is_sched };
         for inst in &blk.insts {
             scratch.push(match inst {
                 Inst::Alu { op, dst, a, b } => uop(
@@ -359,6 +363,8 @@ mod tests {
             ref k => panic!("expected mul, got {k:?}"),
         }
         assert_eq!(d.ops[2].tag, CodeTag::Scheduler);
+        assert!(d.ops[2].is_sched, "scheduler flag precomputed");
+        assert!(!d.ops[0].is_sched);
         assert_eq!(d.ops[2].bb, 1);
         assert!(matches!(d.ops[3].kind, UKind::Halt));
     }

@@ -151,9 +151,13 @@ struct Machine<'p> {
 
 impl<'p> Machine<'p> {
     /// Shared setup for both execution paths: timing structures + the
-    /// register file seeded from the link-time bindings.
+    /// register file seeded from the link-time bindings. The scheduler
+    /// policy (`cfg.sched_policy`) is instantiated here and handed to the
+    /// AMU; the BPT learns whether that policy keeps the §IV-A BTQ oracle.
     fn new(cfg: &SimConfig, prog: &'p mut Program) -> Machine<'p> {
         let nregs = prog.func.nregs;
+        let policy = cfg.sched_policy.build();
+        let guided = policy.btq_guided();
         let mut m = Machine {
             func: &prog.func,
             regs: vec![0i64; nregs as usize],
@@ -161,8 +165,8 @@ impl<'p> Machine<'p> {
             msys: MemSys::new(cfg),
             tage: Tage::new(&cfg.bpu),
             ittage: Ittage::new(&cfg.bpu),
-            bpt: BafinPredictTable::new(&cfg.bpu),
-            amu: Amu::new(cfg.amu.request_table.max(1), cfg.l1d.latency_cycles),
+            bpt: BafinPredictTable::new(&cfg.bpu, guided),
+            amu: Amu::with_policy(cfg.amu.request_table.max(1), cfg.l1d.latency_cycles, policy),
             aconfig_base: 0,
             aconfig_size: 0,
             spm_base: 0,
@@ -236,6 +240,12 @@ impl<'p> Machine<'p> {
         stats.aloads = self.amu.stat_aloads;
         stats.astores = self.amu.stat_astores;
         stats.amu_max_inflight = self.amu.stat_max_inflight;
+        stats.sched_policy = self.amu.policy_kind().label();
+        stats.sched_polls = self.amu.stat_sched_polls;
+        stats.sched_picks = self.amu.stat_sched_picks;
+        stats.sched_holds = self.amu.stat_sched_holds;
+        stats.sched_indirect_jumps = self.ittage.stat_sched_lookups;
+        stats.sched_indirect_mispredicts = self.ittage.stat_sched_mispredicts;
         stats
     }
 }
@@ -411,8 +421,8 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 pc += 1;
             }
             UKind::Await { resume } => {
-                m.amu.await_register(op.a.value(&m.regs), resume)?;
                 let exec = m.ready1(d, op.a);
+                m.amu.await_register(op.a.value(&m.regs), resume, exec)?;
                 m.core.commit(None, exec + 1, Cause::Compute);
                 m.core.stats.awaits += 1;
                 pc += 1;
@@ -447,11 +457,11 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 let exec = m.ready1(d, op.a);
                 m.core.commit(None, exec + 1, Cause::Compute);
                 m.core.stats.indirect_jumps += 1;
-                if m.ittage.predict_and_update(op.bb as u64, tv as u64) {
+                if m.ittage.predict_and_update(op.bb as u64, tv as u64, op.is_sched) {
                     m.core.stats.indirect_mispredicts += 1;
                     m.core.redirect(exec + 1);
                 }
-                if op.tag == CodeTag::Scheduler {
+                if op.is_sched {
                     m.core.stats.switches += 1;
                 }
                 pc = dec.start_of(tv as BlockId);
@@ -723,8 +733,8 @@ pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                     m.core.commit(None, exec + 1, Cause::Compute);
                 }
                 Inst::Await { id, resume } => {
-                    m.amu.await_register(m.val(*id), *resume)?;
                     let exec = m.src_ready(d, &[*id]);
+                    m.amu.await_register(m.val(*id), *resume, exec)?;
                     m.core.commit(None, exec + 1, Cause::Compute);
                     m.core.stats.awaits += 1;
                 }
@@ -765,11 +775,12 @@ pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 let exec = m.src_ready(d, &[*target]);
                 m.core.commit(None, exec + 1, Cause::Compute);
                 m.core.stats.indirect_jumps += 1;
-                if m.ittage.predict_and_update(bb as u64, tv as u64) {
+                let sched = tag == CodeTag::Scheduler;
+                if m.ittage.predict_and_update(bb as u64, tv as u64, sched) {
                     m.core.stats.indirect_mispredicts += 1;
                     m.core.redirect(exec + 1);
                 }
-                if tag == CodeTag::Scheduler {
+                if sched {
                     m.core.stats.switches += 1;
                 }
                 bb = tv as BlockId;
@@ -970,13 +981,18 @@ mod tests {
     /// copy-on-write snapshot restore.
     #[test]
     fn proptest_all_four_paths_agree() {
-        use crate::util::proptest::{check, Config};
+        use crate::util::proptest::{check, env_cases, Config};
         check(
-            Config { cases: 48, ..Config::default() },
+            Config { cases: env_cases(48), ..Config::default() },
             |g| g.rng.next_u64(),
             |seed: &u64| {
                 let (f, mem, init) = random_program(*seed);
-                let cfg = SimConfig::nh_g();
+                // Rotate through the scheduler policies so every path
+                // combination also runs under every policy (plumbing
+                // coverage; these kernels carry no AMU ops, so the
+                // policy must be timing-invisible here).
+                let policy = crate::sim::sched::SchedPolicyKind::ALL[(*seed % 4) as usize];
+                let cfg = SimConfig::nh_g().with_sched_policy(policy);
                 let mut progs = [
                     Program::new(f.clone(), mem.snapshot(), init.clone(), 64, None, 200_000, false),
                     Program::new(f.clone(), mem.snapshot(), init.clone(), 64, None, 200_000, true),

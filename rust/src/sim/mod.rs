@@ -5,9 +5,11 @@
 //! Composition: [`interp`] (functional CoroIR execution) drives
 //! [`core`] (dataflow + ROB pipeline spine), [`memsys`] (L1/L2/L3 + MSHRs +
 //! BOP + far-memory delayer/bandwidth regulator, Fig. 10), [`bpu`]
-//! (TAGE/ITTAGE/BPT) and [`amu`] (Request Table / Finished Queue / groups /
-//! await-asignal). See `DESIGN.md` §1 (repo root) for the substitution
-//! argument.
+//! (TAGE/ITTAGE/BPT), [`amu`] (Request Table / Finished Queue / groups /
+//! await-asignal) and [`sched`] (pluggable coroutine-resume policies over
+//! the Finished Queue, `SimConfig::sched_policy`). See `DESIGN.md` §1
+//! (repo root) for the substitution argument and §8 for the scheduler
+//! subsystem.
 
 pub mod amu;
 pub mod bpu;
@@ -17,12 +19,14 @@ pub mod decode;
 pub mod interp;
 pub mod mem;
 pub mod memsys;
+pub mod sched;
 pub mod slots;
 pub mod stats;
 
 pub use decode::DecodedFunc;
 pub use interp::{mix64, run, run_reference, Program};
 pub use mem::MemImage;
+pub use sched::SchedPolicyKind;
 pub use stats::RunStats;
 
 use crate::compiler::CompiledKernel;
@@ -167,6 +171,45 @@ mod tests {
         let (es, ed, ef) = (s.dyn_instrs as f64 / base, d.dyn_instrs as f64 / base, f.dyn_instrs as f64 / base);
         assert!(es > 1.0 && ed > 1.0 && ef > 1.0);
         assert!(ef < ed, "Full ({ef:.2}x) should expand less than D ({ed:.2}x)");
+    }
+
+    #[test]
+    fn default_policy_is_cycle_identical_to_explicit_arrival_order() {
+        // The refactor's core invariant: extracting scheduling into
+        // sim::sched must not move a single cycle under the default.
+        let base = SimConfig::nh_g();
+        assert_eq!(base.sched_policy, sched::SchedPolicyKind::ArrivalOrder);
+        let explicit = base.clone().with_sched_policy(sched::SchedPolicyKind::ArrivalOrder);
+        for v in [Variant::CoroAmuD, Variant::CoroAmuFull] {
+            let (a, ma) = run_variant_cfg(&base, v, 32, 200, 1 << 14);
+            let (b, mb) = run_variant_cfg(&explicit, v, 32, 200, 1 << 14);
+            assert_eq!(a, b, "{}: explicit ArrivalOrder diverges", v.label());
+            assert_eq!(ma, mb);
+        }
+    }
+
+    #[test]
+    fn policy_sweep_orders_latency_hiding() {
+        // All four policies complete GUPS and the scheduling axis moves
+        // cycles the way the ordering argument predicts: strict
+        // suspension order (head-of-line blocking) cannot beat
+        // memory-arrival order.
+        let mut cycles = std::collections::HashMap::new();
+        for k in sched::SchedPolicyKind::ALL {
+            let cfg = SimConfig::nh_g().with_sched_policy(k);
+            let (st, mem) = run_variant_cfg(&cfg, Variant::CoroAmuFull, 32, 300, 1 << 14);
+            let (_, serial_mem) = run_variant_cfg(&cfg, Variant::Serial, 1, 300, 1 << 14);
+            assert_eq!(mem, serial_mem, "{}: policy changed results", k.label());
+            assert_eq!(st.sched_policy, k.label());
+            assert!(st.sched_picks > 0, "{}: scheduler never resumed anyone", k.label());
+            cycles.insert(k, st.cycles);
+        }
+        let fifo = cycles[&sched::SchedPolicyKind::Fifo];
+        let arrival = cycles[&sched::SchedPolicyKind::ArrivalOrder];
+        assert!(
+            fifo >= arrival,
+            "FIFO ({fifo}) must not beat arrival order ({arrival}) on latency-bound GUPS"
+        );
     }
 
     #[test]

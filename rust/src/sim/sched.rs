@@ -1,0 +1,385 @@
+//! Pluggable coroutine-scheduler policies for the AMU's Finished Queue.
+//!
+//! The paper's headline hardware-software claim is that the AMU "further
+//! exploits dynamic coroutine schedulers": *which* suspended coroutine
+//! resumes next — static suspension order, memory-arrival order, batched
+//! wakeup — is the dominant lever on latency-hiding efficiency (cf.
+//! CoroBase, VLDB 2021). Before this module that choice was hardwired
+//! into the `Variant` lowering; now it is a first-class, sweepable axis:
+//! the [`Amu`](super::amu::Amu) stores every outstanding completion as a
+//! [`Pending`] entry and delegates the resume decision to a
+//! [`SchedPolicy`], selected by [`SchedPolicyKind`] through
+//! `SimConfig::sched_policy` / `RunRequest::policy(..)`.
+//!
+//! The policy also owns the *memory-guided prediction* property (§IV-A):
+//! the BTQ can only carry a `bafin` target to the front end when the
+//! resume order is decided by the AMU itself from Finished-Queue state
+//! ([`SchedPolicy::btq_guided`]). A software-imposed static order
+//! ([`Fifo`]) breaks that oracle, so `bafin` mispredicts under it while
+//! the memory-guided policies keep the paper's zero-mispredict property
+//! (pinned by the differential suite).
+
+use crate::ir::BlockId;
+use anyhow::{bail, Result};
+
+/// Coroutine identity: the id bound to an AMU request (`aload`/`astore`/
+/// `await`). Matches the `i64` register value the ISA carries.
+pub type CoroId = i64;
+
+/// One outstanding completion in the AMU's Finished Queue. Entries are
+/// created at request time with their (analytic) completion cycle, so a
+/// policy sees the whole in-flight set and filters visibility by
+/// `ready <= now` itself.
+#[derive(Debug, Clone, Copy)]
+pub struct Pending {
+    pub id: CoroId,
+    /// Cycle the completion becomes visible to polls.
+    pub ready: u64,
+    /// Cycle the underlying request was issued (group entries carry the
+    /// earliest member issue; awaits carry the registration cycle).
+    pub issue: u64,
+    /// Monotone enqueue sequence number (suspension order for plain
+    /// transfers; completion order for groups and signalled awaits).
+    pub seq: u64,
+    /// Coroutine resume block, forwarded through the BTQ for `bafin`.
+    pub resume: BlockId,
+}
+
+/// A coroutine-scheduling policy over the AMU's Finished Queue.
+///
+/// `pick_next` receives the full pending set (not just the visible
+/// subset) so policies can make occupancy-aware decisions (batched
+/// wakeup needs the total outstanding count); it must only return an
+/// index whose entry has `ready <= now`. Returning `None` keeps the
+/// scheduler spinning (`getfin` yields -1, `bafin` falls through).
+pub trait SchedPolicy: std::fmt::Debug + Send {
+    /// The kind this policy was built from (stats / provenance).
+    fn kind(&self) -> SchedPolicyKind;
+
+    /// A coroutine suspended: its request entered the Request Table (or
+    /// an `await` registered) at cycle `issue`.
+    fn on_suspend(&mut self, _id: CoroId, _issue: u64) {}
+
+    /// A completion entered the Finished Queue, visible from `ready`.
+    fn on_complete(&mut self, _id: CoroId, _ready: u64) {}
+
+    /// Choose the index into `pending` of the coroutine to resume at
+    /// cycle `now`, or `None` to defer. Entries with `ready > now` are
+    /// not yet visible and must not be picked.
+    fn pick_next(&mut self, pending: &[Pending], now: u64) -> Option<usize>;
+
+    /// Whether the BTQ can deliver this policy's choice to the front end
+    /// at fetch time (§IV-A). True for memory-guided policies the AMU
+    /// hardware can evaluate from Finished-Queue state; false for
+    /// software-imposed orders, which cost `bafin` its oracle coverage.
+    fn btq_guided(&self) -> bool {
+        true
+    }
+}
+
+/// Selector for the concrete policies, carried by `SimConfig` and swept
+/// by the engine/harness. The default ([`ArrivalOrder`]) reproduces the
+/// pre-subsystem behavior bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedPolicyKind {
+    /// Static suspension order (getfin-style software FIFO): the oldest
+    /// suspended coroutine resumes first, even when a younger one's data
+    /// arrived earlier (head-of-line blocking).
+    Fifo,
+    /// Memory-arrival order: earliest-completing entry first. This is
+    /// the AMU's native Finished-Queue order and the default.
+    ArrivalOrder,
+    /// Coalesce up to N completions before resuming anyone, then drain
+    /// that whole burst before coalescing again — trading wakeup latency
+    /// for scheduler amortization (fewer, denser resume bursts). Falls
+    /// back to "all outstanding" when fewer than N requests remain, so
+    /// the tail always drains.
+    BatchedWakeup(u32),
+    /// Latency-aware decoupling: among visible completions, resume the
+    /// coroutine whose request was issued earliest (longest-suspended
+    /// first), approximating the paper's latency-aware issue order.
+    LatencyAware,
+}
+
+impl Default for SchedPolicyKind {
+    fn default() -> Self {
+        SchedPolicyKind::ArrivalOrder
+    }
+}
+
+/// Default coalescing factor for `batched` when no `:N` is given.
+pub const DEFAULT_BATCH: u32 = 4;
+
+impl SchedPolicyKind {
+    /// The canonical sweep axis (the acceptance matrix).
+    pub const ALL: [SchedPolicyKind; 4] = [
+        SchedPolicyKind::Fifo,
+        SchedPolicyKind::ArrivalOrder,
+        SchedPolicyKind::BatchedWakeup(DEFAULT_BATCH),
+        SchedPolicyKind::LatencyAware,
+    ];
+
+    /// Display label (CLI, tables, `RunStats::sched_policy`).
+    pub fn label(self) -> String {
+        match self {
+            SchedPolicyKind::Fifo => "fifo".into(),
+            SchedPolicyKind::ArrivalOrder => "arrival".into(),
+            SchedPolicyKind::BatchedWakeup(n) => format!("batched:{n}"),
+            SchedPolicyKind::LatencyAware => "latency".into(),
+        }
+    }
+
+    /// Parse a CLI/TOML spelling: `fifo`, `arrival` (or `arrival-order`),
+    /// `batched` (or `batched:N`), `latency` (or `latency-aware`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        if let Some(n) = s.strip_prefix("batched:") {
+            let n: u32 = match n.parse() {
+                Ok(v) if v > 0 => v,
+                _ => bail!("batched:N needs a positive integer, got '{n}'"),
+            };
+            return Ok(SchedPolicyKind::BatchedWakeup(n));
+        }
+        Ok(match s.as_str() {
+            "fifo" | "static" => SchedPolicyKind::Fifo,
+            "arrival" | "arrival-order" | "bafin-order" => SchedPolicyKind::ArrivalOrder,
+            "batched" | "batched-wakeup" => SchedPolicyKind::BatchedWakeup(DEFAULT_BATCH),
+            "latency" | "latency-aware" => SchedPolicyKind::LatencyAware,
+            other => bail!("unknown scheduler policy '{other}' (fifo|arrival|batched[:N]|latency)"),
+        })
+    }
+
+    /// Instantiate the concrete policy.
+    pub fn build(self) -> Box<dyn SchedPolicy> {
+        match self {
+            SchedPolicyKind::Fifo => Box::new(Fifo),
+            SchedPolicyKind::ArrivalOrder => Box::new(ArrivalOrder),
+            SchedPolicyKind::BatchedWakeup(n) => {
+                Box::new(BatchedWakeup { batch: n.max(1) as usize, draining: 0 })
+            }
+            SchedPolicyKind::LatencyAware => Box::new(LatencyAware),
+        }
+    }
+}
+
+/// Index of the visible entry with the smallest `ready` cycle, first
+/// index winning ties — exactly the pre-subsystem Finished-Queue scan,
+/// kept as a free function so every arrival-ordered policy shares it.
+fn earliest_ready(pending: &[Pending], now: u64) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, e) in pending.iter().enumerate() {
+        if e.ready <= now && best.map(|b| e.ready < pending[b].ready).unwrap_or(true) {
+            best = Some(i);
+        }
+    }
+    best
+}
+
+/// See [`SchedPolicyKind::Fifo`].
+#[derive(Debug, Default)]
+pub struct Fifo;
+
+impl SchedPolicy for Fifo {
+    fn kind(&self) -> SchedPolicyKind {
+        SchedPolicyKind::Fifo
+    }
+
+    fn pick_next(&mut self, pending: &[Pending], now: u64) -> Option<usize> {
+        // Strict suspension order: the minimum-seq entry is the head; if
+        // its data has not arrived, nobody resumes (head-of-line block).
+        let (i, head) = pending.iter().enumerate().min_by_key(|(_, e)| e.seq)?;
+        if head.ready <= now {
+            Some(i)
+        } else {
+            None
+        }
+    }
+
+    fn btq_guided(&self) -> bool {
+        // A software static order is not derivable from Finished-Queue
+        // state at fetch, so the BTQ cannot carry it (§IV-A breaks).
+        false
+    }
+}
+
+/// See [`SchedPolicyKind::ArrivalOrder`].
+#[derive(Debug, Default)]
+pub struct ArrivalOrder;
+
+impl SchedPolicy for ArrivalOrder {
+    fn kind(&self) -> SchedPolicyKind {
+        SchedPolicyKind::ArrivalOrder
+    }
+
+    fn pick_next(&mut self, pending: &[Pending], now: u64) -> Option<usize> {
+        earliest_ready(pending, now)
+    }
+}
+
+/// See [`SchedPolicyKind::BatchedWakeup`]. Two phases: *coalesce* until
+/// the visible count reaches the batch threshold, then *drain* that many
+/// resumes without re-checking the threshold — otherwise each pick would
+/// drop the visible count back below the bar and the policy would
+/// degenerate to one resume per new arrival, adding latency with no
+/// amortization.
+#[derive(Debug)]
+pub struct BatchedWakeup {
+    batch: usize,
+    /// Resumes left in the currently released burst (0 = coalescing).
+    draining: usize,
+}
+
+impl SchedPolicy for BatchedWakeup {
+    fn kind(&self) -> SchedPolicyKind {
+        SchedPolicyKind::BatchedWakeup(self.batch as u32)
+    }
+
+    fn pick_next(&mut self, pending: &[Pending], now: u64) -> Option<usize> {
+        if self.draining == 0 {
+            let visible = pending.iter().filter(|e| e.ready <= now).count();
+            // When fewer than `batch` requests remain outstanding the
+            // batch can never fill; require them all so the tail drains.
+            let threshold = self.batch.min(pending.len()).max(1);
+            if visible < threshold {
+                return None;
+            }
+            self.draining = visible;
+        }
+        match earliest_ready(pending, now) {
+            Some(i) => {
+                self.draining -= 1;
+                Some(i)
+            }
+            None => {
+                // A burst can evaporate between polls (bafin polls with
+                // the *fetch* cycle, which may precede the poll that
+                // released the burst): fall back to coalescing.
+                self.draining = 0;
+                None
+            }
+        }
+    }
+}
+
+/// See [`SchedPolicyKind::LatencyAware`].
+#[derive(Debug, Default)]
+pub struct LatencyAware;
+
+impl SchedPolicy for LatencyAware {
+    fn kind(&self) -> SchedPolicyKind {
+        SchedPolicyKind::LatencyAware
+    }
+
+    fn pick_next(&mut self, pending: &[Pending], now: u64) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, e) in pending.iter().enumerate() {
+            if e.ready > now {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => (e.issue, e.seq) < (pending[b].issue, pending[b].seq),
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pend(id: CoroId, ready: u64, issue: u64, seq: u64) -> Pending {
+        Pending { id, ready, issue, seq, resume: id as BlockId }
+    }
+
+    #[test]
+    fn arrival_order_matches_legacy_scan() {
+        let mut p = ArrivalOrder;
+        let q = [pend(0, 600, 0, 0), pend(1, 300, 10, 1), pend(2, 300, 20, 2)];
+        assert_eq!(p.pick_next(&q, 100), None, "nothing visible yet");
+        // Ties on ready break to the first index, like the old loop.
+        assert_eq!(p.pick_next(&q, 1000), Some(1));
+        assert_eq!(p.pick_next(&q, 300), Some(1));
+    }
+
+    #[test]
+    fn fifo_blocks_on_suspension_head() {
+        let mut p = Fifo;
+        // Oldest suspension (seq 0) completes LAST: younger ready entries
+        // must not overtake it.
+        let q = [pend(7, 900, 0, 0), pend(8, 100, 5, 1), pend(9, 200, 6, 2)];
+        assert_eq!(p.pick_next(&q, 500), None, "head-of-line block");
+        assert_eq!(p.pick_next(&q, 900), Some(0));
+        // Once the head drains, the next seq takes over.
+        let q2 = [pend(8, 100, 5, 1), pend(9, 200, 6, 2)];
+        assert_eq!(p.pick_next(&q2, 500), Some(0));
+        assert!(!p.btq_guided(), "software static order loses BTQ coverage");
+    }
+
+    #[test]
+    fn batched_wakeup_coalesces_then_drains_the_burst() {
+        let mut p = BatchedWakeup { batch: 3, draining: 0 };
+        let q = [pend(0, 100, 0, 0), pend(1, 200, 0, 1), pend(2, 900, 0, 2), pend(3, 950, 0, 3)];
+        assert_eq!(p.pick_next(&q, 250), None, "2 visible < batch of 3");
+        assert_eq!(p.pick_next(&q, 900), Some(0), "3 visible releases a burst");
+        // The burst keeps draining even though the visible count is now
+        // back under the threshold — no one-resume-per-arrival collapse.
+        let q2 = [pend(1, 200, 0, 1), pend(2, 900, 0, 2), pend(3, 950, 0, 3)];
+        assert_eq!(p.pick_next(&q2, 900), Some(0), "drain ignores the threshold");
+        let q3 = [pend(2, 900, 0, 2), pend(3, 950, 0, 3)];
+        assert_eq!(p.pick_next(&q3, 900), Some(0), "burst of 3 completes");
+        // Burst exhausted: back to coalescing (1 outstanding -> need 1).
+        let q4 = [pend(3, 950, 0, 3)];
+        assert_eq!(p.pick_next(&q4, 940), None, "coalescing again after the burst");
+        assert_eq!(p.pick_next(&q4, 950), Some(0));
+    }
+
+    #[test]
+    fn batched_wakeup_tail_requires_all_outstanding() {
+        // Fewer outstanding than the batch -> require all of them.
+        let mut p = BatchedWakeup { batch: 3, draining: 0 };
+        let tail = [pend(5, 400, 0, 4), pend(6, 800, 0, 5)];
+        assert_eq!(p.pick_next(&tail, 500), None, "waits for the whole tail");
+        assert_eq!(p.pick_next(&tail, 800), Some(0));
+        let last = [pend(6, 800, 0, 5)];
+        assert_eq!(p.pick_next(&last, 800), Some(0), "single leftover drains");
+    }
+
+    #[test]
+    fn latency_aware_prefers_earliest_issue() {
+        let mut p = LatencyAware;
+        // id 1 arrived first but was issued later; id 0 suspended longest.
+        let q = [pend(0, 500, 10, 0), pend(1, 300, 40, 1)];
+        assert_eq!(p.pick_next(&q, 400), Some(1), "only visible entry wins");
+        assert_eq!(p.pick_next(&q, 500), Some(0), "earliest issue wins once visible");
+        // Issue ties break by seq.
+        let t = [pend(2, 100, 5, 3), pend(3, 100, 5, 2)];
+        assert_eq!(p.pick_next(&t, 100), Some(1));
+    }
+
+    #[test]
+    fn kind_roundtrip_and_labels() {
+        for k in SchedPolicyKind::ALL {
+            assert_eq!(k.build().kind(), k, "build/kind roundtrip for {k:?}");
+            assert_eq!(SchedPolicyKind::parse(&k.label()).unwrap(), k, "label parses back");
+        }
+        assert_eq!(SchedPolicyKind::parse("batched:8").unwrap(), SchedPolicyKind::BatchedWakeup(8));
+        assert_eq!(SchedPolicyKind::parse("arrival-order").unwrap(), SchedPolicyKind::ArrivalOrder);
+        assert_eq!(SchedPolicyKind::parse("latency-aware").unwrap(), SchedPolicyKind::LatencyAware);
+        assert!(SchedPolicyKind::parse("round-robin").is_err());
+        assert!(SchedPolicyKind::parse("batched:0").is_err());
+        assert_eq!(SchedPolicyKind::default(), SchedPolicyKind::ArrivalOrder);
+    }
+
+    #[test]
+    fn guidance_is_a_policy_property() {
+        for k in SchedPolicyKind::ALL {
+            let guided = k.build().btq_guided();
+            assert_eq!(guided, k != SchedPolicyKind::Fifo, "{k:?}");
+        }
+    }
+}

@@ -51,6 +51,23 @@ pub struct RunStats {
     pub switches: u64,
     pub ctx_ops: u64,
     pub tasks_completed: u64,
+    // Scheduler policy (sim::sched): which policy ordered the Finished
+    // Queue, and how it behaved. Deterministic like everything else here,
+    // so the differential suite compares them bit-for-bit too.
+    /// Label of the active policy (`SchedPolicyKind::label`).
+    pub sched_policy: String,
+    /// Finished-Queue polls (getfin/bafin asks, incl. empty-queue).
+    pub sched_polls: u64,
+    /// Polls the policy answered with a coroutine resume.
+    pub sched_picks: u64,
+    /// Polls deferred although a completion was visible (FIFO
+    /// head-of-line blocking, batched-wakeup coalescing).
+    pub sched_holds: u64,
+    /// Scheduler-attributed indirect jumps (getfin-style dispatch)
+    /// and their ITTAGE mispredicts — the coverage axis the policy
+    /// controls (memory-guided vs learnable-static target streams).
+    pub sched_indirect_jumps: u64,
+    pub sched_indirect_mispredicts: u64,
 }
 
 /// Default reorder window of [`IntervalUnion`] (see

@@ -71,8 +71,15 @@ impl Default for Config {
             .ok()
             .and_then(|s| s.parse().ok())
             .unwrap_or(0xC0F0_AA11);
-        Self { cases: 128, seed, max_shrink_iters: 400 }
+        Self { cases: env_cases(128), seed, max_shrink_iters: 400 }
     }
+}
+
+/// Case count from the `PROPTEST_CASES` env var, else `default`. The
+/// nightly CI workflow cranks this to 2048; interactive runs keep the
+/// suite fast with the per-test defaults.
+pub fn env_cases(default: usize) -> usize {
+    std::env::var("PROPTEST_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }
 
 /// Anything that can propose "smaller" versions of itself.

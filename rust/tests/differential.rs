@@ -9,6 +9,7 @@ use coroamu::benchmarks::{self, Scale};
 use coroamu::compiler::Variant;
 use coroamu::config::SimConfig;
 use coroamu::engine::{Engine, RunRequest};
+use coroamu::sim::sched::SchedPolicyKind;
 use coroamu::sim::{self, MemImage};
 
 /// Run `bench` under `variant` on all three interpreter paths —
@@ -17,7 +18,19 @@ use coroamu::sim::{self, MemImage};
 /// snapshots, and assert bit-identical stats + memory, then run the
 /// benchmark's native oracle on every final image.
 fn assert_paths_agree(bench: &str, variant: Variant, scale: Scale, seed: u64) {
-    let engine = Engine::new(SimConfig::nh_g());
+    assert_paths_agree_under(SimConfig::nh_g(), bench, variant, scale, seed)
+}
+
+/// [`assert_paths_agree`] under an explicit configuration (the policy
+/// differential runs every `SchedPolicyKind` through here).
+fn assert_paths_agree_under(
+    session_cfg: SimConfig,
+    bench: &str,
+    variant: Variant,
+    scale: Scale,
+    seed: u64,
+) {
+    let engine = Engine::new(session_cfg);
     let b = benchmarks::by_name(bench).unwrap();
     let inst = b.instance(scale, seed).unwrap();
     let opts = variant.opts(inst.default_tasks);
@@ -95,6 +108,52 @@ fn is_dynamic_variants_bit_identical() {
     for v in [Variant::Serial, Variant::CoroAmuD, Variant::CoroAmuFull] {
         assert_paths_agree("is", v, Scale::Tiny, 3);
     }
+}
+
+/// The scheduler-subsystem differential: every policy runs decoded-fused,
+/// decoded-unfused and reference with bit-identical cycles/stats/memory,
+/// on both the getfin (ITTAGE dispatch) and bafin (BTQ) scheduler shapes.
+/// Tiny scale keeps the 4-policy x 2-variant x 3-path matrix fast; the
+/// nightly workflow reruns it alongside the cranked-up proptests.
+#[test]
+fn all_policies_three_paths_bit_identical() {
+    for policy in SchedPolicyKind::ALL {
+        let cfg = SimConfig::nh_g().with_sched_policy(policy);
+        for v in [Variant::CoroAmuD, Variant::CoroAmuFull] {
+            assert_paths_agree_under(cfg.clone(), "gups", v, Scale::Tiny, 5);
+        }
+    }
+}
+
+/// Pin that memory-guided prediction coverage is a property of the
+/// scheduler policy (§IV-A as refactored into `sim::sched`):
+/// * ArrivalOrder + bafin — the paper's configuration — keeps zero
+///   indirect mispredicts AND zero bafin mispredicts;
+/// * Fifo + getfin keeps the software scheduler's indirect dispatch
+///   mispredicting through ITTAGE;
+/// * Fifo + bafin loses the BTQ oracle (software static order is not
+///   derivable from Finished-Queue state at fetch).
+#[test]
+fn prediction_coverage_is_a_policy_property() {
+    let run = |variant: Variant, policy: SchedPolicyKind| {
+        Engine::new(SimConfig::nh_g().with_sched_policy(policy))
+            .run(RunRequest::new("gups", variant).scale(Scale::Small).seed(7))
+            .unwrap()
+            .stats
+    };
+    let arrival_bafin = run(Variant::CoroAmuFull, SchedPolicyKind::ArrivalOrder);
+    assert_eq!(arrival_bafin.indirect_mispredicts, 0, "bafin scheduler has no indirect jumps");
+    assert_eq!(arrival_bafin.bafin_mispredicts, 0, "memory-guided policy keeps the BTQ oracle");
+    assert!(arrival_bafin.bafins_taken > 0);
+
+    let fifo_getfin = run(Variant::CoroAmuD, SchedPolicyKind::Fifo);
+    assert!(fifo_getfin.indirect_mispredicts > 0, "getfin dispatch must keep mispredicting");
+    assert!(fifo_getfin.sched_indirect_jumps > 0);
+    assert!(fifo_getfin.sched_indirect_mispredicts > 0, "scheduler-attributed stream recorded");
+
+    let fifo_bafin = run(Variant::CoroAmuFull, SchedPolicyKind::Fifo);
+    assert!(fifo_bafin.bafin_mispredicts > 0, "software static order breaks the BTQ oracle");
+    assert_eq!(fifo_bafin.bafin_mispredicts, fifo_bafin.bafins_taken, "every dispatch uncovered");
 }
 
 /// Sweep-level dataset reuse is invisible to results: every point of a

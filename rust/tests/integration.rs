@@ -302,8 +302,8 @@ fn amu_misuse_rejected() {
     use coroamu::sim::amu::Amu;
     let mut amu = Amu::new(8, 1);
     assert!(amu.asignal(3, 0).is_err(), "asignal without await must fail");
-    amu.await_register(3, 0).unwrap();
-    assert!(amu.await_register(3, 0).is_err(), "double await must fail");
+    amu.await_register(3, 0, 0).unwrap();
+    assert!(amu.await_register(3, 0, 0).is_err(), "double await must fail");
     assert!(amu.aset(1, 0).is_err(), "aset n=0 must fail");
     amu.aset(1, 2).unwrap();
     assert!(amu.aset(1, 2).is_err(), "nested aset on same id must fail");
