@@ -11,10 +11,16 @@ baseline and enforces a tolerance on simulated-MIPS throughput:
 
 Gated rows are the per-kernel decoded-interpreter measurements
 (names ending in `/decoded`, `/decoded-fused` or `/decoded-unfused`
-under `sim_mips/`): they are the simulator's product throughput. The
+under `sim_mips/`): they are the simulator's product throughput. This
+includes the per-fabric columns (`sim_mips/fabric/<label>/.../decoded`,
+one per far-fabric backend), so a fabric model whose bookkeeping drags
+down decoded MIPS fails the same gate as any other kernel. The
 `reference` rows are informational (the pre-change baseline shape) and
 rows present on only one side are reported but never gate — adding or
-renaming a kernel must not break CI.
+renaming a kernel (or a whole fabric group, against a baseline recorded
+before the fabric subsystem existed) must not break CI; such rows are
+printed as `new row (not gated)` and start gating once a fresh baseline
+containing them is committed.
 
 Degenerate baselines never gate: a placeholder (no samples) or a
 debug-mode recording against a release-mode measurement just prints a
@@ -30,6 +36,8 @@ import argparse
 import json
 import sys
 
+# Covers plain kernels (sim_mips/<bench>/<variant>/decoded) and the
+# fabric group (sim_mips/fabric/<label>/<bench>/decoded) alike.
 GATED_SUFFIXES = ("/decoded", "/decoded-fused", "/decoded-unfused")
 
 

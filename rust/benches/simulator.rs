@@ -152,6 +152,28 @@ fn record_sim_mips(b: &Bench) -> bool {
     ok
 }
 
+/// Per-fabric decoded-MIPS columns (`sim_mips/fabric/<label>/...`, so
+/// the CI `cargo bench -- sim_mips` smoke runs them and the regression
+/// gate treats them like any other decoded row; baselines recorded
+/// before the fabric subsystem simply skip them as new rows). The fabric
+/// is a simulate-time knob, so each row is one engine session with the
+/// backend baked into the config — what a fabric-axis figure sweep pays
+/// per point.
+fn fabric_mips(b: &mut Bench) {
+    use coroamu::sim::fabric::FabricKind;
+    for f in FabricKind::ALL {
+        let name = format!("sim_mips/fabric/{}/gups/decoded", f.label());
+        if !b.enabled(&name) {
+            continue;
+        }
+        let engine = Engine::new(SimConfig::nh_g().with_fabric(f));
+        b.run(&name, "instr", || {
+            let req = RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Small).seed(42);
+            engine.run(req).unwrap().stats.dyn_instrs as f64
+        });
+    }
+}
+
 /// The acceptance sweep as a throughput row: {fifo, arrival, batched,
 /// latency} x {200, 800} ns on GUPS/CoroAMU-Full through one engine
 /// session (policy and latency are simulate-time, so the whole matrix is
@@ -265,6 +287,7 @@ fn main() {
     // bucket walk) and an MCF-style pointer chase (serialized loads).
     sim_mips(&mut b, "hj", Variant::CoroAmuFull);
     sim_mips(&mut b, "mcf", Variant::Serial);
+    fabric_mips(&mut b);
     sched_policy_sweep(&mut b);
     interp_throughput(&mut b, "gups", Variant::Serial);
     interp_throughput(&mut b, "gups", Variant::CoroAmuFull);

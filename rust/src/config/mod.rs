@@ -2,6 +2,7 @@
 //! preset used for the paper's Intel-server experiments (Figs 2/3/11), and a
 //! TOML-subset loader with CLI overrides.
 
+use crate::sim::fabric::{Dist, FabricKind};
 use crate::sim::sched::SchedPolicyKind;
 use crate::util::minitoml::{self, Doc};
 use anyhow::{bail, Context, Result};
@@ -91,8 +92,28 @@ impl AmuConfig {
     }
 }
 
-/// Memory-system parameters. Far memory models the paper's FPGA delayer +
-/// bandwidth regulator in front of HBM.
+/// Far-memory fabric selection (`sim::fabric`), the `[mem.fabric]` TOML
+/// table. A simulate-time knob like the far latency: it never forks the
+/// compiled-kernel cache.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricConfig {
+    /// Which backend serves the far tier. The default (`FixedDelay`)
+    /// reproduces the paper's delayer + bandwidth-regulator rig
+    /// bit-for-bit (pinned by the differential suite).
+    pub kind: FabricKind,
+    /// Seed for the `dist` backend's deterministic latency draws.
+    pub seed: u64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig { kind: FabricKind::FixedDelay, seed: 0xFA_B71C }
+    }
+}
+
+/// Memory-system parameters. The far tier defaults to the paper's FPGA
+/// delayer + bandwidth regulator in front of HBM; `fabric` swaps in the
+/// congestion / variance / tiering models.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MemConfig {
     pub local_latency_ns: f64,
@@ -101,6 +122,8 @@ pub struct MemConfig {
     /// 1-32 B/cycle = 3-96 GB/s at 3 GHz).
     pub far_bw_bytes_per_cycle: f64,
     pub local_bw_bytes_per_cycle: f64,
+    /// Far-tier fabric model (`sim::fabric`, `[mem.fabric]` in TOML).
+    pub fabric: FabricConfig,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -171,6 +194,7 @@ impl SimConfig {
                 far_latency_ns: 200.0,
                 far_bw_bytes_per_cycle: 16.0,
                 local_bw_bytes_per_cycle: 32.0,
+                fabric: FabricConfig::default(),
             },
             l2_bop: true,
             fuse_superops: true,
@@ -211,6 +235,7 @@ impl SimConfig {
                 far_latency_ns: 130.0,
                 far_bw_bytes_per_cycle: 24.0,
                 local_bw_bytes_per_cycle: 32.0,
+                fabric: FabricConfig::default(),
             },
             l2_bop: false,
             fuse_superops: true,
@@ -256,6 +281,13 @@ impl SimConfig {
     /// axis; see `SchedPolicyKind`).
     pub fn with_sched_policy(mut self, policy: SchedPolicyKind) -> Self {
         self.sched_policy = policy;
+        self
+    }
+
+    /// Select the far-memory fabric backend (the `sim::fabric` sweep
+    /// axis; see `FabricKind`). Simulate-time like far latency.
+    pub fn with_fabric(mut self, kind: FabricKind) -> Self {
+        self.mem.fabric.kind = kind;
         self
     }
 
@@ -316,7 +348,60 @@ impl SimConfig {
         if let Some(v) = doc.str("sched.policy") {
             self.sched_policy = SchedPolicyKind::parse(v)?;
         }
+        self.apply_fabric_doc(doc)?;
         self.validate()
+    }
+
+    /// Apply the nested `[mem.fabric]` table. Unknown keys are rejected
+    /// with the full key path, so a typo cannot silently leave the
+    /// paper's fixed-delay rig in place.
+    fn apply_fabric_doc(&mut self, doc: &Doc) -> Result<()> {
+        const KNOWN: [&str; 5] = ["model", "depth", "pages", "dist", "seed"];
+        for key in doc.keys_with_prefix("mem.fabric.") {
+            let leaf = &key["mem.fabric.".len()..];
+            if !KNOWN.contains(&leaf) {
+                bail!(
+                    "unknown [mem.fabric] key '{leaf}' (known keys: {})",
+                    KNOWN.join(", ")
+                );
+            }
+        }
+        if let Some(v) = doc.str("mem.fabric.model") {
+            self.mem.fabric.kind = FabricKind::parse(v)?;
+        }
+        if let Some(v) = doc.i64("mem.fabric.depth") {
+            match &mut self.mem.fabric.kind {
+                FabricKind::Queued { depth } if v > 0 => *depth = v as u32,
+                FabricKind::Queued { .. } => bail!("mem.fabric.depth must be positive, got {v}"),
+                other => bail!(
+                    "mem.fabric.depth only applies to the queued fabric (model is '{}')",
+                    other.label()
+                ),
+            }
+        }
+        if let Some(v) = doc.i64("mem.fabric.pages") {
+            match &mut self.mem.fabric.kind {
+                FabricKind::Tiered { pages } if v > 0 => *pages = v as u32,
+                FabricKind::Tiered { .. } => bail!("mem.fabric.pages must be positive, got {v}"),
+                other => bail!(
+                    "mem.fabric.pages only applies to the tiered fabric (model is '{}')",
+                    other.label()
+                ),
+            }
+        }
+        if let Some(v) = doc.str("mem.fabric.dist") {
+            match &mut self.mem.fabric.kind {
+                FabricKind::Distributed { dist } => *dist = Dist::parse(v)?,
+                other => bail!(
+                    "mem.fabric.dist only applies to the distributed fabric (model is '{}')",
+                    other.label()
+                ),
+            }
+        }
+        if let Some(v) = doc.i64("mem.fabric.seed") {
+            self.mem.fabric.seed = v as u64;
+        }
+        Ok(())
     }
 
     pub fn load_file(path: &str) -> Result<Self> {
@@ -344,6 +429,11 @@ impl SimConfig {
         }
         if self.amu.enabled && self.amu.request_table == 0 {
             bail!("amu enabled but request_table is 0");
+        }
+        match self.mem.fabric.kind {
+            FabricKind::Queued { depth: 0 } => bail!("queued fabric needs a nonzero depth"),
+            FabricKind::Tiered { pages: 0 } => bail!("tiered fabric needs a nonzero page count"),
+            _ => {}
         }
         Ok(())
     }
@@ -373,6 +463,7 @@ impl SimConfig {
         t.row(vec!["L3 Cache (LLC)".into(), format!("{}-way {}KB, {} MSHRs", self.l3.ways, self.l3.size_kb, self.l3.mshrs)]);
         t.row(vec!["Local memory latency".into(), format!("{} ns", self.mem.local_latency_ns)]);
         t.row(vec!["Far memory latency".into(), format!("{} ns", self.mem.far_latency_ns)]);
+        t.row(vec!["Far fabric model".into(), self.mem.fabric.kind.label()]);
         t
     }
 }
@@ -437,6 +528,68 @@ mod tests {
         assert_eq!(c.sched_policy, SchedPolicyKind::BatchedWakeup(8));
         let bad = crate::util::minitoml::parse("[sched]\npolicy = \"round-robin\"\n").unwrap();
         assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn fabric_defaults_and_toml_overrides() {
+        let c = SimConfig::nh_g();
+        assert_eq!(c.mem.fabric.kind, FabricKind::FixedDelay, "default must stay compatible");
+        let c = c.with_fabric(FabricKind::Queued { depth: 8 });
+        assert_eq!(c.mem.fabric.kind, FabricKind::Queued { depth: 8 });
+        // Nested [mem.fabric] table: model spelling plus knob overrides.
+        let doc = crate::util::minitoml::parse(
+            "[mem.fabric]\nmodel = \"queued\"\ndepth = 24\nseed = 9\n",
+        )
+        .unwrap();
+        let mut c = SimConfig::nh_g();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.mem.fabric.kind, FabricKind::Queued { depth: 24 });
+        assert_eq!(c.mem.fabric.seed, 9);
+        let doc = crate::util::minitoml::parse(
+            "[mem.fabric]\nmodel = \"dist\"\ndist = \"uniform\"\n",
+        )
+        .unwrap();
+        let mut c = SimConfig::nh_g();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.mem.fabric.kind, FabricKind::Distributed { dist: Dist::Uniform });
+        let doc =
+            crate::util::minitoml::parse("[mem.fabric]\nmodel = \"tiered:128\"\n").unwrap();
+        let mut c = SimConfig::nh_g();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.mem.fabric.kind, FabricKind::Tiered { pages: 128 });
+    }
+
+    #[test]
+    fn fabric_toml_rejects_unknown_and_misapplied_keys() {
+        // Unknown key: clear error naming the key and the valid set.
+        let bad = crate::util::minitoml::parse("[mem.fabric]\nmodle = \"queued\"\n").unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown [mem.fabric] key 'modle'"), "{err}");
+        assert!(err.contains("model"), "error must list the known keys: {err}");
+        // Knob for the wrong backend.
+        let bad = crate::util::minitoml::parse("[mem.fabric]\ndepth = 8\n").unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("only applies to the queued fabric"), "{err}");
+        let bad =
+            crate::util::minitoml::parse("[mem.fabric]\nmodel = \"queued\"\npages = 4\n").unwrap();
+        assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
+        // Bad values.
+        let bad =
+            crate::util::minitoml::parse("[mem.fabric]\nmodel = \"queued\"\ndepth = 0\n").unwrap();
+        assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
+        let bad = crate::util::minitoml::parse("[mem.fabric]\nmodel = \"warp-drive\"\n").unwrap();
+        assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn fabric_validation_rejects_degenerate_shapes() {
+        let mut c = SimConfig::nh_g();
+        c.mem.fabric.kind = FabricKind::Queued { depth: 0 };
+        assert!(c.validate().is_err());
+        c.mem.fabric.kind = FabricKind::Tiered { pages: 0 };
+        assert!(c.validate().is_err());
+        c.mem.fabric.kind = FabricKind::Tiered { pages: 1 };
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -40,6 +40,7 @@ use crate::benchmarks::{self, Instance, Scale};
 use crate::compiler::{compile, CodegenOpts, CompiledKernel, Variant};
 use crate::config::SimConfig;
 use crate::coordinator::pool;
+use crate::sim::fabric::FabricKind;
 use crate::sim::sched::SchedPolicyKind;
 use crate::sim::{self, MemImage, RunStats};
 use anyhow::{anyhow, Result};
@@ -155,6 +156,10 @@ pub struct RunRequest {
     /// run only (`sim::sched`). Simulate-time like latency: sweeping the
     /// policy axis never forks the compiled-kernel cache.
     pub sched_policy: Option<SchedPolicyKind>,
+    /// Override the session config's far-memory fabric for this run only
+    /// (`sim::fabric`). Simulate-time like latency and policy: sweeping
+    /// the fabric axis never forks the compiled-kernel cache.
+    pub fabric: Option<FabricKind>,
     /// Explicit codegen options (ablation figures); overrides `variant`'s
     /// canonical options when set.
     pub opts: Option<CodegenOpts>,
@@ -173,6 +178,7 @@ impl RunRequest {
             key: String::new(),
             latency_ns: None,
             sched_policy: None,
+            fabric: None,
             opts: None,
             label: None,
         }
@@ -210,6 +216,13 @@ impl RunRequest {
         self
     }
 
+    /// Run under an explicit far-memory fabric (the `sim::fabric` sweep
+    /// axis) instead of the session config's default.
+    pub fn fabric(mut self, f: FabricKind) -> Self {
+        self.fabric = Some(f);
+        self
+    }
+
     /// Run under explicit codegen options instead of the variant's
     /// canonical ones (the ablation figures toggle single optimizations).
     pub fn opts(mut self, opts: CodegenOpts, label: impl Into<String>) -> Self {
@@ -237,6 +250,8 @@ pub struct RunReport {
     pub far_latency_ns: f64,
     /// Effective coroutine-scheduler policy of the run.
     pub sched_policy: SchedPolicyKind,
+    /// Effective far-memory fabric of the run.
+    pub fabric: FabricKind,
     pub scale: Scale,
     pub seed: u64,
     pub key: String,
@@ -252,11 +267,12 @@ impl RunReport {
         let st = &self.stats;
         let mut out = String::new();
         out.push_str(&format!(
-            "bench={} variant={} cfg={} far={}ns sched={} scale={:?} seed={}{}\n",
+            "bench={} variant={} cfg={} far={}ns fabric={} sched={} scale={:?} seed={}{}\n",
             self.bench,
             self.variant_label,
             self.cfg_name,
             self.far_latency_ns,
+            self.fabric.label(),
             self.sched_policy.label(),
             self.scale,
             self.seed,
@@ -294,6 +310,26 @@ impl RunReport {
             st.far_mlp,
             st.far_busy_frac * 100.0
         ));
+        out.push_str(&format!(
+            "  far latency       p50 {} / p99 {} cycles ({} requests)\n",
+            st.fabric_p50, st.fabric_p99, st.fabric_requests
+        ));
+        if st.fabric_queue_stalls > 0 || st.fabric_max_inflight > 0 {
+            out.push_str(&format!(
+                "  fabric queue      peak {} in flight, {} stall cycles\n",
+                st.fabric_max_inflight, st.fabric_queue_stalls
+            ));
+        }
+        if st.fabric_hot_hits + st.fabric_hot_misses > 0 {
+            out.push_str(&format!(
+                "  hot pages         {:.0}% hit ({} hits / {} misses, {} writebacks)\n",
+                100.0 * st.fabric_hot_hits as f64
+                    / (st.fabric_hot_hits + st.fabric_hot_misses) as f64,
+                st.fabric_hot_hits,
+                st.fabric_hot_misses,
+                st.fabric_writebacks
+            ));
+        }
         out.push_str(&format!("  l1 hits/misses    {}/{}\n", st.l1_hits, st.l1_misses));
         let brk = st.cycle_breakdown();
         let s: Vec<String> = brk.iter().map(|(n, v)| format!("{n} {:.0}%", v * 100.0)).collect();
@@ -491,6 +527,7 @@ impl Engine {
             cfg_name: cfg.name.clone(),
             far_latency_ns: cfg.mem.far_latency_ns,
             sched_policy: cfg.sched_policy,
+            fabric: cfg.mem.fabric.kind,
             scale: req.scale,
             seed: req.seed,
             key: req.key.clone(),
@@ -529,8 +566,9 @@ impl Engine {
     }
 
     /// The session config with the request's simulate-time overrides
-    /// (far latency, scheduler policy) applied. Neither override touches
-    /// compilation, so the kernel cache is shared across the whole sweep.
+    /// (far latency, scheduler policy, fabric) applied. None of the
+    /// overrides touches compilation, so the kernel cache is shared
+    /// across the whole sweep.
     fn effective_cfg(&self, req: &RunRequest) -> SimConfig {
         let mut cfg = self.cfg.clone();
         if let Some(ns) = req.latency_ns {
@@ -538,6 +576,9 @@ impl Engine {
         }
         if let Some(p) = req.sched_policy {
             cfg.sched_policy = p;
+        }
+        if let Some(f) = req.fabric {
+            cfg.mem.fabric.kind = f;
         }
         cfg
     }
@@ -585,6 +626,7 @@ mod tests {
         assert_eq!(r.key, "");
         assert_eq!(r.latency_ns, None);
         assert_eq!(r.sched_policy, None, "default = session policy");
+        assert_eq!(r.fabric, None, "default = session fabric");
         assert!(r.opts.is_none() && r.label.is_none());
         assert_eq!(r.config_label(), "CoroAMU-Full");
     }
@@ -687,6 +729,55 @@ mod tests {
         let cs = engine.cache_stats();
         assert_eq!(cs.misses, 1, "policy/latency are simulate-time: one compile for 8 runs");
         assert_eq!(cs.hits, 7);
+    }
+
+    #[test]
+    fn fabric_sweep_completes_and_shares_the_kernel_cache() {
+        // The fabric acceptance-matrix shape: fabrics x latencies through
+        // one engine session must compile the kernel exactly once.
+        let engine = Engine::new(SimConfig::nh_g());
+        let mut matrix = Vec::new();
+        for f in FabricKind::ALL {
+            for lat in [200.0, 800.0] {
+                matrix.push(
+                    RunRequest::new("gups", Variant::CoroAmuFull)
+                        .scale(Scale::Tiny)
+                        .latency_ns(lat)
+                        .fabric(f)
+                        .key(format!("{lat}/{}", f.label())),
+                );
+            }
+        }
+        let rs = engine.sweep(&matrix, 4).unwrap();
+        assert_eq!(rs.len(), 8);
+        for (req, rep) in matrix.iter().zip(&rs) {
+            assert_eq!(Some(rep.fabric), req.fabric);
+            assert_eq!(rep.stats.fabric, rep.fabric.label());
+            assert!(rep.stats.cycles > 0);
+            assert!(rep.render().contains(&format!("fabric={}", rep.fabric.label())));
+        }
+        let cs = engine.cache_stats();
+        assert_eq!(cs.misses, 1, "fabric/latency are simulate-time: one compile for 8 runs");
+        assert_eq!(cs.hits, 7);
+        let ds = engine.dataset_stats();
+        assert_eq!(ds.misses, 1, "one dataset build for the whole fabric matrix");
+    }
+
+    #[test]
+    fn explicit_default_fabric_is_invisible() {
+        let engine = Engine::new(SimConfig::nh_g());
+        let base = engine
+            .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny))
+            .unwrap();
+        let explicit = engine
+            .run(
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .fabric(FabricKind::FixedDelay),
+            )
+            .unwrap();
+        assert_eq!(base.stats, explicit.stats, "explicit FixedDelay must not move a cycle");
+        assert_eq!(base.fabric, FabricKind::FixedDelay);
     }
 
     #[test]

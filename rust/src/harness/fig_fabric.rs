@@ -1,0 +1,329 @@
+//! Far-fabric comparison tables (`coroamu report --fabric`): the
+//! `sim::fabric` axis — {fixed, queued, dist, tiered} × variants ×
+//! scheduler policies at the high-latency disaggregation point. This is
+//! the scenario-diversity companion to the two-point latency sweep of
+//! Fig. 12: instead of sweeping *how far* the far pool is, it sweeps
+//! *how the fabric behaves* (congestion, variance, tiering), and shows
+//! where dynamic coroutine scheduling (`sim::sched`) beats a static
+//! resume order once completion times stop being deterministic.
+//!
+//! Fabric, policy and latency are all simulate-time knobs, so the whole
+//! matrix compiles each (benchmark, variant) kernel exactly once and
+//! builds each dataset exactly once.
+
+use super::FigOpts;
+use crate::compiler::Variant;
+use crate::config::SimConfig;
+use crate::engine::{lookup, Engine, RunRequest};
+use crate::sim::fabric::FabricKind;
+use crate::sim::sched::SchedPolicyKind;
+use crate::util::table::{geomean, speedup, Table};
+use anyhow::Result;
+
+/// The far-latency point the fabric axis is measured at: the paper's
+/// high-disaggregation setting, where fabric behavior dominates.
+pub const LATENCY_NS: f64 = 800.0;
+
+/// The irregular subset the fabric axis discriminates on: random scatter
+/// (gups), pointer chasing (bfs) and dependent hashing (hj) — bfs/hj
+/// carry the access locality that makes the tiered backend diverge from
+/// streaming behavior.
+pub const DEFAULT_BENCHES: [&str; 3] = ["gups", "bfs", "hj"];
+
+fn benches(opts: &FigOpts) -> Vec<String> {
+    if opts.only.is_empty() {
+        DEFAULT_BENCHES.iter().map(|s| s.to_string()).collect()
+    } else {
+        opts.only.clone()
+    }
+}
+
+/// The swept fabric set: all four backends, or a single one when the
+/// CLI restricts the axis (`report --fabric queued:8`).
+pub fn fabrics(only: Option<FabricKind>) -> Vec<FabricKind> {
+    match only {
+        Some(f) => vec![f],
+        None => FabricKind::ALL.to_vec(),
+    }
+}
+
+/// The request matrix: per (fabric, bench) a serial baseline, a
+/// CoroAMU-D run (variant table), and one CoroAMU-Full run per scheduler
+/// policy (fabric × policy tables).
+pub fn requests(opts: &FigOpts, fabrics: &[FabricKind]) -> Vec<RunRequest> {
+    let mut matrix = Vec::new();
+    for &f in fabrics {
+        for b in benches(opts) {
+            matrix.push(
+                RunRequest::new(b.clone(), Variant::Serial)
+                    .scale(opts.scale)
+                    .seed(opts.seed)
+                    .latency_ns(LATENCY_NS)
+                    .fabric(f)
+                    .key(f.label()),
+            );
+            matrix.push(
+                RunRequest::new(b.clone(), Variant::CoroAmuD)
+                    .scale(opts.scale)
+                    .seed(opts.seed)
+                    .latency_ns(LATENCY_NS)
+                    .fabric(f)
+                    .key(f.label()),
+            );
+            for p in SchedPolicyKind::ALL {
+                matrix.push(
+                    RunRequest::new(b.clone(), Variant::CoroAmuFull)
+                        .scale(opts.scale)
+                        .seed(opts.seed)
+                        .latency_ns(LATENCY_NS)
+                        .fabric(f)
+                        .policy(p)
+                        .key(format!("{}/{}", f.label(), p.label())),
+                );
+            }
+        }
+    }
+    matrix
+}
+
+/// Key of the CoroAMU-Full run for (fabric, policy).
+fn full_key(f: FabricKind, p: SchedPolicyKind) -> String {
+    format!("{}/{}", f.label(), p.label())
+}
+
+pub fn run(opts: &FigOpts, only: Option<FabricKind>) -> Result<Vec<Table>> {
+    let fabs = fabrics(only);
+    let engine = Engine::new(SimConfig::nh_g());
+    let rs = engine.sweep(&requests(opts, &fabs), opts.threads)?;
+    let benches = benches(opts);
+    let arrival = SchedPolicyKind::ArrivalOrder;
+    let mut tables = Vec::new();
+
+    // T1: fabric × variant — what each fabric does to the decoupling
+    // win itself (arrival order, the paper's native policy).
+    let mut cols: Vec<String> = vec!["fabric".into()];
+    for b in &benches {
+        cols.push(format!("{b} D"));
+        cols.push(format!("{b} Full"));
+    }
+    let mut t1 = Table::new(
+        format!("Far-fabric sweep: speedup vs serial per variant ({LATENCY_NS} ns, arrival order)"),
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for &f in &fabs {
+        let mut row = vec![f.label()];
+        for b in &benches {
+            let serial = lookup(&rs, b, Variant::Serial, &f.label()).unwrap().stats.cycles as f64;
+            let d = lookup(&rs, b, Variant::CoroAmuD, &f.label()).unwrap().stats.cycles as f64;
+            let full =
+                lookup(&rs, b, Variant::CoroAmuFull, &full_key(f, arrival)).unwrap().stats.cycles
+                    as f64;
+            row.push(speedup(serial / d));
+            row.push(speedup(serial / full));
+        }
+        t1.row(row);
+    }
+    tables.push(t1);
+
+    // T2: fabric × scheduler policy — where resume order starts to
+    // matter once the fabric adds queuing, variance or tiering.
+    let mut cols: Vec<String> = vec!["fabric".into(), "policy".into()];
+    cols.extend(benches.iter().cloned());
+    cols.push("geomean".into());
+    let mut t2 = Table::new(
+        format!("Fabric × policy: CoroAMU-Full speedup vs serial ({LATENCY_NS} ns)"),
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for &f in &fabs {
+        for p in SchedPolicyKind::ALL {
+            let mut row = vec![f.label(), p.label()];
+            let mut sp = Vec::new();
+            for b in &benches {
+                let serial =
+                    lookup(&rs, b, Variant::Serial, &f.label()).unwrap().stats.cycles as f64;
+                let full = lookup(&rs, b, Variant::CoroAmuFull, &full_key(f, p))
+                    .unwrap()
+                    .stats
+                    .cycles as f64;
+                sp.push(serial / full);
+                row.push(speedup(serial / full));
+            }
+            row.push(speedup(geomean(&sp)));
+            t2.row(row);
+        }
+    }
+    tables.push(t2);
+
+    // T3: what each fabric actually did to the requests (first bench,
+    // CoroAMU-Full under arrival order).
+    if let Some(b) = benches.first() {
+        let mut t3 = Table::new(
+            format!("Fabric behavior ({b}, CoroAMU-Full/arrival, {LATENCY_NS} ns)"),
+            &[
+                "fabric",
+                "requests",
+                "p50 lat",
+                "p99 lat",
+                "peak queue",
+                "queue stalls",
+                "hot-page hit",
+                "writebacks",
+            ],
+        );
+        for &f in &fabs {
+            let st = &lookup(&rs, b, Variant::CoroAmuFull, &full_key(f, arrival)).unwrap().stats;
+            let hot = st.fabric_hot_hits + st.fabric_hot_misses;
+            t3.row(vec![
+                f.label(),
+                st.fabric_requests.to_string(),
+                st.fabric_p50.to_string(),
+                st.fabric_p99.to_string(),
+                st.fabric_max_inflight.to_string(),
+                st.fabric_queue_stalls.to_string(),
+                if hot == 0 {
+                    "-".into()
+                } else {
+                    format!("{:.0}%", 100.0 * st.fabric_hot_hits as f64 / hot as f64)
+                },
+                st.fabric_writebacks.to_string(),
+            ]);
+        }
+        tables.push(t3);
+    }
+
+    // T4: dynamic vs static resume order — per (fabric, bench), cycles
+    // under arrival order (the paper's static-completion-order baseline)
+    // against the dynamic policies, with the winner's margin. Under the
+    // fixed delayer the completion order is deterministic and arrival
+    // order is essentially optimal; under variance the dynamic policies
+    // find cells where it is not.
+    let mut t4 = Table::new(
+        format!("Dynamic vs static resume order under fabric variance ({LATENCY_NS} ns)"),
+        &["fabric", "bench", "arrival", "latency-aware", "batched", "best dynamic", "gain"],
+    );
+    for &f in &fabs {
+        for b in &benches {
+            let cyc = |p: SchedPolicyKind| {
+                lookup(&rs, b, Variant::CoroAmuFull, &full_key(f, p)).unwrap().stats.cycles
+            };
+            let base = cyc(arrival);
+            let la = cyc(SchedPolicyKind::LatencyAware);
+            let bw = cyc(SchedPolicyKind::BatchedWakeup(crate::sim::sched::DEFAULT_BATCH));
+            let (best_label, best) =
+                if la <= bw { ("latency", la) } else { ("batched", bw) };
+            let gain = 100.0 * (base as f64 - best as f64) / base as f64;
+            t4.row(vec![
+                f.label(),
+                b.clone(),
+                base.to_string(),
+                la.to_string(),
+                bw.to_string(),
+                best_label.into(),
+                format!("{gain:+.2}%"),
+            ]);
+        }
+    }
+    tables.push(t4);
+
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Scale;
+
+    #[test]
+    fn request_matrix_covers_the_acceptance_axis() {
+        let opts = FigOpts { scale: Scale::Tiny, ..FigOpts::quick() };
+        let fabs = fabrics(None);
+        let m = requests(&opts, &fabs);
+        // 4 fabrics x 3 benches x (serial + D + 4 policies).
+        assert_eq!(m.len(), 4 * 3 * 6);
+        for f in FabricKind::ALL {
+            assert!(
+                m.iter().filter(|r| r.fabric == Some(f)).count() >= 3 * 6,
+                "{} missing from the matrix",
+                f.label()
+            );
+        }
+        // Restricting the axis keeps one fabric only.
+        let one = requests(&opts, &fabrics(Some(FabricKind::FixedDelay)));
+        assert_eq!(one.len(), 3 * 6);
+        assert!(one.iter().all(|r| r.fabric == Some(FabricKind::FixedDelay)));
+    }
+
+    #[test]
+    fn runs_on_tiny_scale_single_bench() {
+        let opts = FigOpts { scale: Scale::Tiny, only: vec!["gups".into()], ..FigOpts::quick() };
+        let tables = run(&opts, None).unwrap();
+        // variant sweep + policy sweep + behavior + dynamic-vs-static.
+        assert_eq!(tables.len(), 4);
+        let all: String = tables.iter().map(|t| t.render()).collect();
+        for f in FabricKind::ALL {
+            assert!(all.contains(&f.label()), "fabric {} missing from tables", f.label());
+        }
+        for p in SchedPolicyKind::ALL {
+            assert!(all.contains(&p.label()), "policy {} missing from tables", p.label());
+        }
+        assert!(all.contains("hot-page hit"));
+        assert!(all.contains("best dynamic"));
+    }
+
+    #[test]
+    fn single_fabric_restriction_runs() {
+        let opts = FigOpts { scale: Scale::Tiny, only: vec!["gups".into()], ..FigOpts::quick() };
+        let tables = run(&opts, Some(FabricKind::Tiered { pages: 8 })).unwrap();
+        let all: String = tables.iter().map(|t| t.render()).collect();
+        assert!(all.contains("tiered:8"));
+        assert!(!all.contains("queued:"), "restricted axis must not sweep other fabrics");
+    }
+
+    /// The acceptance scenario: once the fabric adds queuing or latency
+    /// variance, at least one (fabric, bench) cell has a dynamic policy
+    /// (latency-aware or batched wakeup) strictly beating arrival order —
+    /// the resume order only matters when completion times stop being
+    /// deterministic. Deterministic seeds make this a regression pin, not
+    /// a flaky perf assertion.
+    #[test]
+    fn dynamic_scheduling_beats_arrival_order_under_variance() {
+        use crate::sim::sched::DEFAULT_BATCH;
+        let opts = FigOpts {
+            scale: Scale::Tiny,
+            only: vec!["gups".into(), "bfs".into()],
+            ..FigOpts::quick()
+        };
+        let fabs = [
+            FabricKind::Queued { depth: 8 },
+            FabricKind::Distributed { dist: crate::sim::fabric::Dist::Bimodal },
+            FabricKind::Tiered { pages: 8 },
+        ];
+        let m = requests(&opts, &fabs);
+        let engine = Engine::new(SimConfig::nh_g());
+        let rs = engine.sweep(&m, opts.threads).unwrap();
+        let mut wins = Vec::new();
+        let mut cells = Vec::new();
+        for &f in &fabs {
+            for b in ["gups", "bfs"] {
+                let cyc = |p: SchedPolicyKind| {
+                    lookup(&rs, b, Variant::CoroAmuFull, &full_key(f, p)).unwrap().stats.cycles
+                };
+                let base = cyc(SchedPolicyKind::ArrivalOrder);
+                for (name, c) in [
+                    ("latency", cyc(SchedPolicyKind::LatencyAware)),
+                    ("batched", cyc(SchedPolicyKind::BatchedWakeup(DEFAULT_BATCH))),
+                ] {
+                    cells.push(format!("{}/{b}/{name}: {c} vs arrival {base}", f.label()));
+                    if c < base {
+                        wins.push((f.label(), b, name, base - c));
+                    }
+                }
+            }
+        }
+        assert!(
+            !wins.is_empty(),
+            "no dynamic policy beat arrival order in any variance cell:\n{}",
+            cells.join("\n")
+        );
+    }
+}

@@ -16,6 +16,7 @@
 //! | Fig 15   | [`fig15`] | context + aggregation ablation |
 //! | Fig 16   | [`fig16`] | memory-level parallelism |
 //! | sched    | [`fig_sched`] | scheduler-policy sweep (`report --sched`) |
+//! | fabric   | [`fig_fabric`] | far-fabric sweep (`report --fabric`) |
 
 pub mod fig02;
 pub mod fig03;
@@ -25,6 +26,7 @@ pub mod fig13;
 pub mod fig14;
 pub mod fig15;
 pub mod fig16;
+pub mod fig_fabric;
 pub mod fig_sched;
 
 use crate::benchmarks::Scale;

@@ -2,12 +2,16 @@
 //! the [`coroamu::engine::Engine`] session facade.
 //!
 //! ```text
-//! coroamu report [--fig N | --all | --sched] [--scale tiny|small|full] [--only a,b]
-//! coroamu run --bench gups --variant full [--latency 200] [--policy arrival] [--tasks 96]
+//! coroamu report [--fig N | --all | --sched | --fabric [KIND]] [--scale tiny|small|full] [--only a,b]
+//! coroamu run --bench gups --variant full [--latency 200] [--policy arrival] [--fabric queued:16] [--tasks 96]
 //! coroamu report --table1 | --table2
 //! coroamu oracle            # PJRT cross-check against artifacts/
 //! coroamu dump --bench gups --variant full   # CoroIR disassembly
 //! ```
+//!
+//! Report modes are mutually exclusive: `--sched --fabric` (or any other
+//! combination) is rejected with a nonzero exit rather than silently
+//! running only one of them.
 
 use anyhow::{bail, Context, Result};
 use coroamu::benchmarks::{self, Scale};
@@ -17,6 +21,7 @@ use coroamu::engine::{Engine, RunRequest};
 use coroamu::harness::{self, FigOpts};
 use coroamu::ir::printer;
 use coroamu::runtime;
+use coroamu::sim::fabric::FabricKind;
 use coroamu::sim::sched::SchedPolicyKind;
 use coroamu::util::cli::Args;
 
@@ -61,11 +66,37 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
     if let Some(p) = args.get("policy") {
         cfg = cfg.with_sched_policy(SchedPolicyKind::parse(p)?);
     }
+    if let Some(f) = args.get("fabric") {
+        cfg = cfg.with_fabric(FabricKind::parse(f)?);
+    }
     Ok(cfg)
+}
+
+/// The report modes selected on the command line. `report` accepts
+/// exactly one; naming them all in the error keeps `--sched --fabric`
+/// from silently dropping a flag.
+fn selected_report_modes(args: &Args) -> Vec<&'static str> {
+    let mut modes = Vec::new();
+    for m in ["table1", "table2", "sched", "fabric", "all"] {
+        if args.flag(m) {
+            modes.push(m);
+        }
+    }
+    if args.get("fig").is_some() {
+        modes.push("fig");
+    }
+    modes
 }
 
 fn cmd_report(args: &Args) -> Result<()> {
     let opts = fig_opts(args)?;
+    let modes = selected_report_modes(args);
+    if modes.len() > 1 {
+        bail!(
+            "conflicting report modes --{}: pick exactly one",
+            modes.join(" --")
+        );
+    }
     if args.flag("table1") {
         cfg_from(args)?.table1().print();
         return Ok(());
@@ -84,12 +115,28 @@ fn cmd_report(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
+    if args.flag("fabric") {
+        // `--fabric` sweeps all backends; `--fabric queued:8` restricts
+        // the axis to one (the value is honored, never ignored).
+        let only = match args.get("fabric") {
+            Some(v) => Some(FabricKind::parse(v)?),
+            None => None,
+        };
+        eprintln!(
+            "[coroamu] generating far-fabric sweep (scale {:?}, {} threads)...",
+            opts.scale, opts.threads
+        );
+        for t in harness::fig_fabric::run(&opts, only)? {
+            t.print();
+        }
+        return Ok(());
+    }
     let figs: Vec<u32> = if args.flag("all") {
         harness::ALL_FIGURES.to_vec()
     } else if let Some(n) = args.get_u64("fig") {
         vec![n as u32]
     } else {
-        bail!("report needs --fig N, --all, --sched, --table1 or --table2");
+        bail!("report needs --fig N, --all, --sched, --fabric, --table1 or --table2");
     };
     for f in figs {
         eprintln!("[coroamu] generating figure {f} (scale {:?}, {} threads)...", opts.scale, opts.threads);
@@ -145,8 +192,9 @@ fn cmd_oracle(_args: &Args) -> Result<()> {
 }
 
 const USAGE: &str = "usage: coroamu <report|run|dump|oracle> [options]
-  report --fig N | --all | --sched | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
-  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--policy fifo|arrival|batched[:N]|latency] [--tasks N] [--scale ...]
+  report --fig N | --all | --sched | --fabric [KIND] | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
+         (report modes are mutually exclusive)
+  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--policy fifo|arrival|batched[:N]|latency] [--fabric fixed|queued[:N]|dist[:uniform|bimodal]|tiered[:N]] [--tasks N] [--scale ...]
   dump   --bench NAME [--variant ...]     print generated CoroIR
   oracle                                  cross-check simulator vs PJRT artifacts
   help | --help                           print this message";
@@ -175,5 +223,56 @@ fn main() {
     if let Err(e) = r {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn report_modes_are_detected_individually() {
+        assert_eq!(selected_report_modes(&parse(&["report", "--sched"])), vec!["sched"]);
+        assert_eq!(selected_report_modes(&parse(&["report", "--fabric"])), vec!["fabric"]);
+        // A fabric restriction value is still the fabric mode, not a
+        // second mode and not silently dropped.
+        assert_eq!(
+            selected_report_modes(&parse(&["report", "--fabric", "queued:8"])),
+            vec!["fabric"]
+        );
+        assert_eq!(selected_report_modes(&parse(&["report", "--fig", "12"])), vec!["fig"]);
+        assert_eq!(selected_report_modes(&parse(&["report", "--all"])), vec!["all"]);
+        assert!(selected_report_modes(&parse(&["report"])).is_empty());
+    }
+
+    #[test]
+    fn conflicting_report_modes_are_rejected() {
+        // The satellite bugfix: --fabric and --sched must not compose by
+        // silently ignoring one of them.
+        let both = parse(&["report", "--fabric", "--sched"]);
+        assert_eq!(selected_report_modes(&both), vec!["sched", "fabric"]);
+        let err = cmd_report(&both).unwrap_err().to_string();
+        assert!(err.contains("conflicting report modes"), "{err}");
+        assert!(err.contains("sched") && err.contains("fabric"), "{err}");
+        // Any other pair conflicts too.
+        let err = cmd_report(&parse(&["report", "--table1", "--fig", "12"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("conflicting report modes"), "{err}");
+        // A single mode passes the audit (table2 needs no simulation).
+        assert!(cmd_report(&parse(&["report", "--table2"])).is_ok());
+    }
+
+    #[test]
+    fn run_config_accepts_fabric_and_policy_knobs() {
+        let cfg = cfg_from(&parse(&["run", "--fabric", "tiered:32", "--policy", "latency"]))
+            .unwrap();
+        assert_eq!(cfg.mem.fabric.kind, FabricKind::Tiered { pages: 32 });
+        assert_eq!(cfg.sched_policy, SchedPolicyKind::LatencyAware);
+        assert!(cfg_from(&parse(&["run", "--fabric", "warp"])).is_err());
     }
 }

@@ -152,7 +152,8 @@ impl Amu {
     /// Record a transfer bound to `id` completing at `completion`; returns
     /// the issue cycle granted (slot acquisition may delay past `t`).
     /// `completion_of` maps the granted issue cycle to the transfer's
-    /// completion (so channel bandwidth is charged from the true issue).
+    /// completion (so fabric bandwidth/queuing — `sim::fabric` — is
+    /// charged from the true issue).
     pub fn transfer(
         &mut self,
         id: i64,

@@ -1,0 +1,881 @@
+//! Pluggable far-memory fabric models.
+//!
+//! The paper evaluates CoroAMU against an FPGA rig that emulates
+//! disaggregation with a fixed-latency delayer plus a bandwidth regulator
+//! (Fig. 10), measured at exactly two latency points. Real disaggregated
+//! fabrics add the effects that rig abstracts away — queuing and
+//! congestion at the interconnect, latency variance between pools, and
+//! tiering in front of the far pool (the open challenges catalogued by
+//! the memory-disaggregation literature). This module turns the far tier
+//! behind [`MemSys`](super::memsys::MemSys) into a first-class, sweepable
+//! axis: a [`FabricModel`] trait with four backends selected by
+//! [`FabricKind`] (mirroring `SchedPolicyKind`):
+//!
+//! * [`FixedDelay`] — the paper's delayer + regulator, the default,
+//!   bit-identical to the pre-subsystem `Channel` at every bandwidth
+//!   with an exact binary representation — all the power-of-two
+//!   B/cycle settings the paper sweeps, including the NH-G default
+//!   (pinned by the differential suite); at other bandwidths (the
+//!   Skylake preset's 24 B/cycle) the integer clock below differs from
+//!   the old `f64` accumulation by deliberate sub-cycle rounding;
+//! * [`Queued`] — a link with a finite request queue, serialization
+//!   delay, and occupancy-proportional congestion, so burst MLP inflates
+//!   tail latency;
+//! * [`Distributed`] — deterministic per-request latency draws
+//!   (uniform, or bimodal near-pool vs. far-pool), seeded through
+//!   [`util::rng`](crate::util::rng) so runs stay exactly reproducible;
+//! * [`Tiered`] — a page-granular hot-page cache in front of the far
+//!   pool with LRU promotion and dirty-page writeback, so locality-rich
+//!   kernels diverge from streaming ones.
+//!
+//! All timing is integer: wire serialization is accounted in fixed-point
+//! cycles ([`FP_SHIFT`]), so completions are bit-identical across
+//! platforms — no accumulated `f64` drift (the old `Channel::next_free`
+//! hazard). Latency percentiles come from a fixed-resolution histogram
+//! ([`LatencyHist`]), also exact and allocation-free after construction.
+//!
+//! The fetch-time caveat of the §IV-A bafin oracle is unchanged by any
+//! backend: fabrics only move request *completions*; visibility is still
+//! decided against the asking cycle (see `DESIGN.md` §9).
+
+use super::cache::LINE_BYTES;
+use super::memsys::AccessKind;
+use super::stats::IntervalUnion;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::fmt;
+
+/// Fixed-point shift for wire-serialization accounting: one cycle is
+/// `1 << FP_SHIFT` (1024) fixed-point units. Chosen so every bandwidth
+/// the paper sweeps (1-32 B/cycle) keeps sub-0.1% rounding error while
+/// all arithmetic stays in `u64` (3e9 cycles << 10 is far below 2^63).
+pub const FP_SHIFT: u32 = 10;
+
+/// Page granularity of the [`Tiered`] hot cache: 4 KB = 64 lines.
+pub const PAGE_SHIFT: u32 = 12;
+pub const PAGE_LINES: u64 = 1 << (PAGE_SHIFT - 6);
+
+/// Default request-queue depth for `queued` (deliberately shallower than
+/// the AMU Request Table, so decoupled MLP actually hits backpressure).
+pub const DEFAULT_QUEUE_DEPTH: u32 = 16;
+
+/// Default hot-page capacity for `tiered` (64 pages = 256 KB of near
+/// cache in front of the far pool).
+pub const DEFAULT_HOT_PAGES: u32 = 64;
+
+/// Latency distribution shapes for the [`Distributed`] backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dist {
+    /// Uniform in `[base/2, 3*base/2]` — jitter around the delayer point.
+    Uniform,
+    /// Near-pool (`0.7x base`, 3/4 of requests) vs. far-pool (`2.5x
+    /// base`, 1/4) — the two-tier pool split of rack-scale fabrics.
+    Bimodal,
+}
+
+impl Dist {
+    pub fn label(self) -> &'static str {
+        match self {
+            Dist::Uniform => "uniform",
+            Dist::Bimodal => "bimodal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Dist> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "uniform" => Dist::Uniform,
+            "bimodal" => Dist::Bimodal,
+            other => bail!("unknown latency distribution '{other}' (uniform|bimodal)"),
+        })
+    }
+}
+
+/// Selector for the concrete fabric backends, carried by
+/// `SimConfig::mem.fabric` and swept by the engine/harness. The default
+/// ([`FixedDelay`]) reproduces the pre-subsystem far channel bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FabricKind {
+    /// The paper's FPGA rig: fixed pipe latency + bandwidth regulator.
+    FixedDelay,
+    /// Finite request queue (`depth` entries) + congestion: each queued
+    /// request ahead of an issue adds switching delay, so bursts inflate
+    /// the tail.
+    Queued { depth: u32 },
+    /// Deterministic per-request latency draws from `dist`.
+    Distributed { dist: Dist },
+    /// Hot-page cache (`pages` 4 KB pages, LRU) in front of the far pool.
+    Tiered { pages: u32 },
+}
+
+impl Default for FabricKind {
+    fn default() -> Self {
+        FabricKind::FixedDelay
+    }
+}
+
+impl FabricKind {
+    /// The canonical sweep axis (`coroamu report --fabric`).
+    pub const ALL: [FabricKind; 4] = [
+        FabricKind::FixedDelay,
+        FabricKind::Queued { depth: DEFAULT_QUEUE_DEPTH },
+        FabricKind::Distributed { dist: Dist::Bimodal },
+        FabricKind::Tiered { pages: DEFAULT_HOT_PAGES },
+    ];
+
+    /// Display label (CLI, tables, `RunStats::fabric`).
+    pub fn label(self) -> String {
+        match self {
+            FabricKind::FixedDelay => "fixed".into(),
+            FabricKind::Queued { depth } => format!("queued:{depth}"),
+            FabricKind::Distributed { dist } => format!("dist:{}", dist.label()),
+            FabricKind::Tiered { pages } => format!("tiered:{pages}"),
+        }
+    }
+
+    /// Parse a CLI/TOML spelling: `fixed` (or `fixed-delay`, `delayer`),
+    /// `queued[:DEPTH]`, `dist[:uniform|bimodal]` (or `distributed`),
+    /// `tiered[:PAGES]`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        if let Some(n) = s.strip_prefix("queued:") {
+            let n: u32 = match n.parse() {
+                Ok(v) if v > 0 => v,
+                _ => bail!("queued:DEPTH needs a positive integer, got '{n}'"),
+            };
+            return Ok(FabricKind::Queued { depth: n });
+        }
+        if let Some(n) = s.strip_prefix("tiered:") {
+            let n: u32 = match n.parse() {
+                Ok(v) if v > 0 => v,
+                _ => bail!("tiered:PAGES needs a positive integer, got '{n}'"),
+            };
+            return Ok(FabricKind::Tiered { pages: n });
+        }
+        if let Some(d) = s.strip_prefix("dist:").or_else(|| s.strip_prefix("distributed:")) {
+            return Ok(FabricKind::Distributed { dist: Dist::parse(d)? });
+        }
+        Ok(match s.as_str() {
+            "fixed" | "fixed-delay" | "delayer" => FabricKind::FixedDelay,
+            "queued" => FabricKind::Queued { depth: DEFAULT_QUEUE_DEPTH },
+            "dist" | "distributed" => FabricKind::Distributed { dist: Dist::Bimodal },
+            "tiered" => FabricKind::Tiered { pages: DEFAULT_HOT_PAGES },
+            other => bail!(
+                "unknown fabric '{other}' (fixed|queued[:N]|dist[:uniform|bimodal]|tiered[:N])"
+            ),
+        })
+    }
+
+    /// Instantiate the concrete backend. `latency` is the base far-pool
+    /// latency in cycles, `bytes_per_cycle` the regulator setting,
+    /// `window` the MLP accumulator's reorder tolerance (see
+    /// [`IntervalUnion::with_window`]), `seed` the deterministic source
+    /// for the [`Distributed`] draws.
+    pub fn build(
+        self,
+        latency: u64,
+        bytes_per_cycle: f64,
+        record: bool,
+        window: usize,
+        seed: u64,
+    ) -> Box<dyn FabricModel> {
+        let link = Link::new(latency, bytes_per_cycle, record, window);
+        match self {
+            FabricKind::FixedDelay => Box::new(FixedDelay { link }),
+            FabricKind::Queued { depth } => Box::new(Queued {
+                depth: depth.max(1) as usize,
+                // Per-queued-request switching delay: a full default
+                // queue doubles the base latency — strong enough that
+                // burst MLP visibly fattens the tail, weak enough that
+                // decoupling still wins.
+                cong_per_req: (latency >> 4).max(1),
+                link,
+                inflight: Vec::with_capacity(depth.max(1) as usize),
+                max_inflight: 0,
+                queue_stall_cycles: 0,
+            }),
+            FabricKind::Distributed { dist } => {
+                Box::new(Distributed { link, dist, rng: Rng::new(seed) })
+            }
+            FabricKind::Tiered { pages } => Box::new(Tiered {
+                near_latency: (link.latency / 4).max(1),
+                link,
+                cap: pages.max(1) as usize,
+                hot: HashMap::new(),
+                tick: 0,
+                hot_hits: 0,
+                hot_misses: 0,
+                writebacks: 0,
+            }),
+        }
+    }
+}
+
+/// Per-run fabric counters, surfaced through `RunStats`. All fields are
+/// deterministic, so the differential suite compares them bit-for-bit
+/// like every other stat.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FabricStats {
+    /// Active backend label (`FabricKind::label`).
+    pub kind: String,
+    /// Requests issued to the far tier (demand fills, prefetch fills and
+    /// AMU transfers alike).
+    pub requests: u64,
+    /// Peak request-queue occupancy (only the `queued` backend models a
+    /// finite queue; 0 elsewhere).
+    pub max_inflight: u64,
+    /// Cycles requests waited for a queue slot (congestion backpressure).
+    pub queue_stall_cycles: u64,
+    /// Far-request latency percentiles, at [`LatencyHist`] resolution.
+    pub lat_p50: u64,
+    pub lat_p99: u64,
+    /// Hot-page cache behavior (`tiered` only; 0 elsewhere).
+    pub hot_hits: u64,
+    pub hot_misses: u64,
+    pub writebacks: u64,
+}
+
+impl FabricStats {
+    /// Hot-page hit fraction (0 when the backend has no page cache).
+    pub fn hot_hit_rate(&self) -> f64 {
+        let total = self.hot_hits + self.hot_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hot_hits as f64 / total as f64
+        }
+    }
+}
+
+/// A far-memory fabric backend. `issue` is the single timing entry
+/// point: a request of `lines` cache lines at byte address `addr`,
+/// issued at cycle `t`, returns its completion cycle. Backends are
+/// deterministic functions of the issue stream (plus their construction
+/// seed), which is what keeps the decoded/reference interpreter paths
+/// bit-identical under every backend.
+pub trait FabricModel: fmt::Debug + Send {
+    /// The kind this backend was built from (provenance / labels).
+    fn kind(&self) -> FabricKind;
+
+    /// Issue a request; returns the completion cycle (`>= t`).
+    fn issue(&mut self, t: u64, addr: u64, lines: u64, kind: AccessKind) -> u64;
+
+    /// Lines that actually crossed the far wire (hot-page hits excluded).
+    fn lines_transferred(&self) -> u64;
+
+    /// Average in-flight requests over the busy period, and the busy
+    /// fraction of `total_cycles` (Fig. 16's MLP metric).
+    fn mlp(&self, total_cycles: u64) -> (f64, f64);
+
+    /// Per-request counters for `RunStats` / the fabric report.
+    fn stats(&self) -> FabricStats;
+}
+
+/// Fixed-resolution latency histogram: 8-cycle buckets over 32 K cycles
+/// (overflow clamps into the last bucket). Percentiles return the lower
+/// edge of the covering bucket, so they are exact integers independent
+/// of platform and request count.
+#[derive(Clone)]
+pub struct LatencyHist {
+    counts: Vec<u32>,
+    total: u64,
+}
+
+const HIST_BUCKET_SHIFT: u32 = 3;
+const HIST_BUCKETS: usize = 4096;
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist { counts: vec![0; HIST_BUCKETS], total: 0 }
+    }
+
+    pub fn record(&mut self, latency: u64) {
+        let idx = ((latency >> HIST_BUCKET_SHIFT) as usize).min(HIST_BUCKETS - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Lower edge of the bucket holding the `p`-quantile request
+    /// (`p` in `[0, 1]`); 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((p * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c as u64;
+            if cum >= target {
+                return (i as u64) << HIST_BUCKET_SHIFT;
+            }
+        }
+        ((HIST_BUCKETS - 1) as u64) << HIST_BUCKET_SHIFT
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl fmt::Debug for LatencyHist {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("LatencyHist")
+            .field("total", &self.total)
+            .field("p50", &self.percentile(0.50))
+            .field("p99", &self.percentile(0.99))
+            .finish()
+    }
+}
+
+/// The shared wire: fixed-point serialization (bandwidth regulator),
+/// MLP interval accounting, and the latency histogram. Every backend
+/// owns one; the backends differ in what latency they stack on top and
+/// which requests touch the wire at all.
+#[derive(Debug)]
+struct Link {
+    /// Base pipe latency in cycles.
+    latency: u64,
+    /// Wire occupancy per 64 B line, fixed-point (`cycles << FP_SHIFT`).
+    fp_per_line: u64,
+    /// Fixed-point next-free cycle of the serialization stage. Integer
+    /// accumulation — bit-identical across platforms (no `f64` drift).
+    next_free_fp: u64,
+    lines: u64,
+    requests: u64,
+    union: IntervalUnion,
+    record: bool,
+    hist: LatencyHist,
+}
+
+impl Link {
+    fn new(latency: u64, bytes_per_cycle: f64, record: bool, window: usize) -> Link {
+        let fp_per_line =
+            (((LINE_BYTES << FP_SHIFT) as f64) / bytes_per_cycle.max(0.01)).round() as u64;
+        Link {
+            latency,
+            fp_per_line,
+            next_free_fp: 0,
+            lines: 0,
+            requests: 0,
+            union: IntervalUnion::with_window(window),
+            record,
+            hist: LatencyHist::new(),
+        }
+    }
+
+    /// Serialize `lines` onto the wire no earlier than `t`; the request
+    /// completes `lat` cycles after its transfer finishes.
+    fn push(&mut self, t: u64, lines: u64, lat: u64) -> u64 {
+        self.push_from(t, t, lines, lat)
+    }
+
+    /// Like [`Link::push`], but the wire is entered no earlier than
+    /// `start` while latency accounting (MLP interval, histogram) runs
+    /// from the original issue cycle `issued` — so queue waits ahead of
+    /// the wire show up in the observed request latency.
+    fn push_from(&mut self, issued: u64, start: u64, lines: u64, lat: u64) -> u64 {
+        debug_assert!(start >= issued);
+        let start_fp = (start << FP_SHIFT).max(self.next_free_fp);
+        let end_fp = start_fp + self.fp_per_line * lines;
+        self.next_free_fp = end_fp;
+        self.lines += lines;
+        let completion = (end_fp >> FP_SHIFT) + lat;
+        self.note(issued, completion);
+        completion
+    }
+
+    /// A request served without touching the far wire (hot-page hit):
+    /// fixed latency, no serialization, no far lines.
+    fn bypass(&mut self, t: u64, lat: u64) -> u64 {
+        let completion = t + lat;
+        self.note(t, completion);
+        completion
+    }
+
+    /// Charge wire occupancy from `t` with no waiter: page-promotion
+    /// streaming and writeback traffic.
+    fn occupy(&mut self, t: u64, lines: u64) {
+        if lines == 0 {
+            return;
+        }
+        let start_fp = (t << FP_SHIFT).max(self.next_free_fp);
+        self.next_free_fp = start_fp + self.fp_per_line * lines;
+        self.lines += lines;
+    }
+
+    fn note(&mut self, t: u64, completion: u64) {
+        self.requests += 1;
+        if self.record {
+            self.union.push(t, completion);
+        }
+        self.hist.record(completion - t);
+    }
+
+    fn mlp(&self, total_cycles: u64) -> (f64, f64) {
+        if self.union.count() == 0 || total_cycles == 0 {
+            return (0.0, 0.0);
+        }
+        let busy = self.union.busy();
+        (
+            self.union.integral() as f64 / busy.max(1) as f64,
+            busy as f64 / total_cycles as f64,
+        )
+    }
+
+    fn base_stats(&self, kind: FabricKind) -> FabricStats {
+        FabricStats {
+            kind: kind.label(),
+            requests: self.requests,
+            lat_p50: self.hist.percentile(0.50),
+            lat_p99: self.hist.percentile(0.99),
+            ..FabricStats::default()
+        }
+    }
+}
+
+/// See [`FabricKind::FixedDelay`]. Same arithmetic as the pre-subsystem
+/// `Channel`, with the serialization clock in fixed point.
+#[derive(Debug)]
+pub struct FixedDelay {
+    link: Link,
+}
+
+impl FabricModel for FixedDelay {
+    fn kind(&self) -> FabricKind {
+        FabricKind::FixedDelay
+    }
+
+    fn issue(&mut self, t: u64, _addr: u64, lines: u64, _kind: AccessKind) -> u64 {
+        let lat = self.link.latency;
+        self.link.push(t, lines, lat)
+    }
+
+    fn lines_transferred(&self) -> u64 {
+        self.link.lines
+    }
+
+    fn mlp(&self, total_cycles: u64) -> (f64, f64) {
+        self.link.mlp(total_cycles)
+    }
+
+    fn stats(&self) -> FabricStats {
+        self.link.base_stats(self.kind())
+    }
+}
+
+/// See [`FabricKind::Queued`]. The finite request queue holds every
+/// in-flight request from issue to completion; a request arriving at a
+/// full queue waits for the earliest release (backpressure), and every
+/// request pays a switching delay per queued request ahead of it, so a
+/// burst of decoupled MLP inflates its own tail latency.
+#[derive(Debug)]
+pub struct Queued {
+    depth: usize,
+    link: Link,
+    /// Extra cycles of queuing delay per in-flight request ahead of us.
+    cong_per_req: u64,
+    /// Completion times of requests occupying queue slots.
+    inflight: Vec<u64>,
+    max_inflight: u64,
+    queue_stall_cycles: u64,
+}
+
+impl FabricModel for Queued {
+    fn kind(&self) -> FabricKind {
+        FabricKind::Queued { depth: self.depth as u32 }
+    }
+
+    fn issue(&mut self, t: u64, _addr: u64, lines: u64, _kind: AccessKind) -> u64 {
+        self.inflight.retain(|&r| r > t);
+        let start = if self.inflight.len() < self.depth {
+            t
+        } else {
+            // Queue full: wait for the earliest in-flight completion.
+            let (idx, &earliest) = self
+                .inflight
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| **r)
+                .expect("nonempty");
+            self.inflight.swap_remove(idx);
+            self.queue_stall_cycles += earliest - t;
+            earliest
+        };
+        let congestion = self.inflight.len() as u64 * self.cong_per_req;
+        let lat = self.link.latency + congestion;
+        let completion = self.link.push_from(t, start, lines, lat);
+        self.inflight.push(completion);
+        self.max_inflight = self.max_inflight.max(self.inflight.len() as u64);
+        completion
+    }
+
+    fn lines_transferred(&self) -> u64 {
+        self.link.lines
+    }
+
+    fn mlp(&self, total_cycles: u64) -> (f64, f64) {
+        self.link.mlp(total_cycles)
+    }
+
+    fn stats(&self) -> FabricStats {
+        FabricStats {
+            max_inflight: self.max_inflight,
+            queue_stall_cycles: self.queue_stall_cycles,
+            ..self.link.base_stats(self.kind())
+        }
+    }
+}
+
+/// See [`FabricKind::Distributed`]. Per-request latency draws from a
+/// seeded [`Rng`]: the k-th request always gets the k-th draw, so the
+/// decoded and reference interpreters (which issue identical request
+/// streams) see identical timing, and a re-run with the same seed is
+/// bit-identical.
+#[derive(Debug)]
+pub struct Distributed {
+    link: Link,
+    dist: Dist,
+    rng: Rng,
+}
+
+impl Distributed {
+    fn draw(&mut self) -> u64 {
+        let base = self.link.latency;
+        match self.dist {
+            Dist::Uniform => base / 2 + self.rng.below(base.max(1) + 1),
+            Dist::Bimodal => {
+                if self.rng.below(4) == 0 {
+                    base * 5 / 2
+                } else {
+                    base * 7 / 10
+                }
+            }
+        }
+    }
+}
+
+impl FabricModel for Distributed {
+    fn kind(&self) -> FabricKind {
+        FabricKind::Distributed { dist: self.dist }
+    }
+
+    fn issue(&mut self, t: u64, _addr: u64, lines: u64, _kind: AccessKind) -> u64 {
+        let lat = self.draw();
+        self.link.push(t, lines, lat)
+    }
+
+    fn lines_transferred(&self) -> u64 {
+        self.link.lines
+    }
+
+    fn mlp(&self, total_cycles: u64) -> (f64, f64) {
+        self.link.mlp(total_cycles)
+    }
+
+    fn stats(&self) -> FabricStats {
+        self.link.base_stats(self.kind())
+    }
+}
+
+/// See [`FabricKind::Tiered`]. A page-granular near cache in front of
+/// the far pool: hits are served at a quarter of the far latency without
+/// touching the wire; misses promote the whole page (requested lines
+/// critical-first at full latency, the rest streaming behind as wire
+/// occupancy) and evict the LRU page, writing it back over the wire when
+/// dirty. Transfers are attributed to the page of their first byte
+/// (coarse AMU transfers are page-aligned in practice; the abstraction
+/// is documented in DESIGN.md §9).
+#[derive(Debug)]
+pub struct Tiered {
+    link: Link,
+    near_latency: u64,
+    cap: usize,
+    /// page -> (LRU stamp, dirty). Stamps are unique (one per issue), so
+    /// LRU eviction is deterministic despite the hash map.
+    hot: HashMap<u64, (u64, bool)>,
+    tick: u64,
+    hot_hits: u64,
+    hot_misses: u64,
+    writebacks: u64,
+}
+
+impl FabricModel for Tiered {
+    fn kind(&self) -> FabricKind {
+        FabricKind::Tiered { pages: self.cap as u32 }
+    }
+
+    fn issue(&mut self, t: u64, addr: u64, lines: u64, kind: AccessKind) -> u64 {
+        let page = addr >> PAGE_SHIFT;
+        self.tick += 1;
+        let dirties = matches!(kind, AccessKind::Store | AccessKind::Atomic);
+        if let Some(entry) = self.hot.get_mut(&page) {
+            entry.0 = self.tick;
+            entry.1 |= dirties;
+            self.hot_hits += 1;
+            let lat = self.near_latency;
+            return self.link.bypass(t, lat);
+        }
+        self.hot_misses += 1;
+        // Critical lines first at full far latency; the rest of the page
+        // streams behind, charging the wire.
+        let lat = self.link.latency;
+        let completion = self.link.push(t, lines, lat);
+        self.link.occupy(t, PAGE_LINES.saturating_sub(lines));
+        if self.hot.len() >= self.cap {
+            let (&victim, &(_, dirty)) =
+                self.hot.iter().min_by_key(|(_, (stamp, _))| *stamp).expect("nonempty");
+            if dirty {
+                self.writebacks += 1;
+                self.link.occupy(t, PAGE_LINES);
+            }
+            self.hot.remove(&victim);
+        }
+        self.hot.insert(page, (self.tick, dirties));
+        completion
+    }
+
+    fn lines_transferred(&self) -> u64 {
+        self.link.lines
+    }
+
+    fn mlp(&self, total_cycles: u64) -> (f64, f64) {
+        self.link.mlp(total_cycles)
+    }
+
+    fn stats(&self) -> FabricStats {
+        FabricStats {
+            hot_hits: self.hot_hits,
+            hot_misses: self.hot_misses,
+            writebacks: self.writebacks,
+            ..self.link.base_stats(self.kind())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fab(kind: FabricKind, latency: u64, bw: f64) -> Box<dyn FabricModel> {
+        kind.build(latency, bw, true, 64, 0xFEED)
+    }
+
+    #[test]
+    fn kind_roundtrip_and_labels() {
+        for k in FabricKind::ALL {
+            assert_eq!(FabricKind::parse(&k.label()).unwrap(), k, "label parses back for {k:?}");
+            let built = k.build(100, 16.0, true, 8, 1);
+            assert_eq!(built.kind(), k, "build/kind roundtrip for {k:?}");
+        }
+        assert_eq!(FabricKind::parse("fixed-delay").unwrap(), FabricKind::FixedDelay);
+        assert_eq!(FabricKind::parse("delayer").unwrap(), FabricKind::FixedDelay);
+        assert_eq!(FabricKind::parse("queued:8").unwrap(), FabricKind::Queued { depth: 8 });
+        assert_eq!(
+            FabricKind::parse("dist:uniform").unwrap(),
+            FabricKind::Distributed { dist: Dist::Uniform }
+        );
+        assert_eq!(
+            FabricKind::parse("distributed").unwrap(),
+            FabricKind::Distributed { dist: Dist::Bimodal }
+        );
+        assert_eq!(FabricKind::parse("tiered:256").unwrap(), FabricKind::Tiered { pages: 256 });
+        assert!(FabricKind::parse("queued:0").is_err());
+        assert!(FabricKind::parse("tiered:0").is_err());
+        assert!(FabricKind::parse("dist:zipf").is_err());
+        assert!(FabricKind::parse("optical").is_err());
+        assert_eq!(FabricKind::default(), FabricKind::FixedDelay);
+    }
+
+    /// The default backend must reproduce the pre-subsystem `Channel`
+    /// arithmetic exactly: 100-cycle latency, 16 B/cycle = 4 cycles per
+    /// line, two back-to-back requests at t=0 complete at 104 and 108.
+    #[test]
+    fn fixed_delay_matches_legacy_channel_arithmetic() {
+        let mut f = fab(FabricKind::FixedDelay, 100, 16.0);
+        assert_eq!(f.issue(0, 0, 1, AccessKind::Load), 104);
+        assert_eq!(f.issue(0, 64, 1, AccessKind::Load), 108);
+        let (mlp, busy) = f.mlp(108);
+        assert!((mlp - 212.0 / 108.0).abs() < 1e-12, "mlp {mlp}");
+        assert!((busy - 1.0).abs() < 1e-12, "busy {busy}");
+        assert_eq!(f.lines_transferred(), 2);
+        let st = f.stats();
+        assert_eq!(st.requests, 2);
+        assert_eq!((st.lat_p50, st.lat_p99), (104, 104), "8-cycle buckets: 104 and 108 share one");
+        assert_eq!((st.max_inflight, st.hot_hits, st.queue_stall_cycles), (0, 0, 0));
+    }
+
+    /// Satellite pin: serialization accounting is integer fixed-point.
+    /// At 24 B/cycle (not representable in binary floating point) a long
+    /// back-to-back run lands on exactly these cycles on every platform:
+    /// fp_per_line = round(64*1024/24) = 2731, so the k-th completion is
+    /// (k*2731 >> 10) + latency.
+    #[test]
+    fn long_run_serialization_is_bit_exact_fixed_point() {
+        let mut f = fab(FabricKind::FixedDelay, 100, 24.0);
+        let mut last = 0;
+        for _ in 0..1000 {
+            last = f.issue(0, 0, 1, AccessKind::Load);
+        }
+        assert_eq!(last, (1000u64 * 2731 >> FP_SHIFT) + 100);
+        assert_eq!(last, 2666 + 100);
+        // Spot-check an early completion too: k=3 -> (8193 >> 10) + 100.
+        let mut g = fab(FabricKind::FixedDelay, 100, 24.0);
+        g.issue(0, 0, 1, AccessKind::Load);
+        g.issue(0, 0, 1, AccessKind::Load);
+        assert_eq!(g.issue(0, 0, 1, AccessKind::Load), 8 + 100);
+    }
+
+    #[test]
+    fn queued_backpressure_and_congestion_inflate_the_tail() {
+        // Depth 2, base latency 100, 16 B/cycle, cong = 100>>4 = 6/queued.
+        let mut f = fab(FabricKind::Queued { depth: 2 }, 100, 16.0);
+        // First request: empty queue, no congestion: 4 + 100.
+        let c1 = f.issue(0, 0, 1, AccessKind::Load);
+        assert_eq!(c1, 104);
+        // Second: one ahead in the queue: 8 + 100 + 6.
+        let c2 = f.issue(0, 0, 1, AccessKind::Load);
+        assert_eq!(c2, 114);
+        // Third at t=0: queue full, waits for c1=104, then one ahead.
+        let c3 = f.issue(0, 0, 1, AccessKind::Load);
+        assert_eq!(c3, 104 + 4 + 100 + 6);
+        let st = f.stats();
+        assert_eq!(st.queue_stall_cycles, 104);
+        assert_eq!(st.max_inflight, 2);
+        assert!(st.lat_p99 >= st.lat_p50, "congestion fattens the tail");
+    }
+
+    #[test]
+    fn distributed_draws_are_deterministic_and_bounded() {
+        let a: Vec<u64> = {
+            let mut f = fab(FabricKind::Distributed { dist: Dist::Bimodal }, 600, 16.0);
+            (0..200).map(|_| f.issue(0, 0, 1, AccessKind::Load)).collect()
+        };
+        let b: Vec<u64> = {
+            let mut f = fab(FabricKind::Distributed { dist: Dist::Bimodal }, 600, 16.0);
+            (0..200).map(|_| f.issue(0, 0, 1, AccessKind::Load)).collect()
+        };
+        assert_eq!(a, b, "same seed, same stream, same completions");
+        // A different seed draws a different sequence.
+        let mut c = FabricKind::Distributed { dist: Dist::Bimodal }.build(600, 16.0, true, 64, 7);
+        let cs: Vec<u64> = (0..200).map(|_| c.issue(0, 0, 1, AccessKind::Load)).collect();
+        assert_ne!(a, cs);
+        // Bimodal at base 600: latency component is 420 (near) or 1500
+        // (far), both classes must appear in 200 draws.
+        let mut f = fab(FabricKind::Distributed { dist: Dist::Bimodal }, 600, 16.0);
+        let mut near = 0;
+        let mut far = 0;
+        for k in 0..200u64 {
+            let t = k * 1000; // spaced out: no serialization carryover
+            let lat = f.issue(t, 0, 1, AccessKind::Load) - t - 4;
+            match lat {
+                420 => near += 1,
+                1500 => far += 1,
+                other => panic!("unexpected bimodal latency {other}"),
+            }
+        }
+        assert!(near > far, "near pool takes 3/4 of draws ({near} vs {far})");
+        assert!(far > 0);
+        // Uniform stays within [base/2, 3*base/2].
+        let mut u = fab(FabricKind::Distributed { dist: Dist::Uniform }, 600, 16.0);
+        for k in 0..200u64 {
+            let t = k * 1000;
+            let lat = u.issue(t, 0, 1, AccessKind::Load) - t - 4;
+            assert!((300..=900).contains(&lat), "uniform draw {lat} out of range");
+        }
+    }
+
+    #[test]
+    fn tiered_hits_after_promotion_and_writes_back_dirty_pages() {
+        // 2-page cache, latency 100 -> near latency 25.
+        let mut f = fab(FabricKind::Tiered { pages: 2 }, 100, 16.0);
+        // Miss on page 0: full latency + whole-page promotion traffic.
+        let c = f.issue(0, 0x0000, 1, AccessKind::Load);
+        assert_eq!(c, 104);
+        assert_eq!(f.lines_transferred(), PAGE_LINES, "promotion streams the whole page");
+        // Hit on the same page: near latency, no wire traffic.
+        let c2 = f.issue(1000, 0x0040, 1, AccessKind::Load);
+        assert_eq!(c2, 1025);
+        assert_eq!(f.lines_transferred(), PAGE_LINES);
+        // Dirty page 1, then evict it by touching pages 2 and 3:
+        // the eviction writes the page back (wire traffic, counted).
+        f.issue(2000, 0x1000, 1, AccessKind::Store); // page 1 (dirty)
+        f.issue(3000, 0x2000, 1, AccessKind::Load); // page 2: evicts LRU page 0 (clean)
+        let before = f.lines_transferred();
+        f.issue(4000, 0x3000, 1, AccessKind::Load); // page 3: evicts page 1 (dirty)
+        let st = f.stats();
+        assert_eq!(st.hot_hits, 1);
+        assert_eq!(st.hot_misses, 4);
+        assert_eq!(st.writebacks, 1, "only the dirty page writes back");
+        assert_eq!(
+            f.lines_transferred() - before,
+            PAGE_LINES + PAGE_LINES,
+            "promotion + dirty writeback both cross the wire"
+        );
+        assert!(st.hot_hit_rate() > 0.0 && st.hot_hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn tiered_lru_keeps_the_hot_page() {
+        let mut f = fab(FabricKind::Tiered { pages: 2 }, 100, 16.0);
+        f.issue(0, 0x0000, 1, AccessKind::Load); // page 0
+        f.issue(100, 0x1000, 1, AccessKind::Load); // page 1
+        f.issue(200, 0x0000, 1, AccessKind::Load); // hit page 0 (refreshes LRU)
+        f.issue(300, 0x2000, 1, AccessKind::Load); // page 2: evicts page 1
+        let c = f.issue(400, 0x0000, 1, AccessKind::Load); // page 0 still hot
+        assert_eq!(c, 425, "page 0 survived the eviction");
+        assert_eq!(f.stats().hot_hits, 2);
+    }
+
+    #[test]
+    fn latency_hist_percentiles_are_exact_bucket_edges() {
+        let mut h = LatencyHist::new();
+        for _ in 0..99 {
+            h.record(600); // bucket 75 -> edge 600
+        }
+        h.record(30000); // bucket 3750 -> edge 30000
+        assert_eq!(h.percentile(0.50), 600);
+        assert_eq!(h.percentile(0.99), 600);
+        assert_eq!(h.percentile(1.0), 30000);
+        assert_eq!(h.count(), 100);
+        // Overflow clamps to the last bucket's edge.
+        h.record(1 << 40);
+        assert_eq!(h.percentile(1.0), ((HIST_BUCKETS - 1) as u64) << HIST_BUCKET_SHIFT);
+        assert_eq!(LatencyHist::new().percentile(0.5), 0);
+    }
+
+    /// Every backend is a pure function of (construction params, issue
+    /// stream): replaying the same stream gives identical completions
+    /// and stats — the property the differential suite relies on.
+    #[test]
+    fn backends_are_deterministic_replay_functions() {
+        use crate::util::rng::Rng;
+        for k in FabricKind::ALL {
+            let mut rng = Rng::new(42);
+            let stream: Vec<(u64, u64, u64)> = (0..500)
+                .scan(0u64, |t, _| {
+                    *t += rng.below(20);
+                    Some((*t, rng.below(1 << 20) * 64, 1 + rng.below(4)))
+                })
+                .collect();
+            let run = |stream: &[(u64, u64, u64)]| {
+                let mut f = k.build(600, 16.0, true, 64, 99);
+                let cs: Vec<u64> = stream
+                    .iter()
+                    .map(|&(t, a, l)| f.issue(t, a, l, AccessKind::Load))
+                    .collect();
+                (cs, f.stats(), f.lines_transferred())
+            };
+            let a = run(&stream);
+            let b = run(&stream);
+            assert_eq!(a, b, "{}: replay diverged", k.label());
+            assert_eq!(a.1.requests, 500, "{}: all requests counted", k.label());
+            assert!(a.0.iter().zip(&stream).all(|(c, (t, _, _))| c >= t), "completions >= issue");
+        }
+    }
+}

@@ -233,10 +233,20 @@ impl<'p> Machine<'p> {
         let mut stats = std::mem::take(&mut self.core.stats);
         stats.l1_hits = self.msys.l1.stat_hits;
         stats.l1_misses = self.msys.l1.stat_misses;
-        stats.far_lines = self.msys.far.lines_transferred;
+        stats.far_lines = self.msys.far.lines_transferred();
         let (mlp, busy) = self.msys.far.mlp(stats.cycles);
         stats.far_mlp = mlp;
         stats.far_busy_frac = busy;
+        let fs = self.msys.far.stats();
+        stats.fabric = fs.kind;
+        stats.fabric_requests = fs.requests;
+        stats.fabric_max_inflight = fs.max_inflight;
+        stats.fabric_queue_stalls = fs.queue_stall_cycles;
+        stats.fabric_p50 = fs.lat_p50;
+        stats.fabric_p99 = fs.lat_p99;
+        stats.fabric_hot_hits = fs.hot_hits;
+        stats.fabric_hot_misses = fs.hot_misses;
+        stats.fabric_writebacks = fs.writebacks;
         stats.aloads = self.amu.stat_aloads;
         stats.astores = self.amu.stat_astores;
         stats.amu_max_inflight = self.amu.stat_max_inflight;
@@ -368,7 +378,7 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 let exec = m.ready2(d, op.a, op.b);
                 let msys = &mut m.msys;
                 let issue = m.amu.transfer(idv, resume, exec, false, |t| {
-                    msys.amu_transfer(addr, bytes, space, t)
+                    msys.amu_transfer(addr, bytes, space, AccessKind::Load, t)
                 });
                 m.core.commit(
                     None,
@@ -388,7 +398,7 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 let exec = m.ready2(d, op.a, op.b);
                 let msys = &mut m.msys;
                 let issue = m.amu.transfer(idv, resume, exec, true, |t| {
-                    msys.amu_transfer(addr, bytes, space, t)
+                    msys.amu_transfer(addr, bytes, space, AccessKind::Store, t)
                 });
                 m.core.commit(
                     None,
@@ -693,7 +703,7 @@ pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                     let exec = m.src_ready(d, &[*id, *base]);
                     let msys = &mut m.msys;
                     let issue = m.amu.transfer(idv, *resume, exec, false, |t| {
-                        msys.amu_transfer(addr, *bytes, space, t)
+                        msys.amu_transfer(addr, *bytes, space, AccessKind::Load, t)
                     });
                     m.core.commit(None, issue + 1, if issue > exec { Cause::Backpressure } else { Cause::Compute });
                 }
@@ -708,7 +718,7 @@ pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                     let exec = m.src_ready(d, &[*id, *base]);
                     let msys = &mut m.msys;
                     let issue = m.amu.transfer(idv, *resume, exec, true, |t| {
-                        msys.amu_transfer(addr, *bytes, space, t)
+                        msys.amu_transfer(addr, *bytes, space, AccessKind::Store, t)
                     });
                     m.core.commit(None, issue + 1, if issue > exec { Cause::Backpressure } else { Cause::Compute });
                 }
@@ -987,12 +997,16 @@ mod tests {
             |g| g.rng.next_u64(),
             |seed: &u64| {
                 let (f, mem, init) = random_program(*seed);
-                // Rotate through the scheduler policies so every path
-                // combination also runs under every policy (plumbing
-                // coverage; these kernels carry no AMU ops, so the
-                // policy must be timing-invisible here).
+                // Rotate through the scheduler policies AND the far
+                // fabrics so every path combination also runs under
+                // every policy and every fabric backend (the nightly
+                // workflow cranks the case count, so the full product is
+                // covered there). These kernels carry no AMU ops, so the
+                // policy must be timing-invisible here; the fabric moves
+                // timing but must move all four paths identically.
                 let policy = crate::sim::sched::SchedPolicyKind::ALL[(*seed % 4) as usize];
-                let cfg = SimConfig::nh_g().with_sched_policy(policy);
+                let fabric = crate::sim::fabric::FabricKind::ALL[((*seed >> 2) % 4) as usize];
+                let cfg = SimConfig::nh_g().with_sched_policy(policy).with_fabric(fabric);
                 let mut progs = [
                     Program::new(f.clone(), mem.snapshot(), init.clone(), 64, None, 200_000, false),
                     Program::new(f.clone(), mem.snapshot(), init.clone(), 64, None, 200_000, true),

@@ -1,13 +1,19 @@
 //! The memory system: L1D/L2/L3 + local DRAM + emulated far memory.
 //!
-//! Far memory reproduces the paper's FPGA evaluation rig (Fig. 10): a
-//! fixed-latency delayer plus a programmable bandwidth regulator in front
-//! of the far tier. The SPM region (AMU) is served at L2 latency without
-//! tags or MSHRs. AMU transfers bypass the cache hierarchy and MSHRs
-//! entirely — the architectural reason CoroAMU's MLP scales past the
-//! MSHR-bound prefetching of Fig. 16.
+//! The far tier is served by a pluggable [`FabricModel`] (`sim::fabric`):
+//! the default [`FabricKind::FixedDelay`] reproduces the paper's FPGA
+//! evaluation rig (Fig. 10) — a fixed-latency delayer plus a programmable
+//! bandwidth regulator — bit-for-bit at every exactly-representable
+//! bandwidth (see DESIGN.md §9 for the fixed-point rounding caveat at
+//! inexact ones), while the `queued`, `dist` and
+//! `tiered` backends open the congestion / variance / tiering scenario
+//! axes of real disaggregated fabrics. The SPM region (AMU) is served at
+//! L2 latency without tags or MSHRs. AMU transfers bypass the cache
+//! hierarchy and MSHRs entirely — the architectural reason CoroAMU's MLP
+//! scales past the MSHR-bound prefetching of Fig. 16.
 
 use super::cache::{BestOffset, Cache, LINE_BYTES, LINE_SHIFT};
+use super::fabric::{FabricKind, FabricModel, FP_SHIFT};
 use super::stats::IntervalUnion;
 use crate::config::SimConfig;
 use crate::ir::AddrSpace;
@@ -20,13 +26,18 @@ pub enum AccessKind {
     Atomic,
 }
 
-/// A DRAM/far-memory channel: fixed pipe latency + token-bucket bandwidth.
+/// A local-DRAM channel: fixed pipe latency + token-bucket bandwidth.
+/// (The far tier uses a [`FabricModel`]; `FixedDelay` is this same
+/// arithmetic.) Serialization is accounted in integer fixed-point
+/// (`cycles << FP_SHIFT`), so long runs are bit-identical across
+/// platforms — no accumulated `f64` drift.
 #[derive(Debug)]
 pub struct Channel {
     latency: u64,
-    /// Cycles per 64B line (bandwidth regulator setting).
-    cycles_per_line: f64,
-    next_free: f64,
+    /// Fixed-point wire occupancy per 64B line (bandwidth regulator).
+    fp_per_line: u64,
+    /// Fixed-point next-free cycle of the serialization stage.
+    next_free_fp: u64,
     pub lines_transferred: u64,
     /// Online (issue, completion) union/integral for MLP accounting —
     /// O(1) memory, no per-request allocation (see [`IntervalUnion`]).
@@ -41,8 +52,9 @@ impl Channel {
     pub fn new(latency: u64, bytes_per_cycle: f64, record: bool, window: usize) -> Self {
         Channel {
             latency,
-            cycles_per_line: LINE_BYTES as f64 / bytes_per_cycle.max(0.01),
-            next_free: 0.0,
+            fp_per_line: (((LINE_BYTES << FP_SHIFT) as f64) / bytes_per_cycle.max(0.01)).round()
+                as u64,
+            next_free_fp: 0,
             lines_transferred: 0,
             union: IntervalUnion::with_window(window),
             record,
@@ -52,11 +64,11 @@ impl Channel {
     /// Issue a request of `lines` cache lines at cycle `t`; returns the
     /// completion cycle.
     pub fn request(&mut self, t: u64, lines: u64) -> u64 {
-        let start = (t as f64).max(self.next_free);
-        let xfer = self.cycles_per_line * lines as f64;
-        self.next_free = start + xfer;
+        let start_fp = (t << FP_SHIFT).max(self.next_free_fp);
+        let end_fp = start_fp + self.fp_per_line * lines;
+        self.next_free_fp = end_fp;
         self.lines_transferred += lines;
-        let completion = (start + xfer) as u64 + self.latency;
+        let completion = (end_fp >> FP_SHIFT) + self.latency;
         if self.record {
             self.union.push(t, completion);
         }
@@ -85,13 +97,13 @@ pub struct MemSys {
     pub l3: Cache,
     bop: Option<BestOffset>,
     pub local: Channel,
-    pub far: Channel,
+    pub far: Box<dyn FabricModel>,
     spm_latency: u64,
 }
 
 impl MemSys {
     pub fn new(cfg: &SimConfig) -> Self {
-        // The far channel's reorder window must cover every request that
+        // The far fabric's reorder window must cover every request that
         // can be in flight at once: AMU decoupled transfers (bounded by
         // the Request Table, they bypass the caches entirely), demand
         // fills (bounded by the L3 MSHRs), and BOP prefetch fills (which
@@ -104,16 +116,20 @@ impl MemSys {
             l3: Cache::new(&cfg.l3),
             bop: cfg.l2_bop.then(BestOffset::new),
             local: Channel::new(cfg.local_latency_cycles(), cfg.mem.local_bw_bytes_per_cycle, false, 1),
-            far: Channel::new(cfg.far_latency_cycles(), cfg.mem.far_bw_bytes_per_cycle, true, far_window),
+            far: cfg.mem.fabric.kind.build(
+                cfg.far_latency_cycles(),
+                cfg.mem.far_bw_bytes_per_cycle,
+                true,
+                far_window,
+                cfg.mem.fabric.seed,
+            ),
             spm_latency: cfg.l2.latency_cycles,
         }
     }
 
-    fn channel(&mut self, space: AddrSpace) -> &mut Channel {
-        match space {
-            AddrSpace::Remote => &mut self.far,
-            _ => &mut self.local,
-        }
+    /// Which fabric serves the far tier (labels / reports).
+    pub fn fabric_kind(&self) -> FabricKind {
+        self.far.kind()
     }
 
     /// A demand/prefetch access through the cache hierarchy. Returns the
@@ -149,7 +165,8 @@ impl MemSys {
             let pline = line.wrapping_add(off as u64);
             if self.l2.probe(pline, t_l2).is_none() {
                 let pt = self.l2.mshr_acquire(t_l2);
-                let pready = self.fill_from_below(pline, space, pt + self.l2.latency());
+                let pready =
+                    self.fill_from_below(pline, space, AccessKind::Prefetch, pt + self.l2.latency());
                 self.l2.install(pline, pready);
                 self.l2.mshr_hold(pready);
                 self.l3.install(pline, pready);
@@ -166,19 +183,24 @@ impl MemSys {
             return ready;
         }
         let t3 = self.l3.mshr_acquire(t_l3);
-        let ready = self.fill_from_below(line, space, t3 + self.l3.latency());
+        let ready = self.fill_from_below(line, space, kind, t3 + self.l3.latency());
         self.l3.install(line, ready);
         self.l3.mshr_hold(ready);
         self.l2.install(line, ready);
         self.l2.mshr_hold(ready);
         self.l1.install(line, ready);
         self.l1.mshr_hold(ready);
-        let _ = kind;
         ready
     }
 
-    fn fill_from_below(&mut self, _line: u64, space: AddrSpace, t: u64) -> u64 {
-        self.channel(space).request(t, 1)
+    /// One line from the memory tier below the LLC: the far fabric for
+    /// remote lines, the local channel otherwise. `kind` reaches the
+    /// fabric so the tiered backend can track page dirtiness.
+    fn fill_from_below(&mut self, line: u64, space: AddrSpace, kind: AccessKind, t: u64) -> u64 {
+        match space {
+            AddrSpace::Remote => self.far.issue(t, line << LINE_SHIFT, 1, kind),
+            _ => self.local.request(t, 1),
+        }
     }
 
     /// Non-binding prefetch into L2/L3 (no L1 involvement).
@@ -195,7 +217,7 @@ impl MemSys {
             return ready;
         }
         let t3 = self.l3.mshr_acquire(t_l3);
-        let ready = self.fill_from_below(line, space, t3 + self.l3.latency());
+        let ready = self.fill_from_below(line, space, AccessKind::Prefetch, t3 + self.l3.latency());
         self.l3.install(line, ready);
         self.l3.mshr_hold(ready);
         self.l2.install(line, ready);
@@ -204,12 +226,24 @@ impl MemSys {
     }
 
     /// AMU decoupled transfer: `bytes` starting at `addr`, straight to the
-    /// memory channel (no caches, no MSHRs). Returns completion cycle.
-    pub fn amu_transfer(&mut self, addr: u64, bytes: u32, space: AddrSpace, t: u64) -> u64 {
+    /// memory fabric (no caches, no MSHRs). `kind` distinguishes aload
+    /// (Load) from astore (Store) for the tiered backend's dirty tracking.
+    /// Returns completion cycle.
+    pub fn amu_transfer(
+        &mut self,
+        addr: u64,
+        bytes: u32,
+        space: AddrSpace,
+        kind: AccessKind,
+        t: u64,
+    ) -> u64 {
         let first = addr >> LINE_SHIFT;
         let last = (addr + bytes.max(1) as u64 - 1) >> LINE_SHIFT;
         let lines = last - first + 1;
-        self.channel(space).request(t, lines)
+        match space {
+            AddrSpace::Remote => self.far.issue(t, addr, lines, kind),
+            _ => self.local.request(t, lines),
+        }
     }
 }
 
@@ -250,6 +284,13 @@ mod tests {
     }
 
     #[test]
+    fn default_fabric_is_the_fixed_delayer() {
+        let m = ms();
+        assert_eq!(m.fabric_kind(), FabricKind::FixedDelay);
+        assert_eq!(m.far.stats().kind, "fixed");
+    }
+
+    #[test]
     fn prefetch_hides_latency() {
         let cfg = SimConfig::nh_g();
         let mut m = ms();
@@ -285,6 +326,23 @@ mod tests {
         let (mlp, busy) = ch.mlp(c2);
         assert!(mlp > 1.5, "two overlapped requests should give MLP ~2, got {mlp}");
         assert!(busy > 0.9);
+    }
+
+    /// Satellite pin: the channel clock is integer fixed-point — a long
+    /// run at a bandwidth with no exact binary representation (24
+    /// B/cycle: 2730.67 fp-units/line, rounded to 2731) lands on exactly
+    /// these cycles on every platform. With the old `f64` accumulator
+    /// this value depended on the platform's FP contraction behavior.
+    #[test]
+    fn long_run_channel_clock_is_bit_exact() {
+        let mut ch = Channel::new(100, 24.0, false, 1);
+        let mut last = 0;
+        for _ in 0..100_000 {
+            last = ch.request(0, 1);
+        }
+        assert_eq!(last, (100_000u64 * 2731 >> FP_SHIFT) + 100);
+        assert_eq!(last, 266_699 + 100);
+        assert_eq!(ch.lines_transferred, 100_000);
     }
 
     /// MLP/busy regression against hand-computed interval unions. With
@@ -336,11 +394,11 @@ mod tests {
     #[test]
     fn amu_transfer_counts_lines() {
         let mut m = ms();
-        let before = m.far.lines_transferred;
-        m.amu_transfer(0x8000_0000 + 60, 8, Remote, 0); // straddles 2 lines
-        assert_eq!(m.far.lines_transferred - before, 2);
-        m.amu_transfer(0x8000_2000, 4096, Remote, 0);
-        assert_eq!(m.far.lines_transferred - before, 2 + 64);
+        let before = m.far.lines_transferred();
+        m.amu_transfer(0x8000_0000 + 60, 8, Remote, AccessKind::Load, 0); // straddles 2 lines
+        assert_eq!(m.far.lines_transferred() - before, 2);
+        m.amu_transfer(0x8000_2000, 4096, Remote, AccessKind::Load, 0);
+        assert_eq!(m.far.lines_transferred() - before, 2 + 64);
     }
 
     #[test]
@@ -348,9 +406,27 @@ mod tests {
         let mut m = ms();
         // Saturate with AMU transfers; cache MSHRs must stay free.
         for k in 0..100 {
-            m.amu_transfer(0x8000_0000 + k * 64, 64, Remote, 0);
+            m.amu_transfer(0x8000_0000 + k * 64, 64, Remote, AccessKind::Load, 0);
         }
         assert_eq!(m.l1.mshr_busy(0), 0);
         assert_eq!(m.l2.mshr_busy(0), 0);
+    }
+
+    /// Swapping the far fabric changes timing, never the fill protocol:
+    /// a tiered far pool still installs lines in every cache level, and
+    /// a second access to the same line hits near the core.
+    #[test]
+    fn non_default_fabrics_slot_into_the_hierarchy() {
+        for kind in FabricKind::ALL {
+            let mut cfg = SimConfig::nh_g();
+            cfg.mem.fabric.kind = kind;
+            let mut m = MemSys::new(&cfg);
+            let a = 0x8000_4000u64;
+            let t0 = m.access(a, Remote, AccessKind::Load, 0);
+            assert!(t0 > 0, "{}: completion must move time", kind.label());
+            let t1 = m.access(a + 8, Remote, AccessKind::Load, t0);
+            assert_eq!(t1, t0 + cfg.l1d.latency_cycles, "{}: L1 hit after fill", kind.label());
+            assert!(m.far.stats().requests > 0, "{}: fabric saw the fill", kind.label());
+        }
     }
 }

@@ -3,19 +3,22 @@
 //! compiler experiments.
 //!
 //! Composition: [`interp`] (functional CoroIR execution) drives
-//! [`core`] (dataflow + ROB pipeline spine), [`memsys`] (L1/L2/L3 + MSHRs +
-//! BOP + far-memory delayer/bandwidth regulator, Fig. 10), [`bpu`]
+//! [`core`] (dataflow + ROB pipeline spine), [`memsys`] (L1/L2/L3 + MSHRs
+//! + a pluggable far tier), [`fabric`] (far-memory fabric backends:
+//! fixed delayer, queued/congested link, latency distributions, tiered
+//! hot-page cache — `SimConfig::mem.fabric`), [`bpu`]
 //! (TAGE/ITTAGE/BPT), [`amu`] (Request Table / Finished Queue / groups /
 //! await-asignal) and [`sched`] (pluggable coroutine-resume policies over
 //! the Finished Queue, `SimConfig::sched_policy`). See `DESIGN.md` §1
-//! (repo root) for the substitution argument and §8 for the scheduler
-//! subsystem.
+//! (repo root) for the substitution argument, §8 for the scheduler
+//! subsystem and §9 for the fabric subsystem.
 
 pub mod amu;
 pub mod bpu;
 pub mod cache;
 pub mod core;
 pub mod decode;
+pub mod fabric;
 pub mod interp;
 pub mod mem;
 pub mod memsys;
@@ -24,6 +27,7 @@ pub mod slots;
 pub mod stats;
 
 pub use decode::DecodedFunc;
+pub use fabric::FabricKind;
 pub use interp::{mix64, run, run_reference, Program};
 pub use mem::MemImage;
 pub use sched::SchedPolicyKind;
@@ -209,6 +213,50 @@ mod tests {
         assert!(
             fifo >= arrival,
             "FIFO ({fifo}) must not beat arrival order ({arrival}) on latency-bound GUPS"
+        );
+    }
+
+    #[test]
+    fn fabric_backends_are_timing_only_knobs() {
+        // Every fabric moves cycles, never results: memory contents under
+        // each backend must match the serial baseline bit-for-bit, and
+        // the fabric provenance must land in the stats.
+        let (_, baseline) = run_variant(Variant::Serial, 64, 1 << 12);
+        for f in fabric::FabricKind::ALL {
+            let cfg = SimConfig::nh_g().with_fabric(f);
+            let (st, out) = run_variant_cfg(&cfg, Variant::CoroAmuFull, 32, 64, 1 << 12);
+            assert_eq!(out, baseline, "{}: fabric changed results", f.label());
+            assert_eq!(st.fabric, f.label());
+            assert!(st.fabric_requests > 0, "{}: far tier never exercised", f.label());
+            assert!(st.fabric_p99 >= st.fabric_p50, "{}: percentiles inverted", f.label());
+        }
+        // The tiered backend must actually see page locality on the
+        // scatter table (4 KB pages over a 32 KB table).
+        let cfg = SimConfig::nh_g().with_fabric(fabric::FabricKind::Tiered { pages: 64 });
+        let (st, _) = run_variant_cfg(&cfg, Variant::CoroAmuFull, 32, 200, 1 << 12);
+        assert!(st.fabric_hot_hits > 0, "tiered fabric recorded no hot-page hits");
+    }
+
+    #[test]
+    fn queued_fabric_throttles_decoupled_mlp() {
+        // A 4-deep request queue with congestion must cap the AMU's MLP
+        // well below the unconstrained delayer's on latency-bound GUPS.
+        let open = SimConfig::nh_g();
+        let (so, _) = run_variant_cfg(&open, Variant::CoroAmuFull, 32, 400, 1 << 16);
+        let tight = SimConfig::nh_g().with_fabric(fabric::FabricKind::Queued { depth: 4 });
+        let (st, _) = run_variant_cfg(&tight, Variant::CoroAmuFull, 32, 400, 1 << 16);
+        assert!(
+            st.cycles > so.cycles,
+            "congestion must cost cycles ({} vs {})",
+            st.cycles,
+            so.cycles
+        );
+        assert!(st.fabric_queue_stalls > 0, "backpressure never engaged");
+        assert!(
+            st.fabric_p99 > so.fabric_p99,
+            "burst MLP into a finite queue must fatten the tail ({} vs {})",
+            st.fabric_p99,
+            so.fabric_p99
         );
     }
 

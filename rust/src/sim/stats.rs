@@ -68,6 +68,25 @@ pub struct RunStats {
     /// controls (memory-guided vs learnable-static target streams).
     pub sched_indirect_jumps: u64,
     pub sched_indirect_mispredicts: u64,
+    // Far-memory fabric (sim::fabric): which backend served the far
+    // tier and how it behaved. Deterministic like everything else here,
+    // so the differential suite compares them bit-for-bit too.
+    /// Label of the active fabric (`FabricKind::label`).
+    pub fabric: String,
+    /// Requests the far tier served (fills, prefetch fills, AMU
+    /// transfers).
+    pub fabric_requests: u64,
+    /// Peak request-queue occupancy (`queued` backend; 0 elsewhere).
+    pub fabric_max_inflight: u64,
+    /// Cycles requests waited for a queue slot (congestion backpressure).
+    pub fabric_queue_stalls: u64,
+    /// Far-request latency percentiles (8-cycle bucket resolution).
+    pub fabric_p50: u64,
+    pub fabric_p99: u64,
+    /// Hot-page cache behavior (`tiered` backend; 0 elsewhere).
+    pub fabric_hot_hits: u64,
+    pub fabric_hot_misses: u64,
+    pub fabric_writebacks: u64,
 }
 
 /// Default reorder window of [`IntervalUnion`] (see

@@ -2,9 +2,13 @@
 //!
 //! The offline environment has no `serde`/`toml`, so configuration files in
 //! `configs/` are parsed by this module. Supported subset: `[section]`
-//! headers, `key = value` with integer, float, boolean and quoted-string
-//! values, `#` comments, and blank lines. This covers everything the NH-G /
-//! Skylake presets need.
+//! headers — including nested (dotted) tables like `[mem.fabric]`, whose
+//! keys flatten to `mem.fabric.key` — `key = value` with integer, float,
+//! boolean and quoted-string values, `#` comments, and blank lines. This
+//! covers everything the NH-G / Skylake presets and the fabric/scheduler
+//! tables need. Schema checks (which keys exist under a table) belong to
+//! the consumer; [`Doc::keys_with_prefix`] supports auditing a nested
+//! table for unknown keys.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -82,6 +86,13 @@ impl Doc {
     pub fn str(&self, key: &str) -> Option<&str> {
         self.get(key).and_then(Value::as_str)
     }
+
+    /// Full keys under a dotted prefix, e.g.
+    /// `keys_with_prefix("mem.fabric.")` — the consumer-side audit hook
+    /// for rejecting unknown keys in a nested table.
+    pub fn keys_with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> {
+        self.entries.keys().filter(move |k| k.starts_with(prefix)).map(|k| k.as_str())
+    }
 }
 
 fn parse_value(raw: &str, line: usize) -> Result<Value, ParseError> {
@@ -134,6 +145,14 @@ pub fn parse(text: &str) -> Result<Doc, ParseError> {
             section = name.trim().to_string();
             if section.is_empty() {
                 return Err(ParseError { line: line_no, msg: "empty section name".into() });
+            }
+            // Nested (dotted) tables like [mem.fabric]: every segment
+            // must be nonempty, or key lookups would silently miss.
+            if section.split('.').any(|seg| seg.trim().is_empty()) {
+                return Err(ParseError {
+                    line: line_no,
+                    msg: format!("empty table-name segment in [{section}]"),
+                });
             }
             continue;
         }
@@ -199,6 +218,52 @@ far_latency_ns = 200
         assert!(parse("[unterminated").is_err());
         assert!(parse("k = ").is_err());
         assert!(parse("k = \"open").is_err());
+    }
+
+    /// Nested-table round trip: a `[mem.fabric]` header flattens its keys
+    /// under the dotted prefix, merges across repeated headers, and
+    /// coexists with the parent `[mem]` table.
+    #[test]
+    fn nested_tables_round_trip() {
+        let doc = parse(
+            r#"
+[mem]
+far_latency_ns = 200
+[mem.fabric]
+model = "queued"
+depth = 24
+[a.b.c]
+deep = true
+[mem.fabric]
+seed = 7
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.i64("mem.far_latency_ns"), Some(200));
+        assert_eq!(doc.str("mem.fabric.model"), Some("queued"));
+        assert_eq!(doc.i64("mem.fabric.depth"), Some(24));
+        assert_eq!(doc.i64("mem.fabric.seed"), Some(7), "repeated nested headers merge");
+        assert_eq!(doc.bool("a.b.c.deep"), Some(true), "arbitrary nesting depth");
+        // The parent table does not swallow the nested table's keys.
+        assert_eq!(doc.i64("mem.depth"), None);
+    }
+
+    #[test]
+    fn keys_with_prefix_audits_a_nested_table() {
+        let doc = parse("[mem.fabric]\nmodel = \"dist\"\nseed = 1\n[mem]\nfar_latency_ns = 9\n")
+            .unwrap();
+        let keys: Vec<&str> = doc.keys_with_prefix("mem.fabric.").collect();
+        assert_eq!(keys, vec!["mem.fabric.model", "mem.fabric.seed"]);
+        assert_eq!(doc.keys_with_prefix("sched.").count(), 0);
+    }
+
+    #[test]
+    fn rejects_empty_nested_segments() {
+        assert!(parse("[mem.]\nk = 1").is_err());
+        assert!(parse("[.fabric]\nk = 1").is_err());
+        assert!(parse("[mem..fabric]\nk = 1").is_err());
+        // A well-formed dotted header still parses.
+        assert!(parse("[mem.fabric]\nk = 1").is_ok());
     }
 
     #[test]

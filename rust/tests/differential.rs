@@ -9,6 +9,7 @@ use coroamu::benchmarks::{self, Scale};
 use coroamu::compiler::Variant;
 use coroamu::config::SimConfig;
 use coroamu::engine::{Engine, RunRequest};
+use coroamu::sim::fabric::FabricKind;
 use coroamu::sim::sched::SchedPolicyKind;
 use coroamu::sim::{self, MemImage};
 
@@ -123,6 +124,99 @@ fn all_policies_three_paths_bit_identical() {
             assert_paths_agree_under(cfg.clone(), "gups", v, Scale::Tiny, 5);
         }
     }
+}
+
+/// The fabric-subsystem acceptance differential: the default fabric
+/// (`FixedDelay`, replacing the hardwired far `Channel`) must be
+/// bit-identical to the seed behavior — all 5 compile variants, all
+/// three interpreter paths (decoded-fused / decoded-unfused /
+/// reference), cycles + every stat + memory — and an explicitly
+/// selected `FixedDelay` must match the untouched default exactly.
+/// (Identity to pre-fabric builds holds at exactly-representable
+/// bandwidths like the NH-G 16 B/cycle used here; the fixed-point
+/// clock deliberately rounds differently at inexact ones — DESIGN §9.)
+#[test]
+fn fixed_delay_fabric_is_bit_identical_to_seed() {
+    for v in Variant::ALL {
+        // Three paths under the explicit FixedDelay fabric.
+        assert_paths_agree_under(
+            SimConfig::nh_g().with_fabric(FabricKind::FixedDelay),
+            "gups",
+            v,
+            Scale::Tiny,
+            7,
+        );
+        // Explicit selection == the session default, stat for stat.
+        let req = || RunRequest::new("gups", v).scale(Scale::Tiny).seed(7);
+        let base = Engine::new(SimConfig::nh_g()).run(req()).unwrap();
+        let fixed =
+            Engine::new(SimConfig::nh_g()).run(req().fabric(FabricKind::FixedDelay)).unwrap();
+        assert_eq!(
+            base.stats,
+            fixed.stats,
+            "{}: explicit FixedDelay diverges from the pre-fabric default",
+            v.label()
+        );
+    }
+}
+
+/// Every fabric backend keeps the three interpreter paths bit-identical:
+/// fabrics move completion times, and all paths must move together, on
+/// both the getfin (CoroAMU-D) and bafin (CoroAMU-Full) scheduler shapes.
+#[test]
+fn all_fabrics_three_paths_bit_identical() {
+    for fabric in FabricKind::ALL {
+        let cfg = SimConfig::nh_g().with_fabric(fabric);
+        for v in [Variant::CoroAmuD, Variant::CoroAmuFull] {
+            assert_paths_agree_under(cfg.clone(), "gups", v, Scale::Tiny, 5);
+        }
+    }
+}
+
+/// Property: every fabric backend is deterministic across (a) repeated
+/// runs through one engine (each run restores the dataset from a
+/// copy-on-write snapshot) and (b) a fresh engine with the same seed —
+/// including the `dist` backend's seeded latency draws. Rotates fabrics,
+/// policies and latency points by case; the nightly workflow cranks the
+/// case count (PROPTEST_CASES) to cover the full product.
+#[test]
+fn proptest_fabrics_deterministic_across_restore_and_reruns() {
+    use coroamu::util::proptest::{check, env_cases, Config};
+    check(
+        Config { cases: env_cases(10), ..Config::default() },
+        |g| g.rng.next_u64(),
+        |seed: &u64| {
+            let fabric = FabricKind::ALL[(*seed % 4) as usize];
+            let policy = SchedPolicyKind::ALL[((*seed >> 2) % 4) as usize];
+            let lat = [200.0, 800.0][((*seed >> 4) % 2) as usize];
+            let cfg = SimConfig::nh_g().with_fabric(fabric).with_sched_policy(policy);
+            let req = || {
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .seed(seed % 5)
+                    .latency_ns(lat)
+            };
+            let engine = Engine::new(cfg.clone());
+            let a = engine.run(req()).map_err(|e| format!("{e:#}"))?.stats;
+            let b = engine.run(req()).map_err(|e| format!("{e:#}"))?.stats;
+            if a != b {
+                return Err(format!(
+                    "{}/{}: snapshot-restore rerun diverges",
+                    fabric.label(),
+                    policy.label()
+                ));
+            }
+            let fresh = Engine::new(cfg).run(req()).map_err(|e| format!("{e:#}"))?.stats;
+            if a != fresh {
+                return Err(format!(
+                    "{}/{}: fresh engine with the same seed diverges",
+                    fabric.label(),
+                    policy.label()
+                ));
+            }
+            Ok(())
+        },
+    );
 }
 
 /// Pin that memory-guided prediction coverage is a property of the
