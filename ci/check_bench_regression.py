@@ -13,12 +13,15 @@ Gated rows are the per-kernel decoded-interpreter measurements
 (names ending in `/decoded`, `/decoded-fused` or `/decoded-unfused`
 under `sim_mips/`): they are the simulator's product throughput. This
 includes the per-fabric columns (`sim_mips/fabric/<label>/.../decoded`,
-one per far-fabric backend), so a fabric model whose bookkeeping drags
-down decoded MIPS fails the same gate as any other kernel. The
-`reference` rows are informational (the pre-change baseline shape) and
-rows present on only one side are reported but never gate — adding or
-renaming a kernel (or a whole fabric group, against a baseline recorded
-before the fabric subsystem existed) must not break CI; such rows are
+one per far-fabric backend) and the per-cluster-size columns
+(`sim_mips/cluster/<cores>c/.../decoded`, aggregate simulated MIPS of
+an n-core shared-fabric run), so a fabric model or cluster interleave
+whose bookkeeping drags down decoded MIPS fails the same gate as any
+other kernel. The `reference` rows are informational (the pre-change
+baseline shape) and rows present on only one side are reported but
+never gate — adding or renaming a kernel (or a whole fabric/cluster
+group, against a baseline recorded before those subsystems existed)
+must not break CI; such rows are
 printed as `new row (not gated)` and start gating once a fresh baseline
 containing them is committed.
 
@@ -36,8 +39,9 @@ import argparse
 import json
 import sys
 
-# Covers plain kernels (sim_mips/<bench>/<variant>/decoded) and the
-# fabric group (sim_mips/fabric/<label>/<bench>/decoded) alike.
+# Covers plain kernels (sim_mips/<bench>/<variant>/decoded), the fabric
+# group (sim_mips/fabric/<label>/<bench>/decoded) and the cluster group
+# (sim_mips/cluster/<cores>c/<bench>/decoded) alike.
 GATED_SUFFIXES = ("/decoded", "/decoded-fused", "/decoded-unfused")
 
 

@@ -174,6 +174,33 @@ fn fabric_mips(b: &mut Bench) {
     }
 }
 
+/// Per-cluster-size decoded-MIPS columns
+/// (`sim_mips/cluster/<cores>c/gups/decoded`), so the CI
+/// `cargo bench -- sim_mips` smoke runs them and the regression gate
+/// treats them like any other decoded row; baselines recorded before
+/// the cluster subsystem simply skip them as new rows. Core count is a
+/// simulate-time knob: each row reuses one engine session's kernel +
+/// dataset caches, and the metric is *aggregate* simulated instructions
+/// per wall-second — an n-core row simulates n times the work of the
+/// single-core row, so the column doubles as a cost model for
+/// `report --cluster` sweep points.
+fn cluster_mips(b: &mut Bench) {
+    for cores in [2u32, 4] {
+        let name = format!("sim_mips/cluster/{cores}c/gups/decoded");
+        if !b.enabled(&name) {
+            continue;
+        }
+        let engine = Engine::new(SimConfig::nh_g());
+        b.run(&name, "instr", || {
+            let req = RunRequest::new("gups", Variant::CoroAmuFull)
+                .scale(Scale::Small)
+                .seed(42)
+                .cores(cores);
+            engine.run(req).unwrap().stats.dyn_instrs as f64
+        });
+    }
+}
+
 /// The acceptance sweep as a throughput row: {fifo, arrival, batched,
 /// latency} x {200, 800} ns on GUPS/CoroAMU-Full through one engine
 /// session (policy and latency are simulate-time, so the whole matrix is
@@ -288,6 +315,7 @@ fn main() {
     sim_mips(&mut b, "hj", Variant::CoroAmuFull);
     sim_mips(&mut b, "mcf", Variant::Serial);
     fabric_mips(&mut b);
+    cluster_mips(&mut b);
     sched_policy_sweep(&mut b);
     interp_throughput(&mut b, "gups", Variant::Serial);
     interp_throughput(&mut b, "gups", Variant::CoroAmuFull);

@@ -111,6 +111,27 @@ impl Default for FabricConfig {
     }
 }
 
+/// Multi-core cluster shape (`sim::cluster`), the `[cluster]` TOML table.
+/// A simulate-time knob like the far latency or the fabric: it never
+/// forks the compiled-kernel or dataset caches. `cores = 1` (the
+/// default) bypasses the cluster entirely and is bit-identical to the
+/// single-core simulator (pinned by the differential suite).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of Core+AMU pairs contending on ONE shared far fabric.
+    pub cores: u32,
+    /// Optional per-core scheduler policies (heterogeneous cluster).
+    /// When set, its length must equal `cores`; when absent, every core
+    /// runs the global `sched_policy`.
+    pub policies: Option<Vec<SchedPolicyKind>>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { cores: 1, policies: None }
+    }
+}
+
 /// Memory-system parameters. The far tier defaults to the paper's FPGA
 /// delayer + bandwidth regulator in front of HBM; `fabric` swaps in the
 /// congestion / variance / tiering models.
@@ -149,6 +170,8 @@ pub struct SimConfig {
     /// forks the compiled-kernel cache. The default (`ArrivalOrder`)
     /// reproduces the pre-subsystem behavior bit-for-bit.
     pub sched_policy: SchedPolicyKind,
+    /// Multi-core cluster shape (`sim::cluster`, `[cluster]` in TOML).
+    pub cluster: ClusterConfig,
 }
 
 impl SimConfig {
@@ -199,6 +222,7 @@ impl SimConfig {
             l2_bop: true,
             fuse_superops: true,
             sched_policy: SchedPolicyKind::ArrivalOrder,
+            cluster: ClusterConfig::default(),
         }
     }
 
@@ -240,6 +264,7 @@ impl SimConfig {
             l2_bop: false,
             fuse_superops: true,
             sched_policy: SchedPolicyKind::ArrivalOrder,
+            cluster: ClusterConfig::default(),
         }
     }
 
@@ -289,6 +314,23 @@ impl SimConfig {
     pub fn with_fabric(mut self, kind: FabricKind) -> Self {
         self.mem.fabric.kind = kind;
         self
+    }
+
+    /// Set the cluster core count (the `sim::cluster` sweep axis; see
+    /// `ClusterConfig`). Simulate-time like far latency.
+    pub fn with_cores(mut self, cores: u32) -> Self {
+        self.cluster.cores = cores;
+        self
+    }
+
+    /// Effective scheduler policy for one cluster core: the per-core
+    /// `[cluster] policies` entry when configured, else the global
+    /// `sched_policy`.
+    pub fn core_policy(&self, core: usize) -> SchedPolicyKind {
+        match &self.cluster.policies {
+            Some(ps) => ps.get(core).copied().unwrap_or(self.sched_policy),
+            None => self.sched_policy,
+        }
     }
 
     /// Apply overrides from a parsed minitoml document. Keys mirror the
@@ -349,7 +391,37 @@ impl SimConfig {
             self.sched_policy = SchedPolicyKind::parse(v)?;
         }
         self.apply_fabric_doc(doc)?;
+        self.apply_cluster_doc(doc)?;
         self.validate()
+    }
+
+    /// Apply the `[cluster]` table. Unknown keys are rejected with the
+    /// full key path (same discipline as `[mem.fabric]`). `policies` is a
+    /// comma-separated list (minitoml has no arrays), one entry per core,
+    /// e.g. `policies = "arrival, latency, fifo, batched:8"`.
+    fn apply_cluster_doc(&mut self, doc: &Doc) -> Result<()> {
+        const KNOWN: [&str; 2] = ["cores", "policies"];
+        for key in doc.keys_with_prefix("cluster.") {
+            let leaf = &key["cluster.".len()..];
+            if !KNOWN.contains(&leaf) {
+                bail!("unknown [cluster] key '{leaf}' (known keys: {})", KNOWN.join(", "));
+            }
+        }
+        if let Some(v) = doc.i64("cluster.cores") {
+            if v <= 0 {
+                bail!("cluster.cores must be positive, got {v}");
+            }
+            self.cluster.cores = v as u32;
+        }
+        if let Some(v) = doc.str("cluster.policies") {
+            let ps: Vec<SchedPolicyKind> = v
+                .split(',')
+                .map(SchedPolicyKind::parse)
+                .collect::<Result<_>>()
+                .with_context(|| format!("cluster.policies = \"{v}\""))?;
+            self.cluster.policies = Some(ps);
+        }
+        Ok(())
     }
 
     /// Apply the nested `[mem.fabric]` table. Unknown keys are rejected
@@ -434,6 +506,18 @@ impl SimConfig {
             FabricKind::Queued { depth: 0 } => bail!("queued fabric needs a nonzero depth"),
             FabricKind::Tiered { pages: 0 } => bail!("tiered fabric needs a nonzero page count"),
             _ => {}
+        }
+        if self.cluster.cores == 0 {
+            bail!("cluster.cores must be nonzero");
+        }
+        if let Some(ps) = &self.cluster.policies {
+            if ps.len() != self.cluster.cores as usize {
+                bail!(
+                    "cluster.policies lists {} policies but cluster.cores = {} (one per core)",
+                    ps.len(),
+                    self.cluster.cores
+                );
+            }
         }
         Ok(())
     }
@@ -579,6 +663,71 @@ mod tests {
         assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
         let bad = crate::util::minitoml::parse("[mem.fabric]\nmodel = \"warp-drive\"\n").unwrap();
         assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn cluster_defaults_and_toml_round_trip() {
+        let c = SimConfig::nh_g();
+        assert_eq!(c.cluster, ClusterConfig::default(), "default must stay single-core");
+        assert_eq!(c.cluster.cores, 1);
+        assert_eq!(c.cluster.policies, None);
+        assert_eq!(c.core_policy(0), SchedPolicyKind::ArrivalOrder);
+        let c = c.with_cores(8);
+        assert_eq!(c.cluster.cores, 8);
+        // Full [cluster] table: cores + a heterogeneous policy list.
+        let doc = crate::util::minitoml::parse(
+            "[cluster]\ncores = 4\npolicies = \"arrival, latency, fifo, batched:8\"\n",
+        )
+        .unwrap();
+        let mut c = SimConfig::nh_g();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.cluster.cores, 4);
+        assert_eq!(
+            c.cluster.policies,
+            Some(vec![
+                SchedPolicyKind::ArrivalOrder,
+                SchedPolicyKind::LatencyAware,
+                SchedPolicyKind::Fifo,
+                SchedPolicyKind::BatchedWakeup(8),
+            ])
+        );
+        assert_eq!(c.core_policy(1), SchedPolicyKind::LatencyAware);
+        assert_eq!(c.core_policy(3), SchedPolicyKind::BatchedWakeup(8));
+    }
+
+    #[test]
+    fn cluster_toml_rejects_unknown_keys_and_bad_shapes() {
+        // Unknown key: clear error naming the key and the valid set.
+        let bad = crate::util::minitoml::parse("[cluster]\ncors = 4\n").unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown [cluster] key 'cors'"), "{err}");
+        assert!(err.contains("cores"), "error must list the known keys: {err}");
+        // Policy list length must match the core count, named by full path.
+        let bad = crate::util::minitoml::parse(
+            "[cluster]\ncores = 4\npolicies = \"arrival, latency\"\n",
+        )
+        .unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("cluster.policies"), "{err}");
+        assert!(err.contains("cluster.cores"), "{err}");
+        // Degenerate or unparsable values.
+        let bad = crate::util::minitoml::parse("[cluster]\ncores = 0\n").unwrap();
+        assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
+        let bad = crate::util::minitoml::parse("[cluster]\ncores = -2\n").unwrap();
+        assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
+        let bad = crate::util::minitoml::parse(
+            "[cluster]\ncores = 2\npolicies = \"arrival, round-robin\"\n",
+        )
+        .unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("cluster.policies"), "{err}");
+        // validate() itself guards direct struct construction too.
+        let mut c = SimConfig::nh_g();
+        c.cluster.cores = 0;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::nh_g().with_cores(3);
+        c.cluster.policies = Some(vec![SchedPolicyKind::Fifo]);
+        assert!(c.validate().is_err());
     }
 
     #[test]

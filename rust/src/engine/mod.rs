@@ -160,6 +160,12 @@ pub struct RunRequest {
     /// (`sim::fabric`). Simulate-time like latency and policy: sweeping
     /// the fabric axis never forks the compiled-kernel cache.
     pub fabric: Option<FabricKind>,
+    /// Override the session config's cluster core count for this run only
+    /// (`sim::cluster`). Simulate-time like latency/policy/fabric:
+    /// sweeping the core-count axis never forks the compiled-kernel or
+    /// dataset caches (each core runs the same compiled kernel over its
+    /// own snapshot of the same dataset).
+    pub cores: Option<u32>,
     /// Explicit codegen options (ablation figures); overrides `variant`'s
     /// canonical options when set.
     pub opts: Option<CodegenOpts>,
@@ -179,6 +185,7 @@ impl RunRequest {
             latency_ns: None,
             sched_policy: None,
             fabric: None,
+            cores: None,
             opts: None,
             label: None,
         }
@@ -223,6 +230,13 @@ impl RunRequest {
         self
     }
 
+    /// Run on an explicit cluster core count (the `sim::cluster` sweep
+    /// axis) instead of the session config's default.
+    pub fn cores(mut self, n: u32) -> Self {
+        self.cores = Some(n);
+        self
+    }
+
     /// Run under explicit codegen options instead of the variant's
     /// canonical ones (the ablation figures toggle single optimizations).
     pub fn opts(mut self, opts: CodegenOpts, label: impl Into<String>) -> Self {
@@ -252,6 +266,8 @@ pub struct RunReport {
     pub sched_policy: SchedPolicyKind,
     /// Effective far-memory fabric of the run.
     pub fabric: FabricKind,
+    /// Effective cluster core count of the run (1 = single-core path).
+    pub cores: u32,
     pub scale: Scale,
     pub seed: u64,
     pub key: String,
@@ -267,13 +283,14 @@ impl RunReport {
         let st = &self.stats;
         let mut out = String::new();
         out.push_str(&format!(
-            "bench={} variant={} cfg={} far={}ns fabric={} sched={} scale={:?} seed={}{}\n",
+            "bench={} variant={} cfg={} far={}ns fabric={} sched={}{} scale={:?} seed={}{}\n",
             self.bench,
             self.variant_label,
             self.cfg_name,
             self.far_latency_ns,
             self.fabric.label(),
             self.sched_policy.label(),
+            if self.cores > 1 { format!(" cores={}", self.cores) } else { String::new() },
             self.scale,
             self.seed,
             if self.cache_hit { " kernel=cached" } else { " kernel=compiled" },
@@ -329,6 +346,22 @@ impl RunReport {
                 st.fabric_hot_misses,
                 st.fabric_writebacks
             ));
+        }
+        if st.cluster_cores > 1 {
+            out.push_str(&format!(
+                "  cluster           {} cores, makespan {} cycles, fairness {:.3}\n",
+                st.cluster_cores, st.cycles, st.cluster_fairness
+            ));
+            for (i, c) in st.core_cycles.iter().enumerate() {
+                out.push_str(&format!(
+                    "    core {i}          {} cycles, {} far reqs (p50 {} / p99 {}), {} stall cycles\n",
+                    c,
+                    st.core_fabric_requests.get(i).copied().unwrap_or(0),
+                    st.core_fabric_p50.get(i).copied().unwrap_or(0),
+                    st.core_fabric_p99.get(i).copied().unwrap_or(0),
+                    st.core_fabric_stalls.get(i).copied().unwrap_or(0),
+                ));
+            }
         }
         out.push_str(&format!("  l1 hits/misses    {}/{}\n", st.l1_hits, st.l1_misses));
         let brk = st.cycle_breakdown();
@@ -528,6 +561,7 @@ impl Engine {
             far_latency_ns: cfg.mem.far_latency_ns,
             sched_policy: cfg.sched_policy,
             fabric: cfg.mem.fabric.kind,
+            cores: cfg.cluster.cores,
             scale: req.scale,
             seed: req.seed,
             key: req.key.clone(),
@@ -546,10 +580,26 @@ impl Engine {
 
     fn exec(&self, cfg: &SimConfig, inst: Instance, opts: &CodegenOpts) -> Result<InstanceRun> {
         let (ck, cache_hit) = self.cached_compile(&inst.kernel, opts)?;
-        let mut prog = sim::link(cfg, &ck, inst.mem, &inst.params);
-        let stats = sim::run(cfg, &mut prog)?;
-        (inst.check)(&prog.mem)?;
-        Ok(InstanceRun { stats, mem: prog.mem, cache_hit })
+        let n = cfg.cluster.cores.max(1) as usize;
+        if n == 1 {
+            // The pre-cluster path, untouched: cores=1 is bit-identical
+            // to the single-core simulator by construction.
+            let mut prog = sim::link(cfg, &ck, inst.mem, &inst.params);
+            let stats = sim::run(cfg, &mut prog)?;
+            (inst.check)(&prog.mem)?;
+            return Ok(InstanceRun { stats, mem: prog.mem, cache_hit });
+        }
+        // Multi-core: every core links its own snapshot of the same
+        // dataset (private compute node, shared far fabric). Each final
+        // image must independently pass the benchmark oracle.
+        let mut progs: Vec<sim::Program> =
+            (0..n).map(|_| sim::link(cfg, &ck, inst.mem.snapshot(), &inst.params)).collect();
+        let stats = sim::cluster::run_cluster(cfg, &mut progs)?;
+        for p in &progs {
+            (inst.check)(&p.mem)?;
+        }
+        let mem = progs.swap_remove(0).mem;
+        Ok(InstanceRun { stats, mem, cache_hit })
     }
 
     /// Fan a request matrix across `threads` workers, sharing this
@@ -579,6 +629,9 @@ impl Engine {
         }
         if let Some(f) = req.fabric {
             cfg.mem.fabric.kind = f;
+        }
+        if let Some(n) = req.cores {
+            cfg.cluster.cores = n;
         }
         cfg
     }
@@ -627,6 +680,7 @@ mod tests {
         assert_eq!(r.latency_ns, None);
         assert_eq!(r.sched_policy, None, "default = session policy");
         assert_eq!(r.fabric, None, "default = session fabric");
+        assert_eq!(r.cores, None, "default = session cluster shape");
         assert!(r.opts.is_none() && r.label.is_none());
         assert_eq!(r.config_label(), "CoroAMU-Full");
     }
@@ -778,6 +832,67 @@ mod tests {
             .unwrap();
         assert_eq!(base.stats, explicit.stats, "explicit FixedDelay must not move a cycle");
         assert_eq!(base.fabric, FabricKind::FixedDelay);
+    }
+
+    #[test]
+    fn cores_override_does_not_fork_caches() {
+        // The cluster axis is simulate-time: a 1/2/4-core sweep compiles
+        // the kernel once and builds the dataset once.
+        let engine = Engine::new(SimConfig::nh_g());
+        for n in [1u32, 2, 4] {
+            let r = engine
+                .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny).cores(n))
+                .unwrap();
+            assert_eq!(r.cores, n);
+            assert_eq!(r.stats.cluster_cores, if n == 1 { 0 } else { n });
+        }
+        let cs = engine.cache_stats();
+        assert_eq!(cs.misses, 1, "cores is simulate-time, not compile-time");
+        assert_eq!(cs.hits, 2);
+        let ds = engine.dataset_stats();
+        assert_eq!(ds.misses, 1, "cores must not fork the dataset cache");
+        assert_eq!(ds.hits, 2);
+    }
+
+    #[test]
+    fn explicit_cores_1_is_invisible() {
+        // `.cores(1)` must take the plain single-core path bit-for-bit.
+        let engine = Engine::new(SimConfig::nh_g());
+        let base = engine
+            .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny))
+            .unwrap();
+        let explicit = engine
+            .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny).cores(1))
+            .unwrap();
+        assert_eq!(base.stats, explicit.stats, "explicit cores=1 must not move a cycle");
+        assert_eq!(explicit.cores, 1);
+        assert!(!explicit.render().contains("cores="), "single-core provenance stays unchanged");
+    }
+
+    #[test]
+    fn multi_core_runs_report_cluster_stats_and_pass_oracles() {
+        let engine = Engine::new(SimConfig::nh_g().with_fabric(FabricKind::Queued { depth: 8 }));
+        let solo = engine
+            .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny).cores(1))
+            .unwrap();
+        let duo = engine
+            .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny).cores(2))
+            .unwrap();
+        assert_eq!(duo.stats.cluster_cores, 2);
+        assert_eq!(duo.stats.core_cycles.len(), 2);
+        assert!(
+            duo.stats.cycles > solo.stats.cycles,
+            "two cores on one queued fabric must contend ({} vs {})",
+            duo.stats.cycles,
+            solo.stats.cycles
+        );
+        assert!(duo.stats.cluster_fairness > 0.0 && duo.stats.cluster_fairness <= 1.0);
+        let text = duo.render();
+        assert!(text.contains("cores=2"), "{text}");
+        assert!(text.contains("cluster"), "{text}");
+        assert!(text.contains("core 0"), "{text}");
+        // The oracle ran on both cores' images (exec checks each one).
+        assert!(text.contains("oracle            PASS"), "{text}");
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! | Fig 16   | [`fig16`] | memory-level parallelism |
 //! | sched    | [`fig_sched`] | scheduler-policy sweep (`report --sched`) |
 //! | fabric   | [`fig_fabric`] | far-fabric sweep (`report --fabric`) |
+//! | cluster  | [`fig_cluster`] | cluster scaling sweep (`report --cluster`) |
 
 pub mod fig02;
 pub mod fig03;
@@ -26,6 +27,7 @@ pub mod fig13;
 pub mod fig14;
 pub mod fig15;
 pub mod fig16;
+pub mod fig_cluster;
 pub mod fig_fabric;
 pub mod fig_sched;
 

@@ -69,6 +69,15 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
     if let Some(f) = args.get("fabric") {
         cfg = cfg.with_fabric(FabricKind::parse(f)?);
     }
+    if let Some(c) = args.get("cores") {
+        // Manual parse rather than `get_u64` (which conflates absent and
+        // unparseable): `--cores x` must fail loudly, not run single-core.
+        let n: u32 = match c.parse() {
+            Ok(v) if v > 0 => v,
+            _ => bail!("--cores must be a positive integer (got '{c}')"),
+        };
+        cfg = cfg.with_cores(n);
+    }
     Ok(cfg)
 }
 
@@ -77,7 +86,7 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
 /// from silently dropping a flag.
 fn selected_report_modes(args: &Args) -> Vec<&'static str> {
     let mut modes = Vec::new();
-    for m in ["table1", "table2", "sched", "fabric", "all"] {
+    for m in ["table1", "table2", "sched", "fabric", "cluster", "all"] {
         if args.flag(m) {
             modes.push(m);
         }
@@ -131,12 +140,22 @@ fn cmd_report(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
+    if args.flag("cluster") {
+        eprintln!(
+            "[coroamu] generating cluster scaling sweep (scale {:?}, {} threads)...",
+            opts.scale, opts.threads
+        );
+        for t in harness::fig_cluster::run(&opts)? {
+            t.print();
+        }
+        return Ok(());
+    }
     let figs: Vec<u32> = if args.flag("all") {
         harness::ALL_FIGURES.to_vec()
     } else if let Some(n) = args.get_u64("fig") {
         vec![n as u32]
     } else {
-        bail!("report needs --fig N, --all, --sched, --fabric, --table1 or --table2");
+        bail!("report needs --fig N, --all, --sched, --fabric, --cluster, --table1 or --table2");
     };
     for f in figs {
         eprintln!("[coroamu] generating figure {f} (scale {:?}, {} threads)...", opts.scale, opts.threads);
@@ -192,9 +211,9 @@ fn cmd_oracle(_args: &Args) -> Result<()> {
 }
 
 const USAGE: &str = "usage: coroamu <report|run|dump|oracle> [options]
-  report --fig N | --all | --sched | --fabric [KIND] | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
+  report --fig N | --all | --sched | --fabric [KIND] | --cluster | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
          (report modes are mutually exclusive)
-  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--policy fifo|arrival|batched[:N]|latency] [--fabric fixed|queued[:N]|dist[:uniform|bimodal]|tiered[:N]] [--tasks N] [--scale ...]
+  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--policy fifo|arrival|batched[:N]|latency] [--fabric fixed|queued[:N]|dist[:uniform|bimodal]|tiered[:N]] [--cores N] [--tasks N] [--scale ...]
   dump   --bench NAME [--variant ...]     print generated CoroIR
   oracle                                  cross-check simulator vs PJRT artifacts
   help | --help                           print this message";
@@ -246,6 +265,7 @@ mod tests {
         );
         assert_eq!(selected_report_modes(&parse(&["report", "--fig", "12"])), vec!["fig"]);
         assert_eq!(selected_report_modes(&parse(&["report", "--all"])), vec!["all"]);
+        assert_eq!(selected_report_modes(&parse(&["report", "--cluster"])), vec!["cluster"]);
         assert!(selected_report_modes(&parse(&["report"])).is_empty());
     }
 
@@ -265,6 +285,36 @@ mod tests {
         assert!(err.contains("conflicting report modes"), "{err}");
         // A single mode passes the audit (table2 needs no simulation).
         assert!(cmd_report(&parse(&["report", "--table2"])).is_ok());
+    }
+
+    #[test]
+    fn cluster_mode_conflicts_with_every_other_mode() {
+        // The satellite bugfix: --cluster must join the mutual-exclusion
+        // audit rather than silently losing to whichever mode runs first.
+        for other in ["--fabric", "--sched", "--table1"] {
+            let both = parse(&["report", "--cluster", other]);
+            assert_eq!(selected_report_modes(&both).len(), 2, "{other}");
+            let err = cmd_report(&both).unwrap_err().to_string();
+            assert!(err.contains("conflicting report modes"), "{other}: {err}");
+            assert!(err.contains("cluster"), "{other}: {err}");
+        }
+        let both = parse(&["report", "--cluster", "--fig", "12"]);
+        let err = cmd_report(&both).unwrap_err().to_string();
+        assert!(err.contains("conflicting report modes"), "{err}");
+        assert!(err.contains("cluster") && err.contains("fig"), "{err}");
+    }
+
+    #[test]
+    fn run_config_accepts_and_validates_cores() {
+        let cfg = cfg_from(&parse(&["run", "--cores", "4"])).unwrap();
+        assert_eq!(cfg.cluster.cores, 4);
+        // Degenerate and unparseable counts fail loudly (nonzero exit via
+        // main's error path) instead of silently running single-core.
+        let err = cfg_from(&parse(&["run", "--cores", "0"])).unwrap_err().to_string();
+        assert!(err.contains("--cores"), "{err}");
+        let err = cfg_from(&parse(&["run", "--cores", "many"])).unwrap_err().to_string();
+        assert!(err.contains("--cores"), "{err}");
+        assert!(cfg_from(&parse(&["run", "--cores", "-3"])).is_err());
     }
 
     #[test]

@@ -43,8 +43,15 @@ use super::memsys::AccessKind;
 use super::stats::IntervalUnion;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::fmt;
+use std::rc::Rc;
+
+/// Identity of the core (requester) behind a fabric request. Single-core
+/// paths pass 0; `sim::cluster` assigns one id per core so occupancy
+/// stalls and hot-page behavior are attributable per requester.
+pub type CoreId = u32;
 
 /// Fixed-point shift for wire-serialization accounting: one cycle is
 /// `1 << FP_SHIFT` (1024) fixed-point units. Chosen so every bandwidth
@@ -193,6 +200,7 @@ impl FabricKind {
                 inflight: Vec::with_capacity(depth.max(1) as usize),
                 max_inflight: 0,
                 queue_stall_cycles: 0,
+                req_stalls: Vec::new(),
             }),
             FabricKind::Distributed { dist } => {
                 Box::new(Distributed { link, dist, rng: Rng::new(seed) })
@@ -206,6 +214,7 @@ impl FabricKind {
                 hot_hits: 0,
                 hot_misses: 0,
                 writebacks: 0,
+                req_hits: Vec::new(),
             }),
         }
     }
@@ -233,6 +242,10 @@ pub struct FabricStats {
     pub hot_hits: u64,
     pub hot_misses: u64,
     pub writebacks: u64,
+    /// Per-requester breakdown, indexed by [`CoreId`]. Single-core runs
+    /// have exactly one entry (requester 0); `sim::cluster` reads one
+    /// slot per core for fairness accounting.
+    pub requesters: Vec<RequesterStats>,
 }
 
 impl FabricStats {
@@ -245,6 +258,28 @@ impl FabricStats {
             self.hot_hits as f64 / total as f64
         }
     }
+
+    /// The breakdown slot for `core`, zero-filled when the core never
+    /// touched the fabric (a core can finish without a single far miss).
+    pub fn requester(&self, core: CoreId) -> RequesterStats {
+        self.requesters.get(core as usize).cloned().unwrap_or_default()
+    }
+}
+
+/// One requester's share of the fabric traffic (satellite of the cluster
+/// subsystem: `Queued` stalls and `Tiered` hot hits are attributed to the
+/// core that issued the request, so per-core fairness is exact).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RequesterStats {
+    /// Requests this core issued to the fabric.
+    pub requests: u64,
+    /// Observed request-latency percentiles for this core alone.
+    pub lat_p50: u64,
+    pub lat_p99: u64,
+    /// Cycles this core's requests waited for a queue slot (`queued`).
+    pub queue_stall_cycles: u64,
+    /// Hot-page hits this core enjoyed (`tiered`).
+    pub hot_hits: u64,
 }
 
 /// A far-memory fabric backend. `issue` is the single timing entry
@@ -258,7 +293,11 @@ pub trait FabricModel: fmt::Debug + Send {
     fn kind(&self) -> FabricKind;
 
     /// Issue a request; returns the completion cycle (`>= t`).
-    fn issue(&mut self, t: u64, addr: u64, lines: u64, kind: AccessKind) -> u64;
+    /// `requester` identifies the issuing core for per-requester stat
+    /// attribution only — it never changes timing, so single-core paths
+    /// (which always pass 0) are bit-identical to the pre-cluster trait.
+    fn issue(&mut self, t: u64, addr: u64, lines: u64, kind: AccessKind, requester: CoreId)
+        -> u64;
 
     /// Lines that actually crossed the far wire (hot-page hits excluded).
     fn lines_transferred(&self) -> u64;
@@ -351,6 +390,9 @@ struct Link {
     union: IntervalUnion,
     record: bool,
     hist: LatencyHist,
+    /// Per-requester request counts and latency histograms, grown on
+    /// demand (index = [`CoreId`]; single-core runs only ever touch 0).
+    per_req: Vec<(u64, LatencyHist)>,
 }
 
 impl Link {
@@ -366,35 +408,36 @@ impl Link {
             union: IntervalUnion::with_window(window),
             record,
             hist: LatencyHist::new(),
+            per_req: Vec::new(),
         }
     }
 
     /// Serialize `lines` onto the wire no earlier than `t`; the request
     /// completes `lat` cycles after its transfer finishes.
-    fn push(&mut self, t: u64, lines: u64, lat: u64) -> u64 {
-        self.push_from(t, t, lines, lat)
+    fn push(&mut self, t: u64, lines: u64, lat: u64, requester: CoreId) -> u64 {
+        self.push_from(t, t, lines, lat, requester)
     }
 
     /// Like [`Link::push`], but the wire is entered no earlier than
     /// `start` while latency accounting (MLP interval, histogram) runs
     /// from the original issue cycle `issued` — so queue waits ahead of
     /// the wire show up in the observed request latency.
-    fn push_from(&mut self, issued: u64, start: u64, lines: u64, lat: u64) -> u64 {
+    fn push_from(&mut self, issued: u64, start: u64, lines: u64, lat: u64, requester: CoreId) -> u64 {
         debug_assert!(start >= issued);
         let start_fp = (start << FP_SHIFT).max(self.next_free_fp);
         let end_fp = start_fp + self.fp_per_line * lines;
         self.next_free_fp = end_fp;
         self.lines += lines;
         let completion = (end_fp >> FP_SHIFT) + lat;
-        self.note(issued, completion);
+        self.note(issued, completion, requester);
         completion
     }
 
     /// A request served without touching the far wire (hot-page hit):
     /// fixed latency, no serialization, no far lines.
-    fn bypass(&mut self, t: u64, lat: u64) -> u64 {
+    fn bypass(&mut self, t: u64, lat: u64, requester: CoreId) -> u64 {
         let completion = t + lat;
-        self.note(t, completion);
+        self.note(t, completion, requester);
         completion
     }
 
@@ -409,12 +452,18 @@ impl Link {
         self.lines += lines;
     }
 
-    fn note(&mut self, t: u64, completion: u64) {
+    fn note(&mut self, t: u64, completion: u64, requester: CoreId) {
         self.requests += 1;
         if self.record {
             self.union.push(t, completion);
         }
         self.hist.record(completion - t);
+        let slot = requester as usize;
+        if self.per_req.len() <= slot {
+            self.per_req.resize_with(slot + 1, || (0, LatencyHist::new()));
+        }
+        self.per_req[slot].0 += 1;
+        self.per_req[slot].1.record(completion - t);
     }
 
     fn mlp(&self, total_cycles: u64) -> (f64, f64) {
@@ -434,9 +483,28 @@ impl Link {
             requests: self.requests,
             lat_p50: self.hist.percentile(0.50),
             lat_p99: self.hist.percentile(0.99),
+            requesters: self
+                .per_req
+                .iter()
+                .map(|(n, hist)| RequesterStats {
+                    requests: *n,
+                    lat_p50: hist.percentile(0.50),
+                    lat_p99: hist.percentile(0.99),
+                    ..RequesterStats::default()
+                })
+                .collect(),
             ..FabricStats::default()
         }
     }
+}
+
+/// Grow a per-requester stats vector so `slot` is addressable (backends
+/// overlay their own per-requester counters on [`Link::base_stats`]).
+fn ensure_requester(v: &mut Vec<RequesterStats>, slot: usize) -> &mut RequesterStats {
+    if v.len() <= slot {
+        v.resize_with(slot + 1, RequesterStats::default);
+    }
+    &mut v[slot]
 }
 
 /// See [`FabricKind::FixedDelay`]. Same arithmetic as the pre-subsystem
@@ -451,9 +519,9 @@ impl FabricModel for FixedDelay {
         FabricKind::FixedDelay
     }
 
-    fn issue(&mut self, t: u64, _addr: u64, lines: u64, _kind: AccessKind) -> u64 {
+    fn issue(&mut self, t: u64, _addr: u64, lines: u64, _kind: AccessKind, requester: CoreId) -> u64 {
         let lat = self.link.latency;
-        self.link.push(t, lines, lat)
+        self.link.push(t, lines, lat, requester)
     }
 
     fn lines_transferred(&self) -> u64 {
@@ -484,6 +552,8 @@ pub struct Queued {
     inflight: Vec<u64>,
     max_inflight: u64,
     queue_stall_cycles: u64,
+    /// Queue-slot wait cycles attributed to the requester that waited.
+    req_stalls: Vec<u64>,
 }
 
 impl FabricModel for Queued {
@@ -491,7 +561,7 @@ impl FabricModel for Queued {
         FabricKind::Queued { depth: self.depth as u32 }
     }
 
-    fn issue(&mut self, t: u64, _addr: u64, lines: u64, _kind: AccessKind) -> u64 {
+    fn issue(&mut self, t: u64, _addr: u64, lines: u64, _kind: AccessKind, requester: CoreId) -> u64 {
         self.inflight.retain(|&r| r > t);
         let start = if self.inflight.len() < self.depth {
             t
@@ -505,11 +575,16 @@ impl FabricModel for Queued {
                 .expect("nonempty");
             self.inflight.swap_remove(idx);
             self.queue_stall_cycles += earliest - t;
+            let slot = requester as usize;
+            if self.req_stalls.len() <= slot {
+                self.req_stalls.resize(slot + 1, 0);
+            }
+            self.req_stalls[slot] += earliest - t;
             earliest
         };
         let congestion = self.inflight.len() as u64 * self.cong_per_req;
         let lat = self.link.latency + congestion;
-        let completion = self.link.push_from(t, start, lines, lat);
+        let completion = self.link.push_from(t, start, lines, lat, requester);
         self.inflight.push(completion);
         self.max_inflight = self.max_inflight.max(self.inflight.len() as u64);
         completion
@@ -524,11 +599,15 @@ impl FabricModel for Queued {
     }
 
     fn stats(&self) -> FabricStats {
-        FabricStats {
+        let mut st = FabricStats {
             max_inflight: self.max_inflight,
             queue_stall_cycles: self.queue_stall_cycles,
             ..self.link.base_stats(self.kind())
+        };
+        for (slot, &stall) in self.req_stalls.iter().enumerate() {
+            ensure_requester(&mut st.requesters, slot).queue_stall_cycles = stall;
         }
+        st
     }
 }
 
@@ -565,9 +644,9 @@ impl FabricModel for Distributed {
         FabricKind::Distributed { dist: self.dist }
     }
 
-    fn issue(&mut self, t: u64, _addr: u64, lines: u64, _kind: AccessKind) -> u64 {
+    fn issue(&mut self, t: u64, _addr: u64, lines: u64, _kind: AccessKind, requester: CoreId) -> u64 {
         let lat = self.draw();
-        self.link.push(t, lines, lat)
+        self.link.push(t, lines, lat, requester)
     }
 
     fn lines_transferred(&self) -> u64 {
@@ -603,6 +682,8 @@ pub struct Tiered {
     hot_hits: u64,
     hot_misses: u64,
     writebacks: u64,
+    /// Hot-page hits attributed to the requester that enjoyed them.
+    req_hits: Vec<u64>,
 }
 
 impl FabricModel for Tiered {
@@ -610,7 +691,7 @@ impl FabricModel for Tiered {
         FabricKind::Tiered { pages: self.cap as u32 }
     }
 
-    fn issue(&mut self, t: u64, addr: u64, lines: u64, kind: AccessKind) -> u64 {
+    fn issue(&mut self, t: u64, addr: u64, lines: u64, kind: AccessKind, requester: CoreId) -> u64 {
         let page = addr >> PAGE_SHIFT;
         self.tick += 1;
         let dirties = matches!(kind, AccessKind::Store | AccessKind::Atomic);
@@ -618,14 +699,19 @@ impl FabricModel for Tiered {
             entry.0 = self.tick;
             entry.1 |= dirties;
             self.hot_hits += 1;
+            let slot = requester as usize;
+            if self.req_hits.len() <= slot {
+                self.req_hits.resize(slot + 1, 0);
+            }
+            self.req_hits[slot] += 1;
             let lat = self.near_latency;
-            return self.link.bypass(t, lat);
+            return self.link.bypass(t, lat, requester);
         }
         self.hot_misses += 1;
         // Critical lines first at full far latency; the rest of the page
         // streams behind, charging the wire.
         let lat = self.link.latency;
-        let completion = self.link.push(t, lines, lat);
+        let completion = self.link.push(t, lines, lat, requester);
         self.link.occupy(t, PAGE_LINES.saturating_sub(lines));
         if self.hot.len() >= self.cap {
             let (&victim, &(_, dirty)) =
@@ -649,12 +735,67 @@ impl FabricModel for Tiered {
     }
 
     fn stats(&self) -> FabricStats {
-        FabricStats {
+        let mut st = FabricStats {
             hot_hits: self.hot_hits,
             hot_misses: self.hot_misses,
             writebacks: self.writebacks,
             ..self.link.base_stats(self.kind())
+        };
+        for (slot, &hits) in self.req_hits.iter().enumerate() {
+            ensure_requester(&mut st.requesters, slot).hot_hits = hits;
         }
+        st
+    }
+}
+
+/// A requester-tagged handle on a fabric backend, shareable between the
+/// [`MemSys`](super::memsys::MemSys) instances of a cluster. Cloning the
+/// handle (via [`SharedFabric::for_core`]) shares the underlying backend;
+/// every issue through a handle carries that handle's [`CoreId`]. The
+/// single-core path wraps a private backend with requester 0, so its
+/// arithmetic is untouched. `Rc<RefCell<..>>` is deliberate: a simulation
+/// (all its cores included) runs on one worker thread; the handle is
+/// created, used, and dropped there.
+#[derive(Debug, Clone)]
+pub struct SharedFabric {
+    inner: Rc<RefCell<Box<dyn FabricModel>>>,
+    requester: CoreId,
+}
+
+impl SharedFabric {
+    /// Wrap a backend for a single requester (id 0).
+    pub fn new(model: Box<dyn FabricModel>) -> SharedFabric {
+        SharedFabric { inner: Rc::new(RefCell::new(model)), requester: 0 }
+    }
+
+    /// A handle on the same backend that issues as `requester`.
+    pub fn for_core(&self, requester: CoreId) -> SharedFabric {
+        SharedFabric { inner: Rc::clone(&self.inner), requester }
+    }
+
+    /// The requester id this handle stamps on its issues.
+    pub fn requester(&self) -> CoreId {
+        self.requester
+    }
+
+    pub fn issue(&self, t: u64, addr: u64, lines: u64, kind: AccessKind) -> u64 {
+        self.inner.borrow_mut().issue(t, addr, lines, kind, self.requester)
+    }
+
+    pub fn kind(&self) -> FabricKind {
+        self.inner.borrow().kind()
+    }
+
+    pub fn lines_transferred(&self) -> u64 {
+        self.inner.borrow().lines_transferred()
+    }
+
+    pub fn mlp(&self, total_cycles: u64) -> (f64, f64) {
+        self.inner.borrow().mlp(total_cycles)
+    }
+
+    pub fn stats(&self) -> FabricStats {
+        self.inner.borrow().stats()
     }
 }
 
@@ -698,8 +839,8 @@ mod tests {
     #[test]
     fn fixed_delay_matches_legacy_channel_arithmetic() {
         let mut f = fab(FabricKind::FixedDelay, 100, 16.0);
-        assert_eq!(f.issue(0, 0, 1, AccessKind::Load), 104);
-        assert_eq!(f.issue(0, 64, 1, AccessKind::Load), 108);
+        assert_eq!(f.issue(0, 0, 1, AccessKind::Load, 0), 104);
+        assert_eq!(f.issue(0, 64, 1, AccessKind::Load, 0), 108);
         let (mlp, busy) = f.mlp(108);
         assert!((mlp - 212.0 / 108.0).abs() < 1e-12, "mlp {mlp}");
         assert!((busy - 1.0).abs() < 1e-12, "busy {busy}");
@@ -720,15 +861,15 @@ mod tests {
         let mut f = fab(FabricKind::FixedDelay, 100, 24.0);
         let mut last = 0;
         for _ in 0..1000 {
-            last = f.issue(0, 0, 1, AccessKind::Load);
+            last = f.issue(0, 0, 1, AccessKind::Load, 0);
         }
         assert_eq!(last, (1000u64 * 2731 >> FP_SHIFT) + 100);
         assert_eq!(last, 2666 + 100);
         // Spot-check an early completion too: k=3 -> (8193 >> 10) + 100.
         let mut g = fab(FabricKind::FixedDelay, 100, 24.0);
-        g.issue(0, 0, 1, AccessKind::Load);
-        g.issue(0, 0, 1, AccessKind::Load);
-        assert_eq!(g.issue(0, 0, 1, AccessKind::Load), 8 + 100);
+        g.issue(0, 0, 1, AccessKind::Load, 0);
+        g.issue(0, 0, 1, AccessKind::Load, 0);
+        assert_eq!(g.issue(0, 0, 1, AccessKind::Load, 0), 8 + 100);
     }
 
     #[test]
@@ -736,13 +877,13 @@ mod tests {
         // Depth 2, base latency 100, 16 B/cycle, cong = 100>>4 = 6/queued.
         let mut f = fab(FabricKind::Queued { depth: 2 }, 100, 16.0);
         // First request: empty queue, no congestion: 4 + 100.
-        let c1 = f.issue(0, 0, 1, AccessKind::Load);
+        let c1 = f.issue(0, 0, 1, AccessKind::Load, 0);
         assert_eq!(c1, 104);
         // Second: one ahead in the queue: 8 + 100 + 6.
-        let c2 = f.issue(0, 0, 1, AccessKind::Load);
+        let c2 = f.issue(0, 0, 1, AccessKind::Load, 0);
         assert_eq!(c2, 114);
         // Third at t=0: queue full, waits for c1=104, then one ahead.
-        let c3 = f.issue(0, 0, 1, AccessKind::Load);
+        let c3 = f.issue(0, 0, 1, AccessKind::Load, 0);
         assert_eq!(c3, 104 + 4 + 100 + 6);
         let st = f.stats();
         assert_eq!(st.queue_stall_cycles, 104);
@@ -754,16 +895,16 @@ mod tests {
     fn distributed_draws_are_deterministic_and_bounded() {
         let a: Vec<u64> = {
             let mut f = fab(FabricKind::Distributed { dist: Dist::Bimodal }, 600, 16.0);
-            (0..200).map(|_| f.issue(0, 0, 1, AccessKind::Load)).collect()
+            (0..200).map(|_| f.issue(0, 0, 1, AccessKind::Load, 0)).collect()
         };
         let b: Vec<u64> = {
             let mut f = fab(FabricKind::Distributed { dist: Dist::Bimodal }, 600, 16.0);
-            (0..200).map(|_| f.issue(0, 0, 1, AccessKind::Load)).collect()
+            (0..200).map(|_| f.issue(0, 0, 1, AccessKind::Load, 0)).collect()
         };
         assert_eq!(a, b, "same seed, same stream, same completions");
         // A different seed draws a different sequence.
         let mut c = FabricKind::Distributed { dist: Dist::Bimodal }.build(600, 16.0, true, 64, 7);
-        let cs: Vec<u64> = (0..200).map(|_| c.issue(0, 0, 1, AccessKind::Load)).collect();
+        let cs: Vec<u64> = (0..200).map(|_| c.issue(0, 0, 1, AccessKind::Load, 0)).collect();
         assert_ne!(a, cs);
         // Bimodal at base 600: latency component is 420 (near) or 1500
         // (far), both classes must appear in 200 draws.
@@ -772,7 +913,7 @@ mod tests {
         let mut far = 0;
         for k in 0..200u64 {
             let t = k * 1000; // spaced out: no serialization carryover
-            let lat = f.issue(t, 0, 1, AccessKind::Load) - t - 4;
+            let lat = f.issue(t, 0, 1, AccessKind::Load, 0) - t - 4;
             match lat {
                 420 => near += 1,
                 1500 => far += 1,
@@ -785,7 +926,7 @@ mod tests {
         let mut u = fab(FabricKind::Distributed { dist: Dist::Uniform }, 600, 16.0);
         for k in 0..200u64 {
             let t = k * 1000;
-            let lat = u.issue(t, 0, 1, AccessKind::Load) - t - 4;
+            let lat = u.issue(t, 0, 1, AccessKind::Load, 0) - t - 4;
             assert!((300..=900).contains(&lat), "uniform draw {lat} out of range");
         }
     }
@@ -795,19 +936,19 @@ mod tests {
         // 2-page cache, latency 100 -> near latency 25.
         let mut f = fab(FabricKind::Tiered { pages: 2 }, 100, 16.0);
         // Miss on page 0: full latency + whole-page promotion traffic.
-        let c = f.issue(0, 0x0000, 1, AccessKind::Load);
+        let c = f.issue(0, 0x0000, 1, AccessKind::Load, 0);
         assert_eq!(c, 104);
         assert_eq!(f.lines_transferred(), PAGE_LINES, "promotion streams the whole page");
         // Hit on the same page: near latency, no wire traffic.
-        let c2 = f.issue(1000, 0x0040, 1, AccessKind::Load);
+        let c2 = f.issue(1000, 0x0040, 1, AccessKind::Load, 0);
         assert_eq!(c2, 1025);
         assert_eq!(f.lines_transferred(), PAGE_LINES);
         // Dirty page 1, then evict it by touching pages 2 and 3:
         // the eviction writes the page back (wire traffic, counted).
-        f.issue(2000, 0x1000, 1, AccessKind::Store); // page 1 (dirty)
-        f.issue(3000, 0x2000, 1, AccessKind::Load); // page 2: evicts LRU page 0 (clean)
+        f.issue(2000, 0x1000, 1, AccessKind::Store, 0); // page 1 (dirty)
+        f.issue(3000, 0x2000, 1, AccessKind::Load, 0); // page 2: evicts LRU page 0 (clean)
         let before = f.lines_transferred();
-        f.issue(4000, 0x3000, 1, AccessKind::Load); // page 3: evicts page 1 (dirty)
+        f.issue(4000, 0x3000, 1, AccessKind::Load, 0); // page 3: evicts page 1 (dirty)
         let st = f.stats();
         assert_eq!(st.hot_hits, 1);
         assert_eq!(st.hot_misses, 4);
@@ -823,11 +964,11 @@ mod tests {
     #[test]
     fn tiered_lru_keeps_the_hot_page() {
         let mut f = fab(FabricKind::Tiered { pages: 2 }, 100, 16.0);
-        f.issue(0, 0x0000, 1, AccessKind::Load); // page 0
-        f.issue(100, 0x1000, 1, AccessKind::Load); // page 1
-        f.issue(200, 0x0000, 1, AccessKind::Load); // hit page 0 (refreshes LRU)
-        f.issue(300, 0x2000, 1, AccessKind::Load); // page 2: evicts page 1
-        let c = f.issue(400, 0x0000, 1, AccessKind::Load); // page 0 still hot
+        f.issue(0, 0x0000, 1, AccessKind::Load, 0); // page 0
+        f.issue(100, 0x1000, 1, AccessKind::Load, 0); // page 1
+        f.issue(200, 0x0000, 1, AccessKind::Load, 0); // hit page 0 (refreshes LRU)
+        f.issue(300, 0x2000, 1, AccessKind::Load, 0); // page 2: evicts page 1
+        let c = f.issue(400, 0x0000, 1, AccessKind::Load, 0); // page 0 still hot
         assert_eq!(c, 425, "page 0 survived the eviction");
         assert_eq!(f.stats().hot_hits, 2);
     }
@@ -867,7 +1008,7 @@ mod tests {
                 let mut f = k.build(600, 16.0, true, 64, 99);
                 let cs: Vec<u64> = stream
                     .iter()
-                    .map(|&(t, a, l)| f.issue(t, a, l, AccessKind::Load))
+                    .map(|&(t, a, l)| f.issue(t, a, l, AccessKind::Load, 0))
                     .collect();
                 (cs, f.stats(), f.lines_transferred())
             };
@@ -877,5 +1018,54 @@ mod tests {
             assert_eq!(a.1.requests, 500, "{}: all requests counted", k.label());
             assert!(a.0.iter().zip(&stream).all(|(c, (t, _, _))| c >= t), "completions >= issue");
         }
+    }
+
+    /// Requester ids are attribution-only: the completion stream is
+    /// independent of which core issues, and the per-requester breakdown
+    /// partitions the totals exactly.
+    #[test]
+    fn requester_ids_never_change_timing_and_partition_the_stats() {
+        for k in FabricKind::ALL {
+            let run = |tag: fn(u64) -> CoreId| {
+                let mut f = k.build(600, 16.0, true, 64, 99);
+                let cs: Vec<u64> = (0..300u64)
+                    .map(|i| f.issue(i * 3, (i % 7) << PAGE_SHIFT, 1, AccessKind::Load, tag(i)))
+                    .collect();
+                (cs, f.stats())
+            };
+            let (solo, solo_st) = run(|_| 0);
+            let (split, split_st) = run(|i| (i % 3) as CoreId);
+            assert_eq!(solo, split, "{}: requester id leaked into timing", k.label());
+            assert_eq!(solo_st.requests, split_st.requests);
+            assert_eq!(solo_st.requesters.len(), 1, "single requester -> one slot");
+            assert_eq!(solo_st.requesters[0].requests, 300);
+            assert_eq!(split_st.requesters.len(), 3);
+            let per: u64 = split_st.requesters.iter().map(|r| r.requests).sum();
+            assert_eq!(per, 300, "{}: breakdown partitions requests", k.label());
+            let stalls: u64 = split_st.requesters.iter().map(|r| r.queue_stall_cycles).sum();
+            assert_eq!(stalls, split_st.queue_stall_cycles, "{}: stall partition", k.label());
+            let hits: u64 = split_st.requesters.iter().map(|r| r.hot_hits).sum();
+            assert_eq!(hits, split_st.hot_hits, "{}: hot-hit partition", k.label());
+            // Out-of-range lookups are zero-filled, not a panic.
+            assert_eq!(split_st.requester(17), RequesterStats::default());
+        }
+    }
+
+    /// `SharedFabric` handles share one backend: issues through per-core
+    /// handles serialize on the same wire and land in distinct slots.
+    #[test]
+    fn shared_fabric_handles_share_the_wire_and_tag_requesters() {
+        let shared = SharedFabric::new(FabricKind::FixedDelay.build(100, 16.0, true, 64, 1));
+        let c0 = shared.for_core(0);
+        let c1 = shared.for_core(1);
+        assert_eq!(c0.issue(0, 0, 1, AccessKind::Load), 104);
+        // Core 1 queues behind core 0 on the same serialization stage.
+        assert_eq!(c1.issue(0, 64, 1, AccessKind::Load), 108);
+        let st = shared.stats();
+        assert_eq!(st.requests, 2);
+        assert_eq!((st.requester(0).requests, st.requester(1).requests), (1, 1));
+        assert_eq!((c0.requester(), c1.requester()), (0, 1));
+        assert_eq!(shared.lines_transferred(), 2);
+        assert_eq!(shared.kind(), FabricKind::FixedDelay);
     }
 }

@@ -155,6 +155,13 @@ impl<'p> Machine<'p> {
     /// policy (`cfg.sched_policy`) is instantiated here and handed to the
     /// AMU; the BPT learns whether that policy keeps the §IV-A BTQ oracle.
     fn new(cfg: &SimConfig, prog: &'p mut Program) -> Machine<'p> {
+        Machine::with_msys(cfg, prog, MemSys::new(cfg))
+    }
+
+    /// Like [`Machine::new`] but over an externally built memory system —
+    /// the cluster path injects a [`MemSys`] whose far tier is a shared,
+    /// requester-tagged fabric handle.
+    fn with_msys(cfg: &SimConfig, prog: &'p mut Program, msys: MemSys) -> Machine<'p> {
         let nregs = prog.func.nregs;
         let policy = cfg.sched_policy.build();
         let guided = policy.btq_guided();
@@ -162,7 +169,7 @@ impl<'p> Machine<'p> {
             func: &prog.func,
             regs: vec![0i64; nregs as usize],
             core: Core::new(&cfg.core, nregs),
-            msys: MemSys::new(cfg),
+            msys,
             tage: Tage::new(&cfg.bpu),
             ittage: Ittage::new(&cfg.bpu),
             bpt: BafinPredictTable::new(&cfg.bpu, guided),
@@ -260,34 +267,74 @@ impl<'p> Machine<'p> {
     }
 }
 
-/// Execute `prog` under `cfg` on the decode-once path; returns the run
-/// statistics. The memory image is mutated in place (callers read
-/// results out for validation). Semantically identical to
-/// [`run_reference`] — the differential suite pins this.
-pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
-    let dec = prog.decoded.clone();
-    let mut budget = prog.max_dyn_instrs;
-    let mut m = Machine::new(cfg, prog);
+/// Single-stepping handle over the decode-once path. [`run`] drives it
+/// to completion for the single-core simulator; `sim::cluster` holds one
+/// per core and interleaves `step` calls on a shared clock (always
+/// advancing the core whose local time is furthest behind). One `step`
+/// executes exactly one decoded micro-op — a fused superop counts as one
+/// step, exactly as it is one iteration of the pre-cluster loop — so the
+/// single-core `while !halted { step }` loop replays the original
+/// control flow instruction for instruction.
+pub(crate) struct Stepper<'p> {
+    m: Machine<'p>,
+    dec: Arc<DecodedFunc>,
+    pc: usize,
+    budget: u64,
+    halted: bool,
+}
 
-    let mut pc = dec.start_of(dec.entry);
-    // Budget charge for the second half of a fused superop: the bail
-    // message matches the per-op check above (same block, same name), so
-    // a budget that expires mid-pair fails identically to the unfused
-    // and reference paths.
-    macro_rules! take_budget {
-        ($op:expr) => {
-            if budget == 0 {
-                bail!("dynamic instruction budget exhausted in {} at bb{}", dec.name, $op.bb);
-            }
-            budget -= 1;
-        };
+impl<'p> Stepper<'p> {
+    pub(crate) fn new(cfg: &SimConfig, prog: &'p mut Program) -> Stepper<'p> {
+        let msys = MemSys::new(cfg);
+        Stepper::with_msys(cfg, prog, msys)
     }
-    'run: loop {
-        let op = &dec.ops[pc];
-        if budget == 0 {
+
+    /// Cluster entry point: the memory system (private caches + shared
+    /// far handle) is built by the caller.
+    pub(crate) fn with_msys(cfg: &SimConfig, prog: &'p mut Program, msys: MemSys) -> Stepper<'p> {
+        let dec = prog.decoded.clone();
+        let budget = prog.max_dyn_instrs;
+        let m = Machine::with_msys(cfg, prog, msys);
+        let pc = dec.start_of(dec.entry);
+        Stepper { m, dec, pc, budget, halted: false }
+    }
+
+    pub(crate) fn halted(&self) -> bool {
+        self.halted
+    }
+
+    /// This core's local clock (dispatch-cycle estimate) — the cluster's
+    /// interleave key.
+    pub(crate) fn now(&self) -> u64 {
+        self.m.core.now()
+    }
+
+    pub(crate) fn finish(self) -> RunStats {
+        self.m.finish()
+    }
+
+    /// Execute one decoded micro-op. Must not be called after
+    /// [`Stepper::halted`] turns true.
+    #[inline]
+    pub(crate) fn step(&mut self) -> Result<()> {
+        let Stepper { m, dec, pc, budget, halted } = self;
+        // Budget charge for the second half of a fused superop: the bail
+        // message matches the per-op check below (same block, same name),
+        // so a budget that expires mid-pair fails identically to the
+        // unfused and reference paths.
+        macro_rules! take_budget {
+            ($op:expr) => {
+                if *budget == 0 {
+                    bail!("dynamic instruction budget exhausted in {} at bb{}", dec.name, $op.bb);
+                }
+                *budget -= 1;
+            };
+        }
+        let op = &dec.ops[*pc];
+        if *budget == 0 {
             bail!("dynamic instruction budget exhausted in {} at bb{}", dec.name, op.bb);
         }
-        budget -= 1;
+        *budget -= 1;
         let d = m.core.dispatch(op.tag);
         match op.kind {
             UKind::Alu { op: aop, dst, lat } => {
@@ -295,14 +342,14 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 m.regs[dst as usize] = v;
                 let exec = m.ready2(d, op.a, op.b);
                 m.core.commit(Some(dst), exec + lat, Cause::Compute);
-                pc += 1;
+                *pc += 1;
             }
             UKind::Falu { op: fop, dst, lat } => {
                 let v = falu_eval(fop, op.a.value(&m.regs), op.b.value(&m.regs));
                 m.regs[dst as usize] = v;
                 let exec = m.ready2(d, op.a, op.b);
                 m.core.commit(Some(dst), exec + lat, Cause::Compute);
-                pc += 1;
+                *pc += 1;
             }
             UKind::Load { dst, off, width } => {
                 let addr = (op.a.value(&m.regs).wrapping_add(off)) as u64;
@@ -320,7 +367,7 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 if op.is_ctx {
                     m.core.stats.ctx_ops += 1;
                 }
-                pc += 1;
+                *pc += 1;
             }
             UKind::Store { off, width } => {
                 let addr = (op.b.value(&m.regs).wrapping_add(off)) as u64;
@@ -338,7 +385,7 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 if op.is_ctx {
                     m.core.stats.ctx_ops += 1;
                 }
-                pc += 1;
+                *pc += 1;
             }
             UKind::AtomicRmw { op: aop, dst, off, width } => {
                 let addr = (op.b.value(&m.regs).wrapping_add(off)) as u64;
@@ -354,7 +401,7 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 m.core.commit(Some(dst), done, m.mem_cause(space));
                 m.core.stats.loads += 1;
                 m.core.stats.stores += 1;
-                pc += 1;
+                *pc += 1;
             }
             UKind::Prefetch { off } => {
                 let addr = (op.a.value(&m.regs).wrapping_add(off)) as u64;
@@ -365,7 +412,7 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 m.msys.access(addr, space, AccessKind::Prefetch, exec);
                 m.core.commit(None, exec + 1, Cause::Compute);
                 m.core.stats.prefetches += 1;
-                pc += 1;
+                *pc += 1;
             }
             UKind::Aload { off, bytes, spm_off, resume } => {
                 let idv = op.a.value(&m.regs);
@@ -385,7 +432,7 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                     issue + 1,
                     if issue > exec { Cause::Backpressure } else { Cause::Compute },
                 );
-                pc += 1;
+                *pc += 1;
             }
             UKind::Astore { off, bytes, spm_off, resume } => {
                 let idv = op.a.value(&m.regs);
@@ -405,13 +452,13 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                     issue + 1,
                     if issue > exec { Cause::Backpressure } else { Cause::Compute },
                 );
-                pc += 1;
+                *pc += 1;
             }
             UKind::Aset => {
                 m.amu.aset(op.a.value(&m.regs), op.b.value(&m.regs) as u32)?;
                 let exec = m.ready2(d, op.a, op.b);
                 m.core.commit(None, exec + 1, Cause::Compute);
-                pc += 1;
+                *pc += 1;
             }
             UKind::Getfin { dst } => {
                 let exec = d;
@@ -421,27 +468,27 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 };
                 m.regs[dst as usize] = v;
                 m.core.commit(Some(dst), exec + 3, Cause::Compute);
-                pc += 1;
+                *pc += 1;
             }
             UKind::Aconfig => {
                 m.aconfig_base = op.a.value(&m.regs);
                 m.aconfig_size = op.b.value(&m.regs);
                 let exec = m.ready2(d, op.a, op.b);
                 m.core.commit(None, exec + 1, Cause::Compute);
-                pc += 1;
+                *pc += 1;
             }
             UKind::Await { resume } => {
                 let exec = m.ready1(d, op.a);
                 m.amu.await_register(op.a.value(&m.regs), resume, exec)?;
                 m.core.commit(None, exec + 1, Cause::Compute);
                 m.core.stats.awaits += 1;
-                pc += 1;
+                *pc += 1;
             }
             UKind::Asignal => {
                 let exec = m.ready1(d, op.a);
                 m.amu.asignal(op.a.value(&m.regs), exec)?;
                 m.core.commit(None, exec + 1, Cause::Compute);
-                pc += 1;
+                *pc += 1;
             }
             // ---- terminators ----
             UKind::Br { then_, else_ } => {
@@ -453,11 +500,11 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                     m.core.stats.cond_mispredicts += 1;
                     m.core.redirect(exec + 1);
                 }
-                pc = dec.start_of(if taken { then_ } else { else_ });
+                *pc = dec.start_of(if taken { then_ } else { else_ });
             }
             UKind::Jmp { target } => {
                 m.core.commit(None, d + 1, Cause::Compute);
-                pc = dec.start_of(target);
+                *pc = dec.start_of(target);
             }
             UKind::IndirectJmp => {
                 let tv = op.a.value(&m.regs);
@@ -474,7 +521,7 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 if op.is_sched {
                     m.core.stats.switches += 1;
                 }
-                pc = dec.start_of(tv as BlockId);
+                *pc = dec.start_of(tv as BlockId);
             }
             UKind::Bafin { handler_dst, id_dst, fallthrough } => {
                 // §IV-A oracle: outcome decided by the Finished-Queue state
@@ -494,16 +541,16 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                             m.core.stats.bafin_mispredicts += 1;
                             m.core.redirect(d + 1);
                         }
-                        pc = dec.start_of(resume);
+                        *pc = dec.start_of(resume);
                     }
                     None => {
                         m.core.commit(None, d + 1, Cause::Compute);
                         m.core.stats.bafins_fallthrough += 1;
-                        pc = dec.start_of(fallthrough);
+                        *pc = dec.start_of(fallthrough);
                     }
                 }
             }
-            UKind::Halt => break 'run,
+            UKind::Halt => *halted = true,
             // ---- superops: both halves' accounting inline, in the exact
             // order the unfused pair would perform it. `d` is the first
             // half's dispatch cycle; the second half dispatches its own.
@@ -518,7 +565,7 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 m.regs[dst2 as usize] = v2;
                 let exec2 = m.ready2(d2, a2, b2);
                 m.core.commit(Some(dst2), exec2 + lat2, Cause::Compute);
-                pc += 1;
+                *pc += 1;
             }
             UKind::FusedAluLoad { op: aop, dst, lat, ld_dst, off, width } => {
                 let v1 = alu_eval(aop, op.a.value(&m.regs), op.b.value(&m.regs));
@@ -546,7 +593,7 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 if op.is_ctx {
                     m.core.stats.ctx_ops += 1;
                 }
-                pc += 1;
+                *pc += 1;
             }
             UKind::FusedAluStore { op: aop, dst, lat, off, width, val, base } => {
                 let v1 = alu_eval(aop, op.a.value(&m.regs), op.b.value(&m.regs));
@@ -570,7 +617,7 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 if op.is_ctx {
                     m.core.stats.ctx_ops += 1;
                 }
-                pc += 1;
+                *pc += 1;
             }
             UKind::FusedAluBr { op: aop, dst, lat, then_, else_ } => {
                 let v1 = alu_eval(aop, op.a.value(&m.regs), op.b.value(&m.regs));
@@ -588,19 +635,30 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                     m.core.stats.cond_mispredicts += 1;
                     m.core.redirect(exec2 + 1);
                 }
-                pc = dec.start_of(if taken { then_ } else { else_ });
+                *pc = dec.start_of(if taken { then_ } else { else_ });
             }
             UKind::AluConst { dst, val, lat } => {
                 // Both operands immediate: exec == dispatch, value folded
                 // at decode time through the same alu_eval.
                 m.regs[dst as usize] = val;
                 m.core.commit(Some(dst), d + lat, Cause::Compute);
-                pc += 1;
+                *pc += 1;
             }
         }
+        Ok(())
     }
+}
 
-    Ok(m.finish())
+/// Execute `prog` under `cfg` on the decode-once path; returns the run
+/// statistics. The memory image is mutated in place (callers read
+/// results out for validation). Semantically identical to
+/// [`run_reference`] — the differential suite pins this.
+pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
+    let mut s = Stepper::new(cfg, prog);
+    while !s.halted() {
+        s.step()?;
+    }
+    Ok(s.finish())
 }
 
 /// Execute `prog` on the reference (tree-walking) interpreter. This is

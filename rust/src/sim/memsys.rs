@@ -13,7 +13,7 @@
 //! scales past the MSHR-bound prefetching of Fig. 16.
 
 use super::cache::{BestOffset, Cache, LINE_BYTES, LINE_SHIFT};
-use super::fabric::{FabricKind, FabricModel, FP_SHIFT};
+use super::fabric::{FabricKind, SharedFabric, FP_SHIFT};
 use super::stats::IntervalUnion;
 use crate::config::SimConfig;
 use crate::ir::AddrSpace;
@@ -97,34 +97,48 @@ pub struct MemSys {
     pub l3: Cache,
     bop: Option<BestOffset>,
     pub local: Channel,
-    pub far: Box<dyn FabricModel>,
+    pub far: SharedFabric,
     spm_latency: u64,
 }
 
 impl MemSys {
     pub fn new(cfg: &SimConfig) -> Self {
-        // The far fabric's reorder window must cover every request that
-        // can be in flight at once: AMU decoupled transfers (bounded by
-        // the Request Table, they bypass the caches entirely), demand
-        // fills (bounded by the L3 MSHRs), and BOP prefetch fills (which
-        // hold only an L2 MSHR on their way down), with slack for the
-        // ROB-induced issue-time skew of demand misses.
-        let far_window = cfg.amu.request_table + cfg.l3.mshrs + cfg.l2.mshrs + 64;
+        let far = SharedFabric::new(cfg.mem.fabric.kind.build(
+            cfg.far_latency_cycles(),
+            cfg.mem.far_bw_bytes_per_cycle,
+            true,
+            Self::far_window(cfg),
+            cfg.mem.fabric.seed,
+        ));
+        Self::with_far(cfg, far)
+    }
+
+    /// A memory system whose far tier is an externally owned fabric
+    /// handle — how `sim::cluster` gives every core a private cache
+    /// hierarchy and local channel in front of ONE shared far pool. The
+    /// handle's requester id tags this core's traffic.
+    pub fn with_far(cfg: &SimConfig, far: SharedFabric) -> Self {
         MemSys {
             l1: Cache::new(&cfg.l1d),
             l2: Cache::new(&cfg.l2),
             l3: Cache::new(&cfg.l3),
             bop: cfg.l2_bop.then(BestOffset::new),
             local: Channel::new(cfg.local_latency_cycles(), cfg.mem.local_bw_bytes_per_cycle, false, 1),
-            far: cfg.mem.fabric.kind.build(
-                cfg.far_latency_cycles(),
-                cfg.mem.far_bw_bytes_per_cycle,
-                true,
-                far_window,
-                cfg.mem.fabric.seed,
-            ),
+            far,
             spm_latency: cfg.l2.latency_cycles,
         }
+    }
+
+    /// The far fabric's reorder window must cover every request that
+    /// can be in flight at once: AMU decoupled transfers (bounded by
+    /// the Request Table, they bypass the caches entirely), demand
+    /// fills (bounded by the L3 MSHRs), and BOP prefetch fills (which
+    /// hold only an L2 MSHR on their way down), with slack for the
+    /// ROB-induced issue-time skew of demand misses. (Cluster runs
+    /// multiply this by the core count — N request tables can be in
+    /// flight against the one shared fabric.)
+    pub fn far_window(cfg: &SimConfig) -> usize {
+        cfg.amu.request_table + cfg.l3.mshrs + cfg.l2.mshrs + 64
     }
 
     /// Which fabric serves the far tier (labels / reports).
@@ -428,5 +442,33 @@ mod tests {
             assert_eq!(t1, t0 + cfg.l1d.latency_cycles, "{}: L1 hit after fill", kind.label());
             assert!(m.far.stats().requests > 0, "{}: fabric saw the fill", kind.label());
         }
+    }
+
+    /// Two memory systems built over one `SharedFabric` contend on the
+    /// same far wire (the cluster topology): private caches, shared pool,
+    /// per-requester attribution.
+    #[test]
+    fn two_memsys_share_one_far_pool() {
+        let cfg = SimConfig::nh_g();
+        let shared = SharedFabric::new(cfg.mem.fabric.kind.build(
+            cfg.far_latency_cycles(),
+            cfg.mem.far_bw_bytes_per_cycle,
+            true,
+            MemSys::far_window(&cfg) * 2,
+            cfg.mem.fabric.seed,
+        ));
+        let mut m0 = MemSys::with_far(&cfg, shared.for_core(0));
+        let mut m1 = MemSys::with_far(&cfg, shared.for_core(1));
+        let a = 0x8000_0000u64;
+        let t0 = m0.access(a, Remote, AccessKind::Load, 0);
+        // Same line, same cycle, other core: its private caches are cold
+        // and its fill serializes behind core 0 on the shared wire.
+        let t1 = m1.access(a, Remote, AccessKind::Load, 0);
+        assert!(t1 > t0, "core 1's fill must queue behind core 0 ({t1} vs {t0})");
+        let st = shared.stats();
+        assert_eq!(st.requests, 2);
+        assert_eq!((st.requester(0).requests, st.requester(1).requests), (1, 1));
+        // Each core's own handle reports the shared totals.
+        assert_eq!(m0.far.stats(), m1.far.stats());
     }
 }

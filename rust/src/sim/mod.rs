@@ -16,6 +16,7 @@
 pub mod amu;
 pub mod bpu;
 pub mod cache;
+pub mod cluster;
 pub mod core;
 pub mod decode;
 pub mod fabric;

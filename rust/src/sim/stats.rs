@@ -87,6 +87,31 @@ pub struct RunStats {
     pub fabric_hot_hits: u64,
     pub fabric_hot_misses: u64,
     pub fabric_writebacks: u64,
+    // Multi-core cluster (sim::cluster): per-core breakdowns plus the
+    // aggregates the scaling figures consume. Single-core runs leave all
+    // of these at their defaults (0 / empty / 0.0), so the differential
+    // suite's bit-equality over `RunStats` is unaffected by the cluster
+    // subsystem existing.
+    /// Number of cores that produced this run (0 = plain single-core
+    /// path, which never goes through `sim::cluster`).
+    pub cluster_cores: u32,
+    /// Per-core total cycles (aggregate `cycles` = the slowest core).
+    pub core_cycles: Vec<u64>,
+    /// Per-core dynamic instruction counts.
+    pub core_instrs: Vec<u64>,
+    /// Per-core shared-fabric request counts (requester-id attributed).
+    pub core_fabric_requests: Vec<u64>,
+    /// Per-core shared-fabric latency percentiles.
+    pub core_fabric_p50: Vec<u64>,
+    pub core_fabric_p99: Vec<u64>,
+    /// Per-core queue-stall cycles on the shared fabric (the fairness
+    /// denominator).
+    pub core_fabric_stalls: Vec<u64>,
+    /// Jain's fairness index over `core_fabric_stalls`
+    /// ((Σx)² / (n·Σx²); 1.0 = perfectly even, 1/n = one core eats
+    /// everything; defined as 1.0 when no core stalled at all).
+    /// 0.0 on single-core runs (no cluster).
+    pub cluster_fairness: f64,
 }
 
 /// Default reorder window of [`IntervalUnion`] (see

@@ -219,6 +219,73 @@ fn proptest_fabrics_deterministic_across_restore_and_reruns() {
     );
 }
 
+/// The cluster-subsystem acceptance differential: `cores = 1` — whether
+/// left at the default, pinned in the session config, or requested
+/// per-run — is the plain single-core simulator, bit for bit. All five
+/// compile variants run the three interpreter paths (decoded-fused /
+/// decoded-unfused / reference) under an explicit `cores = 1` session,
+/// and an explicit `.cores(1)` request must match the untouched default
+/// stat for stat (including the all-default cluster annotations).
+#[test]
+fn cores_eq_1_is_bit_identical_to_seed() {
+    for v in Variant::ALL {
+        // Three paths under an explicitly pinned single-core cluster.
+        assert_paths_agree_under(SimConfig::nh_g().with_cores(1), "gups", v, Scale::Tiny, 7);
+        // Explicit request == the session default, stat for stat.
+        let req = || RunRequest::new("gups", v).scale(Scale::Tiny).seed(7);
+        let base = Engine::new(SimConfig::nh_g()).run(req()).unwrap();
+        let one = Engine::new(SimConfig::nh_g()).run(req().cores(1)).unwrap();
+        assert_eq!(
+            base.stats,
+            one.stats,
+            "{}: explicit cores=1 diverges from the pre-cluster default",
+            v.label()
+        );
+        assert_eq!(one.stats.cluster_cores, 0, "{}: single-core path annotated", v.label());
+    }
+}
+
+/// Property: multi-core cluster runs are deterministic across (a)
+/// repeated runs through one engine (per-core programs restored from
+/// the COW dataset snapshot) and (b) a fresh engine with the same seed.
+/// Rotates core count, fabric and policy by case; the nightly workflow
+/// cranks the case count (PROPTEST_CASES) over the full product.
+#[test]
+fn proptest_clusters_deterministic_across_restore_and_reruns() {
+    use coroamu::util::proptest::{check, env_cases, Config};
+    check(
+        Config { cases: env_cases(8), ..Config::default() },
+        |g| g.rng.next_u64(),
+        |seed: &u64| {
+            let cores = [2u32, 3, 4][(*seed % 3) as usize];
+            let fabric = FabricKind::ALL[((*seed >> 2) % 4) as usize];
+            let policy = SchedPolicyKind::ALL[((*seed >> 4) % 4) as usize];
+            let cfg = SimConfig::nh_g().with_fabric(fabric).with_sched_policy(policy);
+            let req = || {
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .seed(seed % 5)
+                    .cores(cores)
+            };
+            let tag = || format!("{}c/{}/{}", cores, fabric.label(), policy.label());
+            let engine = Engine::new(cfg.clone());
+            let a = engine.run(req()).map_err(|e| format!("{e:#}"))?.stats;
+            if a.cluster_cores != cores {
+                return Err(format!("{}: ran {} cores", tag(), a.cluster_cores));
+            }
+            let b = engine.run(req()).map_err(|e| format!("{e:#}"))?.stats;
+            if a != b {
+                return Err(format!("{}: snapshot-restore rerun diverges", tag()));
+            }
+            let fresh = Engine::new(cfg).run(req()).map_err(|e| format!("{e:#}"))?.stats;
+            if a != fresh {
+                return Err(format!("{}: fresh engine with the same seed diverges", tag()));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Pin that memory-guided prediction coverage is a property of the
 /// scheduler policy (§IV-A as refactored into `sim::sched`):
 /// * ArrivalOrder + bafin — the paper's configuration — keeps zero
