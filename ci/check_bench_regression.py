@@ -13,11 +13,13 @@ Gated rows are the per-kernel decoded-interpreter measurements
 (names ending in `/decoded`, `/decoded-fused` or `/decoded-unfused`
 under `sim_mips/`): they are the simulator's product throughput. This
 includes the per-fabric columns (`sim_mips/fabric/<label>/.../decoded`,
-one per far-fabric backend) and the per-cluster-size columns
+one per far-fabric backend), the per-cluster-size columns
 (`sim_mips/cluster/<cores>c/.../decoded`, aggregate simulated MIPS of
-an n-core shared-fabric run), so a fabric model or cluster interleave
-whose bookkeeping drags down decoded MIPS fails the same gate as any
-other kernel. The `reference` rows are informational (the pre-change
+an n-core shared-fabric run) and the per-fault-intensity columns
+(`sim_mips/faults/<spec>/.../decoded`, decoded MIPS with the
+`sim::faults` retry/backoff machinery live on the fabric), so a fabric
+model, cluster interleave or fault decorator whose bookkeeping drags
+down decoded MIPS fails the same gate as any other kernel. The `reference` rows are informational (the pre-change
 baseline shape) and rows present on only one side are reported but
 never gate — adding or renaming a kernel (or a whole fabric/cluster
 group, against a baseline recorded before those subsystems existed)
@@ -29,6 +31,12 @@ Degenerate baselines never gate: a placeholder (no samples) or a
 debug-mode recording against a release-mode measurement just prints a
 notice and exits 0, so the first real measurement can land and become
 the baseline (the CI workflow commits it).
+
+Malformed inputs always fail: a file that is not valid JSON, whose top
+level is not an object, or whose `samples` is not a list of objects is
+an ERROR (exit 1) naming the file and the shape problem — a truncated
+or corrupted BENCH_sim.json must never be mistaken for "no gated rows;
+gate skipped".
 
 Usage:
   python3 ci/check_bench_regression.py BASELINE.json FRESH.json \
@@ -46,14 +54,30 @@ GATED_SUFFIXES = ("/decoded", "/decoded-fused", "/decoded-unfused")
 
 
 def load(path):
+    """Parse one recording, validating its shape; exit 1 on malformed input."""
     try:
         with open(path, encoding="utf-8") as f:
-            return json.load(f)
+            doc = json.load(f)
     except FileNotFoundError:
         return None
     except json.JSONDecodeError as e:
         print(f"ERROR: {path} is not valid JSON: {e}")
         sys.exit(1)
+    if not isinstance(doc, dict):
+        print(f"ERROR: {path} is malformed: top level is "
+              f"{type(doc).__name__}, expected an object")
+        sys.exit(1)
+    samples = doc.get("samples", [])
+    if not isinstance(samples, list):
+        print(f"ERROR: {path} is malformed: 'samples' is "
+              f"{type(samples).__name__}, expected a list")
+        sys.exit(1)
+    for i, s in enumerate(samples):
+        if not isinstance(s, dict):
+            print(f"ERROR: {path} is malformed: samples[{i}] is "
+                  f"{type(s).__name__}, expected an object")
+            sys.exit(1)
+    return doc
 
 
 def rates(doc):

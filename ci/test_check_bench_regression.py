@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Fixture tests for check_bench_regression.py.
+
+Run: python3 ci/test_check_bench_regression.py
+
+Pins the gate's contract on hostile input: malformed BENCH_sim.json
+(invalid JSON, wrong-shape top level, non-list samples, non-object
+sample entries, truncated writes) must exit 1 with a readable ERROR —
+never a traceback, and never a silent "gate skipped" exit 0. Also pins
+the healthy paths the workflows rely on: regressions past --fail-pct
+fail, rows present on only one side (e.g. a fresh `sim_mips/faults/*`
+group against a pre-faults baseline) never gate, and placeholder
+baselines skip cleanly.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "check_bench_regression.py")
+
+
+def doc(samples, mode="release"):
+    return {"mode": mode, "samples": samples}
+
+
+def row(name, rate):
+    return {"name": name, "rate_per_s": rate}
+
+
+class Gate(unittest.TestCase):
+    def setUp(self):
+        self.tmp = tempfile.TemporaryDirectory()
+        self.addCleanup(self.tmp.cleanup)
+
+    def path(self, name, content):
+        p = os.path.join(self.tmp.name, name)
+        with open(p, "w", encoding="utf-8") as f:
+            f.write(content if isinstance(content, str) else json.dumps(content))
+        return p
+
+    def run_gate(self, baseline, fresh, *extra):
+        return subprocess.run(
+            [sys.executable, SCRIPT, baseline, fresh, *extra],
+            capture_output=True, text=True)
+
+    def assert_malformed(self, r, needle):
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+        self.assertIn("ERROR", r.stdout)
+        self.assertIn(needle, r.stdout)
+        self.assertNotIn("Traceback", r.stderr, "must fail cleanly, not crash")
+
+    def test_truncated_json_is_an_error(self):
+        base = self.path("base.json", doc([row("sim_mips/gups/CoroAMU-Full/decoded", 1e8)]))
+        fresh = self.path("fresh.json", '{"mode": "release", "samples": [{"na')
+        self.assert_malformed(self.run_gate(base, fresh), "not valid JSON")
+
+    def test_non_object_top_level_is_an_error(self):
+        base = self.path("base.json", [1, 2, 3])
+        fresh = self.path("fresh.json", doc([row("sim_mips/gups/CoroAMU-Full/decoded", 1e8)]))
+        self.assert_malformed(self.run_gate(base, fresh), "top level")
+
+    def test_non_list_samples_is_an_error(self):
+        base = self.path("base.json", doc([row("sim_mips/gups/CoroAMU-Full/decoded", 1e8)]))
+        fresh = self.path("fresh.json", {"mode": "release", "samples": "oops"})
+        self.assert_malformed(self.run_gate(base, fresh), "'samples'")
+
+    def test_non_object_sample_entry_is_an_error(self):
+        base = self.path("base.json", doc([row("sim_mips/gups/CoroAMU-Full/decoded", 1e8)]))
+        fresh = self.path("fresh.json", {"mode": "release", "samples": ["oops"]})
+        self.assert_malformed(self.run_gate(base, fresh), "samples[0]")
+
+    def test_missing_fresh_measurement_is_an_error(self):
+        base = self.path("base.json", doc([row("sim_mips/gups/CoroAMU-Full/decoded", 1e8)]))
+        r = self.run_gate(base, os.path.join(self.tmp.name, "nope.json"))
+        self.assertEqual(r.returncode, 1, r.stdout)
+        self.assertIn("ERROR", r.stdout)
+
+    def test_within_tolerance_passes(self):
+        name = "sim_mips/gups/CoroAMU-Full/decoded"
+        base = self.path("base.json", doc([row(name, 1e8)]))
+        fresh = self.path("fresh.json", doc([row(name, 0.99e8)]))
+        r = self.run_gate(base, fresh)
+        self.assertEqual(r.returncode, 0, r.stdout)
+        self.assertIn("OK", r.stdout)
+
+    def test_regression_past_fail_pct_fails(self):
+        name = "sim_mips/faults/heavy/gups/decoded"
+        base = self.path("base.json", doc([row(name, 1e8)]))
+        fresh = self.path("fresh.json", doc([row(name, 0.5e8)]))
+        r = self.run_gate(base, fresh)
+        self.assertEqual(r.returncode, 1, r.stdout)
+        self.assertIn("FAIL", r.stdout)
+
+    def test_new_rows_are_reported_but_never_gate(self):
+        # A fresh recording that grew the faults group against a
+        # pre-faults baseline must pass: skip-if-absent, start gating
+        # only once a baseline containing the rows is committed.
+        old = "sim_mips/gups/CoroAMU-Full/decoded"
+        new = "sim_mips/faults/heavy/gups/decoded"
+        base = self.path("base.json", doc([row(old, 1e8)]))
+        fresh = self.path("fresh.json", doc([row(old, 1e8), row(new, 1e6)]))
+        r = self.run_gate(base, fresh)
+        self.assertEqual(r.returncode, 0, r.stdout)
+        self.assertIn("new row (not gated)", r.stdout)
+
+    def test_placeholder_baseline_skips_the_gate(self):
+        base = self.path("base.json", doc([]))
+        fresh = self.path("fresh.json", doc([row("sim_mips/gups/CoroAMU-Full/decoded", 1e8)]))
+        r = self.run_gate(base, fresh)
+        self.assertEqual(r.returncode, 0, r.stdout)
+        self.assertIn("NOTICE", r.stdout)
+
+
+if __name__ == "__main__":
+    unittest.main()

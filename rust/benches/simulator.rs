@@ -201,6 +201,31 @@ fn cluster_mips(b: &mut Bench) {
     }
 }
 
+/// Per-fault-intensity decoded-MIPS columns
+/// (`sim_mips/faults/<spec>/gups/decoded`), so the CI
+/// `cargo bench -- sim_mips` smoke runs them and the regression gate
+/// treats them like any other decoded row; baselines recorded before the
+/// fault subsystem simply skip them as new rows. Fault injection is a
+/// simulate-time knob on the fabric decorator: each row is one engine
+/// session with the preset baked into the config, and the column prices
+/// what a `report --faults` chaos-sweep point costs — the retry/backoff
+/// loop runs inside `FaultyFabric::issue`, so its wall-clock overhead is
+/// exactly what this row measures.
+fn faults_mips(b: &mut Bench) {
+    use coroamu::sim::faults::FaultConfig;
+    for spec in [FaultConfig::mild(), FaultConfig::heavy()] {
+        let name = format!("sim_mips/faults/{}/gups/decoded", spec.label());
+        if !b.enabled(&name) {
+            continue;
+        }
+        let engine = Engine::new(SimConfig::nh_g().with_faults(spec));
+        b.run(&name, "instr", || {
+            let req = RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Small).seed(42);
+            engine.run(req).unwrap().stats.dyn_instrs as f64
+        });
+    }
+}
+
 /// The acceptance sweep as a throughput row: {fifo, arrival, batched,
 /// latency} x {200, 800} ns on GUPS/CoroAMU-Full through one engine
 /// session (policy and latency are simulate-time, so the whole matrix is
@@ -316,6 +341,7 @@ fn main() {
     sim_mips(&mut b, "mcf", Variant::Serial);
     fabric_mips(&mut b);
     cluster_mips(&mut b);
+    faults_mips(&mut b);
     sched_policy_sweep(&mut b);
     interp_throughput(&mut b, "gups", Variant::Serial);
     interp_throughput(&mut b, "gups", Variant::CoroAmuFull);

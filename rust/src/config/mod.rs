@@ -3,6 +3,7 @@
 //! TOML-subset loader with CLI overrides.
 
 use crate::sim::fabric::{Dist, FabricKind};
+use crate::sim::faults::FaultConfig;
 use crate::sim::sched::SchedPolicyKind;
 use crate::util::minitoml::{self, Doc};
 use anyhow::{bail, Context, Result};
@@ -103,11 +104,15 @@ pub struct FabricConfig {
     pub kind: FabricKind,
     /// Seed for the `dist` backend's deterministic latency draws.
     pub seed: u64,
+    /// Deterministic fault injection on the fabric (`sim::faults`), the
+    /// `[mem.fabric.faults]` sub-table. Defaults to off, which never
+    /// constructs the decorator — bit-identical to a fault-free build.
+    pub faults: FaultConfig,
 }
 
 impl Default for FabricConfig {
     fn default() -> Self {
-        FabricConfig { kind: FabricKind::FixedDelay, seed: 0xFA_B71C }
+        FabricConfig { kind: FabricKind::FixedDelay, seed: 0xFA_B71C, faults: FaultConfig::off() }
     }
 }
 
@@ -323,6 +328,13 @@ impl SimConfig {
         self
     }
 
+    /// Select the fault-injection spec (the `sim::faults` chaos axis;
+    /// see `FaultConfig`). Simulate-time like far latency.
+    pub fn with_faults(mut self, faults: FaultConfig) -> Self {
+        self.mem.fabric.faults = faults;
+        self
+    }
+
     /// Effective scheduler policy for one cluster core: the per-core
     /// `[cluster] policies` entry when configured, else the global
     /// `sched_policy`.
@@ -431,6 +443,11 @@ impl SimConfig {
         const KNOWN: [&str; 5] = ["model", "depth", "pages", "dist", "seed"];
         for key in doc.keys_with_prefix("mem.fabric.") {
             let leaf = &key["mem.fabric.".len()..];
+            // The nested [mem.fabric.faults] sub-table has its own known
+            // set and its own full-path rejection below.
+            if leaf.starts_with("faults.") {
+                continue;
+            }
             if !KNOWN.contains(&leaf) {
                 bail!(
                     "unknown [mem.fabric] key '{leaf}' (known keys: {})",
@@ -438,6 +455,7 @@ impl SimConfig {
                 );
             }
         }
+        self.apply_faults_doc(doc)?;
         if let Some(v) = doc.str("mem.fabric.model") {
             self.mem.fabric.kind = FabricKind::parse(v)?;
         }
@@ -476,6 +494,63 @@ impl SimConfig {
         Ok(())
     }
 
+    /// Apply the nested `[mem.fabric.faults]` table. A `preset` key
+    /// (any `--faults` spec) establishes the baseline; individual keys
+    /// then override single fields on top of it. Unknown keys are
+    /// rejected with the full key path like the parent table.
+    fn apply_faults_doc(&mut self, doc: &Doc) -> Result<()> {
+        const KNOWN: [&str; 15] = [
+            "preset", "nack", "spike", "spike_mult", "degrade_period", "degrade_len",
+            "degrade_factor", "blackout_period", "blackout_len", "timeout", "retries",
+            "backoff", "slow_path", "strict", "seed",
+        ];
+        for key in doc.keys_with_prefix("mem.fabric.faults.") {
+            let leaf = &key["mem.fabric.faults.".len()..];
+            if !KNOWN.contains(&leaf) {
+                bail!(
+                    "unknown [mem.fabric.faults] key '{leaf}' (known keys: {})",
+                    KNOWN.join(", ")
+                );
+            }
+        }
+        if let Some(v) = doc.str("mem.fabric.faults.preset") {
+            self.mem.fabric.faults = FaultConfig::parse(v)
+                .with_context(|| format!("mem.fabric.faults.preset = \"{v}\""))?;
+        }
+        let f = &mut self.mem.fabric.faults;
+        // Probabilities are fractions here (TOML is config, not CLI
+        // shorthand): `nack = 0.05` means 5%.
+        if let Some(v) = doc.f64("mem.fabric.faults.nack") {
+            f.nack_pct = v;
+        }
+        if let Some(v) = doc.f64("mem.fabric.faults.spike") {
+            f.spike_pct = v;
+        }
+        macro_rules! ovu {
+            ($key:expr, $field:expr) => {
+                if let Some(v) = doc.i64(concat!("mem.fabric.faults.", $key)) {
+                    anyhow::ensure!(v >= 0, "mem.fabric.faults.{} must be >= 0, got {v}", $key);
+                    $field = v as _;
+                }
+            };
+        }
+        ovu!("spike_mult", f.spike_mult);
+        ovu!("degrade_period", f.degrade_period);
+        ovu!("degrade_len", f.degrade_len);
+        ovu!("degrade_factor", f.degrade_factor);
+        ovu!("blackout_period", f.blackout_period);
+        ovu!("blackout_len", f.blackout_len);
+        ovu!("timeout", f.timeout);
+        ovu!("retries", f.retries);
+        ovu!("backoff", f.backoff);
+        ovu!("slow_path", f.slow_path);
+        ovu!("seed", f.seed);
+        if let Some(v) = doc.bool("mem.fabric.faults.strict") {
+            f.strict = v;
+        }
+        Ok(())
+    }
+
     pub fn load_file(path: &str) -> Result<Self> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
         let doc = minitoml::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
@@ -507,6 +582,7 @@ impl SimConfig {
             FabricKind::Tiered { pages: 0 } => bail!("tiered fabric needs a nonzero page count"),
             _ => {}
         }
+        self.mem.fabric.faults.validate()?;
         if self.cluster.cores == 0 {
             bail!("cluster.cores must be nonzero");
         }
@@ -728,6 +804,73 @@ mod tests {
         let mut c = SimConfig::nh_g().with_cores(3);
         c.cluster.policies = Some(vec![SchedPolicyKind::Fifo]);
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn faults_default_off_and_toml_round_trip() {
+        let c = SimConfig::nh_g();
+        assert_eq!(c.mem.fabric.faults, FaultConfig::off(), "faults must default off");
+        assert!(!c.mem.fabric.faults.enabled());
+        let c = c.with_faults(FaultConfig::mild());
+        assert_eq!(c.mem.fabric.faults.label(), "mild");
+        // Preset baseline + per-key overrides on top of it.
+        let doc = crate::util::minitoml::parse(
+            "[mem.fabric]\nmodel = \"queued\"\ndepth = 8\n\
+             [mem.fabric.faults]\npreset = \"mild\"\nnack = 0.02\nstrict = true\nseed = 42\n",
+        )
+        .unwrap();
+        let mut c = SimConfig::nh_g();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.mem.fabric.kind, FabricKind::Queued { depth: 8 });
+        let f = c.mem.fabric.faults;
+        assert_eq!(f.nack_pct, 0.02, "per-key override wins over the preset");
+        assert_eq!(f.spike_pct, FaultConfig::mild().spike_pct, "preset fields survive");
+        assert!(f.strict);
+        assert_eq!(f.seed, 42);
+        c.validate().unwrap();
+        // A config assembled entirely key-by-key, no preset.
+        let doc = crate::util::minitoml::parse(
+            "[mem.fabric.faults]\ndegrade_period = 4096\ndegrade_len = 1024\ndegrade_factor = 2\n",
+        )
+        .unwrap();
+        let mut c = SimConfig::nh_g();
+        c.apply_doc(&doc).unwrap();
+        assert!(c.mem.fabric.faults.enabled());
+        assert_eq!(c.mem.fabric.faults.degrade_period, 4096);
+        assert_eq!(c.mem.fabric.faults.label(), "custom");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn faults_toml_rejects_unknown_keys_and_bad_values() {
+        // Unknown key under the sub-table: full-path rejection naming
+        // the valid set — and it must NOT fall through to the parent
+        // [mem.fabric] error.
+        let bad = crate::util::minitoml::parse("[mem.fabric.faults]\nnak = 0.1\n").unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown [mem.fabric.faults] key 'nak'"), "{err}");
+        assert!(err.contains("nack"), "error must list the known keys: {err}");
+        // Unknown preset.
+        let bad =
+            crate::util::minitoml::parse("[mem.fabric.faults]\npreset = \"storm\"\n").unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("mem.fabric.faults.preset"), "{err}");
+        // Negative counters rejected at apply time, degenerate shapes at
+        // validate time.
+        let bad = crate::util::minitoml::parse("[mem.fabric.faults]\nretries = -1\n").unwrap();
+        assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
+        let doc = crate::util::minitoml::parse(
+            "[mem.fabric.faults]\nnack = 1.5\n",
+        )
+        .unwrap();
+        let mut c = SimConfig::nh_g();
+        c.apply_doc(&doc).unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("mem.fabric.faults.nack"), "{err}");
+        // Parent-table unknown-key rejection is unaffected.
+        let bad = crate::util::minitoml::parse("[mem.fabric]\nfaultz = 1\n").unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown [mem.fabric] key 'faultz'"), "{err}");
     }
 
     #[test]

@@ -41,6 +41,7 @@ use crate::compiler::{compile, CodegenOpts, CompiledKernel, Variant};
 use crate::config::SimConfig;
 use crate::coordinator::pool;
 use crate::sim::fabric::FabricKind;
+use crate::sim::faults::FaultConfig;
 use crate::sim::sched::SchedPolicyKind;
 use crate::sim::{self, MemImage, RunStats};
 use anyhow::{anyhow, Result};
@@ -166,6 +167,11 @@ pub struct RunRequest {
     /// dataset caches (each core runs the same compiled kernel over its
     /// own snapshot of the same dataset).
     pub cores: Option<u32>,
+    /// Override the session config's fault-injection spec for this run
+    /// only (`sim::faults`). Simulate-time like latency/policy/fabric:
+    /// sweeping the chaos axis never forks the compiled-kernel or
+    /// dataset caches.
+    pub faults: Option<FaultConfig>,
     /// Explicit codegen options (ablation figures); overrides `variant`'s
     /// canonical options when set.
     pub opts: Option<CodegenOpts>,
@@ -186,6 +192,7 @@ impl RunRequest {
             sched_policy: None,
             fabric: None,
             cores: None,
+            faults: None,
             opts: None,
             label: None,
         }
@@ -237,6 +244,13 @@ impl RunRequest {
         self
     }
 
+    /// Run under an explicit fault-injection spec (the `sim::faults`
+    /// chaos axis) instead of the session config's default.
+    pub fn faults(mut self, f: FaultConfig) -> Self {
+        self.faults = Some(f);
+        self
+    }
+
     /// Run under explicit codegen options instead of the variant's
     /// canonical ones (the ablation figures toggle single optimizations).
     pub fn opts(mut self, opts: CodegenOpts, label: impl Into<String>) -> Self {
@@ -268,6 +282,8 @@ pub struct RunReport {
     pub fabric: FabricKind,
     /// Effective cluster core count of the run (1 = single-core path).
     pub cores: u32,
+    /// Effective fault-injection spec of the run (off by default).
+    pub faults: FaultConfig,
     pub scale: Scale,
     pub seed: u64,
     pub key: String,
@@ -283,7 +299,7 @@ impl RunReport {
         let st = &self.stats;
         let mut out = String::new();
         out.push_str(&format!(
-            "bench={} variant={} cfg={} far={}ns fabric={} sched={}{} scale={:?} seed={}{}\n",
+            "bench={} variant={} cfg={} far={}ns fabric={} sched={}{}{} scale={:?} seed={}{}\n",
             self.bench,
             self.variant_label,
             self.cfg_name,
@@ -291,6 +307,7 @@ impl RunReport {
             self.fabric.label(),
             self.sched_policy.label(),
             if self.cores > 1 { format!(" cores={}", self.cores) } else { String::new() },
+            if self.faults.enabled() { format!(" faults={}", self.faults.label()) } else { String::new() },
             self.scale,
             self.seed,
             if self.cache_hit { " kernel=cached" } else { " kernel=compiled" },
@@ -347,6 +364,18 @@ impl RunReport {
                 st.fabric_writebacks
             ));
         }
+        if st.fault_nacks + st.fault_timeouts + st.fault_retries + st.fault_slow_path > 0
+            || st.fault_degraded_cycles > 0
+        {
+            out.push_str(&format!(
+                "  faults            {} ({} nacks, {} timeouts, {} degraded cycles)\n",
+                st.faults, st.fault_nacks, st.fault_timeouts, st.fault_degraded_cycles
+            ));
+            out.push_str(&format!(
+                "  resilience        {} retries ({} backoff cycles), {} slow-path, max stall {}\n",
+                st.fault_retries, st.fault_retry_cycles, st.fault_slow_path, st.fault_max_stall
+            ));
+        }
         if st.cluster_cores > 1 {
             out.push_str(&format!(
                 "  cluster           {} cores, makespan {} cycles, fairness {:.3}\n",
@@ -354,12 +383,19 @@ impl RunReport {
             ));
             for (i, c) in st.core_cycles.iter().enumerate() {
                 out.push_str(&format!(
-                    "    core {i}          {} cycles, {} far reqs (p50 {} / p99 {}), {} stall cycles\n",
+                    "    core {i}          {} cycles, {} far reqs (p50 {} / p99 {}), {} stall cycles{}\n",
                     c,
                     st.core_fabric_requests.get(i).copied().unwrap_or(0),
                     st.core_fabric_p50.get(i).copied().unwrap_or(0),
                     st.core_fabric_p99.get(i).copied().unwrap_or(0),
                     st.core_fabric_stalls.get(i).copied().unwrap_or(0),
+                    match (
+                        st.core_fault_retries.get(i).copied().unwrap_or(0),
+                        st.core_fault_slow_path.get(i).copied().unwrap_or(0),
+                    ) {
+                        (0, 0) => String::new(),
+                        (r, s) => format!(", {r} retries / {s} slow-path"),
+                    },
                 ));
             }
         }
@@ -562,6 +598,7 @@ impl Engine {
             sched_policy: cfg.sched_policy,
             fabric: cfg.mem.fabric.kind,
             cores: cfg.cluster.cores,
+            faults: cfg.mem.fabric.faults,
             scale: req.scale,
             seed: req.seed,
             key: req.key.clone(),
@@ -633,6 +670,9 @@ impl Engine {
         if let Some(n) = req.cores {
             cfg.cluster.cores = n;
         }
+        if let Some(f) = req.faults {
+            cfg.mem.fabric.faults = f;
+        }
         cfg
     }
 
@@ -681,6 +721,7 @@ mod tests {
         assert_eq!(r.sched_policy, None, "default = session policy");
         assert_eq!(r.fabric, None, "default = session fabric");
         assert_eq!(r.cores, None, "default = session cluster shape");
+        assert_eq!(r.faults, None, "default = session faults (off)");
         assert!(r.opts.is_none() && r.label.is_none());
         assert_eq!(r.config_label(), "CoroAMU-Full");
     }
@@ -892,6 +933,55 @@ mod tests {
         assert!(text.contains("cluster"), "{text}");
         assert!(text.contains("core 0"), "{text}");
         // The oracle ran on both cores' images (exec checks each one).
+        assert!(text.contains("oracle            PASS"), "{text}");
+    }
+
+    #[test]
+    fn explicit_faults_off_is_invisible() {
+        // `.faults(off)` must take the bare-fabric path bit-for-bit; the
+        // provenance line never mentions faults on fault-free runs.
+        let engine = Engine::new(SimConfig::nh_g());
+        let base = engine
+            .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny))
+            .unwrap();
+        let explicit = engine
+            .run(
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .faults(FaultConfig::off()),
+            )
+            .unwrap();
+        assert_eq!(base.stats, explicit.stats, "explicit faults=off must not move a cycle");
+        assert_eq!(base.stats.faults, "");
+        assert!(!base.render().contains("faults="), "fault-free provenance stays unchanged");
+    }
+
+    #[test]
+    fn faults_override_does_not_fork_caches_and_reports() {
+        // The chaos axis is simulate-time: an off/mild/heavy sweep
+        // compiles the kernel once and builds the dataset once, and a
+        // faulted run renders its resilience counters.
+        let engine = Engine::new(SimConfig::nh_g());
+        let mut last = None;
+        for spec in [FaultConfig::off(), FaultConfig::mild(), FaultConfig::heavy()] {
+            let r = engine
+                .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny).faults(spec))
+                .unwrap();
+            assert_eq!(r.faults, spec);
+            last = Some(r);
+        }
+        let cs = engine.cache_stats();
+        assert_eq!(cs.misses, 1, "faults is simulate-time, not compile-time");
+        assert_eq!(cs.hits, 2);
+        let ds = engine.dataset_stats();
+        assert_eq!(ds.misses, 1, "faults must not fork the dataset cache");
+        assert_eq!(ds.hits, 2);
+        let heavy = last.unwrap();
+        assert_eq!(heavy.stats.faults, "heavy");
+        assert!(heavy.stats.fault_nacks > 0, "heavy chaos produced no NACKs");
+        let text = heavy.render();
+        assert!(text.contains("faults=heavy"), "{text}");
+        assert!(text.contains("resilience"), "{text}");
         assert!(text.contains("oracle            PASS"), "{text}");
     }
 

@@ -1,0 +1,261 @@
+//! Fault-injection chaos tables (`coroamu report --faults`): the
+//! `sim::faults` axis — fault intensity × scheduler policies at the
+//! high-latency disaggregation point. Where `fig_fabric` sweeps how the
+//! fabric *behaves*, this sweeps how it *fails* (NACK storms, latency
+//! spikes, degradation windows, blackouts) and shows how much chaos each
+//! resume policy tolerates: `LatencyAware`/`BatchedWakeup` re-rank
+//! coroutines as completion times scatter, while `Fifo`/`ArrivalOrder`
+//! eat the head-of-line blocking that retries and slow paths create.
+//! Every row carries a fault-free differential column, so the overhead
+//! of chaos (not just the absolute speedup) is explicit.
+//!
+//! Faults, policy and latency are all simulate-time knobs, so the whole
+//! matrix compiles each (benchmark, variant) kernel exactly once and
+//! builds each dataset exactly once.
+
+use super::FigOpts;
+use crate::compiler::Variant;
+use crate::config::SimConfig;
+use crate::engine::{lookup, Engine, RunRequest};
+use crate::sim::faults::FaultConfig;
+use crate::sim::sched::SchedPolicyKind;
+use crate::util::table::{geomean, speedup, Table};
+use anyhow::Result;
+
+/// The far-latency point the chaos axis is measured at: the paper's
+/// high-disaggregation setting, where far-request stalls dominate and
+/// fault handling is on the critical path.
+pub const LATENCY_NS: f64 = 800.0;
+
+/// The irregular subset the chaos axis discriminates on (same set as the
+/// fabric sweep): random scatter (gups), pointer chasing (bfs) and
+/// dependent hashing (hj).
+pub const DEFAULT_BENCHES: [&str; 3] = ["gups", "bfs", "hj"];
+
+fn benches(opts: &FigOpts) -> Vec<String> {
+    if opts.only.is_empty() {
+        DEFAULT_BENCHES.iter().map(|s| s.to_string()).collect()
+    } else {
+        opts.only.clone()
+    }
+}
+
+/// The swept fault intensities: the two presets, or a single spec when
+/// the CLI restricts the axis (`report --faults heavy`). The fault-free
+/// baseline is always run alongside (the differential column).
+pub fn intensities(only: Option<FaultConfig>) -> Vec<FaultConfig> {
+    match only {
+        Some(f) => vec![f],
+        None => vec![FaultConfig::mild(), FaultConfig::heavy()],
+    }
+}
+
+/// The request matrix: per bench a fault-free serial baseline, then per
+/// (intensity ∪ {off}) × policy a CoroAMU-Full run. The `off` column is
+/// the fault-free differential every chaos row is compared against.
+pub fn requests(opts: &FigOpts, specs: &[FaultConfig]) -> Vec<RunRequest> {
+    let mut matrix = Vec::new();
+    for b in benches(opts) {
+        matrix.push(
+            RunRequest::new(b.clone(), Variant::Serial)
+                .scale(opts.scale)
+                .seed(opts.seed)
+                .latency_ns(LATENCY_NS)
+                .key("off"),
+        );
+        for spec in std::iter::once(FaultConfig::off()).chain(specs.iter().copied()) {
+            for p in SchedPolicyKind::ALL {
+                matrix.push(
+                    RunRequest::new(b.clone(), Variant::CoroAmuFull)
+                        .scale(opts.scale)
+                        .seed(opts.seed)
+                        .latency_ns(LATENCY_NS)
+                        .faults(spec)
+                        .policy(p)
+                        .key(full_key(&spec, p)),
+                );
+            }
+        }
+    }
+    matrix
+}
+
+/// Key of the CoroAMU-Full run for (fault spec, policy).
+fn full_key(f: &FaultConfig, p: SchedPolicyKind) -> String {
+    format!("{}/{}", f.label(), p.label())
+}
+
+pub fn run(opts: &FigOpts, only: Option<FaultConfig>) -> Result<Vec<Table>> {
+    let specs = intensities(only);
+    let engine = Engine::new(SimConfig::nh_g());
+    let rs = engine.sweep(&requests(opts, &specs), opts.threads)?;
+    let benches = benches(opts);
+    let arrival = SchedPolicyKind::ArrivalOrder;
+    let mut tables = Vec::new();
+
+    // T1: policy × intensity — CoroAMU-Full speedup vs the fault-free
+    // serial baseline per bench, with the fault-free differential:
+    // geomean slowdown of the chaos row against the same policy's
+    // fault-free run (the cost of surviving the faults).
+    let mut cols: Vec<String> = vec!["faults".into(), "policy".into()];
+    cols.extend(benches.iter().cloned());
+    cols.push("geomean".into());
+    cols.push("vs fault-free".into());
+    let mut t1 = Table::new(
+        format!("Policy × fault intensity: CoroAMU-Full speedup vs serial ({LATENCY_NS} ns)"),
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let off = FaultConfig::off();
+    for spec in std::iter::once(&off).chain(specs.iter()) {
+        for p in SchedPolicyKind::ALL {
+            let mut row = vec![spec.label(), p.label()];
+            let mut sp = Vec::new();
+            let mut overhead = Vec::new();
+            for b in &benches {
+                let serial = lookup(&rs, b, Variant::Serial, "off").unwrap().stats.cycles as f64;
+                let full =
+                    lookup(&rs, b, Variant::CoroAmuFull, &full_key(spec, p)).unwrap().stats.cycles
+                        as f64;
+                let clean =
+                    lookup(&rs, b, Variant::CoroAmuFull, &full_key(&off, p)).unwrap().stats.cycles
+                        as f64;
+                sp.push(serial / full);
+                overhead.push(full / clean);
+                row.push(speedup(serial / full));
+            }
+            row.push(speedup(geomean(&sp)));
+            let oh = geomean(&overhead);
+            row.push(if spec.enabled() { format!("{:+.1}%", 100.0 * (oh - 1.0)) } else { "-".into() });
+            t1.row(row);
+        }
+    }
+    tables.push(t1);
+
+    // T2: what each intensity actually did to the requests and how the
+    // resilience machinery absorbed it (first bench, arrival order).
+    if let Some(b) = benches.first() {
+        let mut t2 = Table::new(
+            format!("Resilience behavior ({b}, CoroAMU-Full/arrival, {LATENCY_NS} ns)"),
+            &[
+                "faults",
+                "nacks",
+                "retries",
+                "backoff cycles",
+                "timeouts",
+                "slow-path",
+                "degraded cycles",
+                "max stall",
+            ],
+        );
+        for spec in std::iter::once(&off).chain(specs.iter()) {
+            let st = &lookup(&rs, b, Variant::CoroAmuFull, &full_key(spec, arrival))
+                .unwrap()
+                .stats;
+            t2.row(vec![
+                spec.label(),
+                st.fault_nacks.to_string(),
+                st.fault_retries.to_string(),
+                st.fault_retry_cycles.to_string(),
+                st.fault_timeouts.to_string(),
+                st.fault_slow_path.to_string(),
+                st.fault_degraded_cycles.to_string(),
+                st.fault_max_stall.to_string(),
+            ]);
+        }
+        tables.push(t2);
+    }
+
+    // T3: chaos tolerance of dynamic vs static resume order — per
+    // (intensity, bench), cycles under arrival order against the dynamic
+    // policies, with the winner's margin. Retries and slow paths scatter
+    // completion times far beyond what any fabric backend does, which is
+    // exactly the regime the dynamic policies were built for.
+    let mut t3 = Table::new(
+        format!("Dynamic vs static resume order under chaos ({LATENCY_NS} ns)"),
+        &["faults", "bench", "arrival", "latency-aware", "batched", "best dynamic", "gain"],
+    );
+    for spec in specs.iter() {
+        for b in &benches {
+            let cyc = |p: SchedPolicyKind| {
+                lookup(&rs, b, Variant::CoroAmuFull, &full_key(spec, p)).unwrap().stats.cycles
+            };
+            let base = cyc(arrival);
+            let la = cyc(SchedPolicyKind::LatencyAware);
+            let bw = cyc(SchedPolicyKind::BatchedWakeup(crate::sim::sched::DEFAULT_BATCH));
+            let (best_label, best) = if la <= bw { ("latency", la) } else { ("batched", bw) };
+            let gain = 100.0 * (base as f64 - best as f64) / base as f64;
+            t3.row(vec![
+                spec.label(),
+                b.clone(),
+                base.to_string(),
+                la.to_string(),
+                bw.to_string(),
+                best_label.into(),
+                format!("{gain:+.2}%"),
+            ]);
+        }
+    }
+    tables.push(t3);
+
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Scale;
+
+    #[test]
+    fn request_matrix_covers_the_acceptance_axis() {
+        let opts = FigOpts { scale: Scale::Tiny, ..FigOpts::quick() };
+        let specs = intensities(None);
+        let m = requests(&opts, &specs);
+        // 3 benches x (serial + (off + mild + heavy) x 4 policies).
+        assert_eq!(m.len(), 3 * (1 + 3 * 4));
+        // Every chaos run names its spec; the fault-free differential
+        // runs are present for every policy.
+        for spec in &specs {
+            assert!(
+                m.iter().filter(|r| r.faults == Some(*spec)).count() == 3 * 4,
+                "{} missing from the matrix",
+                spec.label()
+            );
+        }
+        assert_eq!(m.iter().filter(|r| r.faults == Some(FaultConfig::off())).count(), 3 * 4);
+        // Restricting the axis keeps one intensity (plus the baseline).
+        let one = requests(&opts, &intensities(Some(FaultConfig::blackout())));
+        assert_eq!(one.len(), 3 * (1 + 2 * 4));
+        assert!(one
+            .iter()
+            .all(|r| r.faults.is_none()
+                || r.faults == Some(FaultConfig::off())
+                || r.faults == Some(FaultConfig::blackout())));
+    }
+
+    #[test]
+    fn runs_on_tiny_scale_single_bench() {
+        let opts = FigOpts { scale: Scale::Tiny, only: vec!["gups".into()], ..FigOpts::quick() };
+        let tables = run(&opts, None).unwrap();
+        // policy x intensity + resilience behavior + dynamic-vs-static.
+        assert_eq!(tables.len(), 3);
+        let all: String = tables.iter().map(|t| t.render()).collect();
+        for spec in ["off", "mild", "heavy"] {
+            assert!(all.contains(spec), "intensity {spec} missing from tables");
+        }
+        for p in SchedPolicyKind::ALL {
+            assert!(all.contains(&p.label()), "policy {} missing from tables", p.label());
+        }
+        assert!(all.contains("vs fault-free"));
+        assert!(all.contains("slow-path"));
+        assert!(all.contains("best dynamic"));
+    }
+
+    #[test]
+    fn single_intensity_restriction_runs() {
+        let opts = FigOpts { scale: Scale::Tiny, only: vec!["gups".into()], ..FigOpts::quick() };
+        let tables = run(&opts, Some(FaultConfig::nack(0.1))).unwrap();
+        let all: String = tables.iter().map(|t| t.render()).collect();
+        assert!(all.contains("nack:10"));
+        assert!(!all.contains("heavy"), "restricted axis must not sweep other intensities");
+    }
+}

@@ -18,6 +18,7 @@
 //! | sched    | [`fig_sched`] | scheduler-policy sweep (`report --sched`) |
 //! | fabric   | [`fig_fabric`] | far-fabric sweep (`report --fabric`) |
 //! | cluster  | [`fig_cluster`] | cluster scaling sweep (`report --cluster`) |
+//! | faults   | [`fig_faults`] | fault-injection chaos sweep (`report --faults`) |
 
 pub mod fig02;
 pub mod fig03;
@@ -29,6 +30,7 @@ pub mod fig15;
 pub mod fig16;
 pub mod fig_cluster;
 pub mod fig_fabric;
+pub mod fig_faults;
 pub mod fig_sched;
 
 use crate::benchmarks::Scale;

@@ -22,6 +22,7 @@ use coroamu::harness::{self, FigOpts};
 use coroamu::ir::printer;
 use coroamu::runtime;
 use coroamu::sim::fabric::FabricKind;
+use coroamu::sim::faults::FaultConfig;
 use coroamu::sim::sched::SchedPolicyKind;
 use coroamu::util::cli::Args;
 
@@ -69,6 +70,9 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
     if let Some(f) = args.get("fabric") {
         cfg = cfg.with_fabric(FabricKind::parse(f)?);
     }
+    if let Some(f) = args.get("faults") {
+        cfg = cfg.with_faults(FaultConfig::parse(f)?);
+    }
     if let Some(c) = args.get("cores") {
         // Manual parse rather than `get_u64` (which conflates absent and
         // unparseable): `--cores x` must fail loudly, not run single-core.
@@ -86,7 +90,7 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
 /// from silently dropping a flag.
 fn selected_report_modes(args: &Args) -> Vec<&'static str> {
     let mut modes = Vec::new();
-    for m in ["table1", "table2", "sched", "fabric", "cluster", "all"] {
+    for m in ["table1", "table2", "sched", "fabric", "cluster", "faults", "all"] {
         if args.flag(m) {
             modes.push(m);
         }
@@ -150,12 +154,28 @@ fn cmd_report(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
+    if args.flag("faults") {
+        // `--faults` sweeps the chaos intensities; `--faults heavy`
+        // restricts the axis to one spec (the value is honored).
+        let only = match args.get("faults") {
+            Some(v) => Some(FaultConfig::parse(v)?),
+            None => None,
+        };
+        eprintln!(
+            "[coroamu] generating fault-injection sweep (scale {:?}, {} threads)...",
+            opts.scale, opts.threads
+        );
+        for t in harness::fig_faults::run(&opts, only)? {
+            t.print();
+        }
+        return Ok(());
+    }
     let figs: Vec<u32> = if args.flag("all") {
         harness::ALL_FIGURES.to_vec()
     } else if let Some(n) = args.get_u64("fig") {
         vec![n as u32]
     } else {
-        bail!("report needs --fig N, --all, --sched, --fabric, --cluster, --table1 or --table2");
+        bail!("report needs --fig N, --all, --sched, --fabric, --cluster, --faults, --table1 or --table2");
     };
     for f in figs {
         eprintln!("[coroamu] generating figure {f} (scale {:?}, {} threads)...", opts.scale, opts.threads);
@@ -211,9 +231,9 @@ fn cmd_oracle(_args: &Args) -> Result<()> {
 }
 
 const USAGE: &str = "usage: coroamu <report|run|dump|oracle> [options]
-  report --fig N | --all | --sched | --fabric [KIND] | --cluster | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
+  report --fig N | --all | --sched | --fabric [KIND] | --cluster | --faults [SPEC] | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
          (report modes are mutually exclusive)
-  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--policy fifo|arrival|batched[:N]|latency] [--fabric fixed|queued[:N]|dist[:uniform|bimodal]|tiered[:N]] [--cores N] [--tasks N] [--scale ...]
+  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--policy fifo|arrival|batched[:N]|latency] [--fabric fixed|queued[:N]|dist[:uniform|bimodal]|tiered[:N]] [--faults off|mild|heavy|degrade|blackout|nack:PCT|spike:PCT] [--cores N] [--tasks N] [--scale ...]
   dump   --bench NAME [--variant ...]     print generated CoroIR
   oracle                                  cross-check simulator vs PJRT artifacts
   help | --help                           print this message";
@@ -266,6 +286,12 @@ mod tests {
         assert_eq!(selected_report_modes(&parse(&["report", "--fig", "12"])), vec!["fig"]);
         assert_eq!(selected_report_modes(&parse(&["report", "--all"])), vec!["all"]);
         assert_eq!(selected_report_modes(&parse(&["report", "--cluster"])), vec!["cluster"]);
+        assert_eq!(selected_report_modes(&parse(&["report", "--faults"])), vec!["faults"]);
+        // A chaos restriction value is still the faults mode.
+        assert_eq!(
+            selected_report_modes(&parse(&["report", "--faults", "heavy"])),
+            vec!["faults"]
+        );
         assert!(selected_report_modes(&parse(&["report"])).is_empty());
     }
 
@@ -305,6 +331,21 @@ mod tests {
     }
 
     #[test]
+    fn faults_mode_conflicts_with_every_other_mode() {
+        // The new chaos report joins the mutual-exclusion audit.
+        for other in ["--fabric", "--sched", "--cluster", "--table1"] {
+            let both = parse(&["report", "--faults", other]);
+            assert_eq!(selected_report_modes(&both).len(), 2, "{other}");
+            let err = cmd_report(&both).unwrap_err().to_string();
+            assert!(err.contains("conflicting report modes"), "{other}: {err}");
+            assert!(err.contains("faults"), "{other}: {err}");
+        }
+        // A bad restriction spec fails loudly rather than sweeping.
+        let err = cmd_report(&parse(&["report", "--faults", "storm"])).unwrap_err().to_string();
+        assert!(err.contains("unknown fault spec"), "{err}");
+    }
+
+    #[test]
     fn run_config_accepts_and_validates_cores() {
         let cfg = cfg_from(&parse(&["run", "--cores", "4"])).unwrap();
         assert_eq!(cfg.cluster.cores, 4);
@@ -324,5 +365,19 @@ mod tests {
         assert_eq!(cfg.mem.fabric.kind, FabricKind::Tiered { pages: 32 });
         assert_eq!(cfg.sched_policy, SchedPolicyKind::LatencyAware);
         assert!(cfg_from(&parse(&["run", "--fabric", "warp"])).is_err());
+    }
+
+    #[test]
+    fn run_config_accepts_and_validates_faults() {
+        let cfg = cfg_from(&parse(&["run", "--faults", "heavy"])).unwrap();
+        assert_eq!(cfg.mem.fabric.faults, FaultConfig::heavy());
+        let cfg = cfg_from(&parse(&["run", "--faults", "nack:5"])).unwrap();
+        assert_eq!(cfg.mem.fabric.faults.nack_pct, 0.05);
+        // No --faults flag leaves faults off (the bit-identical default).
+        let cfg = cfg_from(&parse(&["run", "--bench", "gups"])).unwrap();
+        assert!(!cfg.mem.fabric.faults.enabled());
+        // Bad specs fail loudly instead of silently running fault-free.
+        assert!(cfg_from(&parse(&["run", "--faults", "storm"])).is_err());
+        assert!(cfg_from(&parse(&["run", "--faults", "nack:200"])).is_err());
     }
 }

@@ -13,6 +13,18 @@
 //! resume order — suspension order, memory-arrival order, batched,
 //! latency-aware — is a sweepable axis. The default policy
 //! (`ArrivalOrder`) reproduces the old earliest-ready scan bit-for-bit.
+//!
+//! **Resilience contract.** The AMU's bookkeeping is analytic: a Request
+//! Table slot is reclaimed at the completion cycle the memory system
+//! returned at issue time, and a coroutine suspends until that cycle is
+//! answered by a poll. Both therefore require every far request to
+//! complete at a *finite* cycle. Under fault injection
+//! ([`super::faults`]) that contract is preserved inside the fabric
+//! decorator itself: timeouts, bounded retries with exponential backoff
+//! and the slow-path fallback all resolve *before* `issue` returns, so
+//! the AMU sees one (possibly very late) completion per transfer and no
+//! coroutine can wedge on a faulted request — chaos moves completion
+//! cycles, never the shape of the AMU's state machine.
 
 use super::sched::{Pending, SchedPolicy, SchedPolicyKind};
 use crate::ir::BlockId;

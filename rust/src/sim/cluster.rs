@@ -78,13 +78,12 @@ fn jain_fairness(xs: &[u64]) -> f64 {
 pub fn run_cluster(cfg: &SimConfig, progs: &mut [Program]) -> Result<RunStats> {
     ensure!(!progs.is_empty(), "cluster needs at least one core/program");
     let n = progs.len();
-    let shared = SharedFabric::new(cfg.mem.fabric.kind.build(
-        cfg.far_latency_cycles(),
-        cfg.mem.far_bw_bytes_per_cycle,
-        true,
-        MemSys::far_window(cfg) * n,
-        cfg.mem.fabric.seed,
-    ));
+    // Like `MemSys::new`, the shared fabric goes through
+    // `faults::build_far`, so `[mem.fabric.faults]` composes with
+    // clusters automatically — one fault-injecting decorator in front of
+    // the one shared pool, its draws consumed in the deterministic
+    // interleave order.
+    let shared = SharedFabric::new(super::faults::build_far(cfg, MemSys::far_window(cfg) * n));
     // Per-core configs differ only in the effective scheduler policy;
     // the microarchitecture (and thus every private-cache geometry) is
     // homogeneous.
@@ -121,7 +120,9 @@ pub fn run_cluster(cfg: &SimConfig, progs: &mut [Program]) -> Result<RunStats> {
         steppers[i].step()?;
     }
     let per_core: Vec<RunStats> = steppers.into_iter().map(Stepper::finish).collect();
-    Ok(aggregate(per_core, &shared))
+    let agg = aggregate(per_core, &shared);
+    super::faults::check_strict(cfg, &agg)?;
+    Ok(agg)
 }
 
 /// Fold per-core stats plus the shared fabric's totals into one
@@ -187,6 +188,14 @@ fn aggregate(per_core: Vec<RunStats>, shared: &SharedFabric) -> RunStats {
     agg.fabric_hot_hits = fs.hot_hits;
     agg.fabric_hot_misses = fs.hot_misses;
     agg.fabric_writebacks = fs.writebacks;
+    agg.faults = fs.faults.clone();
+    agg.fault_nacks = fs.fault_nacks;
+    agg.fault_retries = fs.fault_retries;
+    agg.fault_retry_cycles = fs.fault_retry_cycles;
+    agg.fault_timeouts = fs.fault_timeouts;
+    agg.fault_degraded_cycles = fs.fault_degraded_cycles;
+    agg.fault_slow_path = fs.fault_slow_path;
+    agg.fault_max_stall = fs.fault_max_stall;
     // Per-core breakdown + fairness (requester-id attributed).
     agg.cluster_cores = n as u32;
     agg.core_cycles = per_core.iter().map(|s| s.cycles).collect();
@@ -195,12 +204,16 @@ fn aggregate(per_core: Vec<RunStats>, shared: &SharedFabric) -> RunStats {
     agg.core_fabric_p50 = Vec::with_capacity(n);
     agg.core_fabric_p99 = Vec::with_capacity(n);
     agg.core_fabric_stalls = Vec::with_capacity(n);
+    agg.core_fault_retries = Vec::with_capacity(n);
+    agg.core_fault_slow_path = Vec::with_capacity(n);
     for i in 0..n {
         let r = fs.requester(i as CoreId);
         agg.core_fabric_requests.push(r.requests);
         agg.core_fabric_p50.push(r.lat_p50);
         agg.core_fabric_p99.push(r.lat_p99);
         agg.core_fabric_stalls.push(r.queue_stall_cycles);
+        agg.core_fault_retries.push(r.fault_retries);
+        agg.core_fault_slow_path.push(r.fault_slow_path);
     }
     agg.cluster_fairness = jain_fairness(&agg.core_fabric_stalls);
     agg
@@ -253,6 +266,8 @@ mod tests {
         agg.core_fabric_p50.clear();
         agg.core_fabric_p99.clear();
         agg.core_fabric_stalls.clear();
+        agg.core_fault_retries.clear();
+        agg.core_fault_slow_path.clear();
         agg.cluster_fairness = 0.0;
         assert_eq!(agg, plain);
     }
@@ -336,6 +351,58 @@ mod tests {
         assert_eq!(agg.sched_policy, "mixed");
         assert_eq!(image_bytes(&progs[0].mem), image_bytes(&progs[1].mem));
         assert!(agg.sched_picks > 0);
+    }
+
+    #[test]
+    fn stall_free_cluster_aggregate_pins_fairness_to_one() {
+        // Satellite: the all-zero-stalls case must surface as exactly
+        // 1.0 in the *aggregate* too, not just the index function — two
+        // cores on an unconstrained fixed delayer never queue-stall, so
+        // the fairness column renders as perfectly fair by definition.
+        let cfg = SimConfig::nh_g().with_cores(2);
+        let mut progs = vec![
+            linked(&cfg, "gups", Scale::Tiny, 7, Variant::CoroAmuFull),
+            linked(&cfg, "gups", Scale::Tiny, 7, Variant::CoroAmuFull),
+        ];
+        let agg = run_cluster(&cfg, &mut progs).unwrap();
+        assert_eq!(agg.core_fabric_stalls, vec![0, 0], "fixed delayer never backpressures");
+        assert_eq!(agg.cluster_fairness, 1.0);
+    }
+
+    #[test]
+    fn faulted_cluster_is_deterministic_and_attributes_per_core() {
+        // Chaos on the shared fabric: two cores under the heavy preset
+        // must replay bit-identically (the fault draws ride the
+        // deterministic interleave), complete functionally, and the
+        // per-core retry/slow-path attribution must partition the
+        // shared totals.
+        let cfg = SimConfig::nh_g()
+            .with_fabric(FabricKind::Queued { depth: 8 })
+            .with_faults(crate::sim::faults::FaultConfig::heavy())
+            .with_cores(2);
+        let run_once = || {
+            let mut progs = vec![
+                linked(&cfg, "gups", Scale::Tiny, 7, Variant::CoroAmuFull),
+                linked(&cfg, "gups", Scale::Tiny, 7, Variant::CoroAmuFull),
+            ];
+            let agg = run_cluster(&cfg, &mut progs).unwrap();
+            let imgs: Vec<_> = progs.iter().map(|p| image_bytes(&p.mem)).collect();
+            (agg, imgs)
+        };
+        let (a, ia) = run_once();
+        let (b, ib) = run_once();
+        assert_eq!(a, b, "faulted cluster interleave must be deterministic");
+        assert_eq!(ia, ib);
+        assert_eq!(ia[0], ia[1], "faults changed results across cores");
+        assert_eq!(a.faults, "heavy");
+        assert!(a.fault_nacks > 0, "heavy chaos on a cluster produced no NACKs");
+        assert_eq!(a.core_fault_retries.len(), 2);
+        assert_eq!(
+            a.core_fault_retries.iter().sum::<u64>(),
+            a.fault_retries,
+            "retry attribution must partition the shared totals"
+        );
+        assert_eq!(a.core_fault_slow_path.iter().sum::<u64>(), a.fault_slow_path);
     }
 
     #[test]

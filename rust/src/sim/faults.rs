@@ -1,0 +1,739 @@
+//! Deterministic fault injection for the far fabric, plus the AMU-side
+//! resilience semantics that survive it.
+//!
+//! Every backend in [`sim::fabric`](super::fabric) is fault-free, but
+//! failure resilience is a named open challenge for disaggregated
+//! memory: remote pools suffer transient NACKs, latency storms, link
+//! degradation and outright blackouts that compute nodes must survive
+//! (Maruf & Chowdhury; Yelam). This module models exactly those four
+//! fault classes as a *decorator*: [`FaultyFabric`] wraps any
+//! [`FabricModel`] (so it composes with all four backends and with
+//! `SharedFabric`/clusters) and perturbs the request stream with draws
+//! from a seeded [`Rng`](crate::util::rng::Rng):
+//!
+//! * **Transient NACKs** — each attempt fails outright with probability
+//!   `nack_pct` (the request never reaches the wire);
+//! * **Latency spikes** — a seeded fraction `spike_pct` of served
+//!   requests completes `spike_mult`× later (incast / straggler storms);
+//! * **Degradation windows** — during the last `degrade_len` cycles of
+//!   every `degrade_period`, effective service collapses by
+//!   `degrade_factor` (link flaps, background reconstruction traffic);
+//! * **Blackouts** — during the last `blackout_len` cycles of every
+//!   `blackout_period`, every issue NACKs (pool failover).
+//!
+//! Paired with the fault classes are the requester-side resilience
+//! semantics the AMU stack relies on (`sim/amu.rs` / `sim/memsys.rs`):
+//! a per-request **timeout** (`timeout` cycles; a completion that would
+//! land later is abandoned and re-issued), **bounded retry** with
+//! deterministic exponential backoff (`backoff << attempt`, at most
+//! `retries` retries), and **graceful degradation** — a request that
+//! exhausts its budget completes via a configurable slow-path penalty
+//! (`slow_path` cycles; think RPC to a replica) instead of wedging the
+//! coroutine. Every `issue` therefore returns a finite completion cycle
+//! by construction: the AMU's analytic-completion contract (and its
+//! request-table slot reclamation) is preserved under arbitrary fault
+//! rates. Under `strict`, a run that needed the slow path fails after
+//! the fact ([`check_strict`]) instead of silently absorbing the hit.
+//!
+//! **Determinism.** All draws come from one generator seeded by
+//! `faults.seed`, consumed in issue order (the k-th attempt takes the
+//! next draws), and the windows are pure functions of the issue cycle —
+//! so a faulted run is a pure function of (config, issue stream), and
+//! snapshot-restores, fresh-engine reruns and cluster interleaves replay
+//! bit-identically (pinned by the differential suite). Faults default
+//! off, and the off path never constructs the decorator at all
+//! ([`build_far`]), so fault-free runs are bit-identical to pre-fault
+//! builds by construction.
+
+use super::fabric::{ensure_requester, CoreId, FabricKind, FabricModel, FabricStats};
+use super::memsys::AccessKind;
+use super::stats::RunStats;
+use crate::config::SimConfig;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+
+/// Default seed for the fault-injection draws (TOML `faults.seed`).
+pub const DEFAULT_FAULT_SEED: u64 = 0x5EED_FA17;
+
+/// Cap on the exponential-backoff shift (and thus on `retries`): keeps
+/// `backoff << attempt` far from overflow at any sane configuration.
+pub const MAX_RETRIES: u32 = 16;
+
+/// Fault-injection configuration (`[mem.fabric.faults]` in TOML,
+/// `--faults SPEC` on the CLI, `RunRequest::faults(..)` in the engine).
+/// The default is **off** — all classes disabled — which must stay
+/// bit-identical to a build without this module.
+///
+/// Probabilities are fractions in `[0, 1]`; periods/lengths/timeouts are
+/// cycles. `degrade`/`blackout` windows occupy the *last* `len` cycles
+/// of each `period`, so the start of a run is never inside a window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Per-attempt transient-failure probability (0 = off).
+    pub nack_pct: f64,
+    /// Fraction of served requests hit by a latency spike (0 = off).
+    pub spike_pct: f64,
+    /// Latency multiplier for spiked requests.
+    pub spike_mult: u32,
+    /// Degradation-window cadence (0 = off) and length in cycles.
+    pub degrade_period: u64,
+    pub degrade_len: u64,
+    /// Latency inflation inside a degradation window (the bandwidth
+    /// collapse, charged as service-time inflation).
+    pub degrade_factor: u32,
+    /// Blackout-window cadence (0 = off) and length in cycles.
+    pub blackout_period: u64,
+    pub blackout_len: u64,
+    /// Per-request timeout (0 = off): a completion later than
+    /// `issue + timeout` is abandoned and retried.
+    pub timeout: u64,
+    /// Retry budget after the first attempt.
+    pub retries: u32,
+    /// Base backoff; retry k waits `backoff << k` cycles.
+    pub backoff: u64,
+    /// Slow-path completion penalty once the budget is exhausted.
+    pub slow_path: u64,
+    /// Hard-fail the run if any request needed the slow path.
+    pub strict: bool,
+    /// Seed for the fault draws.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+/// Format a fraction as the percentage spelling `parse` accepts.
+fn fmt_pct(p: f64) -> String {
+    let v = p * 100.0;
+    if (v - v.round()).abs() < 1e-9 {
+        format!("{:.0}", v.round())
+    } else {
+        format!("{v}")
+    }
+}
+
+fn parse_pct(p: &str) -> Result<f64> {
+    let p = p.strip_suffix('%').unwrap_or(p);
+    match p.parse::<f64>() {
+        Ok(v) if v > 0.0 && v <= 100.0 => Ok(v / 100.0),
+        _ => bail!("fault percentage must be in (0, 100], got '{p}'"),
+    }
+}
+
+impl FaultConfig {
+    /// Everything disabled — the session default, bit-identical to a
+    /// fault-free build (the decorator is never constructed).
+    pub fn off() -> Self {
+        FaultConfig {
+            nack_pct: 0.0,
+            spike_pct: 0.0,
+            spike_mult: 1,
+            degrade_period: 0,
+            degrade_len: 0,
+            degrade_factor: 1,
+            blackout_period: 0,
+            blackout_len: 0,
+            timeout: 0,
+            retries: 0,
+            backoff: 0,
+            slow_path: 0,
+            strict: false,
+            seed: DEFAULT_FAULT_SEED,
+        }
+    }
+
+    /// Occasional transient failures and small spikes: 1% NACKs, 5% of
+    /// requests 4× slower, 3 retries at 64-cycle base backoff.
+    pub fn mild() -> Self {
+        FaultConfig {
+            nack_pct: 0.01,
+            spike_pct: 0.05,
+            spike_mult: 4,
+            retries: 3,
+            backoff: 64,
+            slow_path: 16_384,
+            ..Self::off()
+        }
+    }
+
+    /// The chaos point: 5% NACKs, 15% of requests 8× slower, periodic
+    /// 4× degradation windows, periodic blackouts, and a 32 Ki-cycle
+    /// request timeout.
+    pub fn heavy() -> Self {
+        FaultConfig {
+            nack_pct: 0.05,
+            spike_pct: 0.15,
+            spike_mult: 8,
+            degrade_period: 65_536,
+            degrade_len: 16_384,
+            degrade_factor: 4,
+            blackout_period: 262_144,
+            blackout_len: 8_192,
+            timeout: 32_768,
+            retries: 4,
+            backoff: 128,
+            slow_path: 32_768,
+            ..Self::off()
+        }
+    }
+
+    /// Transient NACKs only, at fraction `p` (`nack:PCT` on the CLI).
+    pub fn nack(p: f64) -> Self {
+        FaultConfig { nack_pct: p, retries: 3, backoff: 64, slow_path: 16_384, ..Self::off() }
+    }
+
+    /// Latency spikes only, on fraction `p` of requests at 8×, with a
+    /// timeout that catches the worst of them (`spike:PCT`).
+    pub fn spike(p: f64) -> Self {
+        FaultConfig {
+            spike_pct: p,
+            spike_mult: 8,
+            timeout: 16_384,
+            retries: 2,
+            backoff: 64,
+            slow_path: 32_768,
+            ..Self::off()
+        }
+    }
+
+    /// Periodic degradation windows only (`degrade`).
+    pub fn degrade() -> Self {
+        FaultConfig {
+            degrade_period: 65_536,
+            degrade_len: 16_384,
+            degrade_factor: 4,
+            ..Self::off()
+        }
+    }
+
+    /// Periodic blackout windows only (`blackout`).
+    pub fn blackout() -> Self {
+        FaultConfig {
+            blackout_period: 131_072,
+            blackout_len: 8_192,
+            retries: 4,
+            backoff: 256,
+            slow_path: 16_384,
+            ..Self::off()
+        }
+    }
+
+    /// Whether any fault class (or the timeout) is active — i.e. whether
+    /// [`build_far`] wraps the backend at all.
+    pub fn enabled(&self) -> bool {
+        self.nack_pct > 0.0
+            || self.spike_pct > 0.0
+            || self.degrade_period > 0
+            || self.blackout_period > 0
+            || self.timeout > 0
+    }
+
+    /// Parse a CLI/TOML spec:
+    /// `off|mild|heavy|degrade|blackout|nack:PCT|spike:PCT`.
+    pub fn parse(s: &str) -> Result<FaultConfig> {
+        let s = s.trim().to_ascii_lowercase();
+        if let Some(p) = s.strip_prefix("nack:") {
+            return Ok(Self::nack(parse_pct(p)?));
+        }
+        if let Some(p) = s.strip_prefix("spike:") {
+            return Ok(Self::spike(parse_pct(p)?));
+        }
+        Ok(match s.as_str() {
+            "off" | "none" => Self::off(),
+            "mild" => Self::mild(),
+            "heavy" => Self::heavy(),
+            "degrade" => Self::degrade(),
+            "blackout" => Self::blackout(),
+            other => bail!(
+                "unknown fault spec '{other}' (off|mild|heavy|degrade|blackout|nack:PCT|spike:PCT)"
+            ),
+        })
+    }
+
+    /// Display label (CLI, tables, `RunStats::faults`). Round-trips
+    /// through [`FaultConfig::parse`] for every parseable spec; a config
+    /// assembled key-by-key in TOML that matches no spec is `custom`.
+    pub fn label(&self) -> String {
+        if !self.enabled() {
+            return "off".into();
+        }
+        if *self == Self::mild() {
+            return "mild".into();
+        }
+        if *self == Self::heavy() {
+            return "heavy".into();
+        }
+        if *self == Self::nack(self.nack_pct) {
+            return format!("nack:{}", fmt_pct(self.nack_pct));
+        }
+        if *self == Self::spike(self.spike_pct) {
+            return format!("spike:{}", fmt_pct(self.spike_pct));
+        }
+        if *self == Self::degrade() {
+            return "degrade".into();
+        }
+        if *self == Self::blackout() {
+            return "blackout".into();
+        }
+        "custom".into()
+    }
+
+    /// Reject configurations the injector cannot execute sensibly
+    /// (called from `SimConfig::validate` with the full key path).
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [("nack", self.nack_pct), ("spike", self.spike_pct)] {
+            ensure!(
+                p.is_finite() && (0.0..=1.0).contains(&p),
+                "mem.fabric.faults.{name} must be a fraction in [0, 1], got {p}"
+            );
+        }
+        ensure!(self.spike_mult >= 1, "mem.fabric.faults.spike_mult must be >= 1");
+        ensure!(self.degrade_factor >= 1, "mem.fabric.faults.degrade_factor must be >= 1");
+        for (name, period, len) in [
+            ("degrade", self.degrade_period, self.degrade_len),
+            ("blackout", self.blackout_period, self.blackout_len),
+        ] {
+            if period > 0 {
+                ensure!(
+                    len >= 1 && len <= period,
+                    "mem.fabric.faults.{name}_len must be in [1, {name}_period] \
+                     (period {period}, len {len})"
+                );
+            }
+        }
+        ensure!(
+            self.retries <= MAX_RETRIES,
+            "mem.fabric.faults.retries must be <= {MAX_RETRIES}, got {}",
+            self.retries
+        );
+        Ok(())
+    }
+}
+
+/// Is `t` inside the periodic window occupying the last `len` cycles of
+/// each `period`? (`period == 0` disables the window entirely.)
+fn in_window(t: u64, period: u64, len: u64) -> bool {
+    period > 0 && t % period >= period - len.min(period)
+}
+
+/// The fault-injecting decorator. Wraps any [`FabricModel`] and runs the
+/// full timeout/retry/backoff/slow-path loop around the inner backend,
+/// so every `issue` returns a finite completion cycle — no coroutine can
+/// wedge on a faulted request, regardless of fault rates. Retried
+/// attempts that reached the wire count as real inner-fabric requests
+/// (retransmissions consume fabric resources), while NACKed attempts
+/// never touch it.
+#[derive(Debug)]
+pub struct FaultyFabric {
+    inner: Box<dyn FabricModel>,
+    cfg: FaultConfig,
+    rng: Rng,
+    nacks: u64,
+    retries: u64,
+    retry_cycles: u64,
+    timeouts: u64,
+    degraded_cycles: u64,
+    slow_path: u64,
+    max_stall: u64,
+    /// Per-requester (retries, slow-path completions) attribution.
+    per_req: Vec<(u64, u64)>,
+}
+
+impl FaultyFabric {
+    pub fn new(inner: Box<dyn FabricModel>, cfg: FaultConfig) -> FaultyFabric {
+        FaultyFabric {
+            inner,
+            rng: Rng::new(cfg.seed),
+            cfg,
+            nacks: 0,
+            retries: 0,
+            retry_cycles: 0,
+            timeouts: 0,
+            degraded_cycles: 0,
+            slow_path: 0,
+            max_stall: 0,
+            per_req: Vec::new(),
+        }
+    }
+
+    fn per_req(&mut self, requester: CoreId) -> &mut (u64, u64) {
+        let slot = requester as usize;
+        if self.per_req.len() <= slot {
+            self.per_req.resize(slot + 1, (0, 0));
+        }
+        &mut self.per_req[slot]
+    }
+
+    /// Charge the deterministic exponential backoff for retry number
+    /// `attempt` and return the wait.
+    fn backoff(&mut self, attempt: u32, requester: CoreId) -> u64 {
+        let wait = self.cfg.backoff.max(1) << attempt.min(MAX_RETRIES);
+        self.retries += 1;
+        self.retry_cycles += wait;
+        self.per_req(requester).0 += 1;
+        wait
+    }
+
+    /// Graceful degradation: the retry budget is exhausted, so the
+    /// request completes via the slow-path penalty from cycle `at`.
+    fn slow_path_complete(&mut self, at: u64, requester: CoreId) -> u64 {
+        self.slow_path += 1;
+        self.per_req(requester).1 += 1;
+        at + self.cfg.slow_path.max(1)
+    }
+}
+
+impl FabricModel for FaultyFabric {
+    fn kind(&self) -> FabricKind {
+        self.inner.kind()
+    }
+
+    fn issue(&mut self, t: u64, addr: u64, lines: u64, kind: AccessKind, requester: CoreId) -> u64 {
+        let cfg = self.cfg;
+        let mut attempt: u32 = 0;
+        // Cycle the current attempt issues at (advances with each
+        // timeout wait and backoff).
+        let mut at = t;
+        let completion = loop {
+            // NACK classes first: a blackout window fails every issue;
+            // otherwise the transient-failure draw decides. Neither
+            // reaches the inner fabric.
+            let nacked = in_window(at, cfg.blackout_period, cfg.blackout_len)
+                || (cfg.nack_pct > 0.0 && self.rng.f64() < cfg.nack_pct);
+            if nacked {
+                self.nacks += 1;
+                if attempt >= cfg.retries {
+                    break self.slow_path_complete(at, requester);
+                }
+                at += self.backoff(attempt, requester);
+                attempt += 1;
+                continue;
+            }
+            let mut done = self.inner.issue(at, addr, lines, kind, requester);
+            if cfg.spike_pct > 0.0 && self.rng.f64() < cfg.spike_pct {
+                done += (done - at) * (cfg.spike_mult.max(1) as u64 - 1);
+            }
+            if in_window(at, cfg.degrade_period, cfg.degrade_len) {
+                let extra = (done - at) * (cfg.degrade_factor.max(1) as u64 - 1);
+                self.degraded_cycles += extra;
+                done += extra;
+            }
+            if cfg.timeout > 0 && done - at > cfg.timeout {
+                // The requester gave up waiting at the timeout; the
+                // abandoned attempt still consumed inner-fabric
+                // resources (it was on the wire).
+                self.timeouts += 1;
+                if attempt >= cfg.retries {
+                    break self.slow_path_complete(at + cfg.timeout, requester);
+                }
+                at += cfg.timeout;
+                at += self.backoff(attempt, requester);
+                attempt += 1;
+                continue;
+            }
+            break done;
+        };
+        self.max_stall = self.max_stall.max(completion - t);
+        completion
+    }
+
+    fn lines_transferred(&self) -> u64 {
+        self.inner.lines_transferred()
+    }
+
+    fn mlp(&self, total_cycles: u64) -> (f64, f64) {
+        self.inner.mlp(total_cycles)
+    }
+
+    fn stats(&self) -> FabricStats {
+        let mut st = self.inner.stats();
+        st.faults = self.cfg.label();
+        st.fault_nacks = self.nacks;
+        st.fault_retries = self.retries;
+        st.fault_retry_cycles = self.retry_cycles;
+        st.fault_timeouts = self.timeouts;
+        st.fault_degraded_cycles = self.degraded_cycles;
+        st.fault_slow_path = self.slow_path;
+        st.fault_max_stall = self.max_stall;
+        for (slot, &(retries, slow)) in self.per_req.iter().enumerate() {
+            let r = ensure_requester(&mut st.requesters, slot);
+            r.fault_retries = retries;
+            r.fault_slow_path = slow;
+        }
+        st
+    }
+}
+
+/// Build the far fabric `cfg` selects, wrapped in the fault decorator
+/// exactly when `[mem.fabric.faults]` enables a fault class — the one
+/// construction path `MemSys::new` and `sim::cluster` share, so
+/// faults-off runs never construct the decorator (bit-identity by
+/// construction) and clusters compose automatically.
+pub fn build_far(cfg: &SimConfig, window: usize) -> Box<dyn FabricModel> {
+    let inner = cfg.mem.fabric.kind.build(
+        cfg.far_latency_cycles(),
+        cfg.mem.far_bw_bytes_per_cycle,
+        true,
+        window,
+        cfg.mem.fabric.seed,
+    );
+    let f = &cfg.mem.fabric.faults;
+    if f.enabled() {
+        Box::new(FaultyFabric::new(inner, *f))
+    } else {
+        inner
+    }
+}
+
+/// Enforce `faults.strict` after a run: under strict mode a request that
+/// exhausted its retry budget (and completed via the slow path) is a
+/// hard error instead of a silently absorbed penalty.
+pub fn check_strict(cfg: &SimConfig, stats: &RunStats) -> Result<()> {
+    if cfg.mem.fabric.faults.strict && stats.fault_slow_path > 0 {
+        bail!(
+            "fault injection: {} far request(s) exhausted the retry budget \
+             under [mem.fabric.faults] strict",
+            stats.fault_slow_path
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fabric::RequesterStats;
+
+    fn inner(kind: FabricKind) -> Box<dyn FabricModel> {
+        kind.build(100, 16.0, true, 64, 1)
+    }
+
+    #[test]
+    fn spec_parse_label_roundtrip() {
+        for spec in ["off", "mild", "heavy", "degrade", "blackout", "nack:2", "spike:15"] {
+            let c = FaultConfig::parse(spec).unwrap();
+            assert_eq!(c.label(), spec, "label must round-trip for {spec}");
+            assert_eq!(FaultConfig::parse(&c.label()).unwrap(), c);
+        }
+        assert_eq!(FaultConfig::parse("none").unwrap(), FaultConfig::off());
+        assert_eq!(FaultConfig::parse("nack:2%").unwrap(), FaultConfig::nack(0.02));
+        assert!(!FaultConfig::off().enabled());
+        assert!(FaultConfig::mild().enabled());
+        assert!(FaultConfig::parse("storm").is_err());
+        assert!(FaultConfig::parse("nack:0").is_err());
+        assert!(FaultConfig::parse("nack:101").is_err());
+        assert!(FaultConfig::parse("spike:lots").is_err());
+        assert_eq!(FaultConfig::default(), FaultConfig::off());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        assert!(FaultConfig::off().validate().is_ok());
+        assert!(FaultConfig::heavy().validate().is_ok());
+        let mut c = FaultConfig::off();
+        c.nack_pct = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = FaultConfig::off();
+        c.spike_pct = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = FaultConfig::degrade();
+        c.degrade_len = 0;
+        assert!(c.validate().is_err(), "a period with no window length is meaningless");
+        let mut c = FaultConfig::degrade();
+        c.degrade_len = c.degrade_period + 1;
+        assert!(c.validate().is_err(), "window longer than its period");
+        let mut c = FaultConfig::blackout();
+        c.retries = MAX_RETRIES + 1;
+        assert!(c.validate().is_err());
+        let mut c = FaultConfig::off();
+        c.spike_mult = 0;
+        assert!(c.validate().is_err());
+    }
+
+    /// The all-NACK worst case is fully pinned: with `nack_pct = 1`,
+    /// retries 3 and base backoff 64, every request burns the whole
+    /// budget (backoffs 64+128+256) and completes via the slow path —
+    /// never touching the inner fabric and never wedging.
+    #[test]
+    fn all_nacks_exhaust_the_budget_onto_the_slow_path() {
+        let mut f = FaultyFabric::new(inner(FabricKind::FixedDelay), FaultConfig::nack(1.0));
+        let done = f.issue(0, 0, 1, AccessKind::Load, 0);
+        assert_eq!(done, 64 + 128 + 256 + 16_384, "3 backoffs then the slow path");
+        let st = f.stats();
+        assert_eq!(st.fault_nacks, 4, "initial attempt + 3 retries all NACKed");
+        assert_eq!(st.fault_retries, 3);
+        assert_eq!(st.fault_retry_cycles, 448);
+        assert_eq!(st.fault_slow_path, 1);
+        assert_eq!(st.fault_max_stall, done);
+        assert_eq!(st.requests, 0, "NACKed attempts never reach the wire");
+        assert_eq!(f.lines_transferred(), 0);
+        assert_eq!(st.faults, "nack:100");
+    }
+
+    /// Timeouts retry and then degrade gracefully: with a timeout below
+    /// the backend's base latency every attempt is abandoned at
+    /// `issue + timeout`, and the budget exhausts onto the slow path at
+    /// a fully pinned cycle.
+    #[test]
+    fn timeouts_retry_then_take_the_slow_path() {
+        let cfg = FaultConfig {
+            timeout: 50,
+            retries: 1,
+            backoff: 16,
+            slow_path: 1000,
+            ..FaultConfig::off()
+        };
+        let mut f = FaultyFabric::new(inner(FabricKind::FixedDelay), cfg);
+        // Attempt 0 at t=0 completes at 104 > 50: timeout, wait 50+16.
+        // Attempt 1 at t=66 completes at 170 (104 past 66): timeout,
+        // budget exhausted -> slow path from 66+50.
+        let done = f.issue(0, 0, 1, AccessKind::Load, 0);
+        assert_eq!(done, 66 + 50 + 1000);
+        let st = f.stats();
+        assert_eq!(st.fault_timeouts, 2);
+        assert_eq!(st.fault_retries, 1);
+        assert_eq!(st.fault_retry_cycles, 16);
+        assert_eq!(st.fault_slow_path, 1);
+        assert_eq!(st.requests, 2, "abandoned attempts still consumed the wire");
+    }
+
+    /// Blackout windows NACK everything inside them; requests outside
+    /// pass through untouched (no NACK draw is even configured).
+    #[test]
+    fn blackout_windows_nack_and_clear_air_passes() {
+        let cfg = FaultConfig::blackout(); // period 131072, last 8192 cycles
+        let mut f = FaultyFabric::new(inner(FabricKind::FixedDelay), cfg);
+        let clear = f.issue(0, 0, 1, AccessKind::Load, 0);
+        assert_eq!(clear, 104, "outside the window the decorator is transparent");
+        assert_eq!(f.stats().fault_nacks, 0);
+        // Deep inside the window every retry lands in it too (total
+        // backoff 256+512+1024+2048 < 8192), so the budget exhausts.
+        let start = 131_072 - 8_192;
+        let done = f.issue(start, 0, 1, AccessKind::Load, 0);
+        assert_eq!(done, start + 256 + 512 + 1024 + 2048 + 16_384);
+        let st = f.stats();
+        assert_eq!(st.fault_nacks, 5);
+        assert_eq!(st.fault_slow_path, 1);
+        // Just before the window: untouched again.
+        let ok = f.issue(40_000, 0, 1, AccessKind::Load, 0);
+        assert_eq!(ok, 40_104);
+    }
+
+    /// Degradation windows inflate service time by the factor and charge
+    /// the inflation to `fault_degraded_cycles`; outside the window the
+    /// decorator is transparent.
+    #[test]
+    fn degrade_windows_inflate_and_count() {
+        let mut f = FaultyFabric::new(inner(FabricKind::FixedDelay), FaultConfig::degrade());
+        let clear = f.issue(0, 0, 1, AccessKind::Load, 0);
+        assert_eq!(clear, 104);
+        assert_eq!(f.stats().fault_degraded_cycles, 0);
+        let start = 65_536 - 16_384; // window start
+        let done = f.issue(start, 0, 1, AccessKind::Load, 0);
+        assert_eq!(done, start + 104 * 4, "4x collapse inside the window");
+        let st = f.stats();
+        assert_eq!(st.fault_degraded_cycles, 104 * 3);
+        assert_eq!(st.fault_nacks + st.fault_slow_path, 0, "degradation never NACKs");
+    }
+
+    /// Latency spikes hit the seeded fraction: with `spike:50` both
+    /// spiked (8x) and clean completions appear, deterministically.
+    #[test]
+    fn spikes_hit_a_seeded_fraction_deterministically() {
+        let run = || {
+            let mut f = FaultyFabric::new(inner(FabricKind::FixedDelay), FaultConfig::spike(0.5));
+            (0..100u64).map(|k| f.issue(k * 10_000, 0, 1, AccessKind::Load, 0) - k * 10_000).collect::<Vec<_>>()
+        };
+        let a = run();
+        assert_eq!(a, run(), "same seed, same spikes");
+        let clean = a.iter().filter(|&&l| l == 104).count();
+        let spiked = a.iter().filter(|&&l| l == 104 * 8).count();
+        assert_eq!(clean + spiked, 100, "every request is either clean or spiked 8x");
+        assert!(clean > 10 && spiked > 10, "both classes present ({clean}/{spiked})");
+    }
+
+    /// The decorator composes with a stateful backend: inner queue stats
+    /// survive the overlay, and per-requester fault attribution
+    /// partitions the totals.
+    #[test]
+    fn decorator_composes_and_attributes_per_requester() {
+        let cfg = FaultConfig::nack(1.0);
+        let mut f = FaultyFabric::new(inner(FabricKind::Queued { depth: 2 }), cfg);
+        f.issue(0, 0, 1, AccessKind::Load, 0);
+        f.issue(0, 0, 1, AccessKind::Load, 1);
+        let st = f.stats();
+        assert_eq!(st.kind, "queued:2", "inner identity survives the overlay");
+        assert_eq!(st.fault_slow_path, 2);
+        assert_eq!(st.requester(0).fault_retries, 3);
+        assert_eq!(st.requester(1).fault_slow_path, 1);
+        let retries: u64 = st.requesters.iter().map(|r| r.fault_retries).sum();
+        assert_eq!(retries, st.fault_retries, "retry attribution partitions the total");
+        assert_eq!(st.requester(9), RequesterStats::default());
+    }
+
+    /// Replay determinism over every backend under the chaos preset:
+    /// the faulted fabric stays a pure function of (config, stream).
+    #[test]
+    fn faulted_backends_are_deterministic_replay_functions() {
+        use crate::util::rng::Rng;
+        for k in FabricKind::ALL {
+            let mut rng = Rng::new(7);
+            let stream: Vec<(u64, u64)> = (0..300)
+                .scan(0u64, |t, _| {
+                    *t += rng.below(2_000);
+                    Some((*t, rng.below(1 << 18) * 64))
+                })
+                .collect();
+            let run = |stream: &[(u64, u64)]| {
+                let mut f = FaultyFabric::new(k.build(600, 16.0, true, 64, 3), FaultConfig::heavy());
+                let cs: Vec<u64> =
+                    stream.iter().map(|&(t, a)| f.issue(t, a, 1, AccessKind::Load, 0)).collect();
+                (cs, f.stats())
+            };
+            let a = run(&stream);
+            let b = run(&stream);
+            assert_eq!(a, b, "{}: faulted replay diverged", k.label());
+            assert!(
+                a.0.iter().zip(&stream).all(|(c, (t, _))| c > t),
+                "{}: every completion is finite and after its issue",
+                k.label()
+            );
+            assert!(a.1.fault_nacks > 0, "{}: heavy chaos must actually fault", k.label());
+        }
+    }
+
+    /// `build_far` wraps exactly when faults are enabled: the off path
+    /// returns the bare backend (bit-identity by construction).
+    #[test]
+    fn build_far_wraps_only_when_enabled() {
+        let cfg = SimConfig::nh_g();
+        let mut bare = build_far(&cfg, 64);
+        bare.issue(0, 0, 1, AccessKind::Load, 0);
+        assert_eq!(bare.stats().faults, "", "fault-free runs carry no fault label");
+        let faulted_cfg = SimConfig::nh_g().with_faults(FaultConfig::mild());
+        let mut wrapped = build_far(&faulted_cfg, 64);
+        wrapped.issue(0, 0, 1, AccessKind::Load, 0);
+        let st = wrapped.stats();
+        assert_eq!(st.faults, "mild");
+        assert_eq!(wrapped.kind(), FabricKind::FixedDelay, "inner kind shows through");
+    }
+
+    #[test]
+    fn strict_mode_flags_slow_path_completions() {
+        let cfg = SimConfig::nh_g();
+        let mut stats = RunStats::default();
+        assert!(check_strict(&cfg, &stats).is_ok());
+        stats.fault_slow_path = 2;
+        assert!(check_strict(&cfg, &stats).is_ok(), "strict off ignores slow paths");
+        let mut strict = FaultConfig::mild();
+        strict.strict = true;
+        let cfg = SimConfig::nh_g().with_faults(strict);
+        assert!(check_strict(&cfg, &RunStats::default()).is_ok());
+        let err = check_strict(&cfg, &stats).unwrap_err().to_string();
+        assert!(err.contains("retry budget"), "{err}");
+        assert!(err.contains('2'), "{err}");
+    }
+}

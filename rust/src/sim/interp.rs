@@ -254,6 +254,14 @@ impl<'p> Machine<'p> {
         stats.fabric_hot_hits = fs.hot_hits;
         stats.fabric_hot_misses = fs.hot_misses;
         stats.fabric_writebacks = fs.writebacks;
+        stats.faults = fs.faults.clone();
+        stats.fault_nacks = fs.fault_nacks;
+        stats.fault_retries = fs.fault_retries;
+        stats.fault_retry_cycles = fs.fault_retry_cycles;
+        stats.fault_timeouts = fs.fault_timeouts;
+        stats.fault_degraded_cycles = fs.fault_degraded_cycles;
+        stats.fault_slow_path = fs.fault_slow_path;
+        stats.fault_max_stall = fs.fault_max_stall;
         stats.aloads = self.amu.stat_aloads;
         stats.astores = self.amu.stat_astores;
         stats.amu_max_inflight = self.amu.stat_max_inflight;
@@ -658,7 +666,9 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
     while !s.halted() {
         s.step()?;
     }
-    Ok(s.finish())
+    let stats = s.finish();
+    super::faults::check_strict(cfg, &stats)?;
+    Ok(stats)
 }
 
 /// Execute `prog` on the reference (tree-walking) interpreter. This is
@@ -884,7 +894,9 @@ pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
         }
     }
 
-    Ok(m.finish())
+    let stats = m.finish();
+    super::faults::check_strict(cfg, &stats)?;
+    Ok(stats)
 }
 
 #[cfg(test)]

@@ -103,13 +103,14 @@ pub struct MemSys {
 
 impl MemSys {
     pub fn new(cfg: &SimConfig) -> Self {
-        let far = SharedFabric::new(cfg.mem.fabric.kind.build(
-            cfg.far_latency_cycles(),
-            cfg.mem.far_bw_bytes_per_cycle,
-            true,
-            Self::far_window(cfg),
-            cfg.mem.fabric.seed,
-        ));
+        // `build_far` wraps the selected backend in the fault-injection
+        // decorator exactly when `[mem.fabric.faults]` enables a fault
+        // class — faults-off runs get the bare backend, so they stay
+        // bit-identical to pre-fault builds by construction. The
+        // timeout/retry/backoff/slow-path resilience loop lives inside
+        // the decorator, so every far request this memory system (and
+        // the AMU behind it) issues still completes at a finite cycle.
+        let far = SharedFabric::new(super::faults::build_far(cfg, Self::far_window(cfg)));
         Self::with_far(cfg, far)
     }
 

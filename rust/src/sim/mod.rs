@@ -8,10 +8,12 @@
 //! fixed delayer, queued/congested link, latency distributions, tiered
 //! hot-page cache — `SimConfig::mem.fabric`), [`bpu`]
 //! (TAGE/ITTAGE/BPT), [`amu`] (Request Table / Finished Queue / groups /
-//! await-asignal) and [`sched`] (pluggable coroutine-resume policies over
-//! the Finished Queue, `SimConfig::sched_policy`). See `DESIGN.md` §1
+//! await-asignal), [`sched`] (pluggable coroutine-resume policies over
+//! the Finished Queue, `SimConfig::sched_policy`) and [`faults`]
+//! (deterministic fault injection on the far fabric plus timeout/retry
+//! resilience, `SimConfig::mem.fabric.faults`). See `DESIGN.md` §1
 //! (repo root) for the substitution argument, §8 for the scheduler
-//! subsystem and §9 for the fabric subsystem.
+//! subsystem, §9 for the fabric subsystem and §11 for fault injection.
 
 pub mod amu;
 pub mod bpu;
@@ -20,6 +22,7 @@ pub mod cluster;
 pub mod core;
 pub mod decode;
 pub mod fabric;
+pub mod faults;
 pub mod interp;
 pub mod mem;
 pub mod memsys;
@@ -29,6 +32,7 @@ pub mod stats;
 
 pub use decode::DecodedFunc;
 pub use fabric::FabricKind;
+pub use faults::FaultConfig;
 pub use interp::{mix64, run, run_reference, Program};
 pub use mem::MemImage;
 pub use sched::SchedPolicyKind;
@@ -259,6 +263,63 @@ mod tests {
             st.fabric_p99,
             so.fabric_p99
         );
+    }
+
+    #[test]
+    fn faults_are_timing_only_knobs() {
+        // Fault injection moves cycles, never results: under every spec
+        // memory contents must match the serial fault-free baseline
+        // bit-for-bit, every coroutine completes (no wedging), and the
+        // resilience counters land in the stats.
+        let (_, baseline) = run_variant(Variant::Serial, 64, 1 << 12);
+        for spec in ["mild", "heavy", "nack:20", "blackout"] {
+            let fc = faults::FaultConfig::parse(spec).unwrap();
+            let cfg = SimConfig::nh_g().with_faults(fc);
+            let (st, out) = run_variant_cfg(&cfg, Variant::CoroAmuFull, 32, 64, 1 << 12);
+            assert_eq!(out, baseline, "{spec}: faults changed results");
+            assert_eq!(st.faults, spec, "{spec}: fault provenance missing from stats");
+            assert!(
+                st.fault_nacks + st.fault_timeouts + st.fault_retries > 0
+                    || st.fault_max_stall > 0,
+                "{spec}: chaos config produced zero fault events"
+            );
+        }
+        // Heavy chaos costs cycles relative to the fault-free run.
+        let clean = run_variant(Variant::CoroAmuFull, 200, 1 << 14).0;
+        let chaotic_cfg = SimConfig::nh_g().with_faults(faults::FaultConfig::heavy());
+        let (chaos, _) = run_variant_cfg(&chaotic_cfg, Variant::CoroAmuFull, 32, 200, 1 << 14);
+        assert!(chaos.cycles > clean.cycles, "heavy faults must cost cycles");
+        assert_eq!(clean.faults, "", "fault-free runs carry no fault label");
+        assert_eq!(clean.fault_nacks + clean.fault_slow_path, 0);
+    }
+
+    #[test]
+    fn strict_faults_fail_runs_that_needed_the_slow_path() {
+        // nack:100 forces every far request onto the slow path; under
+        // strict that must surface as a hard error, while the default
+        // absorbs it gracefully.
+        let mut fc = faults::FaultConfig::nack(1.0);
+        let lenient = SimConfig::nh_g().with_faults(fc);
+        let (st, out) = run_variant_cfg(&lenient, Variant::CoroAmuFull, 32, 32, 1 << 10);
+        let (_, baseline) = run_variant(Variant::Serial, 32, 1 << 10);
+        assert_eq!(out, baseline, "slow-path completions must not change results");
+        assert!(st.fault_slow_path > 0);
+        fc.strict = true;
+        let strict = SimConfig::nh_g().with_faults(fc);
+        let engine = Engine::new(strict);
+        let mut mem = MemImage::new();
+        let tab = mem.alloc("tab", AddrSpace::Remote, (1u64 << 10) * 8);
+        let inst = Instance {
+            kernel: gups_kernel(),
+            mem,
+            params: vec![tab as i64, ((1u64 << 10) - 1) as i64, 32],
+            check: std::sync::Arc::new(|_| Ok(())),
+            default_tasks: 32,
+        };
+        let err = engine
+            .run_instance(inst, &Variant::CoroAmuFull.opts(32))
+            .expect_err("strict must fail a run that exhausted retry budgets");
+        assert!(err.to_string().contains("retry budget"), "{err}");
     }
 
     #[test]

@@ -112,6 +112,32 @@ pub struct RunStats {
     /// everything; defined as 1.0 when no core stalled at all).
     /// 0.0 on single-core runs (no cluster).
     pub cluster_fairness: f64,
+    // -- Fault injection (sim::faults): resilience counters from the
+    // FaultyFabric decorator. Fault-free runs (the default) leave all of
+    // these at their defaults (empty label / 0), so bit-equality over
+    // `RunStats` is unaffected by the fault subsystem existing.
+    /// Label of the active fault spec (`FaultConfig::label`; empty when
+    /// faults are off).
+    pub faults: String,
+    /// Attempts NACKed (transient failures + blackout windows).
+    pub fault_nacks: u64,
+    /// Retries charged (bounded by the per-request budget).
+    pub fault_retries: u64,
+    /// Cycles spent in exponential backoff across all retries.
+    pub fault_retry_cycles: u64,
+    /// Attempts abandoned at the per-request timeout.
+    pub fault_timeouts: u64,
+    /// Extra service cycles charged inside degradation windows.
+    pub fault_degraded_cycles: u64,
+    /// Requests that exhausted the retry budget and completed via the
+    /// slow path (a hard error under `faults.strict`).
+    pub fault_slow_path: u64,
+    /// Worst issue-to-completion stall of any single far request.
+    pub fault_max_stall: u64,
+    /// Per-core retry / slow-path attribution on cluster runs
+    /// (requester-id attributed; empty on single-core runs).
+    pub core_fault_retries: Vec<u64>,
+    pub core_fault_slow_path: Vec<u64>,
 }
 
 /// Default reorder window of [`IntervalUnion`] (see

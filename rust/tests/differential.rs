@@ -219,6 +219,120 @@ fn proptest_fabrics_deterministic_across_restore_and_reruns() {
     );
 }
 
+/// The fault-subsystem acceptance differential: with fault injection
+/// off — whether left at the default, pinned in the session config, or
+/// requested per-run as an explicit `FaultConfig::off()` — the simulator
+/// is bit-identical to the seed: all five compile variants, all three
+/// interpreter paths (decoded-fused / decoded-unfused / reference),
+/// cycles + every stat + memory. Off is structural (the `FaultyFabric`
+/// decorator is never even constructed), and this pins it.
+#[test]
+fn faults_off_is_bit_identical_to_seed() {
+    use coroamu::sim::faults::FaultConfig;
+    for v in Variant::ALL {
+        // Three paths under an explicitly pinned faults-off session.
+        assert_paths_agree_under(
+            SimConfig::nh_g().with_faults(FaultConfig::off()),
+            "gups",
+            v,
+            Scale::Tiny,
+            7,
+        );
+        // Explicit request == the session default, stat for stat.
+        let req = || RunRequest::new("gups", v).scale(Scale::Tiny).seed(7);
+        let base = Engine::new(SimConfig::nh_g()).run(req()).unwrap();
+        let off = Engine::new(SimConfig::nh_g()).run(req().faults(FaultConfig::off())).unwrap();
+        assert_eq!(
+            base.stats,
+            off.stats,
+            "{}: explicit faults=off diverges from the fault-free default",
+            v.label()
+        );
+        assert_eq!(base.stats.faults, "", "{}: fault-free run annotated", v.label());
+    }
+}
+
+/// Property: every fault spec is a deterministic replay function across
+/// (a) repeated runs through one engine (dataset restored from the COW
+/// snapshot) and (b) a fresh engine with the same seed — on every fabric
+/// backend and resume policy. Rotates spec, fabric and policy by case;
+/// the nightly workflow cranks the case count (PROPTEST_CASES).
+#[test]
+fn proptest_faults_deterministic_across_restore_and_reruns() {
+    use coroamu::sim::faults::FaultConfig;
+    use coroamu::util::proptest::{check, env_cases, Config};
+    let specs = [
+        FaultConfig::mild(),
+        FaultConfig::heavy(),
+        FaultConfig::nack(0.1),
+        FaultConfig::blackout(),
+    ];
+    check(
+        Config { cases: env_cases(10), ..Config::default() },
+        |g| g.rng.next_u64(),
+        |seed: &u64| {
+            let spec = specs[(*seed % 4) as usize];
+            let fabric = FabricKind::ALL[((*seed >> 2) % 4) as usize];
+            let policy = SchedPolicyKind::ALL[((*seed >> 4) % 4) as usize];
+            let cfg = SimConfig::nh_g().with_fabric(fabric).with_sched_policy(policy);
+            let req = || {
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .seed(seed % 5)
+                    .faults(spec)
+            };
+            let tag = || format!("{}/{}/{}", spec.label(), fabric.label(), policy.label());
+            let engine = Engine::new(cfg.clone());
+            let a = engine.run(req()).map_err(|e| format!("{e:#}"))?.stats;
+            if a.faults != spec.label() {
+                return Err(format!("{}: ran as '{}'", tag(), a.faults));
+            }
+            let b = engine.run(req()).map_err(|e| format!("{e:#}"))?.stats;
+            if a != b {
+                return Err(format!("{}: snapshot-restore rerun diverges", tag()));
+            }
+            let fresh = Engine::new(cfg).run(req()).map_err(|e| format!("{e:#}"))?.stats;
+            if a != fresh {
+                return Err(format!("{}: fresh engine with the same seed diverges", tag()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Acceptance: under the heavy chaos preset — NACKs, spikes, degradation
+/// windows, blackouts and timeouts all at once — every request still
+/// completes via retry or the slow path, the run terminates, and the
+/// final image passes the benchmark's native oracle. No faulted run may
+/// wedge the AMU.
+#[test]
+fn heavy_faults_complete_via_retry_or_slow_path() {
+    use coroamu::sim::faults::FaultConfig;
+    for v in [Variant::Serial, Variant::CoroAmuD, Variant::CoroAmuFull] {
+        let rep = Engine::new(SimConfig::nh_g())
+            .run(
+                RunRequest::new("gups", v)
+                    .scale(Scale::Tiny)
+                    .seed(7)
+                    .faults(FaultConfig::heavy()),
+            )
+            .unwrap_or_else(|e| panic!("{}: heavy faults wedged the run: {e:#}", v.label()));
+        let st = &rep.stats;
+        assert_eq!(st.faults, "heavy", "{}: spec not recorded", v.label());
+        assert!(
+            st.fault_nacks + st.fault_timeouts + st.fault_degraded_cycles > 0,
+            "{}: heavy preset injected nothing",
+            v.label()
+        );
+        assert!(
+            st.fault_retries + st.fault_slow_path > 0,
+            "{}: injected faults never exercised the resilience machinery",
+            v.label()
+        );
+        assert!(st.fault_max_stall > 0, "{}: stall accounting missing", v.label());
+    }
+}
+
 /// The cluster-subsystem acceptance differential: `cores = 1` — whether
 /// left at the default, pinned in the session config, or requested
 /// per-run — is the plain single-core simulator, bit for bit. All five
