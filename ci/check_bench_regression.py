@@ -15,10 +15,13 @@ under `sim_mips/`): they are the simulator's product throughput. This
 includes the per-fabric columns (`sim_mips/fabric/<label>/.../decoded`,
 one per far-fabric backend), the per-cluster-size columns
 (`sim_mips/cluster/<cores>c/.../decoded`, aggregate simulated MIPS of
-an n-core shared-fabric run) and the per-fault-intensity columns
+an n-core shared-fabric run), the per-fault-intensity columns
 (`sim_mips/faults/<spec>/.../decoded`, decoded MIPS with the
-`sim::faults` retry/backoff machinery live on the fabric), so a fabric
-model, cluster interleave or fault decorator whose bookkeeping drags
+`sim::faults` retry/backoff machinery live on the fabric) and the
+per-offered-load columns (`sim_mips/service/<spec>/.../decoded`, a
+batch run plus the `sim::service` open-loop queueing replay at that
+load), so a fabric model, cluster interleave, fault decorator or
+service replay whose bookkeeping drags
 down decoded MIPS fails the same gate as any other kernel. The `reference` rows are informational (the pre-change
 baseline shape) and rows present on only one side are reported but
 never gate — adding or renaming a kernel (or a whole fabric/cluster

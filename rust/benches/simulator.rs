@@ -226,6 +226,29 @@ fn faults_mips(b: &mut Bench) {
     }
 }
 
+/// Per-offered-load decoded-MIPS columns
+/// (`sim_mips/service/<spec>/gups/decoded`), so the CI
+/// `cargo bench -- sim_mips` smoke runs them and the regression gate
+/// treats them like any other decoded row; baselines recorded before
+/// the service subsystem simply skip them as new rows. The open-loop
+/// replay is a simulate-time pass over the finished batch run, so each
+/// row prices what a `report --service` sweep point costs — the batch
+/// simulation plus the deterministic queueing replay at that load.
+fn service_mips(b: &mut Bench) {
+    use coroamu::sim::service::ServiceConfig;
+    for spec in [ServiceConfig::steady(), ServiceConfig::overload()] {
+        let name = format!("sim_mips/service/{}/gups/decoded", spec.label());
+        if !b.enabled(&name) {
+            continue;
+        }
+        let engine = Engine::new(SimConfig::nh_g().with_service(spec));
+        b.run(&name, "instr", || {
+            let req = RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Small).seed(42);
+            engine.run(req).unwrap().stats.dyn_instrs as f64
+        });
+    }
+}
+
 /// The acceptance sweep as a throughput row: {fifo, arrival, batched,
 /// latency} x {200, 800} ns on GUPS/CoroAMU-Full through one engine
 /// session (policy and latency are simulate-time, so the whole matrix is
@@ -342,6 +365,7 @@ fn main() {
     fabric_mips(&mut b);
     cluster_mips(&mut b);
     faults_mips(&mut b);
+    service_mips(&mut b);
     sched_policy_sweep(&mut b);
     interp_throughput(&mut b, "gups", Variant::Serial);
     interp_throughput(&mut b, "gups", Variant::CoroAmuFull);

@@ -5,6 +5,7 @@
 use crate::sim::fabric::{Dist, FabricKind};
 use crate::sim::faults::FaultConfig;
 use crate::sim::sched::SchedPolicyKind;
+use crate::sim::service::ServiceConfig;
 use crate::util::minitoml::{self, Doc};
 use anyhow::{bail, Context, Result};
 
@@ -177,6 +178,12 @@ pub struct SimConfig {
     pub sched_policy: SchedPolicyKind,
     /// Multi-core cluster shape (`sim::cluster`, `[cluster]` in TOML).
     pub cluster: ClusterConfig,
+    /// Open-loop service mode (`sim::service`, `[service]` in TOML). A
+    /// simulate-time knob like the far latency: it never forks the
+    /// compiled-kernel or dataset caches. The default (`off`) skips the
+    /// queueing replay entirely and is bit-identical to the batch
+    /// simulator (pinned by the differential suite).
+    pub service: ServiceConfig,
 }
 
 impl SimConfig {
@@ -228,6 +235,7 @@ impl SimConfig {
             fuse_superops: true,
             sched_policy: SchedPolicyKind::ArrivalOrder,
             cluster: ClusterConfig::default(),
+            service: ServiceConfig::off(),
         }
     }
 
@@ -270,6 +278,7 @@ impl SimConfig {
             fuse_superops: true,
             sched_policy: SchedPolicyKind::ArrivalOrder,
             cluster: ClusterConfig::default(),
+            service: ServiceConfig::off(),
         }
     }
 
@@ -332,6 +341,13 @@ impl SimConfig {
     /// see `FaultConfig`). Simulate-time like far latency.
     pub fn with_faults(mut self, faults: FaultConfig) -> Self {
         self.mem.fabric.faults = faults;
+        self
+    }
+
+    /// Select the open-loop service spec (the `sim::service` overload
+    /// axis; see `ServiceConfig`). Simulate-time like far latency.
+    pub fn with_service(mut self, service: ServiceConfig) -> Self {
+        self.service = service;
         self
     }
 
@@ -404,7 +420,61 @@ impl SimConfig {
         }
         self.apply_fabric_doc(doc)?;
         self.apply_cluster_doc(doc)?;
+        self.apply_service_doc(doc)?;
         self.validate()
+    }
+
+    /// Apply the `[service]` table. A `preset` key (any `--service`
+    /// spec) establishes the baseline; individual keys then override
+    /// single fields on top of it. Unknown keys are rejected with the
+    /// full key path (same discipline as `[mem.fabric.faults]`).
+    fn apply_service_doc(&mut self, doc: &Doc) -> Result<()> {
+        const KNOWN: [&str; 18] = [
+            "preset", "load", "requests", "queue_cap", "deadline", "fanout", "shed",
+            "burst_factor", "burst_duty", "burst_period", "keys", "theta", "keyspace",
+            "hot_keys", "degrade_hi", "degrade_lo", "hysteresis", "seed",
+        ];
+        for key in doc.keys_with_prefix("service.") {
+            let leaf = &key["service.".len()..];
+            if !KNOWN.contains(&leaf) {
+                bail!("unknown [service] key '{leaf}' (known keys: {})", KNOWN.join(", "));
+            }
+        }
+        if let Some(v) = doc.str("service.preset") {
+            self.service = ServiceConfig::parse(v)
+                .with_context(|| format!("service.preset = \"{v}\""))?;
+        }
+        let s = &mut self.service;
+        macro_rules! ovu {
+            ($key:expr, $field:expr) => {
+                if let Some(v) = doc.i64(concat!("service.", $key)) {
+                    anyhow::ensure!(v >= 0, "service.{} must be >= 0, got {v}", $key);
+                    $field = v as _;
+                }
+            };
+        }
+        ovu!("load", s.load_pct);
+        ovu!("requests", s.requests);
+        ovu!("queue_cap", s.queue_cap);
+        ovu!("deadline", s.deadline_mult);
+        ovu!("fanout", s.fanout);
+        ovu!("burst_factor", s.burst_factor);
+        ovu!("burst_duty", s.burst_duty_pct);
+        ovu!("burst_period", s.burst_period);
+        ovu!("keys", s.keys);
+        ovu!("keyspace", s.keyspace);
+        ovu!("hot_keys", s.hot_keys);
+        ovu!("degrade_hi", s.degrade_hi_pct);
+        ovu!("degrade_lo", s.degrade_lo_pct);
+        ovu!("hysteresis", s.hysteresis);
+        ovu!("seed", s.seed);
+        if let Some(v) = doc.f64("service.theta") {
+            s.theta = v;
+        }
+        if let Some(v) = doc.bool("service.shed") {
+            s.shed = v;
+        }
+        Ok(())
     }
 
     /// Apply the `[cluster]` table. Unknown keys are rejected with the
@@ -595,6 +665,7 @@ impl SimConfig {
                 );
             }
         }
+        self.service.validate()?;
         Ok(())
     }
 
@@ -871,6 +942,67 @@ mod tests {
         let bad = crate::util::minitoml::parse("[mem.fabric]\nfaultz = 1\n").unwrap();
         let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
         assert!(err.contains("unknown [mem.fabric] key 'faultz'"), "{err}");
+    }
+
+    #[test]
+    fn service_default_off_and_toml_round_trip() {
+        let c = SimConfig::nh_g();
+        assert_eq!(c.service, ServiceConfig::off(), "service must default off");
+        assert!(!c.service.enabled());
+        let c = c.with_service(ServiceConfig::overload());
+        assert_eq!(c.service.label(), "overload");
+        // Preset baseline + per-key overrides on top of it.
+        let doc = crate::util::minitoml::parse(
+            "[service]\npreset = \"steady\"\nload = 150\nqueue_cap = 32\nshed = false\nseed = 7\n",
+        )
+        .unwrap();
+        let mut c = SimConfig::nh_g();
+        c.apply_doc(&doc).unwrap();
+        let s = c.service;
+        assert_eq!(s.load_pct, 150, "per-key override wins over the preset");
+        assert_eq!(s.queue_cap, 32);
+        assert!(!s.shed);
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.requests, ServiceConfig::steady().requests, "preset fields survive");
+        c.validate().unwrap();
+        // A config assembled entirely key-by-key, no preset.
+        let doc = crate::util::minitoml::parse(
+            "[service]\nload = 90\ndeadline = 8\ntheta = 1.2\n",
+        )
+        .unwrap();
+        let mut c = SimConfig::nh_g();
+        c.apply_doc(&doc).unwrap();
+        assert!(c.service.enabled());
+        assert_eq!(c.service.load_pct, 90);
+        assert_eq!(c.service.deadline_mult, 8);
+        assert_eq!(c.service.theta, 1.2);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn service_toml_rejects_unknown_keys_and_bad_values() {
+        // Unknown key: full-path rejection naming the valid set.
+        let bad = crate::util::minitoml::parse("[service]\nlod = 100\n").unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown [service] key 'lod'"), "{err}");
+        assert!(err.contains("load"), "error must list the known keys: {err}");
+        // Unknown preset.
+        let bad = crate::util::minitoml::parse("[service]\npreset = \"meltdown\"\n").unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("service.preset"), "{err}");
+        // Negative counters rejected at apply time, degenerate shapes at
+        // validate time (with the full key path).
+        let bad = crate::util::minitoml::parse("[service]\nload = -5\n").unwrap();
+        assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
+        let bad = crate::util::minitoml::parse("[service]\nload = 100\nqueue_cap = 0\n").unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("service.queue_cap"), "{err}");
+        let bad = crate::util::minitoml::parse(
+            "[service]\npreset = \"steady\"\ndegrade_lo = 80\n",
+        )
+        .unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("service.degrade_lo"), "{err}");
     }
 
     #[test]

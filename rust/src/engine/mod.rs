@@ -43,6 +43,7 @@ use crate::coordinator::pool;
 use crate::sim::fabric::FabricKind;
 use crate::sim::faults::FaultConfig;
 use crate::sim::sched::SchedPolicyKind;
+use crate::sim::service::ServiceConfig;
 use crate::sim::{self, MemImage, RunStats};
 use anyhow::{anyhow, Result};
 use std::collections::hash_map::DefaultHasher;
@@ -172,6 +173,11 @@ pub struct RunRequest {
     /// sweeping the chaos axis never forks the compiled-kernel or
     /// dataset caches.
     pub faults: Option<FaultConfig>,
+    /// Override the session config's open-loop service spec for this run
+    /// only (`sim::service`). Simulate-time like latency/policy/fabric:
+    /// the service replay is driven by the batch run's calibrated cost
+    /// and never forks the compiled-kernel or dataset caches.
+    pub service: Option<ServiceConfig>,
     /// Explicit codegen options (ablation figures); overrides `variant`'s
     /// canonical options when set.
     pub opts: Option<CodegenOpts>,
@@ -193,6 +199,7 @@ impl RunRequest {
             fabric: None,
             cores: None,
             faults: None,
+            service: None,
             opts: None,
             label: None,
         }
@@ -251,6 +258,13 @@ impl RunRequest {
         self
     }
 
+    /// Run under an explicit open-loop service spec (the `sim::service`
+    /// overload axis) instead of the session config's default.
+    pub fn service(mut self, s: ServiceConfig) -> Self {
+        self.service = Some(s);
+        self
+    }
+
     /// Run under explicit codegen options instead of the variant's
     /// canonical ones (the ablation figures toggle single optimizations).
     pub fn opts(mut self, opts: CodegenOpts, label: impl Into<String>) -> Self {
@@ -284,6 +298,8 @@ pub struct RunReport {
     pub cores: u32,
     /// Effective fault-injection spec of the run (off by default).
     pub faults: FaultConfig,
+    /// Effective open-loop service spec of the run (off by default).
+    pub service: ServiceConfig,
     pub scale: Scale,
     pub seed: u64,
     pub key: String,
@@ -299,7 +315,7 @@ impl RunReport {
         let st = &self.stats;
         let mut out = String::new();
         out.push_str(&format!(
-            "bench={} variant={} cfg={} far={}ns fabric={} sched={}{}{} scale={:?} seed={}{}\n",
+            "bench={} variant={} cfg={} far={}ns fabric={} sched={}{}{}{} scale={:?} seed={}{}\n",
             self.bench,
             self.variant_label,
             self.cfg_name,
@@ -308,6 +324,11 @@ impl RunReport {
             self.sched_policy.label(),
             if self.cores > 1 { format!(" cores={}", self.cores) } else { String::new() },
             if self.faults.enabled() { format!(" faults={}", self.faults.label()) } else { String::new() },
+            if self.service.enabled() {
+                format!(" service={}", self.service.label())
+            } else {
+                String::new()
+            },
             self.scale,
             self.seed,
             if self.cache_hit { " kernel=cached" } else { " kernel=compiled" },
@@ -375,6 +396,30 @@ impl RunReport {
                 "  resilience        {} retries ({} backoff cycles), {} slow-path, max stall {}\n",
                 st.fault_retries, st.fault_retry_cycles, st.fault_slow_path, st.fault_max_stall
             ));
+        }
+        if !st.service.is_empty() {
+            out.push_str(&format!(
+                "  service           {} (knee cost {} cycles/request)\n",
+                st.service, st.svc_capacity_cost
+            ));
+            out.push_str(&format!(
+                "  requests          {} offered / {} accepted / {} rejected / {} shed in queue\n",
+                st.svc_offered, st.svc_accepted, st.svc_rejected, st.svc_shed_expired
+            ));
+            out.push_str(&format!(
+                "  goodput           {} of {} served ({} timed out)\n",
+                st.svc_goodput, st.svc_served, st.svc_timed_out
+            ));
+            out.push_str(&format!(
+                "  sojourn           p50 {} / p99 {} / p99.9 {} cycles (peak queue {})\n",
+                st.svc_p50, st.svc_p99, st.svc_p999, st.svc_max_queue
+            ));
+            if st.svc_degraded_spells > 0 {
+                out.push_str(&format!(
+                    "  degraded mode     {} served across {} spells\n",
+                    st.svc_degraded_served, st.svc_degraded_spells
+                ));
+            }
         }
         if st.cluster_cores > 1 {
             out.push_str(&format!(
@@ -599,6 +644,7 @@ impl Engine {
             fabric: cfg.mem.fabric.kind,
             cores: cfg.cluster.cores,
             faults: cfg.mem.fabric.faults,
+            service: cfg.service,
             scale: req.scale,
             seed: req.seed,
             key: req.key.clone(),
@@ -618,25 +664,34 @@ impl Engine {
     fn exec(&self, cfg: &SimConfig, inst: Instance, opts: &CodegenOpts) -> Result<InstanceRun> {
         let (ck, cache_hit) = self.cached_compile(&inst.kernel, opts)?;
         let n = cfg.cluster.cores.max(1) as usize;
-        if n == 1 {
+        let mut run = if n == 1 {
             // The pre-cluster path, untouched: cores=1 is bit-identical
             // to the single-core simulator by construction.
             let mut prog = sim::link(cfg, &ck, inst.mem, &inst.params);
             let stats = sim::run(cfg, &mut prog)?;
             (inst.check)(&prog.mem)?;
-            return Ok(InstanceRun { stats, mem: prog.mem, cache_hit });
+            InstanceRun { stats, mem: prog.mem, cache_hit }
+        } else {
+            // Multi-core: every core links its own snapshot of the same
+            // dataset (private compute node, shared far fabric). Each final
+            // image must independently pass the benchmark oracle.
+            let mut progs: Vec<sim::Program> =
+                (0..n).map(|_| sim::link(cfg, &ck, inst.mem.snapshot(), &inst.params)).collect();
+            let stats = sim::cluster::run_cluster(cfg, &mut progs)?;
+            for p in &progs {
+                (inst.check)(&p.mem)?;
+            }
+            let mem = progs.swap_remove(0).mem;
+            InstanceRun { stats, mem, cache_hit }
+        };
+        // The open-loop service replay rides on the completed batch run:
+        // it calibrates per-request cost from the run's own stats, then
+        // fills the `svc_*` fields. Off (the default) touches nothing —
+        // this branch is what the differential suite pins.
+        if cfg.service.enabled() {
+            sim::service::simulate(&cfg.service, &mut run.stats);
         }
-        // Multi-core: every core links its own snapshot of the same
-        // dataset (private compute node, shared far fabric). Each final
-        // image must independently pass the benchmark oracle.
-        let mut progs: Vec<sim::Program> =
-            (0..n).map(|_| sim::link(cfg, &ck, inst.mem.snapshot(), &inst.params)).collect();
-        let stats = sim::cluster::run_cluster(cfg, &mut progs)?;
-        for p in &progs {
-            (inst.check)(&p.mem)?;
-        }
-        let mem = progs.swap_remove(0).mem;
-        Ok(InstanceRun { stats, mem, cache_hit })
+        Ok(run)
     }
 
     /// Fan a request matrix across `threads` workers, sharing this
@@ -672,6 +727,9 @@ impl Engine {
         }
         if let Some(f) = req.faults {
             cfg.mem.fabric.faults = f;
+        }
+        if let Some(s) = req.service {
+            cfg.service = s;
         }
         cfg
     }
@@ -982,6 +1040,62 @@ mod tests {
         let text = heavy.render();
         assert!(text.contains("faults=heavy"), "{text}");
         assert!(text.contains("resilience"), "{text}");
+        assert!(text.contains("oracle            PASS"), "{text}");
+    }
+
+    #[test]
+    fn explicit_service_off_is_invisible() {
+        // `.service(off)` must skip the queueing replay bit-for-bit; the
+        // provenance line never mentions service on batch runs.
+        let engine = Engine::new(SimConfig::nh_g());
+        let base = engine
+            .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny))
+            .unwrap();
+        let explicit = engine
+            .run(
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .service(ServiceConfig::off()),
+            )
+            .unwrap();
+        assert_eq!(base.stats, explicit.stats, "explicit service=off must not move a cycle");
+        assert_eq!(base.stats.service, "");
+        assert_eq!(base.stats.svc_offered, 0);
+        assert!(!base.render().contains("service="), "batch provenance stays unchanged");
+    }
+
+    #[test]
+    fn service_override_does_not_fork_caches_and_reports() {
+        // The overload axis is simulate-time: an off/steady/overload
+        // sweep compiles the kernel once and builds the dataset once,
+        // and a service run renders its goodput accounting.
+        let engine = Engine::new(SimConfig::nh_g());
+        let mut last = None;
+        for spec in [ServiceConfig::off(), ServiceConfig::steady(), ServiceConfig::overload()] {
+            let r = engine
+                .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny).service(spec))
+                .unwrap();
+            assert_eq!(r.service, spec);
+            last = Some(r);
+        }
+        let cs = engine.cache_stats();
+        assert_eq!(cs.misses, 1, "service is simulate-time, not compile-time");
+        assert_eq!(cs.hits, 2);
+        let ds = engine.dataset_stats();
+        assert_eq!(ds.misses, 1, "service must not fork the dataset cache");
+        assert_eq!(ds.hits, 2);
+        let over = last.unwrap();
+        assert_eq!(over.stats.service, "overload");
+        assert!(over.stats.svc_capacity_cost > 0, "calibrated from the batch run");
+        assert_eq!(
+            over.stats.svc_offered,
+            over.stats.svc_accepted + over.stats.svc_rejected,
+            "admission accounting must conserve requests"
+        );
+        let text = over.render();
+        assert!(text.contains("service=overload"), "{text}");
+        assert!(text.contains("goodput"), "{text}");
+        assert!(text.contains("sojourn"), "{text}");
         assert!(text.contains("oracle            PASS"), "{text}");
     }
 

@@ -1,0 +1,308 @@
+//! SLO-aware service tables (`coroamu report --service`): the
+//! `sim::service` axis — an open-loop offered-load sweep over the
+//! calibrated batch runs at the high-latency disaggregation point.
+//! Where `fig_faults` sweeps how the fabric *fails*, this sweeps how a
+//! request-serving deployment *saturates*: each batch run calibrates the
+//! per-request cost (the knee) under its (latency, policy, fabric,
+//! faults) composition, then the deterministic queueing replay maps out
+//! the throughput–latency curve, the saturation knee and the
+//! goodput-vs-throughput gap that admission control and load shedding
+//! open up past it.
+//!
+//! Service, policy, fabric and faults are all simulate-time knobs, so
+//! the whole matrix compiles each (benchmark, variant) kernel exactly
+//! once and builds each dataset exactly once.
+
+use super::FigOpts;
+use crate::compiler::Variant;
+use crate::config::SimConfig;
+use crate::engine::{lookup, Engine, RunRequest};
+use crate::sim::fabric::FabricKind;
+use crate::sim::faults::FaultConfig;
+use crate::sim::sched::SchedPolicyKind;
+use crate::sim::service::ServiceConfig;
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// The far-latency point the overload axis is measured at: the paper's
+/// high-disaggregation setting, where the per-request cost (and so the
+/// saturation knee) is dominated by far-memory stalls.
+pub const LATENCY_NS: f64 = 800.0;
+
+/// The irregular subset the overload axis discriminates on (same set as
+/// the fabric and chaos sweeps): random scatter (gups), pointer chasing
+/// (bfs) and dependent hashing (hj).
+pub const DEFAULT_BENCHES: [&str; 3] = ["gups", "bfs", "hj"];
+
+/// The resume policies joined into the overload composition table: the
+/// static baseline and the latency-aware reranker.
+pub const POLICIES: [SchedPolicyKind; 2] =
+    [SchedPolicyKind::ArrivalOrder, SchedPolicyKind::LatencyAware];
+
+fn benches(opts: &FigOpts) -> Vec<String> {
+    if opts.only.is_empty() {
+        DEFAULT_BENCHES.iter().map(|s| s.to_string()).collect()
+    } else {
+        opts.only.clone()
+    }
+}
+
+/// The swept offered loads (percent of measured capacity), or a single
+/// spec when the CLI restricts the axis (`report --service overload`).
+/// The sweep brackets the knee: comfortably under, at, and 2× past it.
+pub fn loads(only: Option<ServiceConfig>) -> Vec<ServiceConfig> {
+    match only {
+        Some(s) => vec![s],
+        None => [50, 75, 90, 100, 125, 150, 200]
+            .iter()
+            .map(|&pct| ServiceConfig { load_pct: pct, ..ServiceConfig::steady() })
+            .collect(),
+    }
+}
+
+/// The (fabric × faults) compositions the overload point is replayed
+/// under: each one changes the calibrated per-request cost, which moves
+/// the knee — the latency-aware coupling the tentpole is about.
+pub fn compositions() -> Vec<(FabricKind, FaultConfig)> {
+    vec![
+        (FabricKind::FixedDelay, FaultConfig::off()),
+        (FabricKind::Queued { depth: 16 }, FaultConfig::off()),
+        (FabricKind::FixedDelay, FaultConfig::heavy()),
+        (FabricKind::Queued { depth: 16 }, FaultConfig::heavy()),
+    ]
+}
+
+/// The overload point for the composition table: the single restricted
+/// spec when the axis is restricted, else 2× the knee.
+fn overload_spec(specs: &[ServiceConfig]) -> ServiceConfig {
+    if specs.len() == 1 {
+        specs[0]
+    } else {
+        ServiceConfig::overload()
+    }
+}
+
+/// Key of a clean-baseline curve point.
+fn curve_key(s: &ServiceConfig) -> String {
+    format!("curve/{}", s.label())
+}
+
+/// Key of a composition run for (service, fabric, faults, policy).
+fn comp_key(s: &ServiceConfig, f: FabricKind, fl: &FaultConfig, p: SchedPolicyKind) -> String {
+    format!("{}/{}/{}/{}", s.label(), f.label(), fl.label(), p.label())
+}
+
+/// The request matrix: per bench the offered-load curve on the clean
+/// composition (fixed fabric, no faults, arrival order), then the
+/// overload point under every (fabric × faults × policy) composition.
+pub fn requests(opts: &FigOpts, specs: &[ServiceConfig]) -> Vec<RunRequest> {
+    let mut matrix = Vec::new();
+    for b in benches(opts) {
+        for svc in specs {
+            matrix.push(
+                RunRequest::new(b.clone(), Variant::CoroAmuFull)
+                    .scale(opts.scale)
+                    .seed(opts.seed)
+                    .latency_ns(LATENCY_NS)
+                    .service(*svc)
+                    .key(curve_key(svc)),
+            );
+        }
+        let over = overload_spec(specs);
+        for (fabric, faults) in compositions() {
+            for p in POLICIES {
+                matrix.push(
+                    RunRequest::new(b.clone(), Variant::CoroAmuFull)
+                        .scale(opts.scale)
+                        .seed(opts.seed)
+                        .latency_ns(LATENCY_NS)
+                        .service(over)
+                        .fabric(fabric)
+                        .faults(faults)
+                        .policy(p)
+                        .key(comp_key(&over, fabric, &faults, p)),
+                );
+            }
+        }
+    }
+    matrix
+}
+
+pub fn run(opts: &FigOpts, only: Option<ServiceConfig>) -> Result<Vec<Table>> {
+    let specs = loads(only);
+    let engine = Engine::new(SimConfig::nh_g());
+    let rs = engine.sweep(&requests(opts, &specs), opts.threads)?;
+    let benches = benches(opts);
+    let mut tables = Vec::new();
+
+    // T1: the throughput–latency curve — offered load vs goodput,
+    // throughput and sojourn tail per bench, on the clean composition.
+    let mut t1 = Table::new(
+        format!("Throughput–latency curve: open-loop load sweep ({LATENCY_NS} ns)"),
+        &[
+            "bench", "load", "cost", "offered", "served", "goodput", "rejected", "shed",
+            "timed out", "p50", "p99", "p99.9",
+        ],
+    );
+    for b in &benches {
+        for svc in &specs {
+            let st = &lookup(&rs, b, Variant::CoroAmuFull, &curve_key(svc)).unwrap().stats;
+            t1.row(vec![
+                b.clone(),
+                svc.label(),
+                st.svc_capacity_cost.to_string(),
+                st.svc_offered.to_string(),
+                st.svc_served.to_string(),
+                st.svc_goodput.to_string(),
+                st.svc_rejected.to_string(),
+                st.svc_shed_expired.to_string(),
+                st.svc_timed_out.to_string(),
+                st.svc_p50.to_string(),
+                st.svc_p99.to_string(),
+                st.svc_p999.to_string(),
+            ]);
+        }
+    }
+    tables.push(t1);
+
+    // T2: saturation knee per bench — the highest swept load whose
+    // goodput still covers >= 90% of the offered requests, and how much
+    // goodput survives at the top of the sweep (graceful degradation).
+    let mut t2 = Table::new(
+        "Saturation knee and goodput retention",
+        &["bench", "knee load", "cost", "goodput @ knee", "peak goodput", "goodput @ max load", "retention"],
+    );
+    for b in &benches {
+        let pt = |svc: &ServiceConfig| {
+            lookup(&rs, b, Variant::CoroAmuFull, &curve_key(svc)).unwrap().stats.clone()
+        };
+        // The knee: the highest swept load whose goodput still covers
+        // >= 90% of the offered requests (lowest point as a fallback).
+        let mut knee = &specs[0];
+        for s in &specs {
+            let st = pt(s);
+            if st.svc_goodput * 10 >= st.svc_offered * 9 && s.load_pct >= knee.load_pct {
+                knee = s;
+            }
+        }
+        let peak = specs.iter().map(|s| pt(s).svc_goodput).max().unwrap_or(0);
+        let top = specs.iter().max_by_key(|s| s.load_pct).unwrap_or(&specs[0]);
+        let knee_st = pt(knee);
+        let top_st = pt(top);
+        t2.row(vec![
+            b.clone(),
+            knee.label(),
+            knee_st.svc_capacity_cost.to_string(),
+            knee_st.svc_goodput.to_string(),
+            peak.to_string(),
+            top_st.svc_goodput.to_string(),
+            if peak > 0 {
+                format!("{:.0}%", 100.0 * top_st.svc_goodput as f64 / peak as f64)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    tables.push(t2);
+
+    // T3: the overload point under every (policy × fabric × faults)
+    // composition — heavier compositions inflate the calibrated cost
+    // (the knee moves), while shedding keeps the goodput share bounded.
+    let over = overload_spec(&specs);
+    let mut t3 = Table::new(
+        format!("Overload composition ({}, policy × fabric × faults)", over.label()),
+        &[
+            "bench", "policy", "fabric", "faults", "cost", "goodput", "rejected", "shed",
+            "p99", "degraded",
+        ],
+    );
+    for b in &benches {
+        for (fabric, faults) in compositions() {
+            for p in POLICIES {
+                let st = &lookup(&rs, b, Variant::CoroAmuFull, &comp_key(&over, fabric, &faults, p))
+                    .unwrap()
+                    .stats;
+                t3.row(vec![
+                    b.clone(),
+                    p.label(),
+                    fabric.label(),
+                    faults.label(),
+                    st.svc_capacity_cost.to_string(),
+                    st.svc_goodput.to_string(),
+                    st.svc_rejected.to_string(),
+                    st.svc_shed_expired.to_string(),
+                    st.svc_p99.to_string(),
+                    format!("{} in {} spells", st.svc_degraded_served, st.svc_degraded_spells),
+                ]);
+            }
+        }
+    }
+    tables.push(t3);
+
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::Scale;
+
+    #[test]
+    fn request_matrix_covers_the_acceptance_axis() {
+        let opts = FigOpts { scale: Scale::Tiny, ..FigOpts::quick() };
+        let specs = loads(None);
+        assert_eq!(specs.len(), 7);
+        let m = requests(&opts, &specs);
+        // 3 benches x (7 curve points + 4 compositions x 2 policies).
+        assert_eq!(m.len(), 3 * (7 + 4 * 2));
+        // Every curve point names its load; the composition runs cover
+        // heavy faults and the queued fabric at the overload point.
+        for svc in &specs {
+            assert!(
+                m.iter().filter(|r| r.service == Some(*svc)).count() >= 3,
+                "{} missing from the matrix",
+                svc.label()
+            );
+        }
+        assert_eq!(
+            m.iter().filter(|r| r.faults == Some(FaultConfig::heavy())).count(),
+            3 * 2 * 2,
+            "heavy-faults composition missing"
+        );
+        assert!(m
+            .iter()
+            .filter(|r| r.faults == Some(FaultConfig::heavy()))
+            .all(|r| r.service == Some(ServiceConfig::overload())));
+        // Restricting the axis keeps one load for both the curve and
+        // the composition runs.
+        let one = requests(&opts, &loads(Some(ServiceConfig::knee())));
+        assert_eq!(one.len(), 3 * (1 + 4 * 2));
+        assert!(one.iter().all(|r| r.service == Some(ServiceConfig::knee())));
+    }
+
+    #[test]
+    fn runs_on_tiny_scale_single_bench() {
+        let opts = FigOpts { scale: Scale::Tiny, only: vec!["gups".into()], ..FigOpts::quick() };
+        let tables = run(&opts, None).unwrap();
+        // curve + knee + composition.
+        assert_eq!(tables.len(), 3);
+        let all: String = tables.iter().map(|t| t.render()).collect();
+        for spec in ["load:50", "knee", "overload"] {
+            assert!(all.contains(spec), "load {spec} missing from tables");
+        }
+        assert!(all.contains("goodput"), "{all}");
+        assert!(all.contains("p99"), "{all}");
+        assert!(all.contains("heavy"), "heavy-faults composition missing: {all}");
+        assert!(all.contains("queued"), "queued-fabric composition missing: {all}");
+        assert!(all.contains("latency"), "latency-aware policy missing: {all}");
+    }
+
+    #[test]
+    fn single_load_restriction_runs() {
+        let opts = FigOpts { scale: Scale::Tiny, only: vec!["gups".into()], ..FigOpts::quick() };
+        let tables = run(&opts, Some(ServiceConfig::parse("load:120").unwrap())).unwrap();
+        let all: String = tables.iter().map(|t| t.render()).collect();
+        assert!(all.contains("load:120"), "{all}");
+        assert!(!all.contains("load:50"), "restricted axis must not sweep other loads: {all}");
+    }
+}

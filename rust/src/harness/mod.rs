@@ -19,6 +19,7 @@
 //! | fabric   | [`fig_fabric`] | far-fabric sweep (`report --fabric`) |
 //! | cluster  | [`fig_cluster`] | cluster scaling sweep (`report --cluster`) |
 //! | faults   | [`fig_faults`] | fault-injection chaos sweep (`report --faults`) |
+//! | service  | [`fig_service`] | open-loop overload sweep (`report --service`) |
 
 pub mod fig02;
 pub mod fig03;
@@ -32,6 +33,7 @@ pub mod fig_cluster;
 pub mod fig_fabric;
 pub mod fig_faults;
 pub mod fig_sched;
+pub mod fig_service;
 
 use crate::benchmarks::Scale;
 use crate::coordinator::pool;

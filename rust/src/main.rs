@@ -2,8 +2,8 @@
 //! the [`coroamu::engine::Engine`] session facade.
 //!
 //! ```text
-//! coroamu report [--fig N | --all | --sched | --fabric [KIND]] [--scale tiny|small|full] [--only a,b]
-//! coroamu run --bench gups --variant full [--latency 200] [--policy arrival] [--fabric queued:16] [--tasks 96]
+//! coroamu report [--fig N | --all | --sched | --fabric [KIND] | --service [SPEC]] [--scale tiny|small|full] [--only a,b]
+//! coroamu run --bench gups --variant full [--latency 200] [--policy arrival] [--fabric queued:16] [--service overload] [--tasks 96]
 //! coroamu report --table1 | --table2
 //! coroamu oracle            # PJRT cross-check against artifacts/
 //! coroamu dump --bench gups --variant full   # CoroIR disassembly
@@ -24,6 +24,7 @@ use coroamu::runtime;
 use coroamu::sim::fabric::FabricKind;
 use coroamu::sim::faults::FaultConfig;
 use coroamu::sim::sched::SchedPolicyKind;
+use coroamu::sim::service::ServiceConfig;
 use coroamu::util::cli::Args;
 
 fn parse_scale(s: &str) -> Result<Scale> {
@@ -82,6 +83,33 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
         };
         cfg = cfg.with_cores(n);
     }
+    if let Some(s) = args.get("service") {
+        cfg = cfg.with_service(ServiceConfig::parse(s)?);
+    }
+    if let Some(l) = args.get("load") {
+        // `--load N` alone enables service mode on the steady baseline;
+        // on top of `--service` it overrides just the offered load.
+        let pct: u32 = match l.parse() {
+            Ok(v) if v > 0 => v,
+            _ => bail!("--load must be a positive percent of capacity (got '{l}')"),
+        };
+        let mut s = if cfg.service.enabled() { cfg.service } else { ServiceConfig::steady() };
+        s.load_pct = pct;
+        cfg = cfg.with_service(s);
+    }
+    if let Some(d) = args.get("deadline") {
+        if !cfg.service.enabled() {
+            bail!("--deadline only applies to service mode (add --service or --load)");
+        }
+        let mult: u32 = match d.parse() {
+            Ok(v) if v > 0 => v,
+            _ => bail!("--deadline must be a positive cost multiple (got '{d}')"),
+        };
+        cfg.service.deadline_mult = mult;
+    }
+    if args.get("service").is_some() || args.get("load").is_some() {
+        cfg.service.validate()?;
+    }
     Ok(cfg)
 }
 
@@ -90,7 +118,7 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
 /// from silently dropping a flag.
 fn selected_report_modes(args: &Args) -> Vec<&'static str> {
     let mut modes = Vec::new();
-    for m in ["table1", "table2", "sched", "fabric", "cluster", "faults", "all"] {
+    for m in ["table1", "table2", "sched", "fabric", "cluster", "faults", "service", "all"] {
         if args.flag(m) {
             modes.push(m);
         }
@@ -170,12 +198,28 @@ fn cmd_report(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
+    if args.flag("service") {
+        // `--service` sweeps the offered-load axis; `--service overload`
+        // restricts it to one spec (the value is honored).
+        let only = match args.get("service") {
+            Some(v) => Some(ServiceConfig::parse(v)?),
+            None => None,
+        };
+        eprintln!(
+            "[coroamu] generating service overload sweep (scale {:?}, {} threads)...",
+            opts.scale, opts.threads
+        );
+        for t in harness::fig_service::run(&opts, only)? {
+            t.print();
+        }
+        return Ok(());
+    }
     let figs: Vec<u32> = if args.flag("all") {
         harness::ALL_FIGURES.to_vec()
     } else if let Some(n) = args.get_u64("fig") {
         vec![n as u32]
     } else {
-        bail!("report needs --fig N, --all, --sched, --fabric, --cluster, --faults, --table1 or --table2");
+        bail!("report needs --fig N, --all, --sched, --fabric, --cluster, --faults, --service, --table1 or --table2");
     };
     for f in figs {
         eprintln!("[coroamu] generating figure {f} (scale {:?}, {} threads)...", opts.scale, opts.threads);
@@ -231,9 +275,9 @@ fn cmd_oracle(_args: &Args) -> Result<()> {
 }
 
 const USAGE: &str = "usage: coroamu <report|run|dump|oracle> [options]
-  report --fig N | --all | --sched | --fabric [KIND] | --cluster | --faults [SPEC] | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
+  report --fig N | --all | --sched | --fabric [KIND] | --cluster | --faults [SPEC] | --service [SPEC] | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
          (report modes are mutually exclusive)
-  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--policy fifo|arrival|batched[:N]|latency] [--fabric fixed|queued[:N]|dist[:uniform|bimodal]|tiered[:N]] [--faults off|mild|heavy|degrade|blackout|nack:PCT|spike:PCT] [--cores N] [--tasks N] [--scale ...]
+  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--policy fifo|arrival|batched[:N]|latency] [--fabric fixed|queued[:N]|dist[:uniform|bimodal]|tiered[:N]] [--faults off|mild|heavy|degrade|blackout|nack:PCT|spike:PCT] [--service off|steady|knee|overload|burst|load:PCT] [--load PCT] [--deadline MULT] [--cores N] [--tasks N] [--scale ...]
   dump   --bench NAME [--variant ...]     print generated CoroIR
   oracle                                  cross-check simulator vs PJRT artifacts
   help | --help                           print this message";
@@ -343,6 +387,54 @@ mod tests {
         // A bad restriction spec fails loudly rather than sweeping.
         let err = cmd_report(&parse(&["report", "--faults", "storm"])).unwrap_err().to_string();
         assert!(err.contains("unknown fault spec"), "{err}");
+    }
+
+    #[test]
+    fn service_mode_conflicts_with_every_other_mode() {
+        // The overload report joins the mutual-exclusion audit.
+        for other in ["--fabric", "--sched", "--cluster", "--faults", "--table1"] {
+            let both = parse(&["report", "--service", other]);
+            assert_eq!(selected_report_modes(&both).len(), 2, "{other}");
+            let err = cmd_report(&both).unwrap_err().to_string();
+            assert!(err.contains("conflicting report modes"), "{other}: {err}");
+            assert!(err.contains("service"), "{other}: {err}");
+        }
+        // A load restriction value is still the service mode.
+        assert_eq!(
+            selected_report_modes(&parse(&["report", "--service", "overload"])),
+            vec!["service"]
+        );
+        // A bad restriction spec fails loudly rather than sweeping.
+        let err = cmd_report(&parse(&["report", "--service", "storm"])).unwrap_err().to_string();
+        assert!(err.contains("unknown service spec"), "{err}");
+    }
+
+    #[test]
+    fn run_config_accepts_and_validates_service() {
+        let cfg = cfg_from(&parse(&["run", "--service", "overload"])).unwrap();
+        assert_eq!(cfg.service, ServiceConfig::overload());
+        // --load alone enables service mode on the steady baseline...
+        let cfg = cfg_from(&parse(&["run", "--load", "150"])).unwrap();
+        assert!(cfg.service.enabled());
+        assert_eq!(cfg.service.load_pct, 150);
+        assert_eq!(cfg.service.label(), "load:150");
+        // ...and composes with --service and --deadline.
+        let cfg =
+            cfg_from(&parse(&["run", "--service", "burst", "--load", "120", "--deadline", "8"]))
+                .unwrap();
+        assert_eq!(cfg.service.load_pct, 120);
+        assert_eq!(cfg.service.burst_factor, ServiceConfig::burst().burst_factor);
+        assert_eq!(cfg.service.deadline_mult, 8);
+        // No flag leaves service off (the bit-identical default).
+        let cfg = cfg_from(&parse(&["run", "--bench", "gups"])).unwrap();
+        assert!(!cfg.service.enabled());
+        // Bad specs fail loudly instead of silently running batch mode.
+        assert!(cfg_from(&parse(&["run", "--service", "storm"])).is_err());
+        assert!(cfg_from(&parse(&["run", "--service", "load:0"])).is_err());
+        assert!(cfg_from(&parse(&["run", "--load", "nope"])).is_err());
+        assert!(cfg_from(&parse(&["run", "--load", "20000"])).is_err());
+        let err = cfg_from(&parse(&["run", "--deadline", "4"])).unwrap_err().to_string();
+        assert!(err.contains("--deadline"), "{err}");
     }
 
     #[test]

@@ -327,25 +327,50 @@ pub trait FabricModel: fmt::Debug + Send {
 }
 
 /// Fixed-resolution latency histogram: 8-cycle buckets over 32 K cycles
-/// (overflow clamps into the last bucket). Percentiles return the lower
-/// edge of the covering bucket, so they are exact integers independent
-/// of platform and request count.
+/// by default (overflow clamps into the last bucket). Percentiles return
+/// the lower edge of the covering bucket, so they are exact integers
+/// independent of platform and request count. Consumers whose values
+/// span far past 32 K cycles — service sojourn times under overload can
+/// reach millions of cycles — pick a coarser geometry with
+/// [`LatencyHist::with_bucket_shift`] or [`LatencyHist::covering`].
 #[derive(Clone)]
 pub struct LatencyHist {
     counts: Vec<u32>,
     total: u64,
+    shift: u32,
 }
 
 const HIST_BUCKET_SHIFT: u32 = 3;
 const HIST_BUCKETS: usize = 4096;
+/// Largest supported bucket shift: 4096 buckets of 2^40 cycles cover any
+/// simulated duration this repo can produce.
+const HIST_MAX_SHIFT: u32 = 40;
 
 impl LatencyHist {
     pub fn new() -> LatencyHist {
-        LatencyHist { counts: vec![0; HIST_BUCKETS], total: 0 }
+        Self::with_bucket_shift(HIST_BUCKET_SHIFT)
+    }
+
+    /// A histogram with `2^shift`-cycle buckets (same 4096-bucket
+    /// storage, so range = `4096 << shift` before the overflow clamp).
+    pub fn with_bucket_shift(shift: u32) -> LatencyHist {
+        assert!(shift <= HIST_MAX_SHIFT, "bucket shift {shift} exceeds {HIST_MAX_SHIFT}");
+        LatencyHist { counts: vec![0; HIST_BUCKETS], total: 0, shift }
+    }
+
+    /// The smallest-bucket histogram whose range still covers `span`
+    /// cycles (at least the default geometry; clamped at the maximum
+    /// shift for absurd spans).
+    pub fn covering(span: u64) -> LatencyHist {
+        let mut shift = HIST_BUCKET_SHIFT;
+        while shift < HIST_MAX_SHIFT && ((HIST_BUCKETS as u64) << shift) < span {
+            shift += 1;
+        }
+        Self::with_bucket_shift(shift)
     }
 
     pub fn record(&mut self, latency: u64) {
-        let idx = ((latency >> HIST_BUCKET_SHIFT) as usize).min(HIST_BUCKETS - 1);
+        let idx = ((latency >> self.shift) as usize).min(HIST_BUCKETS - 1);
         self.counts[idx] += 1;
         self.total += 1;
     }
@@ -365,10 +390,10 @@ impl LatencyHist {
         for (i, &c) in self.counts.iter().enumerate() {
             cum += c as u64;
             if cum >= target {
-                return (i as u64) << HIST_BUCKET_SHIFT;
+                return (i as u64) << self.shift;
             }
         }
-        ((self.counts.len() - 1) as u64) << HIST_BUCKET_SHIFT
+        ((self.counts.len() - 1) as u64) << self.shift
     }
 
     /// Number of recorded samples (0 for a fresh or empty histogram).
@@ -1041,6 +1066,30 @@ mod tests {
         let mut z = LatencyHist::new();
         z.record(0);
         assert_eq!((z.count(), z.percentile(1.0)), (1, 0));
+    }
+
+    /// A coarser bucket shift extends the range past the default 32 K
+    /// clamp: values the 8-cycle geometry would flatten into the last
+    /// bucket stay distinguishable, and edges are exact multiples of the
+    /// bucket width.
+    #[test]
+    fn latency_hist_bucket_shift_extends_range() {
+        let mut h = LatencyHist::with_bucket_shift(9); // 512-cycle buckets, ~2 M range
+        for _ in 0..99 {
+            h.record(1024); // bucket 2 -> edge 1024
+        }
+        h.record(1_000_000); // bucket 1953 -> edge 999_936
+        assert_eq!(h.percentile(0.50), 1024);
+        assert_eq!(h.percentile(1.0), (1_000_000u64 >> 9) << 9);
+        // `covering` picks the smallest geometry that fits the span.
+        let c = LatencyHist::covering(2_000_000);
+        let mut c2 = c.clone();
+        c2.record(1_999_999);
+        assert_eq!(c2.percentile(1.0), (1_999_999u64 >> 9) << 9);
+        // Tiny spans keep the default 8-cycle buckets.
+        let mut d = LatencyHist::covering(100);
+        d.record(13);
+        assert_eq!(d.percentile(1.0), 8);
     }
 
     /// Every backend is a pure function of (construction params, issue

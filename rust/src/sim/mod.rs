@@ -11,9 +11,12 @@
 //! await-asignal), [`sched`] (pluggable coroutine-resume policies over
 //! the Finished Queue, `SimConfig::sched_policy`) and [`faults`]
 //! (deterministic fault injection on the far fabric plus timeout/retry
-//! resilience, `SimConfig::mem.fabric.faults`). See `DESIGN.md` §1
-//! (repo root) for the substitution argument, §8 for the scheduler
-//! subsystem, §9 for the fabric subsystem and §11 for fault injection.
+//! resilience, `SimConfig::mem.fabric.faults`) and [`service`] (the
+//! SLO-aware open-loop request-serving layer replayed over a run's
+//! calibrated per-request cost, `SimConfig::service`). See `DESIGN.md`
+//! §1 (repo root) for the substitution argument, §8 for the scheduler
+//! subsystem, §9 for the fabric subsystem, §11 for fault injection and
+//! §12 for service mode.
 
 pub mod amu;
 pub mod bpu;
@@ -27,6 +30,7 @@ pub mod interp;
 pub mod mem;
 pub mod memsys;
 pub mod sched;
+pub mod service;
 pub mod slots;
 pub mod stats;
 
@@ -36,6 +40,7 @@ pub use faults::FaultConfig;
 pub use interp::{mix64, run, run_reference, Program};
 pub use mem::MemImage;
 pub use sched::SchedPolicyKind;
+pub use service::ServiceConfig;
 pub use stats::RunStats;
 
 use crate::compiler::CompiledKernel;

@@ -1,0 +1,735 @@
+//! SLO-aware request serving under overload (`sim::service`).
+//!
+//! Every benchmark in this repo is a batch kernel; this module is the
+//! open-loop *service* view of the same kernel: a deterministic seeded
+//! arrival process (exponential inter-arrival gaps, optionally modulated
+//! by an on/off burst window — [`crate::util::rng::Exp`] /
+//! [`crate::util::rng::BurstyExp`]) offers timestamped requests — each a
+//! Zipf-skewed multi-key probe of the kernel's keyspace — into a
+//! **bounded admission queue** drained by a pool of handler coroutines.
+//!
+//! Service mode is a simulate-time axis like latency/policy/fabric/
+//! cores/faults before it: the ordinary batch run executes unchanged
+//! (the compiled bench kernel *is* the request handler, compiled once
+//! through the kernel cache against the dataset cache), and its result
+//! is the **calibration**: `capacity_cost = cycles / tasks_completed`
+//! is the per-request service cost under the active (latency, policy,
+//! fabric, faults) configuration — heavy faults inflate the cost and
+//! move the saturation knee, which is exactly the latency-aware
+//! coupling the service figures need. [`simulate`] then replays a
+//! deterministic discrete-event queueing run over that cost and writes
+//! the `svc_*` counters into [`RunStats`].
+//!
+//! Offered load is expressed as **percent of measured capacity**, so
+//! the knee is self-normalizing: `load:100` offers exactly the
+//! calibrated service rate, `load:200` is 2× the knee, independent of
+//! which fabric/fault/policy combination produced the cost.
+//!
+//! The robustness layer (`shed = true`, the default) is the headline:
+//!
+//! * **Backpressure**: a request arriving at a full admission queue is
+//!   rejected outright (`svc_rejected`).
+//! * **Expired-in-queue shedding**: an admitted request whose deadline
+//!   has already passed when a handler would pick it up is shed without
+//!   service (`svc_shed_expired`).
+//! * **Degraded mode**: an occupancy detector samples the queue once
+//!   per arrival; `hysteresis` consecutive samples at or above the high
+//!   watermark trip the server into degraded mode — handlers switch to
+//!   a cheap-path handler at a quarter of the full cost — and
+//!   `hysteresis` consecutive samples at or below the low watermark
+//!   recover it. Spells and cheap-path serves are counted.
+//!
+//! Goodput (served **and** met the deadline) is kept strictly separate
+//! from throughput: `svc_goodput` vs `svc_served`, with
+//! `svc_timed_out` the served-too-late remainder. Sojourn percentiles
+//! (p50/p99/p99.9) come from a [`LatencyHist`] sized to cover the
+//! worst-case backlog, so shed-off collapse stays measurable.
+//!
+//! With `shed = false` the whole robustness layer is off — unbounded
+//! queue, no expiry, no degraded mode — the ablation arm that shows
+//! collapsing goodput and unbounded queue growth past the knee.
+//!
+//! Determinism: arrivals, key draws and the event loop are pure
+//! functions of (`ServiceConfig`, calibrated cost). Key draws are
+//! consumed at arrival in issue order regardless of the admission
+//! outcome, so a rejection never shifts later draws. Service-off runs
+//! never construct any of this — bit-identity to the seed is by
+//! construction, pinned by `service_off_is_bit_identical_to_seed`.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, ensure, Result};
+
+use super::fabric::LatencyHist;
+use super::stats::RunStats;
+use crate::util::rng::{BurstyExp, Exp, Rng, Zipf};
+
+/// Seed of the arrival/key stream when none is configured.
+pub const DEFAULT_SERVICE_SEED: u64 = 0x5EED_5E81;
+
+/// Service-mode configuration: the offered-load axis plus the knobs of
+/// the robustness layer. `load_pct == 0` means service mode is off.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceConfig {
+    /// Offered load as a percent of the calibrated capacity
+    /// (100 = at the saturation knee; 0 = service mode off).
+    pub load_pct: u32,
+    /// Total offered arrivals.
+    pub requests: u32,
+    /// Admission-queue capacity (bounded only while `shed` is on).
+    pub queue_cap: u32,
+    /// Per-request deadline, as a multiple of the calibrated cost.
+    pub deadline_mult: u32,
+    /// Handler-coroutine fanout. Each of the `fanout` handlers serves a
+    /// request in `fanout × cost` cycles, so aggregate capacity stays
+    /// `1/cost` regardless of fanout (matching the calibration run).
+    pub fanout: u32,
+    /// Master switch of the robustness layer: bounded queue +
+    /// queue-full rejection + expired-in-queue shedding + the degraded-
+    /// mode overload detector. Off = plain unbounded open-loop FIFO.
+    pub shed: bool,
+    /// Burst rate multiplier inside the on-window (1 = plain Poisson).
+    pub burst_factor: u32,
+    /// On-window share of each burst period, percent (only meaningful
+    /// when `burst_factor > 1`).
+    pub burst_duty_pct: u32,
+    /// Burst period, in units of the mean inter-arrival gap.
+    pub burst_period: u32,
+    /// Keys probed per request.
+    pub keys: u32,
+    /// Zipf exponent of the key draw.
+    pub theta: f64,
+    /// Number of distinct keys.
+    pub keyspace: u64,
+    /// Keys `< hot_keys` form the hot set: a request whose every key is
+    /// hot is served at half cost (cache-resident probe).
+    pub hot_keys: u64,
+    /// Degraded-mode trip watermark, percent of `queue_cap`.
+    pub degrade_hi_pct: u32,
+    /// Degraded-mode recovery watermark, percent of `queue_cap`.
+    pub degrade_lo_pct: u32,
+    /// Consecutive occupancy samples required to trip or recover.
+    pub hysteresis: u32,
+    /// Seed of the arrival/key stream.
+    pub seed: u64,
+}
+
+impl ServiceConfig {
+    /// Shared defaults of every preset. The geometry is chosen so the
+    /// robustness layer is *sound* at the defaults: with `queue_cap` 8,
+    /// `fanout` 4 and `deadline_mult` 16, the worst-case sojourn of an
+    /// admitted request is `(ceil(8/4) + 1) × 4 × cost = 12 × cost`,
+    /// strictly inside the deadline — so with shedding on, every
+    /// admitted request meets its SLO and overload shows up as
+    /// backpressure rejections, not as silent timeout collapse.
+    fn base() -> ServiceConfig {
+        ServiceConfig {
+            load_pct: 0,
+            requests: 2000,
+            queue_cap: 8,
+            deadline_mult: 16,
+            fanout: 4,
+            shed: true,
+            burst_factor: 1,
+            burst_duty_pct: 25,
+            burst_period: 64,
+            keys: 4,
+            theta: 0.99,
+            keyspace: 65_536,
+            hot_keys: 256,
+            degrade_hi_pct: 60,
+            degrade_lo_pct: 25,
+            hysteresis: 3,
+            seed: DEFAULT_SERVICE_SEED,
+        }
+    }
+
+    /// Service mode off (the default everywhere).
+    pub fn off() -> ServiceConfig {
+        Self::base()
+    }
+
+    /// Comfortable utilization: 60% of the knee.
+    pub fn steady() -> ServiceConfig {
+        ServiceConfig { load_pct: 60, ..Self::base() }
+    }
+
+    /// Exactly at the measured saturation knee.
+    pub fn knee() -> ServiceConfig {
+        ServiceConfig { load_pct: 100, ..Self::base() }
+    }
+
+    /// 2× the knee: the graceful-degradation acceptance point.
+    pub fn overload() -> ServiceConfig {
+        ServiceConfig { load_pct: 200, ..Self::base() }
+    }
+
+    /// Bursty near-saturation traffic: 90% average load, but the
+    /// on-window runs 4× faster — transient overload inside a run that
+    /// is sustainable on average.
+    pub fn burst() -> ServiceConfig {
+        ServiceConfig { load_pct: 90, burst_factor: 4, ..Self::base() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.load_pct > 0
+    }
+
+    /// Parse a CLI spec: `off|steady|knee|overload|burst|load:PCT`.
+    pub fn parse(spec: &str) -> Result<ServiceConfig> {
+        let s = spec.trim();
+        Ok(match s {
+            "off" => Self::off(),
+            "steady" => Self::steady(),
+            "knee" => Self::knee(),
+            "overload" => Self::overload(),
+            "burst" => Self::burst(),
+            _ => {
+                if let Some(v) = s.strip_prefix("load:") {
+                    let pct: u32 = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad load percent '{v}' in service spec"))?;
+                    ensure!(pct > 0, "service load:PCT must be positive (0 is spelled 'off')");
+                    ServiceConfig { load_pct: pct, ..Self::steady() }
+                } else {
+                    bail!(
+                        "unknown service spec '{spec}' \
+                         (specs: off|steady|knee|overload|burst|load:PCT)"
+                    )
+                }
+            }
+        })
+    }
+
+    /// Canonical label, round-tripping through [`ServiceConfig::parse`]
+    /// for every preset and plain `load:PCT` spec; key-by-key TOML
+    /// assemblies that match no spec report as `custom`.
+    pub fn label(&self) -> String {
+        for (cfg, name) in [
+            (Self::off(), "off"),
+            (Self::steady(), "steady"),
+            (Self::knee(), "knee"),
+            (Self::overload(), "overload"),
+            (Self::burst(), "burst"),
+        ] {
+            if *self == cfg {
+                return name.to_string();
+            }
+        }
+        if *self == (ServiceConfig { load_pct: self.load_pct, ..Self::steady() }) {
+            return format!("load:{}", self.load_pct);
+        }
+        "custom".to_string()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.load_pct <= 10_000, "service.load must be <= 10000 (percent of capacity)");
+        ensure!(
+            (1..=1_000_000).contains(&self.requests),
+            "service.requests must be in [1, 1000000]"
+        );
+        ensure!((1..=1 << 20).contains(&self.queue_cap), "service.queue_cap must be in [1, 2^20]");
+        ensure!(
+            (1..=1 << 20).contains(&self.deadline_mult),
+            "service.deadline must be in [1, 2^20]"
+        );
+        ensure!((1..=4096).contains(&self.fanout), "service.fanout must be in [1, 4096]");
+        ensure!(
+            (1..=1024).contains(&self.burst_factor),
+            "service.burst_factor must be in [1, 1024]"
+        );
+        if self.burst_factor > 1 {
+            ensure!(
+                (1..=99).contains(&self.burst_duty_pct),
+                "service.burst_duty must be in [1, 99] (percent of the period)"
+            );
+            ensure!(
+                (2..=1 << 20).contains(&self.burst_period),
+                "service.burst_period must be in [2, 2^20] mean gaps"
+            );
+        }
+        ensure!((1..=64).contains(&self.keys), "service.keys must be in [1, 64]");
+        ensure!(
+            self.theta > 0.0 && self.theta <= 10.0 && (self.theta - 1.0).abs() > 1e-9,
+            "service.theta must be in (0, 10] and != 1"
+        );
+        ensure!(self.keyspace >= 2, "service.keyspace must be >= 2");
+        ensure!(
+            self.hot_keys >= 1 && self.hot_keys <= self.keyspace,
+            "service.hot_keys must be in [1, keyspace]"
+        );
+        ensure!(
+            (1..=100).contains(&self.degrade_hi_pct),
+            "service.degrade_hi must be in [1, 100] (percent of queue_cap)"
+        );
+        ensure!(
+            self.degrade_lo_pct < self.degrade_hi_pct,
+            "service.degrade_lo must be below service.degrade_hi"
+        );
+        ensure!((1..=1024).contains(&self.hysteresis), "service.hysteresis must be in [1, 1024]");
+        Ok(())
+    }
+}
+
+/// Strict goodput-vs-throughput accounting of one service replay. Every
+/// field is an exact integer; [`simulate`] copies them into the
+/// `svc_*` fields of [`RunStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServiceStats {
+    /// Calibrated per-request cost (cycles) — the saturation knee.
+    pub capacity_cost: u64,
+    pub offered: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub shed_expired: u64,
+    pub served: u64,
+    pub goodput: u64,
+    pub timed_out: u64,
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub max_queue: u64,
+    pub degraded_served: u64,
+    pub degraded_spells: u64,
+}
+
+/// The calibrated per-request service cost of a batch run: mean cycles
+/// per completed task under the active (latency, policy, fabric,
+/// faults) configuration; never 0 so it can serve as a divisor and a
+/// rate.
+pub fn capacity_cost(stats: &RunStats) -> u64 {
+    (stats.cycles / stats.tasks_completed.max(1)).max(1)
+}
+
+struct Req {
+    arrival: u64,
+    deadline: u64,
+    hot: bool,
+}
+
+struct Costs {
+    full: u64,
+    hot: u64,
+    cheap: u64,
+}
+
+/// Hand every request a free handler can start no later than `now` to
+/// the earliest-free handler (lowest index wins ties, so the loop is
+/// deterministic), shedding admitted requests whose deadline already
+/// expired in the queue when the robustness layer is on. Terminates:
+/// each iteration pops one queued request or breaks.
+#[allow(clippy::too_many_arguments)]
+fn dispatch(
+    now: u64,
+    servers: &mut [u64],
+    queue: &mut VecDeque<Req>,
+    degraded: bool,
+    costs: &Costs,
+    shed: bool,
+    st: &mut ServiceStats,
+    hist: &mut LatencyHist,
+) {
+    loop {
+        let Some(head) = queue.front() else { break };
+        let (mut idx, mut free) = (0usize, servers[0]);
+        for (i, &f) in servers.iter().enumerate().skip(1) {
+            if f < free {
+                idx = i;
+                free = f;
+            }
+        }
+        let start = free.max(head.arrival);
+        if start > now {
+            break;
+        }
+        let req = queue.pop_front().unwrap();
+        if shed && start > req.deadline {
+            st.shed_expired += 1;
+            continue;
+        }
+        let cost = if degraded {
+            costs.cheap
+        } else if req.hot {
+            costs.hot
+        } else {
+            costs.full
+        };
+        let fin = start + cost * servers.len() as u64;
+        servers[idx] = fin;
+        hist.record(fin - req.arrival);
+        st.served += 1;
+        if degraded {
+            st.degraded_served += 1;
+        }
+        if fin <= req.deadline {
+            st.goodput += 1;
+        } else {
+            st.timed_out += 1;
+        }
+    }
+}
+
+/// Replay the open-loop service run over the calibrated cost of the
+/// batch run whose stats are in `stats`, then write the `svc_*`
+/// counters back into it. A disabled config is a strict no-op. Always
+/// terminates: the arrival loop is bounded by `requests` and the final
+/// drain strictly shrinks the queue — no handler can wedge.
+pub fn simulate(svc: &ServiceConfig, stats: &mut RunStats) -> ServiceStats {
+    let mut st = ServiceStats::default();
+    if !svc.enabled() {
+        return st;
+    }
+    let cost_full = capacity_cost(stats);
+    let costs =
+        Costs { full: cost_full, hot: (cost_full / 2).max(1), cheap: (cost_full / 4).max(1) };
+    // load_pct percent of capacity 1/cost => mean gap = cost * 100/load.
+    let mean_gap = cost_full as f64 * 100.0 / svc.load_pct as f64;
+    let exp = Exp::new(mean_gap);
+    let bursty = (svc.burst_factor > 1).then(|| {
+        BurstyExp::new(
+            mean_gap,
+            svc.burst_period as f64 * mean_gap,
+            svc.burst_duty_pct as f64 / 100.0,
+            svc.burst_factor as f64,
+        )
+    });
+    let zipf = Zipf::new(svc.keyspace, svc.theta);
+    let mut rng = Rng::new(svc.seed);
+    let mut servers = vec![0u64; svc.fanout as usize];
+    let mut queue: VecDeque<Req> = VecDeque::new();
+    // Under shed-off overload the backlog can approach the whole
+    // offered volume; size the sojourn histogram to cover it.
+    let mut hist = LatencyHist::covering(
+        cost_full.saturating_mul(svc.fanout as u64 + svc.requests as u64).max(1),
+    );
+    let deadline_len = cost_full.saturating_mul(svc.deadline_mult as u64);
+    let hi = (svc.queue_cap as u64 * svc.degrade_hi_pct as u64 / 100).max(1);
+    let lo = svc.queue_cap as u64 * svc.degrade_lo_pct as u64 / 100;
+    let mut degraded = false;
+    let mut above = 0u32;
+    let mut below = 0u32;
+    let mut clock = 0.0f64;
+    for _ in 0..svc.requests {
+        let gap = match &bursty {
+            Some(b) => b.sample(clock, &mut rng),
+            None => exp.sample(&mut rng),
+        };
+        clock += gap;
+        let at = clock as u64;
+        // Key draws happen at arrival in issue order regardless of the
+        // admission outcome: a rejection never shifts later draws, so
+        // the stream is a pure function of the offered sequence.
+        let mut hot = true;
+        for _ in 0..svc.keys {
+            if zipf.sample(&mut rng) >= svc.hot_keys {
+                hot = false;
+            }
+        }
+        st.offered += 1;
+        // Handlers that freed up since the last arrival take queued work
+        // first (under the detector state that prevailed then).
+        dispatch(at, &mut servers, &mut queue, degraded, &costs, svc.shed, &mut st, &mut hist);
+        if svc.shed && queue.len() as u64 >= svc.queue_cap as u64 {
+            st.rejected += 1;
+        } else {
+            st.accepted += 1;
+            queue.push_back(Req {
+                arrival: at,
+                deadline: at.saturating_add(deadline_len),
+                hot,
+            });
+            st.max_queue = st.max_queue.max(queue.len() as u64);
+            dispatch(at, &mut servers, &mut queue, degraded, &costs, svc.shed, &mut st, &mut hist);
+        }
+        // Overload detector: one occupancy sample per arrival, tripped
+        // and recovered through `hysteresis` consecutive samples.
+        if svc.shed {
+            let occ = queue.len() as u64;
+            if degraded {
+                if occ <= lo {
+                    below += 1;
+                    if below >= svc.hysteresis {
+                        degraded = false;
+                        below = 0;
+                    }
+                } else {
+                    below = 0;
+                }
+            } else if occ >= hi {
+                above += 1;
+                if above >= svc.hysteresis {
+                    degraded = true;
+                    st.degraded_spells += 1;
+                    above = 0;
+                }
+            } else {
+                above = 0;
+            }
+        }
+    }
+    // Drain: every still-queued request is served or shed.
+    dispatch(u64::MAX, &mut servers, &mut queue, degraded, &costs, svc.shed, &mut st, &mut hist);
+    st.capacity_cost = cost_full;
+    st.p50 = hist.percentile(0.50);
+    st.p99 = hist.percentile(0.99);
+    st.p999 = hist.percentile(0.999);
+    stats.service = svc.label();
+    stats.svc_capacity_cost = st.capacity_cost;
+    stats.svc_offered = st.offered;
+    stats.svc_accepted = st.accepted;
+    stats.svc_rejected = st.rejected;
+    stats.svc_shed_expired = st.shed_expired;
+    stats.svc_served = st.served;
+    stats.svc_goodput = st.goodput;
+    stats.svc_timed_out = st.timed_out;
+    stats.svc_p50 = st.p50;
+    stats.svc_p99 = st.p99;
+    stats.svc_p999 = st.p999;
+    stats.svc_max_queue = st.max_queue;
+    stats.svc_degraded_served = st.degraded_served;
+    stats.svc_degraded_spells = st.degraded_spells;
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A calibration run with a per-request cost of exactly 1000 cycles.
+    fn base_stats() -> RunStats {
+        RunStats { cycles: 1_000_000, tasks_completed: 1000, ..Default::default() }
+    }
+
+    fn run(cfg: &ServiceConfig) -> ServiceStats {
+        let mut s = base_stats();
+        simulate(cfg, &mut s)
+    }
+
+    fn assert_conservation(st: &ServiceStats, cfg: &ServiceConfig) {
+        assert_eq!(st.offered, cfg.requests as u64, "every arrival is offered");
+        assert_eq!(st.offered, st.accepted + st.rejected, "admission partitions offered");
+        assert_eq!(st.accepted, st.served + st.shed_expired, "drain partitions accepted");
+        assert_eq!(st.served, st.goodput + st.timed_out, "deadline partitions served");
+        assert!(st.p50 <= st.p99 && st.p99 <= st.p999, "percentiles must be monotone");
+    }
+
+    #[test]
+    fn preset_specs_parse_and_label_round_trip() {
+        for spec in ["off", "steady", "knee", "overload", "burst", "load:150"] {
+            let cfg = ServiceConfig::parse(spec).unwrap();
+            assert_eq!(cfg.label(), spec, "label must round-trip through parse");
+        }
+        assert_eq!(ServiceConfig::parse("load:60").unwrap().label(), "steady");
+        assert!(!ServiceConfig::off().enabled());
+        assert!(ServiceConfig::overload().enabled());
+        let mut custom = ServiceConfig::knee();
+        custom.queue_cap = 32;
+        assert_eq!(custom.label(), "custom");
+        assert!(ServiceConfig::parse("bogus").is_err());
+        assert!(ServiceConfig::parse("load:abc").is_err());
+        assert!(ServiceConfig::parse("load:0").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let cases: Vec<(ServiceConfig, &str)> = vec![
+            (ServiceConfig { requests: 0, ..ServiceConfig::knee() }, "service.requests"),
+            (ServiceConfig { queue_cap: 0, ..ServiceConfig::knee() }, "service.queue_cap"),
+            (ServiceConfig { deadline_mult: 0, ..ServiceConfig::knee() }, "service.deadline"),
+            (ServiceConfig { fanout: 0, ..ServiceConfig::knee() }, "service.fanout"),
+            (ServiceConfig { load_pct: 20_000, ..ServiceConfig::knee() }, "service.load"),
+            (ServiceConfig { theta: 1.0, ..ServiceConfig::knee() }, "service.theta"),
+            (ServiceConfig { keys: 0, ..ServiceConfig::knee() }, "service.keys"),
+            (ServiceConfig { hot_keys: 0, ..ServiceConfig::knee() }, "service.hot_keys"),
+            (
+                ServiceConfig { degrade_lo_pct: 80, ..ServiceConfig::knee() },
+                "service.degrade_lo",
+            ),
+            (ServiceConfig { hysteresis: 0, ..ServiceConfig::knee() }, "service.hysteresis"),
+            (
+                ServiceConfig { burst_factor: 4, burst_duty_pct: 0, ..ServiceConfig::knee() },
+                "service.burst_duty",
+            ),
+            (
+                ServiceConfig { burst_factor: 4, burst_period: 1, ..ServiceConfig::knee() },
+                "service.burst_period",
+            ),
+        ];
+        for (cfg, needle) in cases {
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains(needle), "expected '{needle}' in '{err}'");
+        }
+        for preset in [
+            ServiceConfig::off(),
+            ServiceConfig::steady(),
+            ServiceConfig::knee(),
+            ServiceConfig::overload(),
+            ServiceConfig::burst(),
+        ] {
+            preset.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn off_simulate_is_a_total_noop() {
+        let mut s = base_stats();
+        let before = s.clone();
+        let st = simulate(&ServiceConfig::off(), &mut s);
+        assert_eq!(st, ServiceStats::default());
+        assert_eq!(s, before, "service off must not touch the stats");
+    }
+
+    #[test]
+    fn capacity_cost_is_pinned() {
+        assert_eq!(capacity_cost(&base_stats()), 1000);
+        assert_eq!(capacity_cost(&RunStats::default()), 1, "degenerate runs cost 1, never 0");
+        let odd = RunStats { cycles: 10, tasks_completed: 3, ..Default::default() };
+        assert_eq!(capacity_cost(&odd), 3);
+    }
+
+    #[test]
+    fn simulate_is_deterministic_and_conserving() {
+        for cfg in [
+            ServiceConfig::steady(),
+            ServiceConfig::knee(),
+            ServiceConfig::overload(),
+            ServiceConfig::burst(),
+        ] {
+            let mut a = base_stats();
+            let mut b = base_stats();
+            let sa = simulate(&cfg, &mut a);
+            let sb = simulate(&cfg, &mut b);
+            assert_eq!(sa, sb, "replay must be bit-identical ({})", cfg.label());
+            assert_eq!(a, b);
+            assert_eq!(a.service, cfg.label());
+            assert_eq!(a.svc_capacity_cost, 1000);
+            assert_conservation(&sa, &cfg);
+        }
+    }
+
+    /// The acceptance pin: at 2× the measured knee, shedding ON keeps
+    /// goodput >= 80% of peak with a structurally bounded p99 sojourn,
+    /// while shedding OFF collapses — goodput craters and the queue
+    /// grows without bound.
+    #[test]
+    fn graceful_degradation_at_twice_the_knee() {
+        let cfg = ServiceConfig::overload();
+        let peak = run(&ServiceConfig::steady()).goodput.max(run(&ServiceConfig::knee()).goodput);
+        let over = run(&cfg);
+        assert!(
+            over.goodput * 10 >= peak * 8,
+            "shed-on goodput {} must hold >= 80% of peak {}",
+            over.goodput,
+            peak
+        );
+        // Bounded sojourn: cap/fanout/deadline geometry bounds any
+        // admitted request at (ceil(cap/fanout)+1) * fanout * cost.
+        let cost = 1000u64;
+        let rounds = (cfg.queue_cap as u64 + cfg.fanout as u64 - 1) / cfg.fanout as u64;
+        let bound = (rounds + 1) * cfg.fanout as u64 * cost;
+        assert!(over.p99 <= bound, "p99 {} must stay under {bound}", over.p99);
+        assert!(over.max_queue <= cfg.queue_cap as u64, "queue must stay bounded");
+        assert!(
+            over.rejected + over.shed_expired + over.degraded_spells > 0,
+            "the robustness layer must visibly engage at 2x the knee"
+        );
+        assert_conservation(&over, &cfg);
+
+        let noshed = ServiceConfig { shed: false, ..cfg };
+        let ns = run(&noshed);
+        assert!(
+            ns.goodput * 2 < peak,
+            "shed-off goodput {} must collapse below half of peak {}",
+            ns.goodput,
+            peak
+        );
+        assert!(
+            ns.max_queue > 4 * cfg.queue_cap as u64,
+            "shed-off queue {} must grow far past the bounded cap",
+            ns.max_queue
+        );
+        assert!(ns.timed_out > 0, "shed-off overload must blow deadlines");
+        assert_eq!(ns.rejected, 0, "without shedding nothing is rejected");
+        assert_eq!(ns.shed_expired, 0);
+        assert_eq!(ns.accepted, ns.offered);
+        assert!(ns.p99 >= over.p99, "unbounded queueing cannot beat the bounded p99");
+        assert_conservation(&ns, &noshed);
+    }
+
+    #[test]
+    fn overload_trips_degraded_mode() {
+        let over = run(&ServiceConfig::overload());
+        assert!(over.degraded_spells >= 2, "2x load must trip and re-trip the detector");
+        assert!(over.degraded_served > 0, "degraded spells must serve on the cheap path");
+        let steady = run(&ServiceConfig::steady());
+        assert!(
+            steady.degraded_spells <= over.degraded_spells,
+            "comfortable load cannot out-trip overload"
+        );
+    }
+
+    /// A deadline tighter than a single full service time forces both
+    /// robustness outcomes deterministically: the very first served
+    /// request already finishes past its deadline (fanout × cost > 1 ×
+    /// cost), and queued requests at 3× load wait past expiry before a
+    /// handler reaches them.
+    #[test]
+    fn deadline_pressure_sheds_and_times_out() {
+        let cfg = ServiceConfig {
+            deadline_mult: 1,
+            ..ServiceConfig::parse("load:300").unwrap()
+        };
+        let st = run(&cfg);
+        assert!(st.timed_out > 0, "a 1x-cost deadline cannot be met by a 4x-cost handler");
+        assert!(st.shed_expired > 0, "queued requests at 3x load must expire in queue");
+        assert_conservation(&st, &cfg);
+    }
+
+    #[test]
+    fn burst_preset_stresses_the_queue() {
+        let cfg = ServiceConfig::burst();
+        let burst = run(&cfg);
+        // ~90% average load is sustainable, but the 4x on-windows offer
+        // ~3.6x capacity for a sixteenth of each period: the detector
+        // must trip during bursts even though the average is under the
+        // knee, and the cheap path must absorb some of each burst.
+        assert!(burst.degraded_spells >= 1, "4x on-window bursts must trip the detector");
+        assert!(burst.degraded_served > 0, "burst absorption runs on the cheap path");
+        assert!(burst.goodput > 0);
+        assert_conservation(&burst, &cfg);
+    }
+
+    /// Offered load past the degraded-mode ceiling (cheap path = 4×
+    /// capacity) structurally overruns the bounded queue: the server
+    /// cannot serve more than ~4/5 of a 5× offered stream, so
+    /// backpressure rejections are guaranteed, not probabilistic.
+    #[test]
+    fn far_past_the_knee_rejections_are_structural() {
+        let cfg = ServiceConfig::parse("load:500").unwrap();
+        let st = run(&cfg);
+        assert!(st.rejected > 0, "5x load must overrun even the cheap path");
+        assert!(st.goodput > 0, "admitted requests still meet their deadlines");
+        assert_eq!(st.timed_out, 0, "default geometry: admitted => on time");
+        assert_conservation(&st, &cfg);
+    }
+
+    /// The calibrated cost scales the whole replay: doubling the cost
+    /// doubles the deadline, the gaps and the sojourns, but the
+    /// counters (a pure function of load ratios) stay in the same
+    /// regime.
+    #[test]
+    fn counters_are_load_relative_not_cost_absolute() {
+        let cfg = ServiceConfig::overload();
+        let a = run(&cfg);
+        let mut big = RunStats { cycles: 4_000_000, tasks_completed: 1000, ..Default::default() };
+        let b = simulate(&cfg, &mut big);
+        assert_eq!(b.capacity_cost, 4000);
+        assert_eq!(a.offered, b.offered);
+        // Same seed, same gap *ratios*: admission decisions follow the
+        // same pattern, so the regime (shedding engaged, queue bounded)
+        // is preserved even though absolute cycle values scale.
+        assert!(b.rejected + b.shed_expired + b.degraded_spells > 0);
+        assert!(b.max_queue <= cfg.queue_cap as u64);
+    }
+}

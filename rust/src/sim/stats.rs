@@ -138,6 +138,44 @@ pub struct RunStats {
     /// (requester-id attributed; empty on single-core runs).
     pub core_fault_retries: Vec<u64>,
     pub core_fault_slow_path: Vec<u64>,
+    // -- Service mode (sim::service): the open-loop request-serving layer
+    // replayed over this run's calibrated per-request cost. Service-off
+    // runs (the default) leave all of these at their defaults (empty
+    // label / 0), so bit-equality over `RunStats` is unaffected by the
+    // service subsystem existing.
+    /// Label of the active service spec (`ServiceConfig::label`; empty
+    /// when service mode is off).
+    pub service: String,
+    /// Calibrated per-request cost in cycles (the saturation knee:
+    /// `cycles / tasks_completed` of the underlying batch run).
+    pub svc_capacity_cost: u64,
+    /// Requests the arrival process offered.
+    pub svc_offered: u64,
+    /// Requests admitted to the queue.
+    pub svc_accepted: u64,
+    /// Requests rejected at a full admission queue (backpressure).
+    pub svc_rejected: u64,
+    /// Admitted requests shed at dispatch because their deadline had
+    /// already expired in the queue.
+    pub svc_shed_expired: u64,
+    /// Requests actually served by a handler.
+    pub svc_served: u64,
+    /// Served requests that met their deadline (the SLO numerator).
+    pub svc_goodput: u64,
+    /// Served requests that finished past their deadline.
+    pub svc_timed_out: u64,
+    /// Sojourn-time percentiles (arrival -> completion, histogram
+    /// bucket resolution).
+    pub svc_p50: u64,
+    pub svc_p99: u64,
+    pub svc_p999: u64,
+    /// Peak admission-queue occupancy.
+    pub svc_max_queue: u64,
+    /// Requests served on the cheap path while the overload detector
+    /// held the server in degraded mode.
+    pub svc_degraded_served: u64,
+    /// Times the overload detector tripped into degraded mode.
+    pub svc_degraded_spells: u64,
 }
 
 /// Default reorder window of [`IntervalUnion`] (see

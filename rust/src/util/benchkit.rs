@@ -68,7 +68,7 @@ impl Bench {
             times.push(t0.elapsed().as_nanos() as f64);
             work_total += work;
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sort_times(&mut times);
         let mean = times.iter().sum::<f64>() / times.len() as f64;
         let median = times[times.len() / 2];
         let work_per_iter = work_total / self.measure_iters as f64;
@@ -151,6 +151,13 @@ impl Bench {
     }
 }
 
+/// Sort timing samples under a *total* order: a NaN sample (a poisoned
+/// or overflowed measurement) sorts to the end of the array instead of
+/// panicking the whole bench run inside `partial_cmp(..).unwrap()`.
+fn sort_times(times: &mut [f64]) {
+    times.sort_by(|a, b| a.total_cmp(b));
+}
+
 /// Build profile tag recorded alongside throughput numbers, so debug-mode
 /// smoke runs are never mistaken for release measurements.
 pub fn build_mode() -> &'static str {
@@ -223,6 +230,22 @@ mod tests {
         });
         assert_eq!(b.samples.len(), 1);
         assert!(b.samples[0].throughput.is_some());
+    }
+
+    /// Regression: the percentile sort used `partial_cmp(..).unwrap()`,
+    /// which panics the moment a NaN timing sample appears. The total
+    /// order must instead sort NaN to the end and leave the finite
+    /// prefix correctly ordered, so median/min stay meaningful.
+    #[test]
+    fn nan_samples_sort_instead_of_panicking() {
+        let mut t = vec![3.0, f64::NAN, 1.0, 2.0];
+        sort_times(&mut t);
+        assert_eq!(&t[..3], &[1.0, 2.0, 3.0]);
+        assert!(t[3].is_nan(), "NaN must sort last under total_cmp");
+        // All-NaN input is equally non-panicking.
+        let mut all = vec![f64::NAN, f64::NAN];
+        sort_times(&mut all);
+        assert!(all.iter().all(|x| x.is_nan()));
     }
 
     #[test]

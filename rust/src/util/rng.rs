@@ -147,6 +147,65 @@ impl Zipf {
     }
 }
 
+/// Exponential inter-arrival sampler with mean `mean` (time unit is the
+/// caller's — the service simulator counts cycles), via the inverse-CDF
+/// transform `-ln(1-u) * mean`. `u` comes from [`Rng::f64`], so
+/// `1 - u` is in `(0, 1]`: the log argument is never zero and every
+/// sample is finite and non-negative. Used by `sim::service` as the
+/// open-loop Poisson arrival process.
+#[derive(Debug, Clone)]
+pub struct Exp {
+    mean: f64,
+}
+
+impl Exp {
+    pub fn new(mean: f64) -> Self {
+        assert!(mean > 0.0 && mean.is_finite(), "Exp mean must be positive and finite");
+        Self { mean }
+    }
+
+    /// Draw one inter-arrival gap.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        -(1.0 - rng.f64()).ln() * self.mean
+    }
+}
+
+/// Bursty on/off modulator over an exponential base process (a
+/// deterministic-phase Markov-modulated Poisson process): each period of
+/// length `period` opens with an "on" window covering `duty` of it, and
+/// gaps drawn inside the window shrink by `factor` — arrivals come
+/// `factor`× faster during bursts and at the base rate outside them.
+/// The phase is a pure function of the caller's clock, so the stream
+/// stays a deterministic replay function of (seed, clock sequence).
+#[derive(Debug, Clone)]
+pub struct BurstyExp {
+    base: Exp,
+    period: f64,
+    on_len: f64,
+    factor: f64,
+}
+
+impl BurstyExp {
+    pub fn new(mean: f64, period: f64, duty: f64, factor: f64) -> Self {
+        assert!(period > 0.0 && period.is_finite(), "BurstyExp period must be positive");
+        assert!((0.0..1.0).contains(&duty) && duty > 0.0, "BurstyExp duty must be in (0, 1)");
+        assert!(factor >= 1.0 && factor.is_finite(), "BurstyExp factor must be >= 1");
+        Self { base: Exp::new(mean), period, on_len: period * duty, factor }
+    }
+
+    /// Next inter-arrival gap given the current clock `now`.
+    #[inline]
+    pub fn sample(&self, now: f64, rng: &mut Rng) -> f64 {
+        let gap = self.base.sample(rng);
+        if now.rem_euclid(self.period) < self.on_len {
+            gap / self.factor
+        } else {
+            gap
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,6 +277,71 @@ mod tests {
         // Zipf(0.99): the first 10% of keys should take far more than 10%
         // of the mass.
         assert!(low as f64 / n as f64 > 0.4, "low frac {}", low as f64 / n as f64);
+    }
+
+    #[test]
+    fn exp_same_seed_bitwise_identical() {
+        let e = Exp::new(100.0);
+        let mut a = Rng::new(17);
+        let mut b = Rng::new(17);
+        for _ in 0..1000 {
+            // Pinned arithmetic: the inverse-CDF transform is a pure
+            // function of the u64 draw, so equal seeds give bit-equal
+            // f64 gaps, not merely close ones.
+            assert_eq!(e.sample(&mut a).to_bits(), e.sample(&mut b).to_bits());
+        }
+    }
+
+    #[test]
+    fn exp_samples_finite_nonnegative() {
+        let e = Exp::new(3.5);
+        let mut r = Rng::new(23);
+        for _ in 0..20_000 {
+            let x = e.sample(&mut r);
+            assert!(x.is_finite() && x >= 0.0, "bad exp sample {x}");
+        }
+    }
+
+    #[test]
+    fn exp_mean_converges() {
+        let e = Exp::new(200.0);
+        let mut r = Rng::new(7);
+        let n = 50_000;
+        let sum: f64 = (0..n).map(|_| e.sample(&mut r)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 200.0).abs() / 200.0 < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn bursty_same_seed_bitwise_identical() {
+        let m = BurstyExp::new(100.0, 1000.0, 0.25, 4.0);
+        let mut a = Rng::new(31);
+        let mut b = Rng::new(31);
+        let mut ta = 0.0f64;
+        let mut tb = 0.0f64;
+        for _ in 0..1000 {
+            let ga = m.sample(ta, &mut a);
+            let gb = m.sample(tb, &mut b);
+            assert_eq!(ga.to_bits(), gb.to_bits());
+            ta += ga;
+            tb += gb;
+        }
+    }
+
+    #[test]
+    fn bursty_bursts_faster_inside_window() {
+        // Period 1000, duty 0.25, factor 4: gaps drawn inside [0, 250)
+        // average ~mean/4, gaps outside average ~mean.
+        let m = BurstyExp::new(100.0, 1000.0, 0.25, 4.0);
+        let mut r = Rng::new(41);
+        let n = 20_000;
+        let on: f64 = (0..n).map(|_| m.sample(10.0, &mut r)).sum::<f64>() / n as f64;
+        let off: f64 = (0..n).map(|_| m.sample(500.0, &mut r)).sum::<f64>() / n as f64;
+        assert!((on - 25.0).abs() / 25.0 < 0.07, "on-window mean {on}");
+        assert!((off - 100.0).abs() / 100.0 < 0.07, "off-window mean {off}");
+        // The phase wraps: one full period later is the on-window again.
+        let wrapped: f64 = (0..n).map(|_| m.sample(1010.0, &mut r)).sum::<f64>() / n as f64;
+        assert!((wrapped - 25.0).abs() / 25.0 < 0.07, "wrapped mean {wrapped}");
     }
 
     #[test]

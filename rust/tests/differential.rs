@@ -333,6 +333,149 @@ fn heavy_faults_complete_via_retry_or_slow_path() {
     }
 }
 
+/// The service-subsystem acceptance differential: with the open-loop
+/// replay off — whether left at the default, pinned in the session
+/// config, or requested per-run as an explicit `ServiceConfig::off()` —
+/// the simulator is bit-identical to the seed: all five compile
+/// variants, all three interpreter paths (decoded-fused /
+/// decoded-unfused / reference), cycles + every stat + memory. Off is
+/// structural (`simulate` returns before touching the run), and this
+/// pins it.
+#[test]
+fn service_off_is_bit_identical_to_seed() {
+    use coroamu::sim::service::ServiceConfig;
+    for v in Variant::ALL {
+        // Three paths under an explicitly pinned service-off session.
+        assert_paths_agree_under(
+            SimConfig::nh_g().with_service(ServiceConfig::off()),
+            "gups",
+            v,
+            Scale::Tiny,
+            7,
+        );
+        // Explicit request == the session default, stat for stat.
+        let req = || RunRequest::new("gups", v).scale(Scale::Tiny).seed(7);
+        let base = Engine::new(SimConfig::nh_g()).run(req()).unwrap();
+        let off = Engine::new(SimConfig::nh_g()).run(req().service(ServiceConfig::off())).unwrap();
+        assert_eq!(
+            base.stats,
+            off.stats,
+            "{}: explicit service=off diverges from the batch default",
+            v.label()
+        );
+        assert_eq!(base.stats.service, "", "{}: batch run annotated", v.label());
+        assert_eq!(base.stats.svc_offered, 0, "{}: batch run offered requests", v.label());
+    }
+}
+
+/// Property: every service spec is a deterministic replay function
+/// across (a) repeated runs through one engine (dataset restored from
+/// the COW snapshot) and (b) a fresh engine with the same seed — with
+/// the fabric, faults and policy axes rotated underneath it (they all
+/// move the calibrated cost, and the replay must follow
+/// deterministically). The nightly workflow cranks PROPTEST_CASES.
+#[test]
+fn proptest_service_deterministic_across_restore_and_reruns() {
+    use coroamu::sim::faults::FaultConfig;
+    use coroamu::sim::service::ServiceConfig;
+    use coroamu::util::proptest::{check, env_cases, Config};
+    let specs = [
+        ServiceConfig::steady(),
+        ServiceConfig::knee(),
+        ServiceConfig::overload(),
+        ServiceConfig::burst(),
+    ];
+    check(
+        Config { cases: env_cases(10), ..Config::default() },
+        |g| g.rng.next_u64(),
+        |seed: &u64| {
+            let svc = specs[(*seed % 4) as usize];
+            let fabric = FabricKind::ALL[((*seed >> 2) % 4) as usize];
+            let policy = SchedPolicyKind::ALL[((*seed >> 4) % 4) as usize];
+            let faults = [FaultConfig::off(), FaultConfig::mild()][((*seed >> 6) % 2) as usize];
+            let cfg = SimConfig::nh_g().with_fabric(fabric).with_sched_policy(policy);
+            let req = || {
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .seed(seed % 5)
+                    .faults(faults)
+                    .service(svc)
+            };
+            let tag = || {
+                format!(
+                    "{}/{}/{}/{}",
+                    svc.label(),
+                    fabric.label(),
+                    faults.label(),
+                    policy.label()
+                )
+            };
+            let engine = Engine::new(cfg.clone());
+            let a = engine.run(req()).map_err(|e| format!("{e:#}"))?.stats;
+            if a.service != svc.label() {
+                return Err(format!("{}: ran as '{}'", tag(), a.service));
+            }
+            if a.svc_offered != svc.requests as u64 {
+                return Err(format!("{}: offered {} of {}", tag(), a.svc_offered, svc.requests));
+            }
+            if a.svc_offered != a.svc_accepted + a.svc_rejected {
+                return Err(format!("{}: admission accounting leaks requests", tag()));
+            }
+            let b = engine.run(req()).map_err(|e| format!("{e:#}"))?.stats;
+            if a != b {
+                return Err(format!("{}: snapshot-restore rerun diverges", tag()));
+            }
+            let fresh = Engine::new(cfg).run(req()).map_err(|e| format!("{e:#}"))?.stats;
+            if a != fresh {
+                return Err(format!("{}: fresh engine with the same seed diverges", tag()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Acceptance: the overload axis composed with heavy chaos — offered
+/// load far past the knee while the fabric NACKs, spikes and blacks
+/// out — still completes with no wedged coroutine, and the robustness
+/// layer visibly engages: at 5× capacity the bounded admission queue
+/// must reject requests (backpressure is structural there), while the
+/// shedding-off ablation has to blow deadlines instead.
+#[test]
+fn overload_with_heavy_faults_sheds_and_completes() {
+    use coroamu::sim::faults::FaultConfig;
+    use coroamu::sim::service::ServiceConfig;
+    let svc = ServiceConfig::parse("load:500").unwrap();
+    let run = |svc: ServiceConfig| {
+        Engine::new(SimConfig::nh_g())
+            .run(
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .seed(7)
+                    .faults(FaultConfig::heavy())
+                    .service(svc),
+            )
+            .unwrap_or_else(|e| panic!("overload + heavy faults wedged the run: {e:#}"))
+            .stats
+    };
+    let st = run(svc);
+    assert_eq!(st.faults, "heavy");
+    assert_eq!(st.service, "load:500");
+    assert!(
+        st.fault_nacks + st.fault_timeouts + st.fault_degraded_cycles > 0,
+        "heavy preset injected nothing"
+    );
+    assert_eq!(st.svc_offered, svc.requests as u64, "every request accounted");
+    assert_eq!(st.svc_offered, st.svc_accepted + st.svc_rejected);
+    assert!(st.svc_rejected > 0, "5x the degraded capacity must shed via backpressure");
+    assert!(st.svc_goodput > 0, "shedding must preserve useful work under chaos");
+    assert_eq!(st.svc_timed_out, 0, "admitted requests meet the default deadline geometry");
+    // The ablation arm: shedding off turns the same offered load into
+    // deadline misses on an unbounded queue.
+    let st = run(ServiceConfig { shed: false, ..svc });
+    assert_eq!(st.svc_rejected, 0, "no admission control without shedding");
+    assert!(st.svc_timed_out > 0, "unbounded queueing must blow the deadline");
+}
+
 /// The cluster-subsystem acceptance differential: `cores = 1` — whether
 /// left at the default, pinned in the session config, or requested
 /// per-run — is the plain single-core simulator, bit for bit. All five
@@ -572,7 +715,7 @@ fn sim_mips_smoke_records_bench_json() {
 
     fn sample_from(name: &str, times: &[f64], work: f64) -> Sample {
         let mut sorted = times.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
         Sample {
             name: name.to_string(),
