@@ -22,7 +22,10 @@ per-offered-load columns (`sim_mips/service/<spec>/.../decoded`, a
 batch run plus the `sim::service` open-loop queueing replay at that
 load), so a fabric model, cluster interleave, fault decorator or
 service replay whose bookkeeping drags
-down decoded MIPS fails the same gate as any other kernel. The `reference` rows are informational (the pre-change
+down decoded MIPS fails the same gate as any other kernel. The
+sweep-store columns (`sim_mips/store/{cold,warm}/gups`) are
+informational only (no gated suffix): `cold` prices simulate-and-persist,
+`warm` prices serving the same matrix from disk. The `reference` rows are informational (the pre-change
 baseline shape) and rows present on only one side are reported but
 never gate — adding or renaming a kernel (or a whole fabric/cluster
 group, against a baseline recorded before those subsystems existed)

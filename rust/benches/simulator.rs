@@ -249,6 +249,53 @@ fn service_mips(b: &mut Bench) {
     }
 }
 
+/// Sweep-store columns (`sim_mips/store/{cold,warm}/gups`), so the CI
+/// `cargo bench -- sim_mips` smoke runs them and the regression gate
+/// treats them like any other decoded row; baselines recorded before the
+/// store subsystem simply skip them as new rows. `cold` prices a
+/// store-attached sweep that must simulate and persist every cell (the
+/// store is emptied before each iteration); `warm` prices the planner
+/// serving the same matrix entirely from disk — the `coroamu sweep` /
+/// `report` steady state, which should be orders of magnitude cheaper.
+fn store_mips(b: &mut Bench) {
+    use coroamu::engine::store::Store;
+    let matrix: Vec<RunRequest> = [150.0, 300.0, 600.0]
+        .iter()
+        .map(|l| {
+            RunRequest::new("gups", Variant::CoroAmuFull)
+                .scale(Scale::Small)
+                .seed(42)
+                .latency_ns(*l)
+                .key(format!("{l}"))
+        })
+        .collect();
+    let dir = std::env::temp_dir().join(format!("coroamu-bench-store-{}", std::process::id()));
+
+    let cold_name = "sim_mips/store/cold/gups";
+    if b.enabled(cold_name) {
+        let engine = Engine::new(SimConfig::nh_g()).with_store(Store::open(&dir).unwrap());
+        b.run(cold_name, "instr", || {
+            for p in std::fs::read_dir(&dir).unwrap().flatten() {
+                std::fs::remove_file(p.path()).unwrap();
+            }
+            let rs = engine.sweep(&matrix, 1).unwrap();
+            rs.iter().map(|r| r.stats.dyn_instrs as f64).sum()
+        });
+    }
+
+    let warm_name = "sim_mips/store/warm/gups";
+    if b.enabled(warm_name) {
+        let engine = Engine::new(SimConfig::nh_g()).with_store(Store::open(&dir).unwrap());
+        engine.sweep(&matrix, 1).unwrap(); // prepopulate every cell
+        b.run(warm_name, "instr", || {
+            let rs = engine.sweep(&matrix, 1).unwrap();
+            assert!(rs.iter().all(|r| r.store_hit), "warm row must be all store hits");
+            rs.iter().map(|r| r.stats.dyn_instrs as f64).sum()
+        });
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// The acceptance sweep as a throughput row: {fifo, arrival, batched,
 /// latency} x {200, 800} ns on GUPS/CoroAMU-Full through one engine
 /// session (policy and latency are simulate-time, so the whole matrix is
@@ -366,6 +413,7 @@ fn main() {
     cluster_mips(&mut b);
     faults_mips(&mut b);
     service_mips(&mut b);
+    store_mips(&mut b);
     sched_policy_sweep(&mut b);
     interp_throughput(&mut b, "gups", Variant::Serial);
     interp_throughput(&mut b, "gups", Variant::CoroAmuFull);

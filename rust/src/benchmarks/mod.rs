@@ -27,9 +27,7 @@ pub mod mcf;
 pub mod stream;
 
 use crate::compiler::ast::Kernel;
-use crate::compiler::Variant;
-use crate::config::SimConfig;
-use crate::sim::{MemImage, RunStats};
+use crate::sim::MemImage;
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -103,30 +101,6 @@ pub fn by_name(name: &str) -> Option<Box<dyn Benchmark>> {
     all().into_iter().find(|b| b.spec().name.eq_ignore_ascii_case(name))
 }
 
-/// Compile an instance under explicit codegen options, run it on `cfg`,
-/// validate the result with the native oracle, and return the stats.
-///
-/// Thin shim kept for source compatibility: it opens a throwaway
-/// [`crate::engine::Engine`] session per call, so nothing is cached.
-#[deprecated(note = "use coroamu::engine::Engine (run / run_instance) — it caches compiled kernels")]
-pub fn execute_opts(
-    cfg: &SimConfig,
-    inst: Instance,
-    opts: &crate::compiler::CodegenOpts,
-) -> Result<RunStats> {
-    Ok(crate::engine::Engine::new(cfg.clone()).run_instance(inst, opts)?.stats)
-}
-
-/// Compile an instance under `variant`, run it on `cfg`, validate the
-/// result with the native oracle, and return the stats.
-///
-/// Thin shim kept for source compatibility; see [`execute_opts`].
-#[deprecated(note = "use coroamu::engine::Engine (run / run_instance) — it caches compiled kernels")]
-#[allow(deprecated)]
-pub fn execute(cfg: &SimConfig, inst: Instance, variant: Variant, tasks: usize) -> Result<RunStats> {
-    execute_opts(cfg, inst, &variant.opts(tasks))
-}
-
 /// Table II rendered from the registry.
 pub fn table2() -> crate::util::table::Table {
     let mut t = crate::util::table::Table::new(
@@ -143,6 +117,9 @@ pub fn table2() -> crate::util::table::Table {
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
+    use crate::compiler::Variant;
+    use crate::config::SimConfig;
+    use crate::sim::RunStats;
 
     /// Run a benchmark at Small scale across all five variants through one
     /// engine session, checking the oracle each time; returns

@@ -1,126 +1,12 @@
-//! Legacy evaluation coordinator, now a thin compatibility layer over
-//! [`crate::engine`]. The [`pool`] worker pool still lives here (the
-//! engine's sweep fans out over it), but job execution is delegated to an
-//! [`Engine`] session: new code should construct an `Engine` and call
-//! [`Engine::run`] / [`Engine::sweep`] directly, which additionally shares
-//! one compiled-kernel cache across the whole matrix.
+//! Worker-pool plumbing for parallel sweeps. The evaluation entry point
+//! is [`crate::engine::Engine`] — construct a session and call
+//! [`crate::engine::Engine::run`] / [`crate::engine::Engine::sweep`],
+//! which shares one compiled-kernel cache (and, when a store is
+//! attached, the persistent result store) across the whole matrix.
+//! The engine's sweep fans out over [`pool::parallel_map`].
+//!
+//! The PR 1 `Job`/`run_job`/`run_matrix` compatibility layer is gone:
+//! every run is keyed and recorded as an engine `RunRequest`, so nothing
+//! can bypass the store's cell fingerprinting.
 
 pub mod pool;
-
-use crate::benchmarks::Scale;
-use crate::compiler::Variant;
-use crate::config::SimConfig;
-use crate::engine::{Engine, RunRequest};
-use crate::sim::RunStats;
-use anyhow::Result;
-
-/// One simulation job (legacy shape; [`RunRequest`] is the engine-native
-/// equivalent).
-#[derive(Debug, Clone)]
-pub struct Job {
-    pub bench: String,
-    pub variant: Variant,
-    /// Coroutine concurrency; 0 = the benchmark's default.
-    pub tasks: usize,
-    pub cfg: SimConfig,
-    pub scale: Scale,
-    pub seed: u64,
-    /// Free-form key the harness uses to group results (e.g. latency).
-    pub key: String,
-}
-
-impl Job {
-    /// The engine-native form of this job. The job's `cfg` becomes the
-    /// engine session config, so no latency override is needed.
-    pub fn to_request(&self) -> RunRequest {
-        RunRequest::new(self.bench.clone(), self.variant)
-            .tasks(self.tasks)
-            .scale(self.scale)
-            .seed(self.seed)
-            .key(self.key.clone())
-    }
-}
-
-#[derive(Debug, Clone)]
-pub struct RunResult {
-    pub job: Job,
-    pub stats: RunStats,
-}
-
-/// Execute a single job (compile -> link -> simulate -> oracle-check)
-/// through a throwaway engine session.
-pub fn run_job(job: &Job) -> Result<RunResult> {
-    let engine = Engine::new(job.cfg.clone());
-    let report = engine.run(job.to_request())?;
-    Ok(RunResult { job: job.clone(), stats: report.stats })
-}
-
-/// Run a job matrix across the worker pool; any failure aborts with the
-/// offending job named. Jobs may carry heterogeneous configs, so each gets
-/// its own engine session — prefer [`Engine::sweep`], which shares one
-/// session (and one kernel cache) across the matrix.
-pub fn run_matrix(jobs: Vec<Job>, threads: usize) -> Result<Vec<RunResult>> {
-    let results = pool::parallel_map(jobs.len(), threads, |i| {
-        let j = &jobs[i];
-        run_job(j).map_err(|e| {
-            anyhow::anyhow!("{} [{} / {} / {}]: {e:#}", j.bench, j.variant.label(), j.key, j.cfg.name)
-        })
-    });
-    results.into_iter().collect()
-}
-
-/// Find the result for (bench, variant, key).
-pub fn lookup<'a>(rs: &'a [RunResult], bench: &str, variant: Variant, key: &str) -> Option<&'a RunResult> {
-    rs.iter().find(|r| r.job.bench == bench && r.job.variant == variant && r.job.key == key)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn tiny_job(bench: &str, variant: Variant) -> Job {
-        Job {
-            bench: bench.into(),
-            variant,
-            tasks: 0,
-            cfg: SimConfig::nh_g(),
-            scale: Scale::Tiny,
-            seed: 1,
-            key: "t".into(),
-        }
-    }
-
-    #[test]
-    fn run_job_smoke() {
-        let r = run_job(&tiny_job("gups", Variant::Serial)).unwrap();
-        assert!(r.stats.cycles > 0);
-    }
-
-    #[test]
-    fn unknown_bench_errors() {
-        assert!(run_job(&tiny_job("nope", Variant::Serial)).is_err());
-    }
-
-    #[test]
-    fn job_converts_to_request() {
-        let j = tiny_job("gups", Variant::CoroAmuD);
-        let r = j.to_request();
-        assert_eq!(r.bench, "gups");
-        assert_eq!(r.variant, Variant::CoroAmuD);
-        assert_eq!(r.scale, Scale::Tiny);
-        assert_eq!((r.seed, r.key.as_str()), (1, "t"));
-        assert_eq!(r.latency_ns, None, "job cfg is the session cfg");
-    }
-
-    #[test]
-    fn matrix_runs_parallel_and_lookup_works() {
-        let jobs: Vec<Job> =
-            ["gups", "stream"].iter().flat_map(|b| {
-                [Variant::Serial, Variant::CoroAmuFull].iter().map(|v| tiny_job(b, *v)).collect::<Vec<_>>()
-            }).collect();
-        let rs = run_matrix(jobs, 4).unwrap();
-        assert_eq!(rs.len(), 4);
-        assert!(lookup(&rs, "gups", Variant::CoroAmuFull, "t").is_some());
-        assert!(lookup(&rs, "gups", Variant::CoroAmuD, "t").is_none());
-    }
-}

@@ -26,8 +26,7 @@
 //! AMU config), so a figure matrix that sweeps latencies and seeds compiles
 //! each (benchmark, variant) kernel exactly once — the compile-once /
 //! issue-many amortization the AMU line of work calls for. [`Engine::sweep`]
-//! fans a request matrix across the worker pool and subsumes the old
-//! `coordinator::run_matrix`.
+//! fans a request matrix across the worker pool.
 //!
 //! Datasets are cached the same way: the first run of a (bench, scale,
 //! seed) triple materializes the benchmark instance — dataset synthesis
@@ -35,6 +34,18 @@
 //! run restores it from a copy-on-write [`MemImage`] snapshot instead of
 //! regenerating it. A latency sweep therefore builds each dataset exactly
 //! once (see [`Engine::dataset_stats`]), mirroring the kernel cache.
+//!
+//! With a persistent [`store::Store`] attached ([`Engine::with_store`],
+//! or `COROAMU_STORE` via [`Engine::with_store_from_env`]),
+//! [`Engine::sweep`] becomes a **planner**: each request reduces to a
+//! canonical cell fingerprint ([`Engine::cell_fingerprint`]), the matrix
+//! is partitioned into store hits (served without simulating, stats
+//! bit-identical to a fresh run) and misses (simulated on the worker
+//! pool, each written back atomically on completion), and a sweep killed
+//! mid-grid resumes from the store across processes. Without a store,
+//! behavior is unchanged.
+
+pub mod store;
 
 use crate::benchmarks::{self, Instance, Scale};
 use crate::compiler::{compile, CodegenOpts, CompiledKernel, Variant};
@@ -305,6 +316,9 @@ pub struct RunReport {
     pub key: String,
     /// Whether the kernel came from the compiled-kernel cache.
     pub cache_hit: bool,
+    /// Whether the whole run was served from the persistent sweep store
+    /// (no simulation happened in this process).
+    pub store_hit: bool,
     pub stats: RunStats,
 }
 
@@ -331,7 +345,13 @@ impl RunReport {
             },
             self.scale,
             self.seed,
-            if self.cache_hit { " kernel=cached" } else { " kernel=compiled" },
+            if self.store_hit {
+                " source=store"
+            } else if self.cache_hit {
+                " kernel=cached"
+            } else {
+                " kernel=compiled"
+            },
         ));
         out.push_str(&format!("  cycles            {}\n", st.cycles));
         out.push_str(&format!("  dyn instrs        {} (ipc {:.2})\n", st.dyn_instrs, st.ipc()));
@@ -465,6 +485,26 @@ pub struct InstanceRun {
     pub cache_hit: bool,
 }
 
+/// A sweep partitioned against the persistent store: which matrix cells
+/// are already on disk and which still need simulating. Index vectors
+/// refer into the planned matrix; `fingerprints[i]` is the canonical
+/// cell fingerprint of `matrix[i]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SweepPlan {
+    pub total: usize,
+    pub hits: Vec<usize>,
+    pub misses: Vec<usize>,
+    pub fingerprints: Vec<u64>,
+}
+
+impl SweepPlan {
+    /// Machine-readable one-liner (`plan total=N hits=H misses=M`),
+    /// printed by `coroamu sweep` and grepped by the CI resume smoke.
+    pub fn summary(&self) -> String {
+        format!("plan total={} hits={} misses={}", self.total, self.hits.len(), self.misses.len())
+    }
+}
+
 /// Find the report for (bench, variant, key) in a sweep result.
 pub fn lookup<'a>(
     rs: &'a [RunReport],
@@ -486,6 +526,9 @@ pub struct Engine {
     datasets: Mutex<DatasetCache>,
     ds_hits: AtomicU64,
     ds_misses: AtomicU64,
+    /// Persistent sweep store; `None` (the default) keeps every code
+    /// path bit-identical to the store-less engine.
+    store: Option<store::Store>,
 }
 
 impl Engine {
@@ -498,7 +541,30 @@ impl Engine {
             datasets: Mutex::new(DatasetCache::default()),
             ds_hits: AtomicU64::new(0),
             ds_misses: AtomicU64::new(0),
+            store: None,
         }
+    }
+
+    /// Attach a persistent sweep store: [`Engine::sweep`] then plans
+    /// hits/misses against it and writes completed cells back.
+    pub fn with_store(mut self, store: store::Store) -> Engine {
+        self.store = Some(store);
+        self
+    }
+
+    /// Attach the store named by `COROAMU_STORE` when set; otherwise the
+    /// engine stays store-less. This is how the CLI and `harness::grid`
+    /// opt every report into incremental sweeps.
+    pub fn with_store_from_env(self) -> Result<Engine> {
+        match store::Store::from_env()? {
+            Some(s) => Ok(self.with_store(s)),
+            None => Ok(self),
+        }
+    }
+
+    /// The attached sweep store, if any.
+    pub fn store(&self) -> Option<&store::Store> {
+        self.store.as_ref()
     }
 
     /// The session's base configuration (requests may override latency).
@@ -649,6 +715,7 @@ impl Engine {
             seed: req.seed,
             key: req.key.clone(),
             cache_hit: run.cache_hit,
+            store_hit: false,
             stats: run.stats,
         })
     }
@@ -697,14 +764,161 @@ impl Engine {
     /// Fan a request matrix across `threads` workers, sharing this
     /// session's kernel cache; any failure aborts with the offending
     /// request named. Results come back in matrix order.
+    ///
+    /// With a store attached this is a planner: store hits are served
+    /// without simulating (stats bit-identical to a fresh run, pinned by
+    /// the differential suite) and each completed miss is written back
+    /// atomically, so a killed sweep resumes across processes.
     pub fn sweep(&self, matrix: &[RunRequest], threads: usize) -> Result<Vec<RunReport>> {
-        let results = pool::parallel_map(matrix.len(), threads, |i| {
-            let r = &matrix[i];
-            self.run_ref(r).map_err(|e| {
-                anyhow!("{} [{} / {} / seed {}]: {e:#}", r.bench, r.config_label(), r.key, r.seed)
-            })
+        if self.store.is_none() {
+            let results = pool::parallel_map(matrix.len(), threads, |i| {
+                self.run_and_record(&matrix[i], None)
+            });
+            return results.into_iter().collect();
+        }
+        self.sweep_stored(matrix, threads)
+    }
+
+    /// Partition a matrix against the attached store: which cells are
+    /// already present (hits) and which must be simulated (misses).
+    /// Requires a store; computing fingerprints materializes datasets
+    /// (kernel ASTs can be scale-dependent) but never simulates.
+    pub fn plan(&self, matrix: &[RunRequest]) -> Result<SweepPlan> {
+        let st = self.store.as_ref().ok_or_else(|| {
+            anyhow!("no sweep store attached (set {} or use with_store)", store::STORE_ENV)
+        })?;
+        let mut plan = SweepPlan {
+            total: matrix.len(),
+            hits: Vec::new(),
+            misses: Vec::new(),
+            fingerprints: Vec::with_capacity(matrix.len()),
+        };
+        for (i, req) in matrix.iter().enumerate() {
+            let fp = self.cell_fingerprint(req)?;
+            plan.fingerprints.push(fp);
+            if st.contains(fp) {
+                plan.hits.push(i);
+            } else {
+                plan.misses.push(i);
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Simulate (and persist) at most `limit` of the plan's missing
+    /// cells, returning the pre-execution plan. This is the resumable
+    /// unit `coroamu sweep` is built on; the differential suite uses a
+    /// small `limit` to model a sweep killed mid-grid.
+    pub fn populate(&self, matrix: &[RunRequest], threads: usize, limit: usize) -> Result<SweepPlan> {
+        let plan = self.plan(matrix)?;
+        let todo: Vec<usize> = plan.misses.iter().copied().take(limit).collect();
+        let results = pool::parallel_map(todo.len(), threads, |j| {
+            let i = todo[j];
+            self.run_and_record(&matrix[i], Some(plan.fingerprints[i]))
         });
-        results.into_iter().collect()
+        for r in results {
+            r?;
+        }
+        Ok(plan)
+    }
+
+    fn sweep_stored(&self, matrix: &[RunRequest], threads: usize) -> Result<Vec<RunReport>> {
+        let plan = self.plan(matrix)?;
+        let st = self.store.as_ref().expect("sweep_stored requires a store");
+        let mut out: Vec<Option<RunReport>> = matrix.iter().map(|_| None).collect();
+        // Serve hits from disk first. A cell that fails verification here
+        // (corrupted since the plan) is quarantined by `get` and falls
+        // through to the miss list — re-simulated, never trusted.
+        let mut misses = plan.misses.clone();
+        for &i in &plan.hits {
+            match st.get(plan.fingerprints[i]) {
+                Some(stats) => out[i] = Some(self.report_from_store(&matrix[i], stats)),
+                None => misses.push(i),
+            }
+        }
+        misses.sort_unstable();
+        let results = pool::parallel_map(misses.len(), threads, |j| {
+            let i = misses[j];
+            self.run_and_record(&matrix[i], Some(plan.fingerprints[i]))
+        });
+        for (j, r) in results.into_iter().enumerate() {
+            out[misses[j]] = Some(r?);
+        }
+        Ok(out.into_iter().map(|o| o.expect("every cell served or simulated")).collect())
+    }
+
+    /// Run one request, annotating failures with its identity; when `fp`
+    /// is given, commit the result to the store before returning.
+    fn run_and_record(&self, req: &RunRequest, fp: Option<u64>) -> Result<RunReport> {
+        let rep = self.run_ref(req).map_err(|e| {
+            anyhow!("{} [{} / {} / seed {}]: {e:#}", req.bench, req.config_label(), req.key, req.seed)
+        })?;
+        if let (Some(fp), Some(st)) = (fp, self.store.as_ref()) {
+            let meta = store::CellMeta {
+                bench: rep.bench.clone(),
+                variant: rep.variant_label.clone(),
+                key: rep.key.clone(),
+                cfg: rep.cfg_name.clone(),
+                scale: format!("{:?}", rep.scale),
+                seed: rep.seed,
+            };
+            st.put(fp, &meta, &rep.stats)?;
+        }
+        Ok(rep)
+    }
+
+    /// Provenance for a store-served cell is recomputed from the request
+    /// and the session config — only the stats come from disk.
+    fn report_from_store(&self, req: &RunRequest, stats: RunStats) -> RunReport {
+        let cfg = self.effective_cfg(req);
+        RunReport {
+            bench: req.bench.clone(),
+            variant: req.variant,
+            variant_label: req.config_label(),
+            cfg_name: cfg.name.clone(),
+            far_latency_ns: cfg.mem.far_latency_ns,
+            sched_policy: cfg.sched_policy,
+            fabric: cfg.mem.fabric.kind,
+            cores: cfg.cluster.cores,
+            faults: cfg.mem.fabric.faults,
+            service: cfg.service,
+            scale: req.scale,
+            seed: req.seed,
+            key: req.key.clone(),
+            cache_hit: false,
+            store_hit: true,
+            stats,
+        }
+    }
+
+    /// The canonical cell fingerprint of a request: a stable (FNV-1a,
+    /// process-independent) hash over everything that determines the
+    /// simulated output — kernel AST, effective codegen options, the
+    /// full effective `SimConfig` (latency, policy, fabric, cores,
+    /// faults, service — every simulate-time override applied), dataset
+    /// identity (bench, scale, seed) and resolved concurrency. The
+    /// request's `key`/`label` grouping strings are display-only and
+    /// deliberately excluded.
+    pub fn cell_fingerprint(&self, req: &RunRequest) -> Result<u64> {
+        let tmpl = self.dataset(&req.bench, req.scale, req.seed)?;
+        let tasks = if req.tasks == 0 { tmpl.default_tasks } else { req.tasks };
+        let opts = match &req.opts {
+            Some(o) => o.clone(),
+            None => req.variant.opts(tasks),
+        };
+        let cfg = self.effective_cfg(req);
+        let bench = req.bench.to_ascii_lowercase();
+        let variant = req.config_label();
+        Ok(store::cell_fingerprint(&store::CellKey {
+            bench: &bench,
+            variant: &variant,
+            tasks,
+            scale: req.scale,
+            seed: req.seed,
+            kernel_fp: store::stable_fingerprint(&tmpl.kernel),
+            opts_fp: store::stable_fingerprint(&opts),
+            cfg_fp: store::stable_fingerprint(&cfg),
+        }))
     }
 
     /// The session config with the request's simulate-time overrides
@@ -1203,5 +1417,137 @@ mod tests {
         assert_eq!(rs.len(), 2);
         assert!(lookup(&rs, "gups", Variant::Serial, "a").is_some());
         assert!(lookup(&rs, "gups", Variant::CoroAmuD, "a").is_none());
+    }
+
+    fn store_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("coroamu-engine-ut-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn cell_fingerprint_is_stable_and_keyed_on_every_knob() {
+        // Two independent sessions (the in-process analogue of two
+        // processes — the FNV primitive itself is pinned process-stable
+        // in store::tests) must agree on every fingerprint.
+        let a = Engine::new(SimConfig::nh_g());
+        let b = Engine::new(SimConfig::nh_g());
+        let base = || RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny);
+        let fp = a.cell_fingerprint(&base()).unwrap();
+        assert_eq!(fp, b.cell_fingerprint(&base()).unwrap(), "fingerprints must not be session-local");
+
+        // Display-only fields are NOT part of the key: the same physical
+        // cell under a different grouping key must hit.
+        assert_eq!(fp, a.cell_fingerprint(&base().key("800/arrival")).unwrap());
+
+        // Flipping any single knob must move the fingerprint.
+        let flips: Vec<RunRequest> = vec![
+            RunRequest::new("bfs", Variant::CoroAmuFull).scale(Scale::Tiny),
+            base().tasks(3),
+            RunRequest::new("gups", Variant::Serial).scale(Scale::Tiny),
+            RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Small),
+            base().seed(7),
+            base().latency_ns(800.0),
+            base().policy(SchedPolicyKind::LatencyAware),
+            base().fabric(FabricKind::Queued { depth: 16 }),
+            base().cores(4),
+            base().faults(FaultConfig::mild()),
+            base().service(ServiceConfig::steady()),
+        ];
+        for req in &flips {
+            assert_ne!(
+                fp,
+                a.cell_fingerprint(req).unwrap(),
+                "knob flip not captured by the fingerprint: {req:?}"
+            );
+        }
+        // A session-config difference (not expressible as a request
+        // override) must also fork the key.
+        let c = Engine::new(SimConfig::skylake());
+        assert_ne!(fp, c.cell_fingerprint(&base()).unwrap());
+    }
+
+    #[test]
+    fn store_sweep_serves_second_session_without_simulating() {
+        let dir = store_dir("second-pass");
+        let matrix: Vec<RunRequest> = [200.0, 800.0]
+            .iter()
+            .map(|lat| {
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .latency_ns(*lat)
+                    .key(format!("{lat}"))
+            })
+            .collect();
+
+        let e1 = Engine::new(SimConfig::nh_g()).with_store(store::Store::open(&dir).unwrap());
+        let first = e1.sweep(&matrix, 2).unwrap();
+        assert!(first.iter().all(|r| !r.store_hit), "cold store: everything simulates");
+        assert_eq!(e1.store().unwrap().len(), 2, "every completed cell is persisted");
+
+        // A brand-new session (fresh caches — a new process, effectively)
+        // over the same store serves the whole matrix from disk.
+        let e2 = Engine::new(SimConfig::nh_g()).with_store(store::Store::open(&dir).unwrap());
+        let plan = e2.plan(&matrix).unwrap();
+        assert_eq!((plan.hits.len(), plan.misses.len()), (2, 0));
+        assert_eq!(plan.summary(), "plan total=2 hits=2 misses=0");
+        let second = e2.sweep(&matrix, 2).unwrap();
+        assert!(second.iter().all(|r| r.store_hit));
+        assert!(second[0].render().contains("source=store"));
+        assert_eq!(e2.cache_stats().misses, 0, "zero compiles: nothing simulated");
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.stats, b.stats, "store-served stats must be bit-identical");
+            assert_eq!(
+                (a.far_latency_ns, a.sched_policy, a.fabric, a.cores),
+                (b.far_latency_ns, b.sched_policy, b.fabric, b.cores),
+                "recomputed provenance must match"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn killed_sweep_resumes_completing_only_remaining_cells() {
+        let dir = store_dir("resume");
+        let matrix: Vec<RunRequest> = [100.0, 200.0, 400.0, 800.0]
+            .iter()
+            .map(|lat| {
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .latency_ns(*lat)
+                    .key(format!("{lat}"))
+            })
+            .collect();
+
+        // "Kill" the first sweep after two cells: populate with a limit,
+        // then drop the engine (planner) on the floor.
+        {
+            let e = Engine::new(SimConfig::nh_g()).with_store(store::Store::open(&dir).unwrap());
+            let plan = e.populate(&matrix, 2, 2).unwrap();
+            assert_eq!((plan.hits.len(), plan.misses.len()), (0, 4));
+            assert_eq!(e.store().unwrap().len(), 2, "two cells committed before the kill");
+        }
+
+        // The resuming session simulates exactly the remaining two.
+        let e = Engine::new(SimConfig::nh_g()).with_store(store::Store::open(&dir).unwrap());
+        let plan = e.plan(&matrix).unwrap();
+        assert_eq!((plan.hits.len(), plan.misses.len()), (2, 2));
+        let rs = e.sweep(&matrix, 2).unwrap();
+        assert_eq!(rs.len(), 4);
+        assert_eq!(rs.iter().filter(|r| r.store_hit).count(), 2);
+        assert_eq!(e.cache_stats().misses, 1, "one compile for the two resumed cells");
+        assert_eq!(e.plan(&matrix).unwrap().misses.len(), 0, "grid complete after resume");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_without_store_never_touches_disk_and_plan_requires_one() {
+        let engine = Engine::new(SimConfig::nh_g());
+        assert!(engine.store().is_none());
+        let matrix = vec![RunRequest::new("gups", Variant::Serial).scale(Scale::Tiny)];
+        let err = engine.plan(&matrix).unwrap_err();
+        assert!(format!("{err:#}").contains("no sweep store"), "{err:#}");
+        let rs = engine.sweep(&matrix, 1).unwrap();
+        assert!(!rs[0].store_hit);
     }
 }

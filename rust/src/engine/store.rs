@@ -1,0 +1,653 @@
+//! Persistent, content-addressed result store for [`Engine`] sweeps
+//! (ROADMAP item 4).
+//!
+//! Every [`RunRequest`](super::RunRequest) reduces to a canonical **cell
+//! fingerprint**: a stable 64-bit hash over everything that determines
+//! the simulation's output — the kernel AST, the codegen options, and
+//! the full *effective* [`SimConfig`](crate::config::SimConfig) (AMU
+//! shape, far latency, scheduler policy, fabric, faults, cluster cores,
+//! service load), plus the dataset identity (bench, scale, seed) and the
+//! resolved concurrency. Display-only request fields (`key`, `label`,
+//! sweep thread count) are deliberately **not** part of the fingerprint:
+//! the same physical cell reached under two different grouping keys must
+//! hit.
+//!
+//! The store is a flat directory (pointed at by `COROAMU_STORE` or
+//! [`Store::open`]) with one file per cell, named by the fingerprint.
+//! Each file is a line-oriented text record with a versioned header, the
+//! fingerprint echoed back, human-readable provenance (`meta` lines), an
+//! exhaustive field-by-field serialization of [`RunStats`] (floats as
+//! `f64::to_bits` hex, so round-trips are bit-identical), and a trailing
+//! FNV-1a checksum. Readers verify header, fingerprint, checksum and
+//! full-field coverage; anything that fails — truncation, stale version,
+//! unknown or missing fields — is **quarantined** (renamed to
+//! `*.corrupt`) and treated as a miss, never trusted.
+//!
+//! Writes go through a temp file + `rename`, so a sweep killed mid-grid
+//! leaves only whole cells behind and a later process resumes from them
+//! (see [`Engine::plan`](super::Engine::plan)).
+//!
+//! Unlike the in-memory kernel cache (which hashes with the process-seeded
+//! `DefaultHasher`), every hash here is FNV-1a over canonical strings —
+//! stable across processes, platforms and rebuilds by construction.
+
+use crate::benchmarks::Scale;
+use crate::sim::RunStats;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Environment variable naming the store directory; when set, the CLI
+/// and `harness::grid` attach it to every engine session.
+pub const STORE_ENV: &str = "COROAMU_STORE";
+
+/// Store format + semantics version. Bump whenever the cell file format
+/// or the fingerprint composition changes; old cells then fail the
+/// header check and are re-simulated rather than trusted.
+pub const STORE_VERSION: u32 = 1;
+
+fn header() -> String {
+    format!("coroamu-store v{STORE_VERSION}")
+}
+
+/// FNV-1a 64-bit. Chosen over `DefaultHasher` because the result must be
+/// identical across processes (resume) and builds (CI artifacts).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stable fingerprint of any `Debug` value: FNV-1a over its debug
+/// rendering. Derived `Debug` of plain data (no pointers, no iteration
+/// over unordered maps) renders identically in every process.
+pub fn stable_fingerprint<T: std::fmt::Debug>(t: &T) -> u64 {
+    fnv1a(format!("{t:?}").as_bytes())
+}
+
+/// Everything that determines a cell's simulated output. Assembled by
+/// [`Engine::cell_fingerprint`](super::Engine::cell_fingerprint); kept
+/// as a struct so tests can flip one component at a time.
+#[derive(Debug, Clone, Copy)]
+pub struct CellKey<'a> {
+    pub bench: &'a str,
+    /// Variant (or opts-override) display label — distinct variants with
+    /// identical codegen options stay distinct (conservative: a spurious
+    /// miss re-simulates; a spurious hit would lie).
+    pub variant: &'a str,
+    /// Resolved concurrency (the benchmark default if the request said 0).
+    pub tasks: usize,
+    pub scale: Scale,
+    pub seed: u64,
+    /// [`stable_fingerprint`] of the kernel AST (scale-dependent kernels
+    /// fork naturally, mirroring the in-memory kernel-cache key).
+    pub kernel_fp: u64,
+    /// [`stable_fingerprint`] of the effective [`CodegenOpts`](crate::compiler::CodegenOpts).
+    pub opts_fp: u64,
+    /// [`stable_fingerprint`] of the effective `SimConfig` — after the
+    /// request's latency/policy/fabric/cores/faults/service overrides are
+    /// applied, so every simulate-time knob is in the key.
+    pub cfg_fp: u64,
+}
+
+/// The canonical cell fingerprint: FNV-1a over the composite identity
+/// string. The version tag makes fingerprints from older store layouts
+/// unreachable rather than wrong.
+pub fn cell_fingerprint(k: &CellKey) -> u64 {
+    fnv1a(
+        format!(
+            "coroamu-cell-v{STORE_VERSION}|{}|{}|tasks={}|{:?}|seed={}|kernel={:016x}|opts={:016x}|cfg={:016x}",
+            k.bench, k.variant, k.tasks, k.scale, k.seed, k.kernel_fp, k.opts_fp, k.cfg_fp
+        )
+        .as_bytes(),
+    )
+}
+
+/// Human-readable provenance stored next to the stats (`meta` lines).
+/// Never parsed back into results — provenance for a store-served report
+/// is recomputed from the request so it cannot drift.
+#[derive(Debug, Clone, Default)]
+pub struct CellMeta {
+    pub bench: String,
+    pub variant: String,
+    pub key: String,
+    pub cfg: String,
+    pub scale: String,
+    pub seed: u64,
+}
+
+/// A persistent fingerprint → [`RunStats`] map: one file per cell.
+#[derive(Debug)]
+pub struct Store {
+    dir: PathBuf,
+}
+
+impl Store {
+    /// Open (creating if needed) a store directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Store> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow!("cannot create store dir {}: {e}", dir.display()))?;
+        Ok(Store { dir })
+    }
+
+    /// Open the store named by `COROAMU_STORE`, or `None` when unset.
+    pub fn from_env() -> Result<Option<Store>> {
+        match std::env::var(STORE_ENV) {
+            Ok(dir) if !dir.trim().is_empty() => Ok(Some(Store::open(dir)?)),
+            _ => Ok(None),
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn cell_path(&self, fp: u64) -> PathBuf {
+        self.dir.join(format!("{fp:016x}.cell"))
+    }
+
+    /// Fetch a cell's stats. Absent → `None`. Present but unreadable,
+    /// truncated, checksum-damaged, stale-versioned or otherwise
+    /// unparseable → quarantined to `*.corrupt` and `None`, so the
+    /// planner re-simulates instead of trusting it.
+    pub fn get(&self, fp: u64) -> Option<RunStats> {
+        let path = self.cell_path(fp);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
+            Err(_) => {
+                self.quarantine(&path);
+                return None;
+            }
+        };
+        match decode(fp, &text) {
+            Ok(stats) => Some(stats),
+            Err(_) => {
+                self.quarantine(&path);
+                None
+            }
+        }
+    }
+
+    fn quarantine(&self, path: &Path) {
+        // Best-effort: a failed rename leaves the bad cell in place, and
+        // every future read keeps treating it as a miss.
+        let _ = std::fs::rename(path, path.with_extension("corrupt"));
+    }
+
+    pub fn contains(&self, fp: u64) -> bool {
+        self.cell_path(fp).exists()
+    }
+
+    /// Write a cell atomically: temp file in the same directory, then
+    /// `rename` over the final name. A killed sweep therefore leaves only
+    /// complete, checksummed cells.
+    pub fn put(&self, fp: u64, meta: &CellMeta, stats: &RunStats) -> Result<()> {
+        let text = encode(fp, meta, stats);
+        let tmp = self.dir.join(format!("{fp:016x}.tmp{}", std::process::id()));
+        std::fs::write(&tmp, text.as_bytes())
+            .map_err(|e| anyhow!("store write {} failed: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, self.cell_path(fp)).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            anyhow!("store commit {:016x} failed: {e}", fp)
+        })
+    }
+
+    /// Number of committed cells.
+    pub fn len(&self) -> usize {
+        self.count_ext("cell")
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of quarantined (`*.corrupt`) cells.
+    pub fn quarantined(&self) -> usize {
+        self.count_ext("corrupt")
+    }
+
+    fn count_ext(&self, ext: &str) -> usize {
+        std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter(|e| e.path().extension().map(|x| x == ext).unwrap_or(false))
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cell file encoding
+// ---------------------------------------------------------------------------
+//
+// Line-oriented, order-insensitive for stat fields:
+//
+//   coroamu-store v1
+//   cell 6bb5a3f2…            fingerprint echo (defends against renames)
+//   meta bench gups           provenance, checksummed but never parsed back
+//   u cycles 123              u64/u32/usize fields, decimal
+//   f far_mlp 4010666…        f64 fields, to_bits hex (bit-identical)
+//   s fabric queued:16        String fields ("-" = empty)
+//   v core_cycles 1,2,3       Vec<u64>/[u64;N] fields ("-" = empty)
+//   checksum 85944171…        FNV-1a over every preceding byte
+
+/// Empty-value sentinel for `s`/`v` lines (no label or vector the
+/// simulator produces is a bare `-`), avoiding trailing-space encodings
+/// that do not survive casual inspection or editing.
+const EMPTY: &str = "-";
+
+fn join_u64(v: &[u64]) -> String {
+    if v.is_empty() {
+        EMPTY.to_string()
+    } else {
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+    }
+}
+
+fn split_u64(s: &str) -> Result<Vec<u64>> {
+    if s == EMPTY {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|x| x.parse::<u64>().map_err(|_| anyhow!("bad vector element '{x}'")))
+        .collect()
+}
+
+fn encode(fp: u64, meta: &CellMeta, st: &RunStats) -> String {
+    let mut out = String::with_capacity(4096);
+    out.push_str(&header());
+    out.push('\n');
+    out.push_str(&format!("cell {fp:016x}\n"));
+    out.push_str(&format!("meta bench {}\n", meta.bench));
+    out.push_str(&format!("meta variant {}\n", meta.variant));
+    out.push_str(&format!("meta key {}\n", meta.key));
+    out.push_str(&format!("meta cfg {}\n", meta.cfg));
+    out.push_str(&format!("meta scale {}\n", meta.scale));
+    out.push_str(&format!("meta seed {}\n", meta.seed));
+
+    macro_rules! wu {
+        ($($f:ident)+) => { $( out.push_str(&format!("u {} {}\n", stringify!($f), st.$f)); )+ };
+    }
+    macro_rules! wf {
+        ($($f:ident)+) => { $(
+            out.push_str(&format!("f {} {:016x}\n", stringify!($f), st.$f.to_bits()));
+        )+ };
+    }
+    macro_rules! ws {
+        ($($f:ident)+) => { $(
+            let v: &str = &st.$f;
+            out.push_str(&format!("s {} {}\n", stringify!($f), if v.is_empty() { EMPTY } else { v }));
+        )+ };
+    }
+    macro_rules! wv {
+        ($($f:ident)+) => { $(
+            out.push_str(&format!("v {} {}\n", stringify!($f), join_u64(&st.$f)));
+        )+ };
+    }
+
+    wu!(cycles dyn_instrs cond_branches cond_mispredicts indirect_jumps indirect_mispredicts
+        bafins_taken bafins_fallthrough bafin_mispredicts loads stores prefetches
+        l1_hits l1_misses far_lines aloads astores amu_max_inflight awaits
+        switches ctx_ops tasks_completed
+        sched_polls sched_picks sched_holds sched_indirect_jumps sched_indirect_mispredicts
+        fabric_requests fabric_max_inflight fabric_queue_stalls fabric_p50 fabric_p99
+        fabric_hot_hits fabric_hot_misses fabric_writebacks cluster_cores
+        fault_nacks fault_retries fault_retry_cycles fault_timeouts fault_degraded_cycles
+        fault_slow_path fault_max_stall
+        svc_capacity_cost svc_offered svc_accepted svc_rejected svc_shed_expired
+        svc_served svc_goodput svc_timed_out svc_p50 svc_p99 svc_p999 svc_max_queue
+        svc_degraded_served svc_degraded_spells);
+    wf!(far_mlp far_busy_frac cluster_fairness);
+    out.push_str(&format!("f stalls.remote_mem {:016x}\n", st.stalls.remote_mem.to_bits()));
+    out.push_str(&format!("f stalls.local_mem {:016x}\n", st.stalls.local_mem.to_bits()));
+    out.push_str(&format!("f stalls.mispredict {:016x}\n", st.stalls.mispredict.to_bits()));
+    out.push_str(&format!("f stalls.backpressure {:016x}\n", st.stalls.backpressure.to_bits()));
+    ws!(sched_policy fabric faults service);
+    wv!(core_cycles core_instrs core_fabric_requests core_fabric_p50 core_fabric_p99
+        core_fabric_stalls core_fault_retries core_fault_slow_path);
+    out.push_str(&format!("v dyn_by_tag {}\n", join_u64(&st.dyn_by_tag)));
+
+    let sum = fnv1a(out.as_bytes());
+    out.push_str(&format!("checksum {sum:016x}\n"));
+    out
+}
+
+fn parse_hex(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).map_err(|_| anyhow!("bad hex '{s}'"))
+}
+
+fn take(map: &mut BTreeMap<String, (char, String)>, tag: char, name: &str) -> Result<String> {
+    match map.remove(name) {
+        Some((t, v)) if t == tag => Ok(v),
+        Some((t, _)) => bail!("field {name} has tag '{t}', expected '{tag}'"),
+        None => bail!("missing field {name}"),
+    }
+}
+
+fn decode(expect_fp: u64, text: &str) -> Result<RunStats> {
+    let body = text.strip_suffix('\n').unwrap_or(text);
+    let (payload, sum_line) = match body.rfind('\n') {
+        Some(i) => (&body[..i + 1], &body[i + 1..]),
+        None => bail!("truncated cell"),
+    };
+    let sum = sum_line.strip_prefix("checksum ").ok_or_else(|| anyhow!("missing checksum"))?;
+    ensure!(parse_hex(sum.trim())? == fnv1a(payload.as_bytes()), "checksum mismatch");
+
+    let mut lines = payload.lines();
+    let head = lines.next().unwrap_or("");
+    ensure!(head == header(), "stale or foreign store header '{head}'");
+    let cell = lines
+        .next()
+        .and_then(|l| l.strip_prefix("cell "))
+        .ok_or_else(|| anyhow!("missing cell line"))?;
+    ensure!(parse_hex(cell)? == expect_fp, "cell fingerprint mismatch (renamed file?)");
+
+    let mut map: BTreeMap<String, (char, String)> = BTreeMap::new();
+    for line in lines {
+        if line.starts_with("meta ") {
+            continue;
+        }
+        let mut parts = line.splitn(3, ' ');
+        let (tag, name, value) = (parts.next(), parts.next(), parts.next());
+        match (tag, name, value) {
+            (Some(t), Some(n), Some(v)) if t.len() == 1 => {
+                let t = t.chars().next().unwrap();
+                ensure!(
+                    map.insert(n.to_string(), (t, v.to_string())).is_none(),
+                    "duplicate field {n}"
+                );
+            }
+            _ => bail!("malformed line '{line}'"),
+        }
+    }
+
+    let mut st = RunStats::default();
+    macro_rules! ru {
+        ($($f:ident)+) => { $(
+            st.$f = take(&mut map, 'u', stringify!($f))?
+                .parse()
+                .map_err(|_| anyhow!("bad integer for {}", stringify!($f)))?;
+        )+ };
+    }
+    macro_rules! rf {
+        ($($f:ident)+) => { $(
+            st.$f = f64::from_bits(parse_hex(&take(&mut map, 'f', stringify!($f))?)?);
+        )+ };
+    }
+    macro_rules! rs_ {
+        ($($f:ident)+) => { $(
+            let v = take(&mut map, 's', stringify!($f))?;
+            st.$f = if v == EMPTY { String::new() } else { v };
+        )+ };
+    }
+    macro_rules! rv {
+        ($($f:ident)+) => { $(
+            st.$f = split_u64(&take(&mut map, 'v', stringify!($f))?)?;
+        )+ };
+    }
+
+    ru!(cycles dyn_instrs cond_branches cond_mispredicts indirect_jumps indirect_mispredicts
+        bafins_taken bafins_fallthrough bafin_mispredicts loads stores prefetches
+        l1_hits l1_misses far_lines aloads astores amu_max_inflight awaits
+        switches ctx_ops tasks_completed
+        sched_polls sched_picks sched_holds sched_indirect_jumps sched_indirect_mispredicts
+        fabric_requests fabric_max_inflight fabric_queue_stalls fabric_p50 fabric_p99
+        fabric_hot_hits fabric_hot_misses fabric_writebacks cluster_cores
+        fault_nacks fault_retries fault_retry_cycles fault_timeouts fault_degraded_cycles
+        fault_slow_path fault_max_stall
+        svc_capacity_cost svc_offered svc_accepted svc_rejected svc_shed_expired
+        svc_served svc_goodput svc_timed_out svc_p50 svc_p99 svc_p999 svc_max_queue
+        svc_degraded_served svc_degraded_spells);
+    rf!(far_mlp far_busy_frac cluster_fairness);
+    st.stalls.remote_mem = f64::from_bits(parse_hex(&take(&mut map, 'f', "stalls.remote_mem")?)?);
+    st.stalls.local_mem = f64::from_bits(parse_hex(&take(&mut map, 'f', "stalls.local_mem")?)?);
+    st.stalls.mispredict = f64::from_bits(parse_hex(&take(&mut map, 'f', "stalls.mispredict")?)?);
+    st.stalls.backpressure =
+        f64::from_bits(parse_hex(&take(&mut map, 'f', "stalls.backpressure")?)?);
+    rs_!(sched_policy fabric faults service);
+    rv!(core_cycles core_instrs core_fabric_requests core_fabric_p50 core_fabric_p99
+        core_fabric_stalls core_fault_retries core_fault_slow_path);
+    let tags = split_u64(&take(&mut map, 'v', "dyn_by_tag")?)?;
+    st.dyn_by_tag =
+        tags.try_into().map_err(|v: Vec<u64>| anyhow!("dyn_by_tag has {} entries", v.len()))?;
+
+    ensure!(
+        map.is_empty(),
+        "unknown fields in cell: {}",
+        map.keys().cloned().collect::<Vec<_>>().join(", ")
+    );
+    Ok(st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::stats::StallBuckets;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("coroamu-store-ut-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Every `RunStats` field set to a distinct nonzero value, as an
+    /// exhaustive struct literal (no `..Default::default()`): adding a
+    /// field to `RunStats` breaks this test's compilation, forcing the
+    /// serializer above to learn about it before the store can lie by
+    /// omission.
+    fn full_stats() -> RunStats {
+        RunStats {
+            cycles: 1,
+            dyn_instrs: 2,
+            dyn_by_tag: [3, 4, 5, 6, 7],
+            stalls: StallBuckets {
+                remote_mem: 8.5,
+                local_mem: 9.25,
+                mispredict: 10.125,
+                backpressure: -0.0, // sign of zero must survive (to_bits round-trip)
+            },
+            cond_branches: 11,
+            cond_mispredicts: 12,
+            indirect_jumps: 13,
+            indirect_mispredicts: 14,
+            bafins_taken: 15,
+            bafins_fallthrough: 16,
+            bafin_mispredicts: 17,
+            loads: 18,
+            stores: 19,
+            prefetches: 20,
+            l1_hits: 21,
+            l1_misses: 22,
+            far_lines: 23,
+            far_mlp: 24.75,
+            far_busy_frac: 0.255,
+            aloads: 26,
+            astores: 27,
+            amu_max_inflight: 28,
+            awaits: 29,
+            switches: 30,
+            ctx_ops: 31,
+            tasks_completed: 32,
+            sched_policy: "batched:4".into(),
+            sched_polls: 33,
+            sched_picks: 34,
+            sched_holds: 35,
+            sched_indirect_jumps: 36,
+            sched_indirect_mispredicts: 37,
+            fabric: "queued:16".into(),
+            fabric_requests: 38,
+            fabric_max_inflight: 39,
+            fabric_queue_stalls: 40,
+            fabric_p50: 41,
+            fabric_p99: 42,
+            fabric_hot_hits: 43,
+            fabric_hot_misses: 44,
+            fabric_writebacks: 45,
+            cluster_cores: 46,
+            core_cycles: vec![47, 48],
+            core_instrs: vec![49, 50],
+            core_fabric_requests: vec![51, 52],
+            core_fabric_p50: vec![53, 54],
+            core_fabric_p99: vec![55, 56],
+            core_fabric_stalls: vec![57, 58],
+            cluster_fairness: 0.59,
+            faults: "heavy".into(),
+            fault_nacks: 60,
+            fault_retries: 61,
+            fault_retry_cycles: 62,
+            fault_timeouts: 63,
+            fault_degraded_cycles: 64,
+            fault_slow_path: 65,
+            fault_max_stall: 66,
+            core_fault_retries: vec![67, 68],
+            core_fault_slow_path: vec![69, 70],
+            service: "overload".into(),
+            svc_capacity_cost: 71,
+            svc_offered: 72,
+            svc_accepted: 73,
+            svc_rejected: 74,
+            svc_shed_expired: 75,
+            svc_served: 76,
+            svc_goodput: 77,
+            svc_timed_out: 78,
+            svc_p50: 79,
+            svc_p99: 80,
+            svc_p999: 81,
+            svc_max_queue: 82,
+            svc_degraded_served: 83,
+            svc_degraded_spells: 84,
+        }
+    }
+
+    #[test]
+    fn fnv1a_matches_the_published_vectors() {
+        // The reference FNV-1a 64 test vectors: the primitive must be the
+        // standard function, i.e. process- and platform-independent.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn every_field_roundtrips_bit_identically() {
+        let dir = test_dir("roundtrip");
+        let store = Store::open(&dir).unwrap();
+        let st = full_stats();
+        store.put(7, &CellMeta::default(), &st).unwrap();
+        let back = store.get(7).expect("cell just written");
+        assert_eq!(back, st, "store round-trip must be bit-identical");
+        // -0.0 == 0.0 under PartialEq; pin the bit pattern explicitly.
+        assert_eq!(back.stalls.backpressure.to_bits(), (-0.0f64).to_bits());
+        assert_eq!(store.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn default_stats_roundtrip_including_empty_strings_and_vecs() {
+        let dir = test_dir("defaults");
+        let store = Store::open(&dir).unwrap();
+        let st = RunStats::default();
+        store.put(9, &CellMeta::default(), &st).unwrap();
+        assert_eq!(store.get(9).unwrap(), st);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_quarantines_instead_of_trusting() {
+        let dir = test_dir("corrupt");
+        let store = Store::open(&dir).unwrap();
+        store.put(3, &CellMeta::default(), &full_stats()).unwrap();
+
+        // Flip one digit of a stat value: checksum catches it.
+        let path = dir.join(format!("{:016x}.cell", 3));
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text = text.replacen("u cycles 1\n", "u cycles 2\n", 1);
+        std::fs::write(&path, text).unwrap();
+        assert!(store.get(3).is_none(), "damaged cell must not be served");
+        assert!(!path.exists(), "damaged cell must be quarantined");
+        assert_eq!(store.quarantined(), 1);
+        assert!(store.get(3).is_none(), "quarantined cell stays a miss");
+
+        // Truncation (killed writer bypassing the tmp+rename protocol).
+        store.put(4, &CellMeta::default(), &full_stats()).unwrap();
+        let path = dir.join(format!("{:016x}.cell", 4));
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        assert!(store.get(4).is_none());
+        assert_eq!(store.quarantined(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_version_and_renamed_cells_are_rejected() {
+        let dir = test_dir("stale");
+        let store = Store::open(&dir).unwrap();
+        store.put(5, &CellMeta::default(), &full_stats()).unwrap();
+
+        // A cell renamed to another fingerprint must not be served under it.
+        std::fs::rename(dir.join(format!("{:016x}.cell", 5)), dir.join(format!("{:016x}.cell", 6)))
+            .unwrap();
+        assert!(store.get(6).is_none(), "fingerprint echo must catch renames");
+
+        // A future/stale header version is re-simulated, not trusted.
+        store.put(5, &CellMeta::default(), &full_stats()).unwrap();
+        let path = dir.join(format!("{:016x}.cell", 5));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let stale = text.replacen(&header(), "coroamu-store v0", 1);
+        // Re-checksum so only the version check can reject it.
+        let body = stale.rsplit_once("checksum ").unwrap().0.to_string();
+        let sum = fnv1a(body.as_bytes());
+        std::fs::write(&path, format!("{body}checksum {sum:016x}\n")).unwrap();
+        assert!(store.get(5).is_none(), "stale store versions must be re-simulated");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cell_fingerprint_separates_every_component() {
+        let base = CellKey {
+            bench: "gups",
+            variant: "CoroAMU-Full",
+            tasks: 16,
+            scale: Scale::Tiny,
+            seed: 42,
+            kernel_fp: 1,
+            opts_fp: 2,
+            cfg_fp: 3,
+        };
+        let fp = cell_fingerprint(&base);
+        assert_eq!(fp, cell_fingerprint(&base.clone()), "pure function of the key");
+        let flips = [
+            CellKey { bench: "bfs", ..base },
+            CellKey { variant: "Serial", ..base },
+            CellKey { tasks: 8, ..base },
+            CellKey { scale: Scale::Small, ..base },
+            CellKey { seed: 43, ..base },
+            CellKey { kernel_fp: 11, ..base },
+            CellKey { opts_fp: 12, ..base },
+            CellKey { cfg_fp: 13, ..base },
+        ];
+        for (i, k) in flips.iter().enumerate() {
+            assert_ne!(fp, cell_fingerprint(k), "component {i} did not affect the fingerprint");
+        }
+    }
+
+    #[test]
+    fn put_overwrites_and_reports_len() {
+        let dir = test_dir("overwrite");
+        let store = Store::open(&dir).unwrap();
+        assert!(store.is_empty());
+        assert!(!store.contains(1));
+        store.put(1, &CellMeta::default(), &RunStats::default()).unwrap();
+        store.put(1, &CellMeta::default(), &full_stats()).unwrap();
+        assert_eq!(store.len(), 1);
+        assert!(store.contains(1));
+        assert_eq!(store.get(1).unwrap(), full_stats(), "second put wins");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

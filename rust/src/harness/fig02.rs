@@ -5,7 +5,8 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::engine::{lookup, Engine, RunRequest};
+use super::grid;
+use crate::engine::{lookup, RunRequest};
 use crate::util::table::{speedup, Table};
 use anyhow::Result;
 
@@ -23,7 +24,6 @@ const PLACEMENTS: [(&str, f64, Variant, usize); 5] = [
 ];
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let engine = Engine::new(SimConfig::skylake());
     let mut matrix = Vec::new();
     for b in opts.bench_names() {
         for (key, lat, variant, tasks) in PLACEMENTS {
@@ -37,7 +37,7 @@ pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
             );
         }
     }
-    let rs = engine.sweep(&matrix, opts.threads)?;
+    let rs = grid::fetch(SimConfig::skylake(), &matrix, opts.threads)?;
     let mut t = Table::new(
         format!("Fig 2: coroutine speedup over serial on Xeon preset ({CORO_TASKS} coroutines)"),
         &["bench", "coro/serial (local)", "coro/serial (numa)", "perfect-cache bound (numa)"],

@@ -6,12 +6,12 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::engine::{Engine, RunRequest};
+use super::grid;
+use crate::engine::RunRequest;
 use crate::util::table::{pct, Table};
 use anyhow::Result;
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let engine = Engine::new(SimConfig::skylake().with_far_latency_ns(130.0));
     let matrix: Vec<RunRequest> = opts
         .bench_names()
         .into_iter()
@@ -23,7 +23,7 @@ pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
                 .key("numa")
         })
         .collect();
-    let rs = engine.sweep(&matrix, opts.threads)?;
+    let rs = grid::fetch(SimConfig::skylake().with_far_latency_ns(130.0), &matrix, opts.threads)?;
     let mut t = Table::new(
         "Fig 3: cycle breakdown of hand-coroutine apps (Xeon, cross-NUMA)",
         &["bench", "compute", "local/ctx", "remote", "scheduler", "mispredict"],

@@ -7,7 +7,8 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::engine::{lookup, Engine, RunRequest};
+use super::grid;
+use crate::engine::{lookup, RunRequest};
 use crate::util::table::{geomean, speedup, Table};
 use anyhow::Result;
 
@@ -16,7 +17,6 @@ pub const COUNTS: [usize; 6] = [2, 4, 8, 16, 32, 64];
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
     // One engine session for both placements: each (variant, n) kernel
     // compiles once and is reused across benches' latency points.
-    let engine = Engine::new(SimConfig::skylake());
     let mut matrix = Vec::new();
     for (loc, lat) in [("local", 90.0), ("numa", 130.0)] {
         for b in opts.bench_names() {
@@ -42,7 +42,7 @@ pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
             }
         }
     }
-    let rs = engine.sweep(&matrix, opts.threads)?;
+    let rs = grid::fetch(SimConfig::skylake(), &matrix, opts.threads)?;
     let mut tables = Vec::new();
     for loc in ["local", "numa"] {
         let mut t = Table::new(

@@ -5,12 +5,12 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::engine::{lookup, Engine, RunRequest};
+use super::grid;
+use crate::engine::{lookup, RunRequest};
 use crate::util::table::{geomean, Table};
 use anyhow::Result;
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let engine = Engine::new(SimConfig::nh_g().with_far_latency_ns(100.0));
     let variants = [
         (Variant::Serial, 1usize),
         (Variant::CoroAmuS, 64),
@@ -29,7 +29,7 @@ pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
             );
         }
     }
-    let rs = engine.sweep(&matrix, opts.threads)?;
+    let rs = grid::fetch(SimConfig::nh_g().with_far_latency_ns(100.0), &matrix, opts.threads)?;
     let mut t = Table::new(
         "Fig 13: dynamic instruction expansion vs serial @100ns (paper avg: S 6.70x, D 5.98x, Full 3.91x)",
         &["bench", "CoroAMU-S", "CoroAMU-D", "CoroAMU-Full"],

@@ -7,7 +7,8 @@ use super::FigOpts;
 use crate::compiler::codegen::{CodegenOpts, SchedKind};
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::engine::{Engine, RunRequest};
+use super::grid;
+use crate::engine::RunRequest;
 use crate::util::table::{pct, Table};
 use anyhow::Result;
 
@@ -18,7 +19,6 @@ pub fn d_with_bafin(tasks: usize) -> CodegenOpts {
 }
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let engine = Engine::new(SimConfig::nh_g().with_far_latency_ns(200.0));
     let benches = opts.bench_names();
     let configs: Vec<(&str, Variant, CodegenOpts)> = vec![
         ("serial", Variant::Serial, CodegenOpts::serial()),
@@ -39,7 +39,7 @@ pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
             })
         })
         .collect();
-    let rs = engine.sweep(&matrix, opts.threads)?;
+    let rs = grid::fetch(SimConfig::nh_g().with_far_latency_ns(200.0), &matrix, opts.threads)?;
     let mut t = Table::new(
         "Fig 14: cycle breakdown @200ns — serial / CoroAMU-D / D+bafin",
         &["bench", "config", "compute", "local/ctx", "remote", "scheduler", "mispredict"],

@@ -10,7 +10,8 @@ use super::FigOpts;
 use crate::compiler::codegen::CodegenOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::engine::{Engine, RunRequest};
+use super::grid;
+use crate::engine::RunRequest;
 use crate::util::table::Table;
 use anyhow::Result;
 
@@ -22,7 +23,6 @@ pub fn configs() -> Vec<(&'static str, CodegenOpts)> {
 }
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let engine = Engine::new(SimConfig::nh_g().with_far_latency_ns(100.0));
     let benches = opts.bench_names();
     let cfgs = configs();
     // Bench-major, config-minor; consumed positionally below.
@@ -38,7 +38,7 @@ pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
             })
         })
         .collect();
-    let rs = engine.sweep(&matrix, opts.threads)?;
+    let rs = grid::fetch(SimConfig::nh_g().with_far_latency_ns(100.0), &matrix, opts.threads)?;
     let mut t = Table::new(
         "Fig 15: ablation @100ns (normalized to bafin-basic)",
         &["bench", "config", "perf", "switches", "ctx ops/switch"],

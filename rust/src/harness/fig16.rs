@@ -6,12 +6,12 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::engine::{lookup, Engine, RunRequest};
+use super::grid;
+use crate::engine::{lookup, RunRequest};
 use crate::util::table::{mean, Table};
 use anyhow::Result;
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let engine = Engine::new(SimConfig::nh_g().with_far_latency_ns(800.0));
     // CoroAMU-S at its typical best concurrency (16-32, Fig 11/12); more
     // tasks do not help prefetching past the MSHR/locality limits.
     let variants = [(Variant::Serial, 1usize), (Variant::CoroAmuS, 32), (Variant::CoroAmuFull, 96)];
@@ -27,7 +27,7 @@ pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
             );
         }
     }
-    let rs = engine.sweep(&matrix, opts.threads)?;
+    let rs = grid::fetch(SimConfig::nh_g().with_far_latency_ns(800.0), &matrix, opts.threads)?;
     let mut t = Table::new(
         "Fig 16: MLP at the far-memory controller @800ns (paper: serial <5, prefetch <20, AMU ~64)",
         &["bench", "Serial", "CoroAMU-S (prefetch)", "CoroAMU-Full (decoupled)"],

@@ -22,7 +22,8 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::engine::{lookup, Engine, RunRequest};
+use super::grid;
+use crate::engine::{lookup, RunRequest};
 use crate::sim::fabric::{FabricKind, DEFAULT_QUEUE_DEPTH};
 use crate::sim::sched::SchedPolicyKind;
 use crate::util::table::{geomean, speedup, Table};
@@ -109,8 +110,7 @@ fn agg_ipc(st: &crate::sim::RunStats) -> f64 {
 }
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let engine = Engine::new(session_cfg());
-    let rs = engine.sweep(&requests(opts), opts.threads)?;
+    let rs = grid::fetch(session_cfg(), &requests(opts), opts.threads)?;
     let benches = benches(opts);
     let mut tables = Vec::new();
 
@@ -252,8 +252,7 @@ mod tests {
     #[test]
     fn queued_fabric_saturates_while_fixed_delay_scales() {
         let opts = FigOpts { scale: Scale::Tiny, only: vec!["gups".into()], ..FigOpts::quick() };
-        let engine = Engine::new(session_cfg());
-        let rs = engine.sweep(&requests(&opts), opts.threads).unwrap();
+        let rs = crate::engine::Engine::new(session_cfg()).sweep(&requests(&opts), opts.threads).unwrap();
         let p = SchedPolicyKind::ArrivalOrder;
         let queued = FabricKind::Queued { depth: DEFAULT_QUEUE_DEPTH };
         let ipc = |n: u32, f: FabricKind| {

@@ -14,7 +14,8 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::engine::{lookup, Engine, RunRequest};
+use super::grid;
+use crate::engine::{lookup, RunRequest};
 use crate::sim::fabric::FabricKind;
 use crate::sim::sched::SchedPolicyKind;
 use crate::util::table::{geomean, speedup, Table};
@@ -93,8 +94,7 @@ fn full_key(f: FabricKind, p: SchedPolicyKind) -> String {
 
 pub fn run(opts: &FigOpts, only: Option<FabricKind>) -> Result<Vec<Table>> {
     let fabs = fabrics(only);
-    let engine = Engine::new(SimConfig::nh_g());
-    let rs = engine.sweep(&requests(opts, &fabs), opts.threads)?;
+    let rs = grid::fetch(SimConfig::nh_g(), &requests(opts, &fabs), opts.threads)?;
     let benches = benches(opts);
     let arrival = SchedPolicyKind::ArrivalOrder;
     let mut tables = Vec::new();
@@ -299,8 +299,7 @@ mod tests {
             FabricKind::Tiered { pages: 8 },
         ];
         let m = requests(&opts, &fabs);
-        let engine = Engine::new(SimConfig::nh_g());
-        let rs = engine.sweep(&m, opts.threads).unwrap();
+        let rs = crate::engine::Engine::new(SimConfig::nh_g()).sweep(&m, opts.threads).unwrap();
         let mut wins = Vec::new();
         let mut cells = Vec::new();
         for &f in &fabs {

@@ -16,7 +16,8 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::engine::{lookup, Engine, RunRequest};
+use super::grid;
+use crate::engine::{lookup, RunRequest};
 use crate::sim::faults::FaultConfig;
 use crate::sim::sched::SchedPolicyKind;
 use crate::util::table::{geomean, speedup, Table};
@@ -87,8 +88,7 @@ fn full_key(f: &FaultConfig, p: SchedPolicyKind) -> String {
 
 pub fn run(opts: &FigOpts, only: Option<FaultConfig>) -> Result<Vec<Table>> {
     let specs = intensities(only);
-    let engine = Engine::new(SimConfig::nh_g());
-    let rs = engine.sweep(&requests(opts, &specs), opts.threads)?;
+    let rs = grid::fetch(SimConfig::nh_g(), &requests(opts, &specs), opts.threads)?;
     let benches = benches(opts);
     let arrival = SchedPolicyKind::ArrivalOrder;
     let mut tables = Vec::new();

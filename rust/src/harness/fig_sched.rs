@@ -8,7 +8,8 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::engine::{lookup, Engine, RunRequest};
+use super::grid;
+use crate::engine::{lookup, RunRequest};
 use crate::sim::sched::SchedPolicyKind;
 use crate::util::table::{geomean, speedup, Table};
 use anyhow::Result;
@@ -73,8 +74,7 @@ pub fn requests(opts: &FigOpts) -> Vec<RunRequest> {
 }
 
 pub fn run(opts: &FigOpts) -> Result<Vec<Table>> {
-    let engine = Engine::new(SimConfig::nh_g());
-    let rs = engine.sweep(&requests(opts), opts.threads)?;
+    let rs = grid::fetch(SimConfig::nh_g(), &requests(opts), opts.threads)?;
     let benches = benches(opts);
     let mut tables = Vec::new();
 

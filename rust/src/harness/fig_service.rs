@@ -16,7 +16,8 @@
 use super::FigOpts;
 use crate::compiler::Variant;
 use crate::config::SimConfig;
-use crate::engine::{lookup, Engine, RunRequest};
+use super::grid;
+use crate::engine::{lookup, RunRequest};
 use crate::sim::fabric::FabricKind;
 use crate::sim::faults::FaultConfig;
 use crate::sim::sched::SchedPolicyKind;
@@ -130,8 +131,7 @@ pub fn requests(opts: &FigOpts, specs: &[ServiceConfig]) -> Vec<RunRequest> {
 
 pub fn run(opts: &FigOpts, only: Option<ServiceConfig>) -> Result<Vec<Table>> {
     let specs = loads(only);
-    let engine = Engine::new(SimConfig::nh_g());
-    let rs = engine.sweep(&requests(opts, &specs), opts.threads)?;
+    let rs = grid::fetch(SimConfig::nh_g(), &requests(opts, &specs), opts.threads)?;
     let benches = benches(opts);
     let mut tables = Vec::new();
 

@@ -1,0 +1,331 @@
+//! The shared query layer every report goes through: axes →
+//! `Vec<RunRequest>` → store-backed fetch → table render.
+//!
+//! [`fetch`] is the single choke point between the figure harnesses and
+//! the engine: it opens a session, attaches the persistent sweep store
+//! when `COROAMU_STORE` is set (see `engine::store`), and sweeps the
+//! matrix — so *every* `coroamu report` mode becomes incremental for
+//! free, and a second run against a populated store simulates nothing.
+//!
+//! [`GridQuery`] is the free-form side (`coroamu report --grid AXES`,
+//! `coroamu sweep --grid AXES`): a `;`-separated list of `axis=v1,v2`
+//! clauses whose cartesian product is the request matrix. Axis values
+//! parse through the same `util::keyed` surfaces as the rest of the CLI
+//! — one spelling, one error dialect, no sixth parser.
+
+use super::FigOpts;
+use crate::benchmarks::{self, Scale};
+use crate::compiler::Variant;
+use crate::config::SimConfig;
+use crate::engine::{Engine, RunReport, RunRequest};
+use crate::sim::fabric::FabricKind;
+use crate::sim::faults::FaultConfig;
+use crate::sim::sched::SchedPolicyKind;
+use crate::sim::service::ServiceConfig;
+use crate::util::keyed::{unknown, Keyed};
+use crate::util::table::Table;
+use anyhow::{bail, ensure, Result};
+
+/// Open an engine session over `cfg` (attaching the `COROAMU_STORE`
+/// sweep store when set) and sweep the matrix. Every figure harness
+/// routes through this, so the store serves all of them.
+pub fn fetch(cfg: SimConfig, matrix: &[RunRequest], threads: usize) -> Result<Vec<RunReport>> {
+    Engine::new(cfg).with_store_from_env()?.sweep(matrix, threads)
+}
+
+/// A declarative sweep grid: one value list per axis, cartesian product
+/// as the matrix. Unspecified axes stay at the session default (`None`),
+/// which keeps the cells bit-identical to un-overridden runs.
+#[derive(Debug, Clone)]
+pub struct GridQuery {
+    /// Original spec string, for table titles.
+    pub spec: String,
+    pub benches: Vec<String>,
+    pub variants: Vec<Variant>,
+    pub latencies: Vec<Option<f64>>,
+    pub policies: Vec<Option<SchedPolicyKind>>,
+    pub fabrics: Vec<Option<FabricKind>>,
+    pub cores: Vec<Option<u32>>,
+    pub faults: Vec<Option<FaultConfig>>,
+    pub services: Vec<Option<ServiceConfig>>,
+    pub seeds: Vec<Option<u64>>,
+    pub tasks: Vec<Option<usize>>,
+    /// Overrides `FigOpts::scale` when set via `scale=`.
+    pub scale: Option<Scale>,
+}
+
+impl Default for GridQuery {
+    fn default() -> Self {
+        GridQuery {
+            spec: String::new(),
+            benches: vec!["gups".into()],
+            variants: vec![Variant::CoroAmuFull],
+            latencies: vec![None],
+            policies: vec![None],
+            fabrics: vec![None],
+            cores: vec![None],
+            faults: vec![None],
+            services: vec![None],
+            seeds: vec![None],
+            tasks: vec![None],
+            scale: None,
+        }
+    }
+}
+
+const AXES: &str =
+    "bench, variant, latency, policy, fabric, faults, cores, service, seed, tasks, scale";
+
+fn parse_axis<T: Keyed>(vals: &[&str]) -> Result<Vec<Option<T>>> {
+    vals.iter().map(|v| T::parse_keyed(v).map(Some)).collect()
+}
+
+impl GridQuery {
+    /// Parse `"bench=gups,bfs;latency=200,800;fabric=queued:16"`.
+    pub fn parse(spec: &str) -> Result<GridQuery> {
+        let mut q = GridQuery { spec: spec.to_string(), ..GridQuery::default() };
+        let mut seen: Vec<String> = Vec::new();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (axis, list) = clause
+                .split_once('=')
+                .ok_or_else(|| unknown("grid clause", clause, "axis=v1,v2 pairs"))?;
+            let axis = axis.trim().to_ascii_lowercase();
+            ensure!(!seen.contains(&axis), "duplicate grid axis `{axis}`");
+            seen.push(axis.clone());
+            let vals: Vec<&str> = list.split(',').map(str::trim).filter(|v| !v.is_empty()).collect();
+            ensure!(!vals.is_empty(), "grid axis `{axis}` needs at least one value");
+            match axis.as_str() {
+                "bench" => {
+                    for v in &vals {
+                        if benchmarks::by_name(v).is_none() {
+                            let names: Vec<&str> =
+                                benchmarks::all().iter().map(|b| b.spec().name).collect();
+                            return Err(unknown("benchmark", v, &names.join(", ")));
+                        }
+                    }
+                    q.benches = vals.iter().map(|v| v.to_ascii_lowercase()).collect();
+                }
+                "variant" => {
+                    q.variants = vals
+                        .iter()
+                        .map(|v| {
+                            Variant::parse(v).ok_or_else(|| {
+                                unknown(
+                                    "variant",
+                                    v,
+                                    "serial, coroutine, coroamu-s, coroamu-d, coroamu-full",
+                                )
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                }
+                "latency" => {
+                    q.latencies = vals
+                        .iter()
+                        .map(|v| match v.parse::<f64>() {
+                            Ok(ns) if ns.is_finite() && ns > 0.0 => Ok(Some(ns)),
+                            _ => bail!("grid latency must be a positive ns value, got `{v}`"),
+                        })
+                        .collect::<Result<_>>()?;
+                }
+                "policy" => q.policies = parse_axis::<SchedPolicyKind>(&vals)?,
+                "fabric" => q.fabrics = parse_axis::<FabricKind>(&vals)?,
+                "faults" => q.faults = parse_axis::<FaultConfig>(&vals)?,
+                "service" => q.services = parse_axis::<ServiceConfig>(&vals)?,
+                "cores" => {
+                    q.cores = vals
+                        .iter()
+                        .map(|v| match v.parse::<u32>() {
+                            Ok(n) if n > 0 => Ok(Some(n)),
+                            _ => bail!("grid cores must be a positive integer, got `{v}`"),
+                        })
+                        .collect::<Result<_>>()?;
+                }
+                "seed" => {
+                    q.seeds = vals
+                        .iter()
+                        .map(|v| {
+                            v.parse::<u64>()
+                                .map(Some)
+                                .map_err(|_| anyhow::anyhow!("bad grid seed `{v}`"))
+                        })
+                        .collect::<Result<_>>()?;
+                }
+                "tasks" => {
+                    q.tasks = vals
+                        .iter()
+                        .map(|v| match v.parse::<usize>() {
+                            Ok(n) if n > 0 => Ok(Some(n)),
+                            _ => bail!("grid tasks must be a positive integer, got `{v}`"),
+                        })
+                        .collect::<Result<_>>()?;
+                }
+                "scale" => {
+                    ensure!(vals.len() == 1, "grid scale takes exactly one value");
+                    q.scale = Some(match vals[0] {
+                        "tiny" => Scale::Tiny,
+                        "small" => Scale::Small,
+                        "full" => Scale::Full,
+                        other => return Err(unknown("scale", other, "tiny, small, full")),
+                    });
+                }
+                other => return Err(unknown("grid axis", other, AXES)),
+            }
+        }
+        Ok(q)
+    }
+
+    /// The cartesian product as engine requests, in a deterministic
+    /// axis-major order. `key` is the joined axis labels (display only —
+    /// the store fingerprints the physical cell, not the key).
+    pub fn requests(&self, opts: &FigOpts) -> Vec<RunRequest> {
+        let mut matrix = Vec::new();
+        let scale = self.scale.unwrap_or(opts.scale);
+        for b in &self.benches {
+            for &v in &self.variants {
+                for &lat in &self.latencies {
+                    for &p in &self.policies {
+                        for &f in &self.fabrics {
+                            for &n in &self.cores {
+                                for fl in &self.faults {
+                                    for sv in &self.services {
+                                        for &seed in &self.seeds {
+                                            for &tasks in &self.tasks {
+                                                let mut r = RunRequest::new(b.clone(), v)
+                                                    .scale(scale)
+                                                    .seed(seed.unwrap_or(opts.seed));
+                                                let mut key = Vec::new();
+                                                if let Some(ns) = lat {
+                                                    r = r.latency_ns(ns);
+                                                    key.push(format!("{ns}"));
+                                                }
+                                                if let Some(p) = p {
+                                                    r = r.policy(p);
+                                                    key.push(p.label());
+                                                }
+                                                if let Some(f) = f {
+                                                    r = r.fabric(f);
+                                                    key.push(f.label());
+                                                }
+                                                if let Some(n) = n {
+                                                    r = r.cores(n);
+                                                    key.push(format!("{n}c"));
+                                                }
+                                                if let Some(fl) = fl {
+                                                    r = r.faults(*fl);
+                                                    key.push(fl.label());
+                                                }
+                                                if let Some(sv) = sv {
+                                                    r = r.service(*sv);
+                                                    key.push(sv.label());
+                                                }
+                                                if let Some(t) = tasks {
+                                                    r = r.tasks(t);
+                                                    key.push(format!("t{t}"));
+                                                }
+                                                matrix.push(r.key(key.join("/")));
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        matrix
+    }
+
+    /// Execute the grid (store-backed via [`fetch`]) and render one row
+    /// per cell. The `source` column says whether the cell was simulated
+    /// in this process (`sim`) or served from the store (`store`).
+    pub fn run(&self, opts: &FigOpts) -> Result<Vec<Table>> {
+        let matrix = self.requests(opts);
+        let rs = fetch(SimConfig::nh_g(), &matrix, opts.threads)?;
+        let title = if self.spec.is_empty() {
+            "Grid query".to_string()
+        } else {
+            format!("Grid query: {}", self.spec)
+        };
+        let mut t = Table::new(
+            title,
+            &[
+                "bench", "variant", "cell", "cycles", "ipc", "far p50", "far p99", "switches",
+                "source",
+            ],
+        );
+        for r in &rs {
+            let st = &r.stats;
+            t.row(vec![
+                r.bench.clone(),
+                r.variant_label.clone(),
+                if r.key.is_empty() { "-".into() } else { r.key.clone() },
+                st.cycles.to_string(),
+                format!("{:.2}", st.ipc()),
+                st.fabric_p50.to_string(),
+                st.fabric_p99.to_string(),
+                st.switches.to_string(),
+                if r.store_hit { "store".into() } else { "sim".into() },
+            ]);
+        }
+        Ok(vec![t])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_parse_builds_the_cartesian_product() {
+        let q = GridQuery::parse("bench=gups,bfs;latency=200,800;policy=arrival,latency").unwrap();
+        let m = q.requests(&FigOpts::quick());
+        assert_eq!(m.len(), 8, "2 benches x 2 latencies x 2 policies");
+        assert!(m.iter().all(|r| r.fabric.is_none() && r.faults.is_none()));
+        assert_eq!(m[0].key, "200/arrival");
+        // Axis-major determinism: same spec, same order.
+        let again = GridQuery::parse("bench=gups,bfs;latency=200,800;policy=arrival,latency")
+            .unwrap()
+            .requests(&FigOpts::quick());
+        assert_eq!(m.len(), again.len());
+        assert!(m.iter().zip(&again).all(|(a, b)| a.key == b.key && a.bench == b.bench));
+    }
+
+    #[test]
+    fn grid_axis_errors_reuse_the_keyed_dialect() {
+        for (spec, needle) in [
+            ("fabric=quewed", "unknown fabric `quewed`; expected one of: "),
+            ("policy=roundrobin", "unknown scheduler policy `roundrobin`"),
+            ("faults=storm", "unknown fault spec `storm`"),
+            ("service=flood", "unknown service spec `flood`"),
+            ("warp=9", "unknown grid axis `warp`"),
+            ("bench=nope", "unknown benchmark `nope`"),
+            ("variant=best", "unknown variant `best`"),
+            ("scale=huge", "unknown scale `huge`"),
+        ] {
+            let err = format!("{:#}", GridQuery::parse(spec).unwrap_err());
+            assert!(err.contains(needle), "spec {spec}: {err}");
+        }
+        assert!(GridQuery::parse("latency=200;latency=800").is_err(), "duplicate axis");
+        assert!(GridQuery::parse("latency=").is_err(), "empty value list");
+        assert!(GridQuery::parse("gups").is_err(), "clause without =");
+    }
+
+    #[test]
+    fn grid_run_renders_one_row_per_cell() {
+        let q = GridQuery::parse("bench=gups;variant=serial,full;latency=200").unwrap();
+        let mut opts = FigOpts::quick();
+        opts.scale = Scale::Tiny;
+        opts.threads = 2;
+        let tables = q.run(&opts).unwrap();
+        assert_eq!(tables.len(), 1);
+        let text = tables[0].render();
+        assert!(text.contains("Serial") && text.contains("CoroAMU-Full"), "{text}");
+        assert_eq!(tables[0].rows.len(), 2);
+    }
+}

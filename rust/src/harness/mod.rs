@@ -34,6 +34,7 @@ pub mod fig_fabric;
 pub mod fig_faults;
 pub mod fig_sched;
 pub mod fig_service;
+pub mod grid;
 
 use crate::benchmarks::Scale;
 use crate::coordinator::pool;

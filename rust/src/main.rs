@@ -126,6 +126,9 @@ fn selected_report_modes(args: &Args) -> Vec<&'static str> {
     if args.get("fig").is_some() {
         modes.push("fig");
     }
+    if args.flag("grid") {
+        modes.push("grid");
+    }
     modes
 }
 
@@ -214,6 +217,21 @@ fn cmd_report(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
+    if args.flag("grid") {
+        // Free-form query: `--grid "bench=gups,bfs;latency=200,800"`.
+        let spec = args
+            .get("grid")
+            .context("--grid needs an axes spec like \"bench=gups;latency=200,800\"")?;
+        let q = harness::grid::GridQuery::parse(spec)?;
+        eprintln!(
+            "[coroamu] running grid query (scale {:?}, {} threads)...",
+            opts.scale, opts.threads
+        );
+        for t in q.run(&opts)? {
+            t.print();
+        }
+        return Ok(());
+    }
     let figs: Vec<u32> = if args.flag("all") {
         harness::ALL_FIGURES.to_vec()
     } else if let Some(n) = args.get_u64("fig") {
@@ -226,6 +244,89 @@ fn cmd_report(args: &Args) -> Result<()> {
         for t in harness::figure(f, &opts)? {
             t.print();
         }
+    }
+    Ok(())
+}
+
+/// The sweep grids (`name`, session config, matrix) selected on the
+/// `sweep` command line. Each mirrors the matrix its report mode runs,
+/// so populating here makes the report a pure store read.
+fn sweep_targets(args: &Args, opts: &FigOpts) -> Result<Vec<(String, SimConfig, Vec<RunRequest>)>> {
+    let mut targets = Vec::new();
+    let all = args.flag("all");
+    if args.flag("grid") {
+        let spec = args
+            .get("grid")
+            .context("--grid needs an axes spec like \"bench=gups;latency=200,800\"")?;
+        let q = harness::grid::GridQuery::parse(spec)?;
+        targets.push((format!("grid {spec}"), SimConfig::nh_g(), q.requests(opts)));
+    }
+    if all || args.flag("sched") {
+        targets.push(("sched".into(), SimConfig::nh_g(), harness::fig_sched::requests(opts)));
+    }
+    if all || args.flag("fabric") {
+        let fabs = harness::fig_fabric::fabrics(None);
+        targets.push((
+            "fabric".into(),
+            SimConfig::nh_g(),
+            harness::fig_fabric::requests(opts, &fabs),
+        ));
+    }
+    if all || args.flag("faults") {
+        let specs = harness::fig_faults::intensities(None);
+        targets.push((
+            "faults".into(),
+            SimConfig::nh_g(),
+            harness::fig_faults::requests(opts, &specs),
+        ));
+    }
+    if all || args.flag("cluster") {
+        targets.push((
+            "cluster".into(),
+            harness::fig_cluster::session_cfg(),
+            harness::fig_cluster::requests(opts),
+        ));
+    }
+    if all || args.flag("service") {
+        let specs = harness::fig_service::loads(None);
+        targets.push((
+            "service".into(),
+            SimConfig::nh_g(),
+            harness::fig_service::requests(opts, &specs),
+        ));
+    }
+    Ok(targets)
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let opts = fig_opts(args)?;
+    let dir: std::path::PathBuf = match args.get("store") {
+        Some(d) => d.into(),
+        None => match std::env::var_os(coroamu::engine::store::STORE_ENV) {
+            Some(d) if !d.is_empty() => d.into(),
+            _ => bail!(
+                "sweep needs a store: pass --store DIR or set {}",
+                coroamu::engine::store::STORE_ENV
+            ),
+        },
+    };
+    let targets = sweep_targets(args, &opts)?;
+    if targets.is_empty() {
+        bail!("sweep needs --grid AXES, --sched, --fabric, --faults, --cluster, --service or --all");
+    }
+    let dry = args.flag("dry-run");
+    for (name, cfg, matrix) in targets {
+        let engine =
+            Engine::new(cfg).with_store(coroamu::engine::store::Store::open(dir.clone())?);
+        let plan = engine.plan(&matrix)?;
+        // Machine-readable: CI greps `plan total=N hits=H misses=M`.
+        println!("[sweep {name}] {}", plan.summary());
+        if dry {
+            continue;
+        }
+        engine.populate(&matrix, opts.threads, usize::MAX)?;
+        let done = engine.plan(&matrix)?;
+        println!("[sweep {name}] done: {}", done.summary());
     }
     Ok(())
 }
@@ -274,9 +375,11 @@ fn cmd_oracle(_args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: coroamu <report|run|dump|oracle> [options]
-  report --fig N | --all | --sched | --fabric [KIND] | --cluster | --faults [SPEC] | --service [SPEC] | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
-         (report modes are mutually exclusive)
+const USAGE: &str = "usage: coroamu <report|sweep|run|dump|oracle> [options]
+  report --fig N | --all | --sched | --fabric [KIND] | --cluster | --faults [SPEC] | --service [SPEC] | --grid AXES | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
+         (report modes are mutually exclusive; AXES is `axis=v1,v2;axis=v` over bench,variant,latency,policy,fabric,faults,cores,service,seed,tasks,scale)
+  sweep  --grid AXES | --sched | --fabric | --faults | --cluster | --service | --all  [--dry-run] [--store DIR] [--scale ...] [--threads N] [--only b1,b2]
+         populate/resume the persistent result store (COROAMU_STORE or --store); --dry-run prints the hit/miss plan only
   run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--policy fifo|arrival|batched[:N]|latency] [--fabric fixed|queued[:N]|dist[:uniform|bimodal]|tiered[:N]] [--faults off|mild|heavy|degrade|blackout|nack:PCT|spike:PCT] [--service off|steady|knee|overload|burst|load:PCT] [--load PCT] [--deadline MULT] [--cores N] [--tasks N] [--scale ...]
   dump   --bench NAME [--variant ...]     print generated CoroIR
   oracle                                  cross-check simulator vs PJRT artifacts
@@ -291,6 +394,7 @@ fn main() {
     }
     let r = match args.subcommand.as_deref() {
         Some("report") => cmd_report(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("run") => cmd_run(&args),
         Some("dump") => cmd_dump(&args),
         Some("oracle") => cmd_oracle(&args),
@@ -407,6 +511,45 @@ mod tests {
         // A bad restriction spec fails loudly rather than sweeping.
         let err = cmd_report(&parse(&["report", "--service", "storm"])).unwrap_err().to_string();
         assert!(err.contains("unknown service spec"), "{err}");
+    }
+
+    #[test]
+    fn grid_mode_joins_the_mutual_exclusion_audit() {
+        assert_eq!(selected_report_modes(&parse(&["report", "--grid", "bench=gups"])), vec!["grid"]);
+        let err = cmd_report(&parse(&["report", "--grid", "bench=gups", "--sched"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("conflicting report modes"), "{err}");
+        assert!(err.contains("grid") && err.contains("sched"), "{err}");
+        // A bad axis fails loudly with the uniform keyed dialect.
+        let err = cmd_report(&parse(&["report", "--grid", "warp=9"])).unwrap_err().to_string();
+        assert!(err.contains("unknown grid axis `warp`"), "{err}");
+        // Bare --grid (no spec) is a mode but still an error.
+        let err = format!("{:#}", cmd_report(&parse(&["report", "--grid"])).unwrap_err());
+        assert!(err.contains("--grid needs an axes spec"), "{err}");
+    }
+
+    #[test]
+    fn sweep_selects_the_report_matrices() {
+        let opts = FigOpts::quick();
+        let t = sweep_targets(&parse(&["sweep", "--sched", "--cluster"]), &opts).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].0, "sched");
+        assert_eq!(t[0].2.len(), harness::fig_sched::requests(&opts).len());
+        assert_eq!(t[1].0, "cluster");
+        assert_eq!(t[1].2.len(), harness::fig_cluster::requests(&opts).len());
+        // --all selects every sweep family.
+        let t = sweep_targets(&parse(&["sweep", "--all"]), &opts).unwrap();
+        assert_eq!(t.len(), 5);
+        // --grid contributes its cartesian product.
+        let t = sweep_targets(&parse(&["sweep", "--grid", "bench=gups;latency=200,800"]), &opts)
+            .unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].2.len(), 2);
+        // No mode selected: cmd_sweep refuses before touching any store.
+        let err = cmd_sweep(&parse(&["sweep", "--store", "unused-dir"])).unwrap_err().to_string();
+        assert!(err.contains("sweep needs --grid"), "{err}");
+        assert!(!std::path::Path::new("unused-dir").exists());
     }
 
     #[test]

@@ -121,6 +121,23 @@ impl Default for FabricKind {
     }
 }
 
+impl crate::util::keyed::Keyed for FabricKind {
+    const AXIS: &'static str = "fabric";
+    const EXPECTED: &'static str = "fixed, queued[:N], dist[:uniform|bimodal], tiered[:N]";
+
+    fn parse_keyed(s: &str) -> Result<Self> {
+        FabricKind::parse(s)
+    }
+
+    fn label_keyed(&self) -> String {
+        self.label()
+    }
+
+    fn all_keyed() -> Vec<Self> {
+        FabricKind::ALL.to_vec()
+    }
+}
+
 impl FabricKind {
     /// The canonical sweep axis (`coroamu report --fabric`).
     pub const ALL: [FabricKind; 4] = [
@@ -167,9 +184,7 @@ impl FabricKind {
             "queued" => FabricKind::Queued { depth: DEFAULT_QUEUE_DEPTH },
             "dist" | "distributed" => FabricKind::Distributed { dist: Dist::Bimodal },
             "tiered" => FabricKind::Tiered { pages: DEFAULT_HOT_PAGES },
-            other => bail!(
-                "unknown fabric '{other}' (fixed|queued[:N]|dist[:uniform|bimodal]|tiered[:N])"
-            ),
+            other => return Err(crate::util::keyed::unknown_key::<Self>(other)),
         })
     }
 

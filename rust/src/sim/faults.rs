@@ -247,9 +247,7 @@ impl FaultConfig {
             "heavy" => Self::heavy(),
             "degrade" => Self::degrade(),
             "blackout" => Self::blackout(),
-            other => bail!(
-                "unknown fault spec '{other}' (off|mild|heavy|degrade|blackout|nack:PCT|spike:PCT)"
-            ),
+            other => return Err(crate::util::keyed::unknown_key::<Self>(other)),
         })
     }
 
@@ -310,6 +308,31 @@ impl FaultConfig {
             self.retries
         );
         Ok(())
+    }
+}
+
+impl crate::util::keyed::Keyed for FaultConfig {
+    const AXIS: &'static str = "fault spec";
+    const EXPECTED: &'static str = "off, mild, heavy, degrade, blackout, nack:PCT, spike:PCT";
+
+    fn parse_keyed(s: &str) -> Result<Self> {
+        FaultConfig::parse(s)
+    }
+
+    fn label_keyed(&self) -> String {
+        self.label()
+    }
+
+    /// The named presets (the parameterized `nack:PCT`/`spike:PCT` forms
+    /// are represented by their CLI defaults).
+    fn all_keyed() -> Vec<Self> {
+        vec![
+            Self::off(),
+            Self::mild(),
+            Self::heavy(),
+            Self::degrade(),
+            Self::blackout(),
+        ]
     }
 }
 

@@ -145,7 +145,7 @@ impl SchedPolicyKind {
             "arrival" | "arrival-order" | "bafin-order" => SchedPolicyKind::ArrivalOrder,
             "batched" | "batched-wakeup" => SchedPolicyKind::BatchedWakeup(DEFAULT_BATCH),
             "latency" | "latency-aware" => SchedPolicyKind::LatencyAware,
-            other => bail!("unknown scheduler policy '{other}' (fifo|arrival|batched[:N]|latency)"),
+            other => return Err(crate::util::keyed::unknown_key::<Self>(other)),
         })
     }
 
@@ -159,6 +159,23 @@ impl SchedPolicyKind {
             }
             SchedPolicyKind::LatencyAware => Box::new(LatencyAware),
         }
+    }
+}
+
+impl crate::util::keyed::Keyed for SchedPolicyKind {
+    const AXIS: &'static str = "scheduler policy";
+    const EXPECTED: &'static str = "fifo, arrival, batched[:N], latency";
+
+    fn parse_keyed(s: &str) -> Result<Self> {
+        SchedPolicyKind::parse(s)
+    }
+
+    fn label_keyed(&self) -> String {
+        self.label()
+    }
+
+    fn all_keyed() -> Vec<Self> {
+        SchedPolicyKind::ALL.to_vec()
     }
 }
 

@@ -58,7 +58,7 @@
 
 use std::collections::VecDeque;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{ensure, Result};
 
 use super::fabric::LatencyHist;
 use super::stats::RunStats;
@@ -193,10 +193,7 @@ impl ServiceConfig {
                     ensure!(pct > 0, "service load:PCT must be positive (0 is spelled 'off')");
                     ServiceConfig { load_pct: pct, ..Self::steady() }
                 } else {
-                    bail!(
-                        "unknown service spec '{spec}' \
-                         (specs: off|steady|knee|overload|burst|load:PCT)"
-                    )
+                    return Err(crate::util::keyed::unknown_key::<Self>(spec));
                 }
             }
         })
@@ -269,6 +266,24 @@ impl ServiceConfig {
         );
         ensure!((1..=1024).contains(&self.hysteresis), "service.hysteresis must be in [1, 1024]");
         Ok(())
+    }
+}
+
+impl crate::util::keyed::Keyed for ServiceConfig {
+    const AXIS: &'static str = "service spec";
+    const EXPECTED: &'static str = "off, steady, knee, overload, burst, load:PCT";
+
+    fn parse_keyed(s: &str) -> Result<Self> {
+        ServiceConfig::parse(s)
+    }
+
+    fn label_keyed(&self) -> String {
+        self.label()
+    }
+
+    /// The named presets (`load:PCT` covers the continuum between them).
+    fn all_keyed() -> Vec<Self> {
+        vec![Self::off(), Self::steady(), Self::knee(), Self::overload(), Self::burst()]
     }
 }
 

@@ -1,0 +1,89 @@
+//! One parse/label/ALL surface for every enumerated CLI/TOML knob.
+//!
+//! The scheduler policy, far-fabric model, fault preset, service preset
+//! and report mode each grew their own hand-rolled `parse`/`label` pair
+//! with its own error dialect. [`Keyed`] pins them to a single contract:
+//!
+//! * `parse` accepts every spelling the CLI and TOML layers document
+//!   (including parameterized forms like `batched:8` or `nack:25`),
+//! * `label` renders the canonical spelling back (round-trips through
+//!   `parse`),
+//! * `all` enumerates the canonical members for docs and grid axes,
+//! * unknown spellings fail with the uniform message built by
+//!   [`unknown`]: ``unknown <axis> `<got>`; expected one of: <forms>``.
+//!
+//! `harness::grid` axis parsing is generic over this trait, so adding a
+//! new knob to the grid costs one `impl Keyed` — not a sixth dialect.
+
+use anyhow::{Error, Result};
+
+/// An enumerated knob with a canonical string form.
+pub trait Keyed: Sized {
+    /// Axis noun used in error messages (`"fabric"`, `"fault spec"`, …).
+    const AXIS: &'static str;
+    /// Human list of accepted forms for error messages
+    /// (`"fixed, queued[:N], …"`).
+    const EXPECTED: &'static str;
+
+    /// Parse any accepted spelling; errors use [`unknown`]'s format.
+    fn parse_keyed(s: &str) -> Result<Self>;
+
+    /// Canonical spelling; `parse_keyed(label_keyed(x)) == x`.
+    fn label_keyed(&self) -> String;
+
+    /// Canonical members, for docs, grids and exhaustive sweeps.
+    fn all_keyed() -> Vec<Self>;
+}
+
+/// The uniform unknown-spelling error every [`Keyed`] surface emits.
+pub fn unknown(axis: &str, got: &str, expected: &str) -> Error {
+    anyhow::anyhow!("unknown {axis} `{got}`; expected one of: {expected}")
+}
+
+/// `unknown` specialised to a `Keyed` implementor.
+pub fn unknown_key<T: Keyed>(got: &str) -> Error {
+    unknown(T::AXIS, got, T::EXPECTED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fabric::FabricKind;
+    use crate::sim::faults::FaultConfig;
+    use crate::sim::sched::SchedPolicyKind;
+    use crate::sim::service::ServiceConfig;
+
+    fn roundtrip<T: Keyed + PartialEq + std::fmt::Debug>() {
+        let all = T::all_keyed();
+        assert!(!all.is_empty(), "{} has no canonical members", T::AXIS);
+        for k in all {
+            let back = T::parse_keyed(&k.label_keyed()).unwrap();
+            assert_eq!(back, k, "{} label does not round-trip", T::AXIS);
+        }
+    }
+
+    #[test]
+    fn all_surfaces_roundtrip_through_the_trait() {
+        roundtrip::<SchedPolicyKind>();
+        roundtrip::<FabricKind>();
+        roundtrip::<FaultConfig>();
+        roundtrip::<ServiceConfig>();
+    }
+
+    #[test]
+    fn unknown_spellings_share_one_error_dialect() {
+        let cases: [(&str, Result<()>); 4] = [
+            ("scheduler policy", SchedPolicyKind::parse_keyed("quewed").map(|_| ())),
+            ("fabric", FabricKind::parse_keyed("quewed").map(|_| ())),
+            ("fault spec", FaultConfig::parse_keyed("quewed").map(|_| ())),
+            ("service spec", ServiceConfig::parse_keyed("quewed").map(|_| ())),
+        ];
+        for (axis, r) in cases {
+            let msg = format!("{:#}", r.unwrap_err());
+            assert!(
+                msg.contains(&format!("unknown {axis} `quewed`; expected one of: ")),
+                "non-uniform error for {axis}: {msg}"
+            );
+        }
+    }
+}

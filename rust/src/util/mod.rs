@@ -4,6 +4,7 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod keyed;
 pub mod minitoml;
 pub mod proptest;
 pub mod rng;

@@ -601,6 +601,59 @@ fn sweep_with_dataset_reuse_matches_fresh_runs() {
     }
 }
 
+/// The sweep-store acceptance invariant: a heterogeneous grid (latency,
+/// policy, fabric, cores, faults and service cells) served from the
+/// persistent store is bit-identical to fresh simulation; the second
+/// session simulates nothing; and a corrupted cell is quarantined and
+/// re-simulated rather than trusted.
+#[test]
+fn store_served_cells_are_bit_identical_to_fresh_runs() {
+    use coroamu::engine::store::Store;
+    use coroamu::sim::faults::FaultConfig;
+    use coroamu::sim::service::ServiceConfig;
+    let dir = std::env::temp_dir().join(format!("coroamu-diff-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mk = |v: Variant| RunRequest::new("gups", v).scale(Scale::Tiny).seed(9);
+    let matrix = vec![
+        mk(Variant::Serial).key("serial"),
+        mk(Variant::CoroAmuFull).latency_ns(400.0).key("lat"),
+        mk(Variant::CoroAmuFull).policy(SchedPolicyKind::LatencyAware).key("policy"),
+        mk(Variant::CoroAmuFull).fabric(FabricKind::Queued { depth: 8 }).key("fabric"),
+        mk(Variant::CoroAmuFull).cores(4).key("cores"),
+        mk(Variant::CoroAmuFull).faults(FaultConfig::mild()).key("faults"),
+        mk(Variant::CoroAmuFull).service(ServiceConfig::knee()).key("service"),
+    ];
+    let cold = Engine::new(SimConfig::nh_g()).with_store(Store::open(&dir).unwrap());
+    let first = cold.sweep(&matrix, 3).unwrap();
+    assert!(first.iter().all(|r| !r.store_hit), "cold sweep has nothing to serve");
+
+    // Second session: the plan is all hits, nothing compiles or
+    // simulates, and every cell is bit-identical to both the first pass
+    // and a store-less fresh engine.
+    let warm = Engine::new(SimConfig::nh_g()).with_store(Store::open(&dir).unwrap());
+    let plan = warm.plan(&matrix).unwrap();
+    assert_eq!((plan.hits.len(), plan.misses.len()), (matrix.len(), 0));
+    let second = warm.sweep(&matrix, 3).unwrap();
+    assert_eq!(warm.cache_stats().misses, 0, "store-served sweep must not compile");
+    for ((req, a), b) in matrix.iter().zip(&first).zip(&second) {
+        assert!(b.store_hit, "{}: expected a store hit", req.key);
+        assert_eq!(a.stats, b.stats, "{}: store round-trip diverges", req.key);
+        let fresh = Engine::new(SimConfig::nh_g()).run(req.clone()).unwrap();
+        assert_eq!(b.stats, fresh.stats, "{}: store diverges from a fresh run", req.key);
+    }
+
+    // Corrupt one cell on disk: the next sweep re-simulates that cell
+    // (and only reproduces the same numbers) instead of trusting it.
+    let fp = warm.cell_fingerprint(&matrix[3]).unwrap();
+    std::fs::write(dir.join(format!("{fp:016x}.cell")), "coroamu-store v1\ngarbage\n").unwrap();
+    let third =
+        Engine::new(SimConfig::nh_g()).with_store(Store::open(&dir).unwrap()).sweep(&matrix, 3).unwrap();
+    assert!(!third[3].store_hit, "corrupt cell must re-simulate");
+    assert!(third.iter().enumerate().all(|(i, r)| i == 3 || r.store_hit));
+    assert_eq!(third[3].stats, second[3].stats, "re-simulation reproduces the cell");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Throughput smoke: measure simulated-MIPS per sweep point on the
 /// decoded path (dataset cache + decode-once interpreter) against the
 /// pre-change shape (per-point instance rebuild + reference

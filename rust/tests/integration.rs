@@ -8,7 +8,6 @@ use coroamu::compiler::analysis::{self, vs_contains, vs_iter};
 use coroamu::compiler::ast::*;
 use coroamu::compiler::{coalesce, Variant};
 use coroamu::config::SimConfig;
-use coroamu::coordinator::{run_job, Job};
 use coroamu::engine::{lookup, Engine, RunRequest};
 use coroamu::harness::{self, FigOpts};
 use coroamu::ir::{AddrSpace, AluOp, Width};
@@ -87,7 +86,7 @@ fn config_file_roundtrip() {
 }
 
 /// Property: engine runs are deterministic — same request, same stats —
-/// and the legacy coordinator shim agrees with the engine it wraps.
+/// across repeated runs and across independent sessions.
 #[test]
 fn runs_are_deterministic() {
     let engine = Engine::new(SimConfig::nh_g());
@@ -97,18 +96,9 @@ fn runs_are_deterministic() {
     assert_eq!(a.cycles, b.cycles);
     assert_eq!(a.dyn_instrs, b.dyn_instrs);
     assert_eq!(a.switches, b.switches);
-    // Legacy path produces identical numbers.
-    let job = Job {
-        bench: "bs".into(),
-        variant: Variant::CoroAmuFull,
-        tasks: 32,
-        cfg: SimConfig::nh_g(),
-        scale: Scale::Tiny,
-        seed: 5,
-        key: String::new(),
-    };
-    let c = run_job(&job).unwrap().stats;
-    assert_eq!((a.cycles, a.dyn_instrs), (c.cycles, c.dyn_instrs));
+    // A fresh session (cold kernel cache) produces identical numbers.
+    let c = Engine::new(SimConfig::nh_g()).run(req()).unwrap().stats;
+    assert_eq!(a, c, "stats must be bit-identical across sessions");
 }
 
 // --- Engine cache + sweep contract ------------------------------------
