@@ -20,8 +20,11 @@ an n-core shared-fabric run), the per-fault-intensity columns
 `sim::faults` retry/backoff machinery live on the fabric) and the
 per-offered-load columns (`sim_mips/service/<spec>/.../decoded`, a
 batch run plus the `sim::service` open-loop queueing replay at that
-load), so a fabric model, cluster interleave, fault decorator or
-service replay whose bookkeeping drags
+load) and the tracing columns (`sim_mips/trace/{off,on}/.../decoded`,
+decoded MIPS with the `sim::trace` event ring off resp. on — the `off`
+row is the zero-overhead canary), so a fabric model, cluster
+interleave, fault decorator, service replay or tracer whose
+bookkeeping drags
 down decoded MIPS fails the same gate as any other kernel. The
 sweep-store columns (`sim_mips/store/{cold,warm}/gups`) are
 informational only (no gated suffix): `cold` prices simulate-and-persist,

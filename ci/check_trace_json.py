@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Validate a `coroamu trace` Chrome trace-event JSON export.
+
+Checks that the file is what Perfetto / chrome://tracing will load:
+valid JSON, a top-level object with a `traceEvents` list, every event
+an object carrying a known `ph` with the fields that phase requires
+(`M` metadata may omit `ts`; `X` slices need a non-negative `dur`),
+and at least --min-events non-metadata events so an empty or
+metadata-only export fails loudly instead of uploading as a green
+artifact.
+
+Usage:
+  python3 ci/check_trace_json.py TRACE.json [--min-events 1]
+"""
+
+import argparse
+import json
+import sys
+
+KNOWN_PH = {"X", "C", "i", "M"}
+
+
+def fail(msg):
+    print(f"ERROR: {msg}")
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace")
+    ap.add_argument("--min-events", type=int, default=1)
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace, encoding="utf-8") as f:
+            doc = json.load(f)
+    except OSError as e:
+        fail(f"cannot read {args.trace}: {e}")
+    except json.JSONDecodeError as e:
+        fail(f"{args.trace} is not valid JSON: {e}")
+    if not isinstance(doc, dict):
+        fail(f"top level is {type(doc).__name__}, expected an object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail(f"'traceEvents' is {type(events).__name__}, expected a list")
+
+    payload = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(f"traceEvents[{i}] is {type(ev).__name__}, expected an object")
+        ph = ev.get("ph")
+        if ph not in KNOWN_PH:
+            fail(f"traceEvents[{i}] has unknown ph {ph!r} (expected one of {sorted(KNOWN_PH)})")
+        if not isinstance(ev.get("pid"), int):
+            fail(f"traceEvents[{i}] ({ph}) lacks an integer 'pid'")
+        if not isinstance(ev.get("name"), str):
+            fail(f"traceEvents[{i}] ({ph}) lacks a string 'name'")
+        if ph == "M":
+            continue
+        payload += 1
+        ts = ev.get("ts")
+        if not isinstance(ts, int) or ts < 0:
+            fail(f"traceEvents[{i}] ({ph} '{ev['name']}') lacks a non-negative integer 'ts'")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, int) or dur < 0:
+                fail(f"traceEvents[{i}] (X '{ev['name']}') lacks a non-negative integer 'dur'")
+
+    if payload < args.min_events:
+        fail(f"only {payload} non-metadata event(s), expected at least {args.min_events}")
+    print(f"OK: {args.trace}: {payload} event(s) + {len(events) - payload} metadata record(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Fixture tests for check_trace_json.py.
+
+Run: python3 ci/test_check_trace_json.py
+
+Pins the validator's contract on hostile input: malformed exports
+(invalid JSON, wrong-shape top level, missing traceEvents, unknown ph,
+events without pid/ts/dur) must exit 1 with a readable ERROR — never a
+traceback — and a metadata-only or empty export must fail the
+--min-events floor rather than upload as a green artifact. Healthy
+exports in the shape `sim::trace::chrome_json` emits pass.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "check_trace_json.py")
+
+
+def meta(pid=0):
+    return {"ph": "M", "pid": pid, "name": "process_name",
+            "args": {"name": f"core {pid}"}}
+
+
+def slice_x(ts=10, dur=5, tid=3):
+    return {"ph": "X", "pid": 0, "tid": tid, "ts": ts, "dur": dur,
+            "name": "coro 3", "cat": "coro"}
+
+
+def doc(events):
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": {"note": "test"}}
+
+
+class Validator(unittest.TestCase):
+    def setUp(self):
+        self.tmp = tempfile.TemporaryDirectory()
+        self.addCleanup(self.tmp.cleanup)
+
+    def path(self, content):
+        p = os.path.join(self.tmp.name, "trace.json")
+        with open(p, "w", encoding="utf-8") as f:
+            f.write(content if isinstance(content, str) else json.dumps(content))
+        return p
+
+    def run_check(self, path, *extra):
+        return subprocess.run(
+            [sys.executable, SCRIPT, path, *extra],
+            capture_output=True, text=True)
+
+    def assert_rejected(self, r, needle):
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+        self.assertIn("ERROR", r.stdout)
+        self.assertIn(needle, r.stdout)
+        self.assertNotIn("Traceback", r.stderr, "must fail cleanly, not crash")
+
+    def test_valid_export_passes(self):
+        events = [meta(), slice_x(),
+                  {"ph": "C", "pid": 0, "ts": 20, "name": "fabric",
+                   "args": {"inflight": 3}},
+                  {"ph": "i", "pid": 0, "tid": 1000000001, "ts": 30,
+                   "name": "pick", "s": "t"}]
+        r = self.run_check(self.path(doc(events)))
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+        self.assertIn("OK", r.stdout)
+        self.assertIn("3 event(s)", r.stdout)
+
+    def test_truncated_json_is_an_error(self):
+        r = self.run_check(self.path('{"traceEvents":[{"ph"'))
+        self.assert_rejected(r, "not valid JSON")
+
+    def test_missing_file_is_an_error(self):
+        r = self.run_check(os.path.join(self.tmp.name, "nope.json"))
+        self.assert_rejected(r, "cannot read")
+
+    def test_non_object_top_level_is_an_error(self):
+        self.assert_rejected(self.run_check(self.path([1, 2])), "top level")
+
+    def test_missing_trace_events_is_an_error(self):
+        self.assert_rejected(self.run_check(self.path({"otherData": {}})),
+                             "'traceEvents'")
+
+    def test_unknown_ph_is_an_error(self):
+        bad = doc([{"ph": "Z", "pid": 0, "ts": 1, "name": "x"}])
+        self.assert_rejected(self.run_check(self.path(bad)), "unknown ph")
+
+    def test_slice_without_dur_is_an_error(self):
+        bad = doc([{"ph": "X", "pid": 0, "ts": 1, "name": "coro"}])
+        self.assert_rejected(self.run_check(self.path(bad)), "'dur'")
+
+    def test_event_without_ts_is_an_error(self):
+        bad = doc([{"ph": "i", "pid": 0, "name": "pick"}])
+        self.assert_rejected(self.run_check(self.path(bad)), "'ts'")
+
+    def test_event_without_pid_is_an_error(self):
+        bad = doc([{"ph": "i", "ts": 1, "name": "pick"}])
+        self.assert_rejected(self.run_check(self.path(bad)), "'pid'")
+
+    def test_metadata_only_export_fails_the_floor(self):
+        r = self.run_check(self.path(doc([meta()])))
+        self.assert_rejected(r, "non-metadata")
+        # ...and the floor is tunable for richer smokes.
+        r = self.run_check(self.path(doc([meta(), slice_x()])), "--min-events", "5")
+        self.assert_rejected(r, "at least 5")
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

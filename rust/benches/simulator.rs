@@ -249,6 +249,30 @@ fn service_mips(b: &mut Bench) {
     }
 }
 
+/// Tracing-overhead columns (`sim_mips/trace/{off,on}/gups/decoded`),
+/// so the CI `cargo bench -- sim_mips` smoke runs them and the
+/// regression gate treats them like any other decoded row; baselines
+/// recorded before the trace subsystem simply skip them as new rows.
+/// `off` is the default session re-measured next to `on` so the pair
+/// shares one machine state — their ratio is the full price of the
+/// bounded event ring + stall-attribution bookkeeping, and the `off`
+/// row doubles as a canary: it must track the plain decoded row because
+/// the off path constructs no tracer at all.
+fn trace_mips(b: &mut Bench) {
+    use coroamu::sim::trace::TraceConfig;
+    for (tag, tc) in [("off", TraceConfig::off()), ("on", TraceConfig::on())] {
+        let name = format!("sim_mips/trace/{tag}/gups/decoded");
+        if !b.enabled(&name) {
+            continue;
+        }
+        let engine = Engine::new(SimConfig::nh_g().with_trace(tc));
+        b.run(&name, "instr", || {
+            let req = RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Small).seed(42);
+            engine.run(req).unwrap().stats.dyn_instrs as f64
+        });
+    }
+}
+
 /// Sweep-store columns (`sim_mips/store/{cold,warm}/gups`), so the CI
 /// `cargo bench -- sim_mips` smoke runs them and the regression gate
 /// treats them like any other decoded row; baselines recorded before the
@@ -413,6 +437,7 @@ fn main() {
     cluster_mips(&mut b);
     faults_mips(&mut b);
     service_mips(&mut b);
+    trace_mips(&mut b);
     store_mips(&mut b);
     sched_policy_sweep(&mut b);
     interp_throughput(&mut b, "gups", Variant::Serial);

@@ -6,6 +6,7 @@ use crate::sim::fabric::{Dist, FabricKind};
 use crate::sim::faults::FaultConfig;
 use crate::sim::sched::SchedPolicyKind;
 use crate::sim::service::ServiceConfig;
+use crate::sim::trace::{TraceClasses, TraceConfig};
 use crate::util::minitoml::{self, Doc};
 use anyhow::{bail, Context, Result};
 
@@ -184,6 +185,12 @@ pub struct SimConfig {
     /// queueing replay entirely and is bit-identical to the batch
     /// simulator (pinned by the differential suite).
     pub service: ServiceConfig,
+    /// Cycle-level event tracing (`sim::trace`, `[trace]` in TOML). A
+    /// simulate-time knob like the far latency: it never forks the
+    /// compiled-kernel or dataset caches. The default (off) constructs
+    /// no tracer at all and is bit-identical to an untraced build
+    /// (pinned by the differential suite).
+    pub trace: TraceConfig,
 }
 
 impl SimConfig {
@@ -236,6 +243,7 @@ impl SimConfig {
             sched_policy: SchedPolicyKind::ArrivalOrder,
             cluster: ClusterConfig::default(),
             service: ServiceConfig::off(),
+            trace: TraceConfig::off(),
         }
     }
 
@@ -279,6 +287,7 @@ impl SimConfig {
             sched_policy: SchedPolicyKind::ArrivalOrder,
             cluster: ClusterConfig::default(),
             service: ServiceConfig::off(),
+            trace: TraceConfig::off(),
         }
     }
 
@@ -348,6 +357,13 @@ impl SimConfig {
     /// axis; see `ServiceConfig`). Simulate-time like far latency.
     pub fn with_service(mut self, service: ServiceConfig) -> Self {
         self.service = service;
+        self
+    }
+
+    /// Select the tracing configuration (`sim::trace`, DESIGN.md §14).
+    /// Simulate-time like far latency.
+    pub fn with_trace(mut self, trace: TraceConfig) -> Self {
+        self.trace = trace;
         self
     }
 
@@ -421,7 +437,37 @@ impl SimConfig {
         self.apply_fabric_doc(doc)?;
         self.apply_cluster_doc(doc)?;
         self.apply_service_doc(doc)?;
+        self.apply_trace_doc(doc)?;
         self.validate()
+    }
+
+    /// Apply the `[trace]` table (`sim::trace`, DESIGN.md §14). Unknown
+    /// keys are rejected with the full key path (same discipline as
+    /// `[mem.fabric]`), so a typo cannot silently leave tracing off.
+    fn apply_trace_doc(&mut self, doc: &Doc) -> Result<()> {
+        const KNOWN: [&str; 4] = ["enabled", "sample_every", "ring_cap", "classes"];
+        for key in doc.keys_with_prefix("trace.") {
+            let leaf = &key["trace.".len()..];
+            if !KNOWN.contains(&leaf) {
+                bail!("unknown [trace] key '{leaf}' (known keys: {})", KNOWN.join(", "));
+            }
+        }
+        if let Some(v) = doc.bool("trace.enabled") {
+            self.trace.enabled = v;
+        }
+        if let Some(v) = doc.i64("trace.sample_every") {
+            anyhow::ensure!(v > 0, "trace.sample_every must be positive, got {v}");
+            self.trace.sample_every = v as u64;
+        }
+        if let Some(v) = doc.i64("trace.ring_cap") {
+            anyhow::ensure!(v > 0, "trace.ring_cap must be positive, got {v}");
+            self.trace.ring_cap = v as usize;
+        }
+        if let Some(v) = doc.str("trace.classes") {
+            self.trace.classes = TraceClasses::parse(v)
+                .with_context(|| format!("trace.classes = \"{v}\""))?;
+        }
+        Ok(())
     }
 
     /// Apply the `[service]` table. A `preset` key (any `--service`
@@ -666,6 +712,7 @@ impl SimConfig {
             }
         }
         self.service.validate()?;
+        self.trace.validate()?;
         Ok(())
     }
 
@@ -1003,6 +1050,51 @@ mod tests {
         .unwrap();
         let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
         assert!(err.contains("service.degrade_lo"), "{err}");
+    }
+
+    #[test]
+    fn trace_default_off_and_toml_round_trip() {
+        let c = SimConfig::nh_g();
+        assert_eq!(c.trace, TraceConfig::off(), "trace must default off");
+        assert!(!c.trace.enabled);
+        let c = c.with_trace(TraceConfig::on());
+        assert!(c.trace.enabled);
+        // Full [trace] table, all keys.
+        let doc = crate::util::minitoml::parse(
+            "[trace]\nenabled = true\nsample_every = 1024\nring_cap = 4096\nclasses = \"coro,amu\"\n",
+        )
+        .unwrap();
+        let mut c = SimConfig::nh_g();
+        c.apply_doc(&doc).unwrap();
+        assert!(c.trace.enabled);
+        assert_eq!(c.trace.sample_every, 1024);
+        assert_eq!(c.trace.ring_cap, 4096);
+        assert!(c.trace.classes.has(TraceClasses::CORO));
+        assert!(c.trace.classes.has(TraceClasses::AMU));
+        assert!(!c.trace.classes.has(TraceClasses::FABRIC));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn trace_toml_rejects_unknown_keys_and_bad_values() {
+        // Unknown key: full-path rejection naming the valid set.
+        let bad = crate::util::minitoml::parse("[trace]\nenabld = true\n").unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown [trace] key 'enabld'"), "{err}");
+        assert!(err.contains("enabled"), "error must list the known keys: {err}");
+        // Bad values at apply time.
+        let bad = crate::util::minitoml::parse("[trace]\nsample_every = 0\n").unwrap();
+        assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
+        let bad = crate::util::minitoml::parse("[trace]\nring_cap = -4\n").unwrap();
+        assert!(SimConfig::nh_g().apply_doc(&bad).is_err());
+        // Unknown class name, reported with the full key path.
+        let bad = crate::util::minitoml::parse("[trace]\nclasses = \"coro,warp\"\n").unwrap();
+        let err = SimConfig::nh_g().apply_doc(&bad).unwrap_err().to_string();
+        assert!(err.contains("trace.classes"), "{err}");
+        // validate() guards direct struct construction too.
+        let mut c = SimConfig::nh_g();
+        c.trace.ring_cap = 1 << 30;
+        assert!(c.validate().is_err());
     }
 
     #[test]

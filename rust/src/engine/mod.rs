@@ -55,6 +55,7 @@ use crate::sim::fabric::FabricKind;
 use crate::sim::faults::FaultConfig;
 use crate::sim::sched::SchedPolicyKind;
 use crate::sim::service::ServiceConfig;
+use crate::sim::trace::{Trace, TraceConfig};
 use crate::sim::{self, MemImage, RunStats};
 use anyhow::{anyhow, Result};
 use std::collections::hash_map::DefaultHasher;
@@ -189,6 +190,11 @@ pub struct RunRequest {
     /// the service replay is driven by the batch run's calibrated cost
     /// and never forks the compiled-kernel or dataset caches.
     pub service: Option<ServiceConfig>,
+    /// Override the session config's trace configuration for this run
+    /// only (`sim::trace`, DESIGN.md §14). Simulate-time like
+    /// latency/policy/fabric: enabling tracing never forks the
+    /// compiled-kernel or dataset caches.
+    pub trace: Option<TraceConfig>,
     /// Explicit codegen options (ablation figures); overrides `variant`'s
     /// canonical options when set.
     pub opts: Option<CodegenOpts>,
@@ -211,6 +217,7 @@ impl RunRequest {
             cores: None,
             faults: None,
             service: None,
+            trace: None,
             opts: None,
             label: None,
         }
@@ -273,6 +280,13 @@ impl RunRequest {
     /// overload axis) instead of the session config's default.
     pub fn service(mut self, s: ServiceConfig) -> Self {
         self.service = Some(s);
+        self
+    }
+
+    /// Run under an explicit trace configuration (`sim::trace`,
+    /// DESIGN.md §14) instead of the session config's default.
+    pub fn trace(mut self, t: TraceConfig) -> Self {
+        self.trace = Some(t);
         self
     }
 
@@ -494,14 +508,24 @@ pub struct SweepPlan {
     pub total: usize,
     pub hits: Vec<usize>,
     pub misses: Vec<usize>,
+    /// Cells that are misses because their on-disk copy was quarantined
+    /// as corrupt (a subset of `misses`): they will be re-simulated, but
+    /// the operator should know the store lost data.
+    pub corrupt: Vec<usize>,
     pub fingerprints: Vec<u64>,
 }
 
 impl SweepPlan {
-    /// Machine-readable one-liner (`plan total=N hits=H misses=M`),
+    /// Machine-readable one-liner (`plan total=N hits=H misses=M corrupt=C`),
     /// printed by `coroamu sweep` and grepped by the CI resume smoke.
     pub fn summary(&self) -> String {
-        format!("plan total={} hits={} misses={}", self.total, self.hits.len(), self.misses.len())
+        format!(
+            "plan total={} hits={} misses={} corrupt={}",
+            self.total,
+            self.hits.len(),
+            self.misses.len(),
+            self.corrupt.len()
+        )
     }
 }
 
@@ -690,7 +714,18 @@ impl Engine {
         self.run_ref(&req)
     }
 
+    /// [`Engine::run`] with the run's event trace, when the effective
+    /// config enables tracing (`None` otherwise — the untraced path
+    /// constructs no tracer and is bit-identical to [`Engine::run`]).
+    pub fn run_traced(&self, req: RunRequest) -> Result<(RunReport, Option<Trace>)> {
+        self.run_ref_traced(&req)
+    }
+
     fn run_ref(&self, req: &RunRequest) -> Result<RunReport> {
+        self.run_ref_traced(req).map(|(rep, _)| rep)
+    }
+
+    fn run_ref_traced(&self, req: &RunRequest) -> Result<(RunReport, Option<Trace>)> {
         let tmpl = self.dataset(&req.bench, req.scale, req.seed)?;
         let inst = tmpl.instantiate();
         let tasks = if req.tasks == 0 { inst.default_tasks } else { req.tasks };
@@ -699,8 +734,8 @@ impl Engine {
             None => req.variant.opts(tasks),
         };
         let cfg = self.effective_cfg(req);
-        let run = self.exec(&cfg, inst, &opts)?;
-        Ok(RunReport {
+        let (run, trace) = self.exec_traced(&cfg, inst, &opts)?;
+        let report = RunReport {
             bench: req.bench.clone(),
             variant: req.variant,
             variant_label: req.config_label(),
@@ -717,7 +752,8 @@ impl Engine {
             cache_hit: run.cache_hit,
             store_hit: false,
             stats: run.stats,
-        })
+        };
+        Ok((report, trace))
     }
 
     /// Run a caller-materialized [`Instance`] under explicit options,
@@ -729,36 +765,45 @@ impl Engine {
     }
 
     fn exec(&self, cfg: &SimConfig, inst: Instance, opts: &CodegenOpts) -> Result<InstanceRun> {
+        self.exec_traced(cfg, inst, opts).map(|(run, _)| run)
+    }
+
+    fn exec_traced(
+        &self,
+        cfg: &SimConfig,
+        inst: Instance,
+        opts: &CodegenOpts,
+    ) -> Result<(InstanceRun, Option<Trace>)> {
         let (ck, cache_hit) = self.cached_compile(&inst.kernel, opts)?;
         let n = cfg.cluster.cores.max(1) as usize;
-        let mut run = if n == 1 {
+        let (mut run, mut trace) = if n == 1 {
             // The pre-cluster path, untouched: cores=1 is bit-identical
             // to the single-core simulator by construction.
             let mut prog = sim::link(cfg, &ck, inst.mem, &inst.params);
-            let stats = sim::run(cfg, &mut prog)?;
+            let (stats, trace) = sim::run_traced(cfg, &mut prog)?;
             (inst.check)(&prog.mem)?;
-            InstanceRun { stats, mem: prog.mem, cache_hit }
+            (InstanceRun { stats, mem: prog.mem, cache_hit }, trace)
         } else {
             // Multi-core: every core links its own snapshot of the same
             // dataset (private compute node, shared far fabric). Each final
             // image must independently pass the benchmark oracle.
             let mut progs: Vec<sim::Program> =
                 (0..n).map(|_| sim::link(cfg, &ck, inst.mem.snapshot(), &inst.params)).collect();
-            let stats = sim::cluster::run_cluster(cfg, &mut progs)?;
+            let (stats, trace) = sim::cluster::run_cluster_traced(cfg, &mut progs)?;
             for p in &progs {
                 (inst.check)(&p.mem)?;
             }
             let mem = progs.swap_remove(0).mem;
-            InstanceRun { stats, mem, cache_hit }
+            (InstanceRun { stats, mem, cache_hit }, trace)
         };
         // The open-loop service replay rides on the completed batch run:
         // it calibrates per-request cost from the run's own stats, then
         // fills the `svc_*` fields. Off (the default) touches nothing —
         // this branch is what the differential suite pins.
         if cfg.service.enabled() {
-            sim::service::simulate(&cfg.service, &mut run.stats);
+            sim::service::simulate_traced(&cfg.service, &mut run.stats, trace.as_mut());
         }
-        Ok(run)
+        Ok((run, trace))
     }
 
     /// Fan a request matrix across `threads` workers, sharing this
@@ -791,6 +836,7 @@ impl Engine {
             total: matrix.len(),
             hits: Vec::new(),
             misses: Vec::new(),
+            corrupt: Vec::new(),
             fingerprints: Vec::with_capacity(matrix.len()),
         };
         for (i, req) in matrix.iter().enumerate() {
@@ -800,6 +846,9 @@ impl Engine {
                 plan.hits.push(i);
             } else {
                 plan.misses.push(i);
+                if st.quarantined_cell(fp) {
+                    plan.corrupt.push(i);
+                }
             }
         }
         Ok(plan)
@@ -895,7 +944,9 @@ impl Engine {
     /// process-independent) hash over everything that determines the
     /// simulated output — kernel AST, effective codegen options, the
     /// full effective `SimConfig` (latency, policy, fabric, cores,
-    /// faults, service — every simulate-time override applied), dataset
+    /// faults, service, trace — every simulate-time override applied;
+    /// a traced run's stats carry trace counters, so it must not alias
+    /// an untraced cell), dataset
     /// identity (bench, scale, seed) and resolved concurrency. The
     /// request's `key`/`label` grouping strings are display-only and
     /// deliberately excluded.
@@ -944,6 +995,9 @@ impl Engine {
         }
         if let Some(s) = req.service {
             cfg.service = s;
+        }
+        if let Some(t) = req.trace {
+            cfg.trace = t;
         }
         cfg
     }
@@ -1314,6 +1368,66 @@ mod tests {
     }
 
     #[test]
+    fn explicit_trace_off_is_invisible() {
+        // `.trace(off)` must construct no tracer and not move a cycle;
+        // the trace counters stay zero on untraced runs.
+        let engine = Engine::new(SimConfig::nh_g());
+        let base = engine
+            .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny))
+            .unwrap();
+        let (explicit, trace) = engine
+            .run_traced(
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .trace(TraceConfig::off()),
+            )
+            .unwrap();
+        assert!(trace.is_none(), "trace off must return no trace");
+        assert_eq!(base.stats, explicit.stats, "explicit trace=off must not move a cycle");
+        assert_eq!(base.stats.trace_events, 0);
+        assert_eq!(base.stats.trace_dropped, 0);
+    }
+
+    #[test]
+    fn trace_override_does_not_fork_caches_and_attributes_stalls() {
+        let engine = Engine::new(SimConfig::nh_g());
+        let base = engine
+            .run(RunRequest::new("gups", Variant::CoroAmuFull).scale(Scale::Tiny))
+            .unwrap();
+        let (rep, trace) = engine
+            .run_traced(
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .trace(TraceConfig::on()),
+            )
+            .unwrap();
+        let trace = trace.expect("tracing on must return a trace");
+        assert!(trace.total > 0, "a real run must observe events");
+        assert_eq!(rep.stats.trace_events, trace.total);
+        assert_eq!(rep.stats.trace_dropped, trace.dropped);
+        // Tracing must not move a single timing stat: strip the trace
+        // counters and the stats must equal the untraced run exactly.
+        let mut stripped = rep.stats.clone();
+        stripped.trace_events = 0;
+        stripped.trace_dropped = 0;
+        assert_eq!(stripped, base.stats, "tracing must not perturb the simulation");
+        // The profile must attribute at least 95% of stall cycles.
+        let s = &rep.stats.stalls;
+        let total = s.remote_mem + s.local_mem + s.mispredict + s.backpressure;
+        assert!(
+            trace.stall_coverage(total) >= 0.95,
+            "profile covers {:.1}% of stalls",
+            trace.stall_coverage(total) * 100.0
+        );
+        let cs = engine.cache_stats();
+        assert_eq!(cs.misses, 1, "trace is simulate-time, not compile-time");
+        assert_eq!(cs.hits, 1);
+        let ds = engine.dataset_stats();
+        assert_eq!(ds.misses, 1, "trace must not fork the dataset cache");
+        assert_eq!(ds.hits, 1);
+    }
+
+    #[test]
     fn explicit_default_policy_is_invisible() {
         let engine = Engine::new(SimConfig::nh_g());
         let base = engine
@@ -1453,6 +1567,7 @@ mod tests {
             base().cores(4),
             base().faults(FaultConfig::mild()),
             base().service(ServiceConfig::steady()),
+            base().trace(TraceConfig::on()),
         ];
         for req in &flips {
             assert_ne!(
@@ -1490,7 +1605,7 @@ mod tests {
         let e2 = Engine::new(SimConfig::nh_g()).with_store(store::Store::open(&dir).unwrap());
         let plan = e2.plan(&matrix).unwrap();
         assert_eq!((plan.hits.len(), plan.misses.len()), (2, 0));
-        assert_eq!(plan.summary(), "plan total=2 hits=2 misses=0");
+        assert_eq!(plan.summary(), "plan total=2 hits=2 misses=0 corrupt=0");
         let second = e2.sweep(&matrix, 2).unwrap();
         assert!(second.iter().all(|r| r.store_hit));
         assert!(second[0].render().contains("source=store"));
@@ -1537,6 +1652,38 @@ mod tests {
         assert_eq!(rs.iter().filter(|r| r.store_hit).count(), 2);
         assert_eq!(e.cache_stats().misses, 1, "one compile for the two resumed cells");
         assert_eq!(e.plan(&matrix).unwrap().misses.len(), 0, "grid complete after resume");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plan_reports_quarantined_corrupt_cells() {
+        let dir = store_dir("corrupt-plan");
+        let matrix: Vec<RunRequest> = [200.0, 800.0]
+            .iter()
+            .map(|lat| {
+                RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .latency_ns(*lat)
+                    .key(format!("{lat}"))
+            })
+            .collect();
+        let e = Engine::new(SimConfig::nh_g()).with_store(store::Store::open(&dir).unwrap());
+        e.sweep(&matrix, 2).unwrap();
+        let plan = e.plan(&matrix).unwrap();
+        assert_eq!(plan.summary(), "plan total=2 hits=2 misses=0 corrupt=0");
+        // Damage one cell on disk; the next read quarantines it.
+        let fp = plan.fingerprints[0];
+        let path = dir.join(format!("{fp:016x}.cell"));
+        assert!(path.exists());
+        std::fs::write(&path, "garbage").unwrap();
+        assert!(e.store().unwrap().get(fp).is_none(), "damaged cell must quarantine");
+        let plan = e.plan(&matrix).unwrap();
+        assert_eq!(plan.summary(), "plan total=2 hits=1 misses=1 corrupt=1");
+        assert_eq!(plan.corrupt, plan.misses, "corrupt cells are a subset of misses");
+        // Re-sweeping heals: the corrupt cell is re-simulated and rewritten.
+        e.sweep(&matrix, 2).unwrap();
+        let healed = e.plan(&matrix).unwrap();
+        assert_eq!(healed.summary(), "plan total=2 hits=2 misses=0 corrupt=0");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -44,7 +44,7 @@ pub const STORE_ENV: &str = "COROAMU_STORE";
 /// Store format + semantics version. Bump whenever the cell file format
 /// or the fingerprint composition changes; old cells then fail the
 /// header check and are re-simulated rather than trusted.
-pub const STORE_VERSION: u32 = 1;
+pub const STORE_VERSION: u32 = 2;
 
 fn header() -> String {
     format!("coroamu-store v{STORE_VERSION}")
@@ -211,6 +211,22 @@ impl Store {
         self.count_ext("corrupt")
     }
 
+    /// Has this specific cell been quarantined as corrupt?
+    pub fn quarantined_cell(&self, fp: u64) -> bool {
+        self.cell_path(fp).with_extension("corrupt").exists()
+    }
+
+    /// Probe that the store directory is actually writable (write + remove
+    /// a temp file). `sweep --dry-run` calls this so an unwritable store
+    /// fails the plan up front instead of mid-populate.
+    pub fn check_writable(&self) -> Result<()> {
+        let probe = self.dir.join(format!(".writable.{}", std::process::id()));
+        std::fs::write(&probe, b"probe")
+            .map_err(|e| anyhow!("store dir {} is not writable: {e}", self.dir.display()))?;
+        let _ = std::fs::remove_file(&probe);
+        Ok(())
+    }
+
     fn count_ext(&self, ext: &str) -> usize {
         std::fs::read_dir(&self.dir)
             .map(|rd| {
@@ -302,7 +318,8 @@ fn encode(fp: u64, meta: &CellMeta, st: &RunStats) -> String {
         fault_slow_path fault_max_stall
         svc_capacity_cost svc_offered svc_accepted svc_rejected svc_shed_expired
         svc_served svc_goodput svc_timed_out svc_p50 svc_p99 svc_p999 svc_max_queue
-        svc_degraded_served svc_degraded_spells);
+        svc_degraded_served svc_degraded_spells
+        trace_events trace_dropped);
     wf!(far_mlp far_busy_frac cluster_fairness);
     out.push_str(&format!("f stalls.remote_mem {:016x}\n", st.stalls.remote_mem.to_bits()));
     out.push_str(&format!("f stalls.local_mem {:016x}\n", st.stalls.local_mem.to_bits()));
@@ -403,7 +420,8 @@ fn decode(expect_fp: u64, text: &str) -> Result<RunStats> {
         fault_slow_path fault_max_stall
         svc_capacity_cost svc_offered svc_accepted svc_rejected svc_shed_expired
         svc_served svc_goodput svc_timed_out svc_p50 svc_p99 svc_p999 svc_max_queue
-        svc_degraded_served svc_degraded_spells);
+        svc_degraded_served svc_degraded_spells
+        trace_events trace_dropped);
     rf!(far_mlp far_busy_frac cluster_fairness);
     st.stalls.remote_mem = f64::from_bits(parse_hex(&take(&mut map, 'f', "stalls.remote_mem")?)?);
     st.stalls.local_mem = f64::from_bits(parse_hex(&take(&mut map, 'f', "stalls.local_mem")?)?);
@@ -522,6 +540,8 @@ mod tests {
             svc_max_queue: 82,
             svc_degraded_served: 83,
             svc_degraded_spells: 84,
+            trace_events: 85,
+            trace_dropped: 86,
         }
     }
 

@@ -25,7 +25,10 @@ use coroamu::sim::fabric::FabricKind;
 use coroamu::sim::faults::FaultConfig;
 use coroamu::sim::sched::SchedPolicyKind;
 use coroamu::sim::service::ServiceConfig;
+use coroamu::sim::trace::TraceConfig;
+use coroamu::util::benchkit;
 use coroamu::util::cli::Args;
+use coroamu::util::table::Table;
 
 fn parse_scale(s: &str) -> Result<Scale> {
     Ok(match s {
@@ -113,6 +116,18 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
     Ok(cfg)
 }
 
+/// Print report tables as aligned text, or as one JSON array when
+/// `--json` is set (machine-readable, `util::benchkit::to_json`).
+fn emit_tables(args: &Args, tables: &[Table]) {
+    if args.flag("json") {
+        print!("{}", benchkit::to_json(tables));
+    } else {
+        for t in tables {
+            t.print();
+        }
+    }
+}
+
 /// The report modes selected on the command line. `report` accepts
 /// exactly one; naming them all in the error keeps `--sched --fabric`
 /// from silently dropping a flag.
@@ -142,11 +157,11 @@ fn cmd_report(args: &Args) -> Result<()> {
         );
     }
     if args.flag("table1") {
-        cfg_from(args)?.table1().print();
+        emit_tables(args, &[cfg_from(args)?.table1()]);
         return Ok(());
     }
     if args.flag("table2") {
-        benchmarks::table2().print();
+        emit_tables(args, &[benchmarks::table2()]);
         return Ok(());
     }
     if args.flag("sched") {
@@ -154,9 +169,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             "[coroamu] generating scheduler-policy sweep (scale {:?}, {} threads)...",
             opts.scale, opts.threads
         );
-        for t in harness::fig_sched::run(&opts)? {
-            t.print();
-        }
+        emit_tables(args, &harness::fig_sched::run(&opts)?);
         return Ok(());
     }
     if args.flag("fabric") {
@@ -170,9 +183,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             "[coroamu] generating far-fabric sweep (scale {:?}, {} threads)...",
             opts.scale, opts.threads
         );
-        for t in harness::fig_fabric::run(&opts, only)? {
-            t.print();
-        }
+        emit_tables(args, &harness::fig_fabric::run(&opts, only)?);
         return Ok(());
     }
     if args.flag("cluster") {
@@ -180,9 +191,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             "[coroamu] generating cluster scaling sweep (scale {:?}, {} threads)...",
             opts.scale, opts.threads
         );
-        for t in harness::fig_cluster::run(&opts)? {
-            t.print();
-        }
+        emit_tables(args, &harness::fig_cluster::run(&opts)?);
         return Ok(());
     }
     if args.flag("faults") {
@@ -196,9 +205,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             "[coroamu] generating fault-injection sweep (scale {:?}, {} threads)...",
             opts.scale, opts.threads
         );
-        for t in harness::fig_faults::run(&opts, only)? {
-            t.print();
-        }
+        emit_tables(args, &harness::fig_faults::run(&opts, only)?);
         return Ok(());
     }
     if args.flag("service") {
@@ -212,9 +219,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             "[coroamu] generating service overload sweep (scale {:?}, {} threads)...",
             opts.scale, opts.threads
         );
-        for t in harness::fig_service::run(&opts, only)? {
-            t.print();
-        }
+        emit_tables(args, &harness::fig_service::run(&opts, only)?);
         return Ok(());
     }
     if args.flag("grid") {
@@ -227,9 +232,7 @@ fn cmd_report(args: &Args) -> Result<()> {
             "[coroamu] running grid query (scale {:?}, {} threads)...",
             opts.scale, opts.threads
         );
-        for t in q.run(&opts)? {
-            t.print();
-        }
+        emit_tables(args, &q.run(&opts)?);
         return Ok(());
     }
     let figs: Vec<u32> = if args.flag("all") {
@@ -239,12 +242,12 @@ fn cmd_report(args: &Args) -> Result<()> {
     } else {
         bail!("report needs --fig N, --all, --sched, --fabric, --cluster, --faults, --service, --table1 or --table2");
     };
+    let mut tables = Vec::new();
     for f in figs {
         eprintln!("[coroamu] generating figure {f} (scale {:?}, {} threads)...", opts.scale, opts.threads);
-        for t in harness::figure(f, &opts)? {
-            t.print();
-        }
+        tables.extend(harness::figure(f, &opts)?);
     }
+    emit_tables(args, &tables);
     Ok(())
 }
 
@@ -315,18 +318,44 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         bail!("sweep needs --grid AXES, --sched, --fabric, --faults, --cluster, --service or --all");
     }
     let dry = args.flag("dry-run");
-    for (name, cfg, matrix) in targets {
-        let engine =
-            Engine::new(cfg).with_store(coroamu::engine::store::Store::open(dir.clone())?);
-        let plan = engine.plan(&matrix)?;
-        // Machine-readable: CI greps `plan total=N hits=H misses=M`.
-        println!("[sweep {name}] {}", plan.summary());
-        if dry {
-            continue;
+    // Probe writability up front so a read-only store dir fails the
+    // dry-run audit with a nonzero exit instead of passing the plan and
+    // crashing mid-populate.
+    coroamu::engine::store::Store::open(dir.clone())?.check_writable()?;
+    let mut out = Table::new("sweep plan", &["target", "phase", "total", "hits", "misses", "corrupt"]);
+    {
+        let mut emit = |name: &str, phase: &str, p: &coroamu::engine::SweepPlan| {
+            if args.flag("json") {
+                out.row(vec![
+                    name.to_string(),
+                    phase.to_string(),
+                    p.total.to_string(),
+                    p.hits.len().to_string(),
+                    p.misses.len().to_string(),
+                    p.corrupt.len().to_string(),
+                ]);
+            } else if phase == "plan" {
+                // Machine-readable: CI greps `plan total=N hits=H misses=M`.
+                println!("[sweep {name}] {}", p.summary());
+            } else {
+                println!("[sweep {name}] done: {}", p.summary());
+            }
+        };
+        for (name, cfg, matrix) in targets {
+            let engine =
+                Engine::new(cfg).with_store(coroamu::engine::store::Store::open(dir.clone())?);
+            let plan = engine.plan(&matrix)?;
+            emit(&name, "plan", &plan);
+            if dry {
+                continue;
+            }
+            engine.populate(&matrix, opts.threads, usize::MAX)?;
+            let done = engine.plan(&matrix)?;
+            emit(&name, "done", &done);
         }
-        engine.populate(&matrix, opts.threads, usize::MAX)?;
-        let done = engine.plan(&matrix)?;
-        println!("[sweep {name}] done: {}", done.summary());
+    }
+    if args.flag("json") {
+        print!("{}", benchkit::to_json(&[out]));
     }
     Ok(())
 }
@@ -334,12 +363,69 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let bench = args.get("bench").context("--bench required")?.to_string();
     let variant = Variant::parse(args.get_or("variant", "full")).context("bad --variant")?;
-    let engine = Engine::new(cfg_from(args)?);
+    let cfg = cfg_from(args)?;
+    // `--trace [FILE]` forces tracing on even under an untraced preset;
+    // a `[trace]`-enabled config file traces without the flag (and keeps
+    // its own sampling knobs).
+    let cfg_traced = cfg.trace.enabled;
+    let traced = args.flag("trace") || cfg_traced;
+    let engine = Engine::new(cfg);
+    let mut req = RunRequest::new(bench, variant)
+        .tasks(args.get_usize("tasks").unwrap_or(0))
+        .scale(parse_scale(args.get_or("scale", "small"))?)
+        .seed(args.get_u64("seed").unwrap_or(42));
+    if !traced {
+        engine.run(req)?.print();
+        return Ok(());
+    }
+    if !cfg_traced {
+        req = req.trace(TraceConfig::on());
+    }
+    let (rep, trace) = engine.run_traced(req)?;
+    rep.print();
+    let trace = trace.context("tracing enabled but the run produced no trace")?;
+    if let Some(file) = args.get("trace") {
+        coroamu::sim::trace::write_chrome_json(&trace, std::path::Path::new(file))?;
+        eprintln!(
+            "[coroamu] wrote Chrome trace JSON to {file} ({} of {} events retained, {} dropped)",
+            trace.events.len(),
+            trace.total,
+            trace.dropped
+        );
+    }
+    print!("{}", coroamu::sim::trace::render_profile(&trace));
+    Ok(())
+}
+
+/// `coroamu trace`: one traced run end to end — simulate with tracing
+/// forced on, export the Chrome trace-event JSON (Perfetto-loadable),
+/// and print the stall-attribution profile. Equivalent to
+/// `run --trace FILE` but with an always-written `--out` (default
+/// `trace.json`) so CI and quick profiling need no flag juggling.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let bench = args.get("bench").context("--bench required")?.to_string();
+    let variant = Variant::parse(args.get_or("variant", "full")).context("bad --variant")?;
+    let out = args.get_or("out", "trace.json").to_string();
+    let mut cfg = cfg_from(args)?;
+    if !cfg.trace.enabled {
+        cfg.trace = TraceConfig::on();
+    }
+    let engine = Engine::new(cfg);
     let req = RunRequest::new(bench, variant)
         .tasks(args.get_usize("tasks").unwrap_or(0))
         .scale(parse_scale(args.get_or("scale", "small"))?)
         .seed(args.get_u64("seed").unwrap_or(42));
-    engine.run(req)?.print();
+    let (rep, trace) = engine.run_traced(req)?;
+    rep.print();
+    let trace = trace.context("tracing enabled but the run produced no trace")?;
+    coroamu::sim::trace::write_chrome_json(&trace, std::path::Path::new(&out))?;
+    println!(
+        "[coroamu] wrote Chrome trace JSON to {out} ({} of {} events retained, {} dropped)",
+        trace.events.len(),
+        trace.total,
+        trace.dropped
+    );
+    print!("{}", coroamu::sim::trace::render_profile(&trace));
     Ok(())
 }
 
@@ -375,12 +461,14 @@ fn cmd_oracle(_args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: coroamu <report|sweep|run|dump|oracle> [options]
-  report --fig N | --all | --sched | --fabric [KIND] | --cluster | --faults [SPEC] | --service [SPEC] | --grid AXES | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N]
-         (report modes are mutually exclusive; AXES is `axis=v1,v2;axis=v` over bench,variant,latency,policy,fabric,faults,cores,service,seed,tasks,scale)
-  sweep  --grid AXES | --sched | --fabric | --faults | --cluster | --service | --all  [--dry-run] [--store DIR] [--scale ...] [--threads N] [--only b1,b2]
+const USAGE: &str = "usage: coroamu <report|sweep|run|trace|dump|oracle> [options]
+  report --fig N | --all | --sched | --fabric [KIND] | --cluster | --faults [SPEC] | --service [SPEC] | --grid AXES | --table1 | --table2  [--scale tiny|small|full] [--only b1,b2] [--threads N] [--json]
+         (report modes are mutually exclusive; AXES is `axis=v1,v2;axis=v` over bench,variant,latency,policy,fabric,faults,cores,service,seed,tasks,scale; --json prints the tables as one JSON array)
+  sweep  --grid AXES | --sched | --fabric | --faults | --cluster | --service | --all  [--dry-run] [--store DIR] [--scale ...] [--threads N] [--only b1,b2] [--json]
          populate/resume the persistent result store (COROAMU_STORE or --store); --dry-run prints the hit/miss plan only
-  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--policy fifo|arrival|batched[:N]|latency] [--fabric fixed|queued[:N]|dist[:uniform|bimodal]|tiered[:N]] [--faults off|mild|heavy|degrade|blackout|nack:PCT|spike:PCT] [--service off|steady|knee|overload|burst|load:PCT] [--load PCT] [--deadline MULT] [--cores N] [--tasks N] [--scale ...]
+  run    --bench NAME [--variant serial|hand|s|d|full] [--preset nh-g|skylake] [--latency NS] [--policy fifo|arrival|batched[:N]|latency] [--fabric fixed|queued[:N]|dist[:uniform|bimodal]|tiered[:N]] [--faults off|mild|heavy|degrade|blackout|nack:PCT|spike:PCT] [--service off|steady|knee|overload|burst|load:PCT] [--load PCT] [--deadline MULT] [--cores N] [--tasks N] [--scale ...] [--trace [FILE]]
+         --trace turns on cycle-level tracing and prints the stall-attribution profile; with FILE it also exports Chrome trace-event JSON (load in Perfetto)
+  trace  --bench NAME [--out FILE] [run options]   traced run: simulate, export Chrome JSON (default trace.json), print profile
   dump   --bench NAME [--variant ...]     print generated CoroIR
   oracle                                  cross-check simulator vs PJRT artifacts
   help | --help                           print this message";
@@ -396,6 +484,7 @@ fn main() {
         Some("report") => cmd_report(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("run") => cmd_run(&args),
+        Some("trace") => cmd_trace(&args),
         Some("dump") => cmd_dump(&args),
         Some("oracle") => cmd_oracle(&args),
         Some(other) => {
@@ -600,6 +689,26 @@ mod tests {
         assert_eq!(cfg.mem.fabric.kind, FabricKind::Tiered { pages: 32 });
         assert_eq!(cfg.sched_policy, SchedPolicyKind::LatencyAware);
         assert!(cfg_from(&parse(&["run", "--fabric", "warp"])).is_err());
+    }
+
+    #[test]
+    fn trace_flag_forms_and_json_flag() {
+        // Bare `--trace` is a boolean flag (profile only, no export).
+        let a = parse(&["run", "--bench", "gups", "--trace"]);
+        assert!(a.flag("trace"));
+        assert_eq!(a.get("trace"), None);
+        // `--trace FILE` is the same switch plus a Chrome-JSON path.
+        let a = parse(&["run", "--bench", "gups", "--trace", "out.json"]);
+        assert!(a.flag("trace"));
+        assert_eq!(a.get("trace"), Some("out.json"));
+        // `--json` selects the machine-readable table sink.
+        assert!(parse(&["report", "--table2", "--json"]).flag("json"));
+        assert!(!parse(&["report", "--table2"]).flag("json"));
+        // --json composes with a report mode (table2 needs no simulation).
+        assert!(cmd_report(&parse(&["report", "--table2", "--json"])).is_ok());
+        // The trace verb refuses to run without a benchmark.
+        let err = cmd_trace(&parse(&["trace"])).unwrap_err().to_string();
+        assert!(err.contains("--bench"), "{err}");
     }
 
     #[test]

@@ -43,6 +43,7 @@ use super::fabric::{CoreId, SharedFabric};
 use super::interp::{Program, Stepper};
 use super::memsys::MemSys;
 use super::stats::RunStats;
+use super::trace::Trace;
 use crate::config::SimConfig;
 
 /// Jain's fairness index over per-core fabric stall cycles:
@@ -76,6 +77,17 @@ fn jain_fairness(xs: &[u64]) -> f64 {
 /// (requester-id attributed on the fabric side); `cluster_fairness` is
 /// Jain's index over per-core fabric queue-stall cycles.
 pub fn run_cluster(cfg: &SimConfig, progs: &mut [Program]) -> Result<RunStats> {
+    run_cluster_traced(cfg, progs).map(|(stats, _)| stats)
+}
+
+/// Like [`run_cluster`], but also returns the merged per-core [`Trace`]
+/// when `cfg.trace.enabled` — events concatenated in core order (each
+/// event carries its core id), aggregates summed, top-N re-ranked over
+/// the whole cluster. [`run_cluster`] delegates here.
+pub fn run_cluster_traced(
+    cfg: &SimConfig,
+    progs: &mut [Program],
+) -> Result<(RunStats, Option<Trace>)> {
     ensure!(!progs.is_empty(), "cluster needs at least one core/program");
     let n = progs.len();
     // Like `MemSys::new`, the shared fabric goes through
@@ -119,10 +131,17 @@ pub fn run_cluster(cfg: &SimConfig, progs: &mut [Program]) -> Result<RunStats> {
         let Some((_, i)) = next else { break };
         steppers[i].step()?;
     }
-    let per_core: Vec<RunStats> = steppers.into_iter().map(Stepper::finish).collect();
+    let (per_core, traces): (Vec<RunStats>, Vec<Option<Trace>>) =
+        steppers.into_iter().map(Stepper::finish_traced).unzip();
     let agg = aggregate(per_core, &shared);
     super::faults::check_strict(cfg, &agg)?;
-    Ok(agg)
+    let trace = if cfg.trace.enabled {
+        let parts: Vec<Trace> = traces.into_iter().flatten().collect();
+        if parts.is_empty() { None } else { Some(Trace::merge(parts, agg.cycles)) }
+    } else {
+        None
+    };
+    Ok((agg, trace))
 }
 
 /// Fold per-core stats plus the shared fabric's totals into one
@@ -166,6 +185,8 @@ fn aggregate(per_core: Vec<RunStats>, shared: &SharedFabric) -> RunStats {
         agg.sched_holds += s.sched_holds;
         agg.sched_indirect_jumps += s.sched_indirect_jumps;
         agg.sched_indirect_mispredicts += s.sched_indirect_mispredicts;
+        agg.trace_events += s.trace_events;
+        agg.trace_dropped += s.trace_dropped;
         if s.sched_policy != agg.sched_policy {
             agg.sched_policy = "mixed".into();
         }

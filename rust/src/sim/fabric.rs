@@ -313,6 +313,30 @@ pub struct RequesterStats {
     pub fault_slow_path: u64,
 }
 
+/// Cheap live counters for the tracing layer (DESIGN.md §14): read-only
+/// snapshots of whatever a backend already tracks, with no strings or
+/// percentile scans (unlike the end-of-run [`FabricStats`]). Fields a
+/// backend does not model stay zero. Fault counters are overlaid by
+/// `sim::faults::FaultyFabric`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FabricGauges {
+    /// Requests issued so far.
+    pub requests: u64,
+    /// Requests currently occupying queue slots (`queued`; approximate —
+    /// completed-but-unreaped slots count until the next issue reaps).
+    pub inflight: u64,
+    /// Cumulative queue-full wait cycles (`queued`).
+    pub queue_stalls: u64,
+    /// Cumulative hot-page hits/misses (`tiered`).
+    pub hot_hits: u64,
+    pub hot_misses: u64,
+    /// Cumulative fault-injection counters (`sim::faults` overlay).
+    pub nacks: u64,
+    pub retries: u64,
+    pub timeouts: u64,
+    pub slow_path: u64,
+}
+
 /// A far-memory fabric backend. `issue` is the single timing entry
 /// point: a request of `lines` cache lines at byte address `addr`,
 /// issued at cycle `t`, returns its completion cycle. Backends are
@@ -339,6 +363,12 @@ pub trait FabricModel: fmt::Debug + Send {
 
     /// Per-request counters for `RunStats` / the fabric report.
     fn stats(&self) -> FabricStats;
+
+    /// Cheap live counters for trace sampling. Default: all zero, for
+    /// backends with nothing interesting to gauge.
+    fn gauges(&self) -> FabricGauges {
+        FabricGauges::default()
+    }
 }
 
 /// Fixed-resolution latency histogram: 8-cycle buckets over 32 K cycles
@@ -597,6 +627,10 @@ impl FabricModel for FixedDelay {
     fn stats(&self) -> FabricStats {
         self.link.base_stats(self.kind())
     }
+
+    fn gauges(&self) -> FabricGauges {
+        FabricGauges { requests: self.link.requests, ..FabricGauges::default() }
+    }
 }
 
 /// See [`FabricKind::Queued`]. The finite request queue holds every
@@ -671,6 +705,15 @@ impl FabricModel for Queued {
         }
         st
     }
+
+    fn gauges(&self) -> FabricGauges {
+        FabricGauges {
+            requests: self.link.requests,
+            inflight: self.inflight.len() as u64,
+            queue_stalls: self.queue_stall_cycles,
+            ..FabricGauges::default()
+        }
+    }
 }
 
 /// See [`FabricKind::Distributed`]. Per-request latency draws from a
@@ -721,6 +764,10 @@ impl FabricModel for Distributed {
 
     fn stats(&self) -> FabricStats {
         self.link.base_stats(self.kind())
+    }
+
+    fn gauges(&self) -> FabricGauges {
+        FabricGauges { requests: self.link.requests, ..FabricGauges::default() }
     }
 }
 
@@ -808,6 +855,15 @@ impl FabricModel for Tiered {
         }
         st
     }
+
+    fn gauges(&self) -> FabricGauges {
+        FabricGauges {
+            requests: self.link.requests,
+            hot_hits: self.hot_hits,
+            hot_misses: self.hot_misses,
+            ..FabricGauges::default()
+        }
+    }
 }
 
 /// A requester-tagged handle on a fabric backend, shareable between the
@@ -858,6 +914,11 @@ impl SharedFabric {
 
     pub fn stats(&self) -> FabricStats {
         self.inner.borrow().stats()
+    }
+
+    /// Cheap live counters for the tracing layer.
+    pub fn gauges(&self) -> FabricGauges {
+        self.inner.borrow().gauges()
     }
 }
 

@@ -45,7 +45,7 @@
 //! ([`build_far`]), so fault-free runs are bit-identical to pre-fault
 //! builds by construction.
 
-use super::fabric::{ensure_requester, CoreId, FabricKind, FabricModel, FabricStats};
+use super::fabric::{ensure_requester, CoreId, FabricGauges, FabricKind, FabricModel, FabricStats};
 use super::memsys::AccessKind;
 use super::stats::RunStats;
 use crate::config::SimConfig;
@@ -487,6 +487,16 @@ impl FabricModel for FaultyFabric {
             r.fault_slow_path = slow;
         }
         st
+    }
+
+    fn gauges(&self) -> FabricGauges {
+        FabricGauges {
+            nacks: self.nacks,
+            retries: self.retries,
+            timeouts: self.timeouts,
+            slow_path: self.slow_path,
+            ..self.inner.gauges()
+        }
     }
 }
 

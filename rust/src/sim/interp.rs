@@ -24,6 +24,7 @@ use super::decode::{alu_latency, decode_with, falu_latency, DecodedFunc, Src, UK
 use super::mem::MemImage;
 use super::memsys::{AccessKind, MemSys};
 use super::stats::RunStats;
+use super::trace::{AddrClass, Trace, Tracer};
 use crate::config::SimConfig;
 use crate::ir::*;
 use anyhow::{bail, Context, Result};
@@ -147,6 +148,11 @@ struct Machine<'p> {
     aconfig_size: i64,
     spm_base: u64,
     spm_slot: u64,
+    /// Cycle-level event tracer (DESIGN.md §14). `None` unless
+    /// `cfg.trace.enabled` — the off path constructs no tracer state and
+    /// every hook is a single `Option` check, so untraced runs stay
+    /// bit-identical by construction.
+    tracer: Option<Box<Tracer>>,
 }
 
 impl<'p> Machine<'p> {
@@ -165,6 +171,11 @@ impl<'p> Machine<'p> {
         let nregs = prog.func.nregs;
         let policy = cfg.sched_policy.build();
         let guided = policy.btq_guided();
+        let tracer = if cfg.trace.enabled {
+            Some(Tracer::for_core(cfg.trace, msys.far.requester()))
+        } else {
+            None
+        };
         let mut m = Machine {
             func: &prog.func,
             regs: vec![0i64; nregs as usize],
@@ -178,6 +189,7 @@ impl<'p> Machine<'p> {
             aconfig_size: 0,
             spm_base: 0,
             spm_slot: prog.spm_slot_bytes.max(1) as u64,
+            tracer,
             mem: &mut prog.mem,
         };
         for (r, v) in &prog.reg_init {
@@ -234,8 +246,64 @@ impl<'p> Machine<'p> {
         self.spm_base + id as u64 * self.spm_slot + off as u64
     }
 
+    // --- tracing hooks (DESIGN.md §14) -----------------------------------
+    // Each hook is a no-op `Option` check when tracing is off; callers on
+    // the hot path guard with `tracer.is_some()` where extra state would
+    // otherwise be computed.
+
+    /// Periodic counter sample if one is due at dispatch cycle `d`.
+    #[inline]
+    fn trace_sample(&mut self, d: u64) {
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            if tr.sample_due(d) {
+                let gauges = self.msys.far.gauges();
+                let amu_inflight = self.amu.inflight(d) as u64;
+                tr.sample(d, gauges, amu_inflight);
+            }
+        }
+    }
+
+    /// AMU transfer issued: spawn/request events + fault-counter deltas.
+    fn trace_transfer(&mut self, id: i64, issue: u64, done: u64, store: bool, space: AddrSpace, bytes: u32) {
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            let class = match space {
+                AddrSpace::Remote => AddrClass::Remote,
+                AddrSpace::Spm => AddrClass::Spm,
+                AddrSpace::Local => AddrClass::Local,
+            };
+            let lines = (bytes as u64).div_ceil(64).max(1);
+            tr.on_transfer(id, issue, done.max(issue), store, class, lines);
+            tr.on_fault_check(issue, self.msys.far.gauges());
+        }
+    }
+
+    /// Scheduler picked `id`: record the pick and the context switch.
+    fn trace_pick(&mut self, t: u64, id: i64) {
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            tr.on_sched(t, Some(id), 0);
+            tr.on_switch(t, self.core.now(), &self.core.stats.stalls, Some(id));
+        }
+    }
+
+    /// Scheduler came up empty; `holds_before` is `stat_sched_holds`
+    /// sampled before the poll, so the delta says whether the policy
+    /// deferred visible completions (hold) or none were ready.
+    fn trace_hold(&mut self, t: u64, holds_before: u64) {
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            let held = self.amu.stat_sched_holds.saturating_sub(holds_before);
+            tr.on_sched(t, None, held);
+        }
+    }
+
     /// Drain the pipeline and collect the run statistics.
-    fn finish(mut self) -> RunStats {
+    fn finish(self) -> RunStats {
+        self.finish_traced().0
+    }
+
+    /// Like [`Machine::finish`], but also harvests the tracer (if any)
+    /// into a [`Trace`] artifact and accounts its event totals in stats.
+    fn finish_traced(mut self) -> (RunStats, Option<Trace>) {
+        let tracer = self.tracer.take();
         self.core.finish();
         let mut stats = std::mem::take(&mut self.core.stats);
         stats.l1_hits = self.msys.l1.stat_hits;
@@ -271,7 +339,13 @@ impl<'p> Machine<'p> {
         stats.sched_holds = self.amu.stat_sched_holds;
         stats.sched_indirect_jumps = self.ittage.stat_sched_lookups;
         stats.sched_indirect_mispredicts = self.ittage.stat_sched_mispredicts;
-        stats
+        let trace = tracer.map(|tr| {
+            let t = tr.harvest(stats.cycles, &stats.stalls, &stats.sched_policy, &stats.fabric);
+            stats.trace_events = t.total;
+            stats.trace_dropped = t.dropped;
+            t
+        });
+        (stats, trace)
     }
 }
 
@@ -321,6 +395,11 @@ impl<'p> Stepper<'p> {
         self.m.finish()
     }
 
+    /// Finish and hand back the harvested trace alongside the stats.
+    pub(crate) fn finish_traced(self) -> (RunStats, Option<Trace>) {
+        self.m.finish_traced()
+    }
+
     /// Execute one decoded micro-op. Must not be called after
     /// [`Stepper::halted`] turns true.
     #[inline]
@@ -344,6 +423,9 @@ impl<'p> Stepper<'p> {
         }
         *budget -= 1;
         let d = m.core.dispatch(op.tag);
+        if m.tracer.is_some() {
+            m.trace_sample(d);
+        }
         match op.kind {
             UKind::Alu { op: aop, dst, lat } => {
                 let v = alu_eval(aop, op.a.value(&m.regs), op.b.value(&m.regs));
@@ -432,9 +514,14 @@ impl<'p> Stepper<'p> {
                     .with_context(|| format!("aload id={idv} in bb{}", op.bb))?;
                 let exec = m.ready2(d, op.a, op.b);
                 let msys = &mut m.msys;
+                let mut done_t = 0u64;
                 let issue = m.amu.transfer(idv, resume, exec, false, |t| {
-                    msys.amu_transfer(addr, bytes, space, AccessKind::Load, t)
+                    done_t = msys.amu_transfer(addr, bytes, space, AccessKind::Load, t);
+                    done_t
                 });
+                if m.tracer.is_some() {
+                    m.trace_transfer(idv, issue, done_t, false, space, bytes);
+                }
                 m.core.commit(
                     None,
                     issue + 1,
@@ -452,9 +539,14 @@ impl<'p> Stepper<'p> {
                     .with_context(|| format!("astore id={idv} in bb{}", op.bb))?;
                 let exec = m.ready2(d, op.a, op.b);
                 let msys = &mut m.msys;
+                let mut done_t = 0u64;
                 let issue = m.amu.transfer(idv, resume, exec, true, |t| {
-                    msys.amu_transfer(addr, bytes, space, AccessKind::Store, t)
+                    done_t = msys.amu_transfer(addr, bytes, space, AccessKind::Store, t);
+                    done_t
                 });
+                if m.tracer.is_some() {
+                    m.trace_transfer(idv, issue, done_t, true, space, bytes);
+                }
                 m.core.commit(
                     None,
                     issue + 1,
@@ -470,9 +562,20 @@ impl<'p> Stepper<'p> {
             }
             UKind::Getfin { dst } => {
                 let exec = d;
+                let holds0 = if m.tracer.is_some() { m.amu.stat_sched_holds } else { 0 };
                 let v = match m.amu.pop_finished(exec) {
-                    Some((id, _resume)) => id,
-                    None => -1,
+                    Some((id, _resume)) => {
+                        if m.tracer.is_some() {
+                            m.trace_pick(exec, id);
+                        }
+                        id
+                    }
+                    None => {
+                        if m.tracer.is_some() {
+                            m.trace_hold(exec, holds0);
+                        }
+                        -1
+                    }
                 };
                 m.regs[dst as usize] = v;
                 m.core.commit(Some(dst), exec + 3, Cause::Compute);
@@ -537,6 +640,7 @@ impl<'p> Stepper<'p> {
                 // so a covered bafin never mispredicts.
                 let fetch = d.saturating_sub(m.core.frontend_depth);
                 let covered = m.bpt.covered(op.bb as u64);
+                let holds0 = if m.tracer.is_some() { m.amu.stat_sched_holds } else { 0 };
                 match m.amu.pop_finished(fetch) {
                     Some((id, resume)) => {
                         m.regs[id_dst as usize] = id;
@@ -549,11 +653,17 @@ impl<'p> Stepper<'p> {
                             m.core.stats.bafin_mispredicts += 1;
                             m.core.redirect(d + 1);
                         }
+                        if m.tracer.is_some() {
+                            m.trace_pick(d, id);
+                        }
                         *pc = dec.start_of(resume);
                     }
                     None => {
                         m.core.commit(None, d + 1, Cause::Compute);
                         m.core.stats.bafins_fallthrough += 1;
+                        if m.tracer.is_some() {
+                            m.trace_hold(fetch, holds0);
+                        }
                         *pc = dec.start_of(fallthrough);
                     }
                 }
@@ -662,13 +772,20 @@ impl<'p> Stepper<'p> {
 /// results out for validation). Semantically identical to
 /// [`run_reference`] — the differential suite pins this.
 pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
+    run_traced(cfg, prog).map(|(stats, _)| stats)
+}
+
+/// Like [`run`], but also returns the harvested [`Trace`] when
+/// `cfg.trace.enabled` (`None` otherwise). [`run`] delegates here, so
+/// untraced callers pay only a discarded `None`.
+pub fn run_traced(cfg: &SimConfig, prog: &mut Program) -> Result<(RunStats, Option<Trace>)> {
     let mut s = Stepper::new(cfg, prog);
     while !s.halted() {
         s.step()?;
     }
-    let stats = s.finish();
+    let (stats, trace) = s.finish_traced();
     super::faults::check_strict(cfg, &stats)?;
-    Ok(stats)
+    Ok((stats, trace))
 }
 
 /// Execute `prog` on the reference (tree-walking) interpreter. This is
@@ -676,6 +793,16 @@ pub fn run(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
 /// for differential testing and as the "before" side of the simulator
 /// throughput benchmark.
 pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
+    run_reference_traced(cfg, prog).map(|(stats, _)| stats)
+}
+
+/// Traced variant of the reference path: the same hooks fire at the
+/// same architectural points as on the decoded path, so a traced
+/// reference run produces its own deterministic event stream.
+pub fn run_reference_traced(
+    cfg: &SimConfig,
+    prog: &mut Program,
+) -> Result<(RunStats, Option<Trace>)> {
     let mut budget = prog.max_dyn_instrs;
     let mut m = Machine::new(cfg, prog);
 
@@ -690,6 +817,9 @@ pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
             }
             budget -= 1;
             let d = m.core.dispatch(tag);
+            if m.tracer.is_some() {
+                m.trace_sample(d);
+            }
             match inst {
                 Inst::Alu { op, dst, a, b } => {
                     let v = alu_eval(*op, m.val(*a), m.val(*b));
@@ -770,9 +900,14 @@ pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                     let space = m.mem.space_of(addr).unwrap_or(AddrSpace::Remote);
                     let exec = m.src_ready(d, &[*id, *base]);
                     let msys = &mut m.msys;
+                    let mut done_t = 0u64;
                     let issue = m.amu.transfer(idv, *resume, exec, false, |t| {
-                        msys.amu_transfer(addr, *bytes, space, AccessKind::Load, t)
+                        done_t = msys.amu_transfer(addr, *bytes, space, AccessKind::Load, t);
+                        done_t
                     });
+                    if m.tracer.is_some() {
+                        m.trace_transfer(idv, issue, done_t, false, space, *bytes);
+                    }
                     m.core.commit(None, issue + 1, if issue > exec { Cause::Backpressure } else { Cause::Compute });
                 }
                 Inst::Astore { id, base, off, bytes, spm_off, resume } => {
@@ -785,9 +920,14 @@ pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                     let space = m.mem.space_of(addr).unwrap_or(AddrSpace::Remote);
                     let exec = m.src_ready(d, &[*id, *base]);
                     let msys = &mut m.msys;
+                    let mut done_t = 0u64;
                     let issue = m.amu.transfer(idv, *resume, exec, true, |t| {
-                        msys.amu_transfer(addr, *bytes, space, AccessKind::Store, t)
+                        done_t = msys.amu_transfer(addr, *bytes, space, AccessKind::Store, t);
+                        done_t
                     });
+                    if m.tracer.is_some() {
+                        m.trace_transfer(idv, issue, done_t, true, space, *bytes);
+                    }
                     m.core.commit(None, issue + 1, if issue > exec { Cause::Backpressure } else { Cause::Compute });
                 }
                 Inst::Aset { id, n } => {
@@ -797,9 +937,20 @@ pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 }
                 Inst::Getfin { dst } => {
                     let exec = d;
+                    let holds0 = if m.tracer.is_some() { m.amu.stat_sched_holds } else { 0 };
                     let v = match m.amu.pop_finished(exec) {
-                        Some((id, _resume)) => id,
-                        None => -1,
+                        Some((id, _resume)) => {
+                            if m.tracer.is_some() {
+                                m.trace_pick(exec, id);
+                            }
+                            id
+                        }
+                        None => {
+                            if m.tracer.is_some() {
+                                m.trace_hold(exec, holds0);
+                            }
+                            -1
+                        }
                     };
                     m.regs[*dst as usize] = v;
                     m.core.commit(Some(*dst), exec + 3, Cause::Compute);
@@ -869,6 +1020,7 @@ pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                 // so a covered bafin never mispredicts.
                 let fetch = d.saturating_sub(m.core.frontend_depth);
                 let covered = m.bpt.covered(bb as u64);
+                let holds0 = if m.tracer.is_some() { m.amu.stat_sched_holds } else { 0 };
                 match m.amu.pop_finished(fetch) {
                     Some((id, resume)) => {
                         m.regs[*id_dst as usize] = id;
@@ -881,11 +1033,17 @@ pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
                             m.core.stats.bafin_mispredicts += 1;
                             m.core.redirect(d + 1);
                         }
+                        if m.tracer.is_some() {
+                            m.trace_pick(d, id);
+                        }
                         bb = resume;
                     }
                     None => {
                         m.core.commit(None, d + 1, Cause::Compute);
                         m.core.stats.bafins_fallthrough += 1;
+                        if m.tracer.is_some() {
+                            m.trace_hold(fetch, holds0);
+                        }
                         bb = *fallthrough;
                     }
                 }
@@ -894,9 +1052,9 @@ pub fn run_reference(cfg: &SimConfig, prog: &mut Program) -> Result<RunStats> {
         }
     }
 
-    let stats = m.finish();
+    let (stats, trace) = m.finish_traced();
     super::faults::check_strict(cfg, &stats)?;
-    Ok(stats)
+    Ok((stats, trace))
 }
 
 #[cfg(test)]

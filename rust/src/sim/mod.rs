@@ -13,10 +13,12 @@
 //! (deterministic fault injection on the far fabric plus timeout/retry
 //! resilience, `SimConfig::mem.fabric.faults`) and [`service`] (the
 //! SLO-aware open-loop request-serving layer replayed over a run's
-//! calibrated per-request cost, `SimConfig::service`). See `DESIGN.md`
-//! §1 (repo root) for the substitution argument, §8 for the scheduler
-//! subsystem, §9 for the fabric subsystem, §11 for fault injection and
-//! §12 for service mode.
+//! calibrated per-request cost, `SimConfig::service`) and [`trace`]
+//! (opt-in cycle-level event tracing + stall attribution,
+//! `SimConfig::trace`). See `DESIGN.md` §1 (repo root) for the
+//! substitution argument, §8 for the scheduler subsystem, §9 for the
+//! fabric subsystem, §11 for fault injection, §12 for service mode and
+//! §14 for tracing.
 
 pub mod amu;
 pub mod bpu;
@@ -33,15 +35,17 @@ pub mod sched;
 pub mod service;
 pub mod slots;
 pub mod stats;
+pub mod trace;
 
 pub use decode::DecodedFunc;
 pub use fabric::FabricKind;
 pub use faults::FaultConfig;
-pub use interp::{mix64, run, run_reference, Program};
+pub use interp::{mix64, run, run_reference, run_traced, Program};
 pub use mem::MemImage;
 pub use sched::SchedPolicyKind;
 pub use service::ServiceConfig;
 pub use stats::RunStats;
+pub use trace::{Trace, TraceConfig};
 
 use crate::compiler::CompiledKernel;
 use crate::config::SimConfig;

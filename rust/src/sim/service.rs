@@ -62,6 +62,7 @@ use anyhow::{ensure, Result};
 
 use super::fabric::LatencyHist;
 use super::stats::RunStats;
+use super::trace::{EventKind, Trace};
 use crate::util::rng::{BurstyExp, Exp, Rng, Zipf};
 
 /// Seed of the arrival/key stream when none is configured.
@@ -391,6 +392,20 @@ fn dispatch(
 /// terminates: the arrival loop is bounded by `requests` and the final
 /// drain strictly shrinks the queue — no handler can wedge.
 pub fn simulate(svc: &ServiceConfig, stats: &mut RunStats) -> ServiceStats {
+    simulate_traced(svc, stats, None)
+}
+
+/// [`simulate`] with an optional trace sink: admission-control
+/// transitions (reject, shed-expired, degrade enter/exit) are pushed
+/// as service-class events on the arrival clock (DESIGN.md §14). The
+/// `None` path is exactly `simulate` — the replay itself never reads
+/// the tracer, so traced and untraced runs produce identical `svc_*`
+/// counters by construction.
+pub fn simulate_traced(
+    svc: &ServiceConfig,
+    stats: &mut RunStats,
+    mut trace: Option<&mut Trace>,
+) -> ServiceStats {
     let mut st = ServiceStats::default();
     if !svc.enabled() {
         return st;
@@ -444,9 +459,13 @@ pub fn simulate(svc: &ServiceConfig, stats: &mut RunStats) -> ServiceStats {
         st.offered += 1;
         // Handlers that freed up since the last arrival take queued work
         // first (under the detector state that prevailed then).
+        let shed0 = st.shed_expired;
         dispatch(at, &mut servers, &mut queue, degraded, &costs, svc.shed, &mut st, &mut hist);
         if svc.shed && queue.len() as u64 >= svc.queue_cap as u64 {
             st.rejected += 1;
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.push(at, 0, EventKind::SvcReject);
+            }
         } else {
             st.accepted += 1;
             queue.push_back(Req {
@@ -456,6 +475,11 @@ pub fn simulate(svc: &ServiceConfig, stats: &mut RunStats) -> ServiceStats {
             });
             st.max_queue = st.max_queue.max(queue.len() as u64);
             dispatch(at, &mut servers, &mut queue, degraded, &costs, svc.shed, &mut st, &mut hist);
+        }
+        if let Some(tr) = trace.as_deref_mut() {
+            for _ in shed0..st.shed_expired {
+                tr.push(at, 0, EventKind::SvcShedExpired);
+            }
         }
         // Overload detector: one occupancy sample per arrival, tripped
         // and recovered through `hysteresis` consecutive samples.
@@ -467,6 +491,9 @@ pub fn simulate(svc: &ServiceConfig, stats: &mut RunStats) -> ServiceStats {
                     if below >= svc.hysteresis {
                         degraded = false;
                         below = 0;
+                        if let Some(tr) = trace.as_deref_mut() {
+                            tr.push(at, 0, EventKind::SvcDegradeExit);
+                        }
                     }
                 } else {
                     below = 0;
@@ -477,6 +504,9 @@ pub fn simulate(svc: &ServiceConfig, stats: &mut RunStats) -> ServiceStats {
                     degraded = true;
                     st.degraded_spells += 1;
                     above = 0;
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.push(at, 0, EventKind::SvcDegradeEnter);
+                    }
                 }
             } else {
                 above = 0;
@@ -484,7 +514,14 @@ pub fn simulate(svc: &ServiceConfig, stats: &mut RunStats) -> ServiceStats {
         }
     }
     // Drain: every still-queued request is served or shed.
+    let shed0 = st.shed_expired;
+    let drain_t = clock as u64;
     dispatch(u64::MAX, &mut servers, &mut queue, degraded, &costs, svc.shed, &mut st, &mut hist);
+    if let Some(tr) = trace.as_deref_mut() {
+        for _ in shed0..st.shed_expired {
+            tr.push(drain_t, 0, EventKind::SvcShedExpired);
+        }
+    }
     st.capacity_cost = cost_full;
     st.p50 = hist.percentile(0.50);
     st.p99 = hist.percentile(0.99);
@@ -504,6 +541,10 @@ pub fn simulate(svc: &ServiceConfig, stats: &mut RunStats) -> ServiceStats {
     stats.svc_max_queue = st.max_queue;
     stats.svc_degraded_served = st.degraded_served;
     stats.svc_degraded_spells = st.degraded_spells;
+    if let Some(tr) = trace {
+        stats.trace_events = tr.total;
+        stats.trace_dropped = tr.dropped;
+    }
     st
 }
 
@@ -519,6 +560,28 @@ mod tests {
     fn run(cfg: &ServiceConfig) -> ServiceStats {
         let mut s = base_stats();
         simulate(cfg, &mut s)
+    }
+
+    #[test]
+    fn traced_replay_is_invisible_to_counters_and_accounts_transitions() {
+        use crate::sim::stats::StallBuckets;
+        use crate::sim::trace::{TraceConfig, Tracer};
+        let cfg = ServiceConfig::parse("overload").unwrap();
+        let mut plain = base_stats();
+        let st_plain = simulate(&cfg, &mut plain);
+        let mut traced = base_stats();
+        let mut trace =
+            Tracer::new(TraceConfig::on()).harvest(0, &StallBuckets::default(), "fifo", "fixed");
+        let st_traced = simulate_traced(&cfg, &mut traced, Some(&mut trace));
+        assert_eq!(st_plain, st_traced, "tracing must not perturb the replay");
+        let count = |want: fn(&EventKind) -> bool| {
+            trace.events.iter().filter(|e| want(&e.kind)).count() as u64
+        };
+        assert!(st_traced.rejected > 0, "overload preset must exercise rejection");
+        assert_eq!(count(|k| matches!(k, EventKind::SvcReject)), st_traced.rejected);
+        assert_eq!(count(|k| matches!(k, EventKind::SvcShedExpired)), st_traced.shed_expired);
+        assert_eq!(count(|k| matches!(k, EventKind::SvcDegradeEnter)), st_traced.degraded_spells);
+        assert_eq!(traced.trace_events, trace.total, "stats must track post-hoc service pushes");
     }
 
     fn assert_conservation(st: &ServiceStats, cfg: &ServiceConfig) {

@@ -176,6 +176,10 @@ pub struct RunStats {
     pub svc_degraded_served: u64,
     /// Times the overload detector tripped into degraded mode.
     pub svc_degraded_spells: u64,
+    /// Trace events observed / dropped at ring overflow (DESIGN.md §14;
+    /// both zero — hence bit-identical — when tracing is off).
+    pub trace_events: u64,
+    pub trace_dropped: u64,
 }
 
 /// Default reorder window of [`IntervalUnion`] (see

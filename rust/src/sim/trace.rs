@@ -1,0 +1,1213 @@
+//! Cycle-level event tracing and stall attribution (DESIGN.md §14).
+//!
+//! Opt-in, deterministic, zero-overhead-when-off telemetry for the
+//! simulator. A [`Tracer`] is carried as `Option<Box<Tracer>>` by the
+//! interpreter `Machine`, so the off path constructs nothing and stays
+//! bit-identical by construction (pinned in the differential suite).
+//!
+//! Event classes (filterable via `[trace] classes`):
+//! - `coro`    coroutine lifecycle: spawn / suspend / resume / finish
+//! - `amu`     AMU request issue→complete with addr class and latency
+//! - `sched`   scheduler decisions: pick / hold
+//! - `fabric`  queue-depth + hot-page counter samples every N cycles
+//! - `fault`   nack / retry / timeout / slow-path deltas
+//! - `service` admission reject / shed / degraded-mode transitions
+//!
+//! Two sinks: [`chrome_json`] (Chrome trace-event JSON, loadable in
+//! Perfetto; written atomically like the store) and [`render_profile`]
+//! (terminal report: per-coroutine stall attribution, top-N tail
+//! latency requests, queue-occupancy sparkline).
+//!
+//! Determinism: events are emitted at points that are themselves
+//! deterministic functions of the simulated execution, counter samples
+//! fire on a fixed cycle grid, and all aggregate maps are `BTreeMap`s —
+//! two runs of the same seed produce byte-identical event logs
+//! (`Trace::event_log`), pinned by the differential suite.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::fabric::FabricGauges;
+use super::stats::StallBuckets;
+
+/// Default counter-sample period in cycles.
+pub const DEFAULT_SAMPLE_EVERY: u64 = 4096;
+/// Default ring capacity (retained events).
+pub const DEFAULT_RING_CAP: usize = 1 << 16;
+/// How many tail-latency requests the profile keeps.
+pub const TOP_REQUESTS: usize = 16;
+/// Pseudo coroutine id for cycles outside any coroutine (main thread).
+pub const MAIN_CORO: i64 = i64::MIN;
+
+// ---------------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------------
+
+/// Bitmask of event classes to record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceClasses(pub u8);
+
+impl TraceClasses {
+    pub const CORO: u8 = 1 << 0;
+    pub const AMU: u8 = 1 << 1;
+    pub const SCHED: u8 = 1 << 2;
+    pub const FABRIC: u8 = 1 << 3;
+    pub const FAULT: u8 = 1 << 4;
+    pub const SERVICE: u8 = 1 << 5;
+    const NAMES: [(&'static str, u8); 6] = [
+        ("coro", Self::CORO),
+        ("amu", Self::AMU),
+        ("sched", Self::SCHED),
+        ("fabric", Self::FABRIC),
+        ("fault", Self::FAULT),
+        ("service", Self::SERVICE),
+    ];
+
+    pub fn all() -> TraceClasses {
+        TraceClasses(0x3f)
+    }
+
+    #[inline]
+    pub fn has(self, class: u8) -> bool {
+        self.0 & class != 0
+    }
+
+    /// Parse a comma-separated class list ("coro,amu" / "all").
+    pub fn parse(s: &str) -> Result<TraceClasses> {
+        let s = s.trim();
+        if s.is_empty() || s == "all" {
+            return Ok(Self::all());
+        }
+        let mut mask = 0u8;
+        for part in s.split(',') {
+            let part = part.trim();
+            match Self::NAMES.iter().find(|(n, _)| *n == part) {
+                Some((_, bit)) => mask |= bit,
+                None => bail!(
+                    "unknown trace class '{part}' (known: {}, or 'all')",
+                    Self::NAMES.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+                ),
+            }
+        }
+        Ok(TraceClasses(mask))
+    }
+
+    pub fn label(self) -> String {
+        if self == Self::all() {
+            return "all".into();
+        }
+        let names: Vec<&str> =
+            Self::NAMES.iter().filter(|(_, b)| self.has(*b)).map(|(n, _)| *n).collect();
+        names.join(",")
+    }
+}
+
+/// `[trace]` section of [`crate::config::SimConfig`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceConfig {
+    /// Master switch. When false the simulator constructs no tracer state.
+    pub enabled: bool,
+    /// Counter-sample period in cycles (fabric/AMU occupancy gauges).
+    pub sample_every: u64,
+    /// Max events retained; overflow increments `trace_dropped`.
+    pub ring_cap: usize,
+    /// Which event classes to record.
+    pub classes: TraceClasses,
+}
+
+impl TraceConfig {
+    pub fn off() -> TraceConfig {
+        TraceConfig {
+            enabled: false,
+            sample_every: DEFAULT_SAMPLE_EVERY,
+            ring_cap: DEFAULT_RING_CAP,
+            classes: TraceClasses::all(),
+        }
+    }
+
+    pub fn on() -> TraceConfig {
+        TraceConfig { enabled: true, ..Self::off() }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn label(&self) -> String {
+        if !self.enabled {
+            return "off".into();
+        }
+        format!(
+            "on(sample={},cap={},classes={})",
+            self.sample_every,
+            self.ring_cap,
+            self.classes.label()
+        )
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.sample_every == 0 {
+            bail!("[trace] sample_every must be >= 1");
+        }
+        if self.ring_cap == 0 {
+            bail!("[trace] ring_cap must be >= 1");
+        }
+        if self.ring_cap > (1 << 24) {
+            bail!("[trace] ring_cap {} too large (max {})", self.ring_cap, 1usize << 24);
+        }
+        Ok(())
+    }
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// Address class of an AMU request (mirrors `ir::AddrSpace`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AddrClass {
+    Local,
+    Remote,
+    Spm,
+}
+
+impl AddrClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            AddrClass::Local => "local",
+            AddrClass::Remote => "remote",
+            AddrClass::Spm => "spm",
+        }
+    }
+}
+
+/// A compact trace event. `Copy` so the ring is a flat `Vec`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// First AMU transfer observed for this coroutine id.
+    CoroSpawn { id: i64 },
+    /// Context switched away from this coroutine.
+    CoroSuspend { id: i64 },
+    /// Context switched into this coroutine.
+    CoroResume { id: i64 },
+    /// Program halted while this coroutine was current.
+    CoroFinish { id: i64 },
+    /// AMU request issue→complete (latency = done - issue).
+    AmuReq { id: i64, issue: u64, done: u64, store: bool, class: AddrClass, lines: u64 },
+    /// Scheduler picked this coroutine from the finished queue.
+    SchedPick { id: i64 },
+    /// Scheduler saw visible completions but deferred them (policy hold).
+    SchedHold { held: u64 },
+    /// Periodic counter sample (fabric occupancy + AMU slots in flight).
+    Sample {
+        inflight: u64,
+        queue_stalls: u64,
+        hot_hits: u64,
+        hot_misses: u64,
+        amu_inflight: u64,
+    },
+    /// Fault-injection deltas since the previous check.
+    FaultNack { n: u64 },
+    FaultRetry { n: u64 },
+    FaultTimeout { n: u64 },
+    FaultSlowPath { n: u64 },
+    /// Service-mode admission/degradation transitions.
+    SvcReject,
+    SvcShedExpired,
+    SvcDegradeEnter,
+    SvcDegradeExit,
+}
+
+impl EventKind {
+    fn class(&self) -> u8 {
+        match self {
+            EventKind::CoroSpawn { .. }
+            | EventKind::CoroSuspend { .. }
+            | EventKind::CoroResume { .. }
+            | EventKind::CoroFinish { .. } => TraceClasses::CORO,
+            EventKind::AmuReq { .. } => TraceClasses::AMU,
+            EventKind::SchedPick { .. } | EventKind::SchedHold { .. } => TraceClasses::SCHED,
+            EventKind::Sample { .. } => TraceClasses::FABRIC,
+            EventKind::FaultNack { .. }
+            | EventKind::FaultRetry { .. }
+            | EventKind::FaultTimeout { .. }
+            | EventKind::FaultSlowPath { .. } => TraceClasses::FAULT,
+            EventKind::SvcReject
+            | EventKind::SvcShedExpired
+            | EventKind::SvcDegradeEnter
+            | EventKind::SvcDegradeExit => TraceClasses::SERVICE,
+        }
+    }
+}
+
+/// One recorded event: cycle, originating core, payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub t: u64,
+    pub core: u32,
+    pub kind: EventKind,
+}
+
+// ---------------------------------------------------------------------------
+// Per-coroutine stall attribution
+// ---------------------------------------------------------------------------
+
+/// Aggregated per-coroutine profile row. Kept outside the event ring so
+/// the attribution stays exact even when the ring overflows.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CoroProf {
+    /// Times the coroutine was resumed (context switches into it).
+    pub resumes: u64,
+    /// Total cycles attributed to this coroutine's segments.
+    pub cycles: f64,
+    /// Cycles not covered by any stall bucket (useful work + overlap).
+    pub compute: f64,
+    /// Stall-bucket deltas accrued during this coroutine's segments.
+    pub remote_mem: f64,
+    pub local_mem: f64,
+    pub mispredict: f64,
+    pub backpressure: f64,
+    /// AMU requests issued on behalf of this id, and their summed latency.
+    pub reqs: u64,
+    pub req_latency: u64,
+}
+
+impl CoroProf {
+    pub fn stall_total(&self) -> f64 {
+        self.remote_mem + self.local_mem + self.mispredict + self.backpressure
+    }
+}
+
+/// A tail-latency request kept for the profile's top-N table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReqRecord {
+    pub core: u32,
+    pub id: i64,
+    pub issue: u64,
+    pub done: u64,
+    /// Issue order, for deterministic tie-breaking.
+    pub seq: u64,
+}
+
+impl ReqRecord {
+    pub fn latency(&self) -> u64 {
+        self.done - self.issue
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tracer (live, carried by the interpreter)
+// ---------------------------------------------------------------------------
+
+/// Live trace recorder. Constructed only when `TraceConfig::enabled`;
+/// the off path carries `None` and allocates nothing.
+#[derive(Debug)]
+pub struct Tracer {
+    cfg: TraceConfig,
+    core: u32,
+    events: Vec<Event>,
+    total: u64,
+    dropped: u64,
+    // --- stall attribution state ---
+    /// Coroutine the core is currently running ([`MAIN_CORO`] = none).
+    cur: i64,
+    seg_start_cycles: u64,
+    seg_start_stalls: StallBuckets,
+    attrib: BTreeMap<i64, CoroProf>,
+    // --- sampling state ---
+    next_sample: u64,
+    last_gauges: FabricGauges,
+    // --- top-N tail latency ---
+    top: Vec<ReqRecord>,
+    req_seq: u64,
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig) -> Box<Tracer> {
+        Self::for_core(cfg, 0)
+    }
+
+    pub fn for_core(cfg: TraceConfig, core: u32) -> Box<Tracer> {
+        Box::new(Tracer {
+            cfg,
+            core,
+            events: Vec::with_capacity(cfg.ring_cap.min(4096)),
+            total: 0,
+            dropped: 0,
+            cur: MAIN_CORO,
+            seg_start_cycles: 0,
+            seg_start_stalls: StallBuckets::default(),
+            attrib: BTreeMap::new(),
+            next_sample: cfg.sample_every,
+            last_gauges: FabricGauges::default(),
+            top: Vec::with_capacity(TOP_REQUESTS + 1),
+            req_seq: 0,
+        })
+    }
+
+    fn emit(&mut self, t: u64, kind: EventKind) {
+        if !self.cfg.classes.has(kind.class()) {
+            return;
+        }
+        self.total += 1;
+        if self.events.len() < self.cfg.ring_cap {
+            self.events.push(Event { t, core: self.core, kind });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Close the open attribution segment `[seg_start, now)` against the
+    /// core's cumulative stall buckets and charge it to `self.cur`.
+    fn close_segment(&mut self, now: u64, stalls: &StallBuckets) {
+        let interval = now.saturating_sub(self.seg_start_cycles) as f64;
+        let d_remote = stalls.remote_mem - self.seg_start_stalls.remote_mem;
+        let d_local = stalls.local_mem - self.seg_start_stalls.local_mem;
+        let d_mis = stalls.mispredict - self.seg_start_stalls.mispredict;
+        let d_back = stalls.backpressure - self.seg_start_stalls.backpressure;
+        let p = self.attrib.entry(self.cur).or_default();
+        p.cycles += interval;
+        p.remote_mem += d_remote;
+        p.local_mem += d_local;
+        p.mispredict += d_mis;
+        p.backpressure += d_back;
+        p.compute += (interval - (d_remote + d_local + d_mis + d_back)).max(0.0);
+        self.seg_start_cycles = now;
+        self.seg_start_stalls = *stalls;
+    }
+
+    /// Context switch at cycle `t`: attribute the closing segment, record
+    /// suspend of the old coroutine and resume of `next` (None = back to
+    /// the main/scheduler context).
+    pub fn on_switch(&mut self, t: u64, core_cycles: u64, stalls: &StallBuckets, next: Option<i64>) {
+        self.close_segment(core_cycles, stalls);
+        if self.cur != MAIN_CORO {
+            let id = self.cur;
+            self.emit(t, EventKind::CoroSuspend { id });
+        }
+        match next {
+            Some(id) => {
+                self.emit(t, EventKind::CoroResume { id });
+                self.attrib.entry(id).or_default().resumes += 1;
+                self.cur = id;
+            }
+            None => self.cur = MAIN_CORO,
+        }
+    }
+
+    /// AMU transfer issued for coroutine `id` at `issue`, completing at
+    /// `done`. Emits the spawn event on first sight of the id.
+    pub fn on_transfer(
+        &mut self,
+        id: i64,
+        issue: u64,
+        done: u64,
+        store: bool,
+        class: AddrClass,
+        lines: u64,
+    ) {
+        if !self.attrib.contains_key(&id) {
+            self.attrib.insert(id, CoroProf::default());
+            self.emit(issue, EventKind::CoroSpawn { id });
+        }
+        self.emit(issue, EventKind::AmuReq { id, issue, done, store, class, lines });
+        let p = self.attrib.get_mut(&id).expect("inserted above");
+        p.reqs += 1;
+        p.req_latency += done.saturating_sub(issue);
+        self.note_req(id, issue, done);
+    }
+
+    fn note_req(&mut self, id: i64, issue: u64, done: u64) {
+        let rec = ReqRecord { core: self.core, id, issue, done, seq: self.req_seq };
+        self.req_seq += 1;
+        let lat = rec.latency();
+        if self.top.len() >= TOP_REQUESTS
+            && self.top.last().map(|r| lat <= r.latency()).unwrap_or(false)
+        {
+            return;
+        }
+        self.top.push(rec);
+        // Longest first; earlier issue order wins ties (deterministic).
+        self.top.sort_by(|a, b| b.latency().cmp(&a.latency()).then(a.seq.cmp(&b.seq)));
+        self.top.truncate(TOP_REQUESTS);
+    }
+
+    /// Scheduler outcome at cycle `t`: a pick, or a hold (completions
+    /// were visible but the policy deferred them).
+    pub fn on_sched(&mut self, t: u64, picked: Option<i64>, held: u64) {
+        match picked {
+            Some(id) => self.emit(t, EventKind::SchedPick { id }),
+            None if held > 0 => self.emit(t, EventKind::SchedHold { held }),
+            None => {}
+        }
+    }
+
+    /// Cheap check: is a counter sample due at `now`? One branch on the
+    /// traced path; the untraced path never reaches it.
+    #[inline]
+    pub fn sample_due(&self, now: u64) -> bool {
+        now >= self.next_sample
+    }
+
+    /// Record a counter sample and fold in fault-counter deltas.
+    pub fn sample(&mut self, now: u64, gauges: FabricGauges, amu_inflight: u64) {
+        self.emit(
+            now,
+            EventKind::Sample {
+                inflight: gauges.inflight,
+                queue_stalls: gauges.queue_stalls,
+                hot_hits: gauges.hot_hits,
+                hot_misses: gauges.hot_misses,
+                amu_inflight,
+            },
+        );
+        self.fault_deltas(now, &gauges);
+        self.last_gauges = gauges;
+        // Advance to the next grid point strictly after `now`.
+        let step = self.cfg.sample_every;
+        self.next_sample = (now / step + 1) * step;
+    }
+
+    /// Emit fault-counter deltas since the last check (used both at
+    /// sample points and after AMU issues on faulty fabrics).
+    pub fn on_fault_check(&mut self, t: u64, gauges: FabricGauges) {
+        self.fault_deltas(t, &gauges);
+        self.last_gauges = gauges;
+    }
+
+    fn fault_deltas(&mut self, t: u64, g: &FabricGauges) {
+        let last = self.last_gauges;
+        if g.nacks > last.nacks {
+            self.emit(t, EventKind::FaultNack { n: g.nacks - last.nacks });
+        }
+        if g.retries > last.retries {
+            self.emit(t, EventKind::FaultRetry { n: g.retries - last.retries });
+        }
+        if g.timeouts > last.timeouts {
+            self.emit(t, EventKind::FaultTimeout { n: g.timeouts - last.timeouts });
+        }
+        if g.slow_path > last.slow_path {
+            self.emit(t, EventKind::FaultSlowPath { n: g.slow_path - last.slow_path });
+        }
+    }
+
+    /// Finish: close the last segment at `cycles`, mark the current
+    /// coroutine finished, and turn the live state into a [`Trace`].
+    pub fn harvest(
+        mut self: Box<Self>,
+        cycles: u64,
+        stalls: &StallBuckets,
+        policy: &str,
+        fabric: &str,
+    ) -> Trace {
+        self.close_segment(cycles, stalls);
+        if self.cur != MAIN_CORO {
+            let id = self.cur;
+            self.emit(cycles, EventKind::CoroFinish { id });
+        }
+        let mut profile: Vec<CoroRow> = self
+            .attrib
+            .iter()
+            .map(|(&id, &prof)| CoroRow { core: self.core, id, prof })
+            .collect();
+        sort_profile(&mut profile);
+        Trace {
+            policy: policy.to_string(),
+            fabric: fabric.to_string(),
+            cycles,
+            cores: 1,
+            classes: self.cfg.classes,
+            ring_cap: self.cfg.ring_cap,
+            events: self.events,
+            total: self.total,
+            dropped: self.dropped,
+            profile,
+            top: self.top,
+        }
+    }
+}
+
+fn sort_profile(rows: &mut [CoroRow]) {
+    // Heaviest first; (core, id) breaks ties deterministically.
+    rows.sort_by(|a, b| {
+        b.prof
+            .cycles
+            .partial_cmp(&a.prof.cycles)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.core.cmp(&b.core))
+            .then(a.id.cmp(&b.id))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Trace artifact
+// ---------------------------------------------------------------------------
+
+/// One profile row: a coroutine on a core with its attribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoroRow {
+    pub core: u32,
+    pub id: i64,
+    pub prof: CoroProf,
+}
+
+impl CoroRow {
+    pub fn name(&self) -> String {
+        if self.id == MAIN_CORO {
+            format!("c{}:(main)", self.core)
+        } else {
+            format!("c{}:{}", self.core, self.id)
+        }
+    }
+}
+
+/// Harvested trace: the final artifact returned by traced runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub policy: String,
+    pub fabric: String,
+    /// Total simulated cycles (makespan for clusters).
+    pub cycles: u64,
+    pub cores: u32,
+    pub classes: TraceClasses,
+    pub ring_cap: usize,
+    pub events: Vec<Event>,
+    /// Events observed (retained + dropped).
+    pub total: u64,
+    pub dropped: u64,
+    pub profile: Vec<CoroRow>,
+    pub top: Vec<ReqRecord>,
+}
+
+impl Trace {
+    /// Merge per-core traces from a cluster run (events concatenated in
+    /// core order, aggregates summed, top-N re-ranked).
+    pub fn merge(parts: Vec<Trace>, makespan: u64) -> Trace {
+        let mut it = parts.into_iter();
+        let mut out = it.next().expect("merge of at least one trace");
+        out.cycles = makespan;
+        for part in it {
+            out.cores += part.cores;
+            out.total += part.total;
+            out.dropped += part.dropped;
+            out.events.extend(part.events);
+            out.profile.extend(part.profile);
+            out.top.extend(part.top);
+        }
+        sort_profile(&mut out.profile);
+        out.top.sort_by(|a, b| {
+            b.latency()
+                .cmp(&a.latency())
+                .then(a.core.cmp(&b.core))
+                .then(a.seq.cmp(&b.seq))
+        });
+        out.top.truncate(TOP_REQUESTS);
+        out
+    }
+
+    /// Append a post-hoc event (service replay), honoring the class
+    /// filter and ring accounting of the original run.
+    pub fn push(&mut self, t: u64, core: u32, kind: EventKind) {
+        if !self.classes.has(kind.class()) {
+            return;
+        }
+        self.total += 1;
+        if self.events.len() < self.ring_cap {
+            self.events.push(Event { t, core, kind });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Deterministic textual rendering of the event stream — one line
+    /// per event. Byte-identical across runs of the same seed.
+    pub fn event_log(&self) -> String {
+        let mut s = String::with_capacity(self.events.len() * 48);
+        for e in &self.events {
+            let _ = writeln!(s, "{} c{} {:?}", e.t, e.core, e.kind);
+        }
+        s
+    }
+
+    /// Fraction of the run's stall cycles that the per-coroutine profile
+    /// accounts for (1.0 by construction for single-core runs).
+    pub fn stall_coverage(&self, stats_stall_total: f64) -> f64 {
+        if stats_stall_total <= 0.0 {
+            return 1.0;
+        }
+        let attributed: f64 = self.profile.iter().map(|r| r.prof.stall_total()).sum();
+        (attributed / stats_stall_total).min(1.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event JSON sink
+// ---------------------------------------------------------------------------
+
+/// Reserved Perfetto track (tid) ids, away from plausible coroutine ids.
+const TID_AMU: i64 = 1_000_000_000;
+const TID_SCHED: i64 = 1_000_000_001;
+const TID_FAULT: i64 = 1_000_000_002;
+const TID_SERVICE: i64 = 1_000_000_003;
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+struct ChromeWriter {
+    out: String,
+    first: bool,
+}
+
+impl ChromeWriter {
+    fn new() -> ChromeWriter {
+        ChromeWriter { out: String::from("{\"traceEvents\":[\n"), first: true }
+    }
+
+    fn push(&mut self, ev: String) {
+        if !self.first {
+            self.out.push_str(",\n");
+        }
+        self.first = false;
+        self.out.push_str(&ev);
+    }
+
+    fn meta(&mut self, pid: u32, tid: Option<i64>, key: &str, name: &str) {
+        let tid_field = tid.map(|t| format!(",\"tid\":{t}")).unwrap_or_default();
+        self.push(format!(
+            "{{\"ph\":\"M\",\"pid\":{pid}{tid_field},\"name\":\"{key}\",\"args\":{{\"name\":\"{}\"}}}}",
+            json_escape(name)
+        ));
+    }
+
+    fn finish(mut self, display_unit_note: &str) -> String {
+        self.out.push_str("\n],\"displayTimeUnit\":\"ms\",\"otherData\":{\"note\":\"");
+        self.out.push_str(&json_escape(display_unit_note));
+        self.out.push_str("\"}}\n");
+        self.out
+    }
+}
+
+/// Render a [`Trace`] as Chrome trace-event JSON (one pid per core, one
+/// tid per coroutine plus reserved channel tracks; 1 µs == 1 cycle).
+pub fn chrome_json(trace: &Trace) -> String {
+    let mut w = ChromeWriter::new();
+    // Metadata: name each core process and the reserved tracks.
+    let mut seen_cores: Vec<u32> = trace.events.iter().map(|e| e.core).collect();
+    seen_cores.sort_unstable();
+    seen_cores.dedup();
+    if seen_cores.is_empty() {
+        seen_cores.push(0);
+    }
+    for &core in &seen_cores {
+        w.meta(core, None, "process_name", &format!("core {core}"));
+        w.meta(core, Some(TID_AMU), "thread_name", "amu/fabric");
+        w.meta(core, Some(TID_SCHED), "thread_name", "scheduler");
+        w.meta(core, Some(TID_FAULT), "thread_name", "faults");
+        w.meta(core, Some(TID_SERVICE), "thread_name", "service");
+    }
+    // X slices for coroutine residency: pair Resume with Suspend/Finish.
+    let mut open: BTreeMap<u32, (i64, u64)> = BTreeMap::new();
+    for e in &trace.events {
+        let (pid, ts) = (e.core, e.t);
+        match e.kind {
+            EventKind::CoroResume { id } => {
+                open.insert(pid, (id, ts));
+            }
+            EventKind::CoroSuspend { id } | EventKind::CoroFinish { id } => {
+                if let Some((open_id, t0)) = open.remove(&pid) {
+                    if open_id == id {
+                        w.push(format!(
+                            "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{id},\"ts\":{t0},\"dur\":{},\"name\":\"coro {id}\",\"cat\":\"coro\"}}",
+                            ts.saturating_sub(t0)
+                        ));
+                    }
+                }
+            }
+            EventKind::CoroSpawn { id } => {
+                w.push(format!(
+                    "{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{id},\"ts\":{ts},\"name\":\"spawn\",\"s\":\"t\",\"cat\":\"coro\"}}"
+                ));
+            }
+            EventKind::AmuReq { id, issue, done, store, class, lines } => {
+                let name = if store { "astore" } else { "aload" };
+                w.push(format!(
+                    "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{TID_AMU},\"ts\":{issue},\"dur\":{},\"name\":\"{name}\",\"cat\":\"amu\",\"args\":{{\"coro\":{id},\"class\":\"{}\",\"lines\":{lines}}}}}",
+                    done.saturating_sub(issue),
+                    class.name()
+                ));
+            }
+            EventKind::SchedPick { id } => {
+                w.push(format!(
+                    "{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{TID_SCHED},\"ts\":{ts},\"name\":\"pick\",\"s\":\"t\",\"cat\":\"sched\",\"args\":{{\"coro\":{id}}}}}"
+                ));
+            }
+            EventKind::SchedHold { held } => {
+                w.push(format!(
+                    "{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{TID_SCHED},\"ts\":{ts},\"name\":\"hold\",\"s\":\"t\",\"cat\":\"sched\",\"args\":{{\"held\":{held}}}}}"
+                ));
+            }
+            EventKind::Sample { inflight, queue_stalls, hot_hits, hot_misses, amu_inflight } => {
+                w.push(format!(
+                    "{{\"ph\":\"C\",\"pid\":{pid},\"ts\":{ts},\"name\":\"fabric\",\"cat\":\"fabric\",\"args\":{{\"inflight\":{inflight},\"queue_stalls\":{queue_stalls},\"hot_hits\":{hot_hits},\"hot_misses\":{hot_misses},\"amu_inflight\":{amu_inflight}}}}}"
+                ));
+            }
+            EventKind::FaultNack { n } => w.push(fault_instant(pid, ts, "nack", n)),
+            EventKind::FaultRetry { n } => w.push(fault_instant(pid, ts, "retry", n)),
+            EventKind::FaultTimeout { n } => w.push(fault_instant(pid, ts, "timeout", n)),
+            EventKind::FaultSlowPath { n } => w.push(fault_instant(pid, ts, "slow_path", n)),
+            EventKind::SvcReject => w.push(svc_instant(pid, ts, "reject")),
+            EventKind::SvcShedExpired => w.push(svc_instant(pid, ts, "shed_expired")),
+            EventKind::SvcDegradeEnter => w.push(svc_instant(pid, ts, "degrade_enter")),
+            EventKind::SvcDegradeExit => w.push(svc_instant(pid, ts, "degrade_exit")),
+        }
+    }
+    w.finish(&format!(
+        "coroamu trace: policy={} fabric={} cycles={} events={} dropped={} (ts unit: 1us == 1 cycle)",
+        trace.policy, trace.fabric, trace.cycles, trace.total, trace.dropped
+    ))
+}
+
+fn fault_instant(pid: u32, ts: u64, name: &str, n: u64) -> String {
+    format!(
+        "{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{TID_FAULT},\"ts\":{ts},\"name\":\"{name}\",\"s\":\"t\",\"cat\":\"fault\",\"args\":{{\"n\":{n}}}}}"
+    )
+}
+
+fn svc_instant(pid: u32, ts: u64, name: &str) -> String {
+    format!(
+        "{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{TID_SERVICE},\"ts\":{ts},\"name\":\"{name}\",\"s\":\"t\",\"cat\":\"service\"}}"
+    )
+}
+
+/// Write the Chrome JSON atomically (tmp + rename, like the store).
+pub fn write_chrome_json(trace: &Trace, path: &Path) -> Result<()> {
+    let json = chrome_json(trace);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, json).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Terminal profile report
+// ---------------------------------------------------------------------------
+
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+fn sparkline(values: &[u64], width: usize) -> String {
+    if values.is_empty() {
+        return "(no samples)".into();
+    }
+    // Bucket samples down to `width` columns (max within each bucket).
+    let cols = width.min(values.len()).max(1);
+    let mut maxes = vec![0u64; cols];
+    for (i, &v) in values.iter().enumerate() {
+        let c = i * cols / values.len();
+        maxes[c] = maxes[c].max(v);
+    }
+    let peak = maxes.iter().copied().max().unwrap_or(0).max(1);
+    maxes
+        .iter()
+        .map(|&v| SPARK[((v * (SPARK.len() as u64 - 1)) / peak) as usize])
+        .collect()
+}
+
+fn timeline_bar(issue: u64, done: u64, span: u64, width: usize) -> String {
+    let span = span.max(1);
+    let start = (issue.min(span) as usize * width) / span as usize;
+    let end = ((done.min(span) as usize * width) / span as usize).max(start + 1).min(width);
+    let mut bar = String::with_capacity(width);
+    for i in 0..width {
+        bar.push(if i >= start && i < end { '█' } else { '·' });
+    }
+    bar
+}
+
+/// Render the in-terminal profile: stall attribution per coroutine,
+/// top-N tail-latency requests with a run-relative timeline, and a
+/// queue-occupancy sparkline from the periodic samples.
+pub fn render_profile(trace: &Trace) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "trace profile: policy={} fabric={} cores={} cycles={} events={} dropped={}",
+        trace.policy, trace.fabric, trace.cores, trace.cycles, trace.total, trace.dropped
+    );
+    // --- per-coroutine stall attribution ---
+    let total_cycles: f64 = trace.profile.iter().map(|r| r.prof.cycles).sum();
+    let _ = writeln!(s, "\nper-coroutine stall attribution (cycles):");
+    let _ = writeln!(
+        s,
+        "{:>12} {:>8} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>7}",
+        "coro", "resumes", "cycles", "compute", "local", "remote", "backpr", "mispred", "share"
+    );
+    const MAX_ROWS: usize = 32;
+    for row in trace.profile.iter().take(MAX_ROWS) {
+        let p = &row.prof;
+        let share = if total_cycles > 0.0 { 100.0 * p.cycles / total_cycles } else { 0.0 };
+        let _ = writeln!(
+            s,
+            "{:>12} {:>8} {:>10.0} {:>10.0} {:>10.0} {:>10.0} {:>10.0} {:>10.0} {:>6.1}%",
+            row.name(),
+            p.resumes,
+            p.cycles,
+            p.compute,
+            p.local_mem,
+            p.remote_mem,
+            p.backpressure,
+            p.mispredict,
+            share
+        );
+    }
+    if trace.profile.len() > MAX_ROWS {
+        let _ = writeln!(s, "  ... {} more coroutines", trace.profile.len() - MAX_ROWS);
+    }
+    let attributed: f64 = trace.profile.iter().map(|r| r.prof.stall_total()).sum();
+    let _ = writeln!(
+        s,
+        "attributed {:.0} stall cycles across {} coroutine rows ({:.0} total cycles tracked)",
+        attributed,
+        trace.profile.len(),
+        total_cycles
+    );
+    // --- top-N tail latency ---
+    if !trace.top.is_empty() {
+        let _ = writeln!(s, "\ntop {} tail-latency AMU requests:", trace.top.len());
+        let _ = writeln!(
+            s,
+            "{:>4} {:>12} {:>12} {:>12} {:>9}  timeline",
+            "#", "coro", "issue", "done", "latency"
+        );
+        for (i, r) in trace.top.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "{:>4} {:>12} {:>12} {:>12} {:>9}  [{}]",
+                i + 1,
+                format!("c{}:{}", r.core, r.id),
+                r.issue,
+                r.done,
+                r.latency(),
+                timeline_bar(r.issue, r.done, trace.cycles, 40)
+            );
+        }
+    }
+    // --- queue occupancy sparkline (per core) ---
+    let mut cores: Vec<u32> = trace.events.iter().map(|e| e.core).collect();
+    cores.sort_unstable();
+    cores.dedup();
+    for &core in &cores {
+        let depths: Vec<u64> = trace
+            .events
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::Sample { inflight, .. } if e.core == core => Some(inflight),
+                _ => None,
+            })
+            .collect();
+        if !depths.is_empty() {
+            let peak = depths.iter().copied().max().unwrap_or(0);
+            let _ = writeln!(
+                s,
+                "\nfabric queue occupancy (core {core}, {} samples, peak {}):\n  {}",
+                depths.len(),
+                peak,
+                sparkline(&depths, 64)
+            );
+        }
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(cap: usize) -> TraceConfig {
+        TraceConfig { enabled: true, sample_every: 16, ring_cap: cap, classes: TraceClasses::all() }
+    }
+
+    #[test]
+    fn classes_parse_roundtrip() {
+        assert_eq!(TraceClasses::parse("all").unwrap(), TraceClasses::all());
+        assert_eq!(TraceClasses::parse("").unwrap(), TraceClasses::all());
+        let c = TraceClasses::parse("coro, amu").unwrap();
+        assert!(c.has(TraceClasses::CORO) && c.has(TraceClasses::AMU));
+        assert!(!c.has(TraceClasses::SCHED));
+        assert_eq!(c.label(), "coro,amu");
+        assert!(TraceClasses::parse("bogus").is_err());
+        assert_eq!(TraceClasses::all().label(), "all");
+    }
+
+    #[test]
+    fn config_validate_and_label() {
+        assert!(TraceConfig::off().validate().is_ok());
+        assert!(TraceConfig::on().validate().is_ok());
+        let mut c = TraceConfig::on();
+        c.sample_every = 0;
+        assert!(c.validate().is_err());
+        c = TraceConfig::on();
+        c.ring_cap = 0;
+        assert!(c.validate().is_err());
+        c = TraceConfig::on();
+        c.ring_cap = (1 << 24) + 1;
+        assert!(c.validate().is_err());
+        assert_eq!(TraceConfig::off().label(), "off");
+        assert!(TraceConfig::on().label().starts_with("on("));
+    }
+
+    #[test]
+    fn ring_overflow_accounting() {
+        let mut tr = Tracer::new(tiny_cfg(4));
+        for i in 0..10u64 {
+            tr.on_transfer(i as i64, i * 10, i * 10 + 5, false, AddrClass::Remote, 1);
+        }
+        // Each transfer emits CoroSpawn + AmuReq = 20 events total; 4 retained.
+        assert_eq!(tr.total, 20);
+        assert_eq!(tr.events.len(), 4);
+        assert_eq!(tr.dropped, 16);
+        let trace = tr.harvest(200, &StallBuckets::default(), "fifo", "fixed");
+        assert_eq!(trace.total, 20);
+        assert_eq!(trace.dropped, 16);
+        assert_eq!(trace.events.len(), 4);
+        // Aggregates stay exact despite the overflow.
+        assert_eq!(trace.profile.iter().map(|r| r.prof.reqs).sum::<u64>(), 10);
+    }
+
+    #[test]
+    fn class_filter_suppresses_events() {
+        let mut cfg = tiny_cfg(64);
+        cfg.classes = TraceClasses::parse("sched").unwrap();
+        let mut tr = Tracer::new(cfg);
+        tr.on_transfer(1, 0, 5, false, AddrClass::Remote, 1); // coro+amu: filtered
+        tr.on_sched(6, Some(1), 0); // sched: kept
+        assert_eq!(tr.total, 1);
+        assert_eq!(tr.events.len(), 1);
+        assert!(matches!(tr.events[0].kind, EventKind::SchedPick { id: 1 }));
+    }
+
+    #[test]
+    fn attribution_closes_segments_exactly() {
+        let mut tr = Tracer::new(tiny_cfg(256));
+        let mut st = StallBuckets::default();
+        // main runs [0,100): 30 remote stall.
+        st.remote_mem = 30.0;
+        tr.on_switch(100, 100, &st, Some(7));
+        // coro 7 runs [100,250): +50 local stall.
+        st.local_mem = 50.0;
+        tr.on_switch(250, 250, &st, Some(8));
+        // coro 8 runs [250,300): no extra stalls.
+        let trace = tr.harvest(300, &st, "arrival", "queued");
+        let total: f64 = trace.profile.iter().map(|r| r.prof.cycles).sum();
+        assert_eq!(total, 300.0);
+        let main = trace.profile.iter().find(|r| r.id == MAIN_CORO).unwrap();
+        assert_eq!(main.prof.remote_mem, 30.0);
+        assert_eq!(main.prof.compute, 70.0);
+        let c7 = trace.profile.iter().find(|r| r.id == 7).unwrap();
+        assert_eq!(c7.prof.local_mem, 50.0);
+        assert_eq!(c7.prof.cycles, 150.0);
+        assert_eq!(c7.prof.resumes, 1);
+        let c8 = trace.profile.iter().find(|r| r.id == 8).unwrap();
+        assert_eq!(c8.prof.cycles, 50.0);
+        // 100% of stall cycles attributed.
+        assert_eq!(trace.stall_coverage(80.0), 1.0);
+    }
+
+    #[test]
+    fn sampling_grid_and_fault_deltas() {
+        let mut tr = Tracer::new(tiny_cfg(256));
+        assert!(!tr.sample_due(15));
+        assert!(tr.sample_due(16));
+        let mut g = FabricGauges { inflight: 3, ..FabricGauges::default() };
+        tr.sample(17, g, 2);
+        assert_eq!(tr.next_sample, 32);
+        g.nacks = 4;
+        g.retries = 2;
+        tr.sample(40, g, 0);
+        assert_eq!(tr.next_sample, 48);
+        let kinds: Vec<u8> = tr.events.iter().map(|e| e.kind.class()).collect();
+        assert!(kinds.contains(&TraceClasses::FABRIC));
+        assert!(kinds.contains(&TraceClasses::FAULT));
+        let nack = tr
+            .events
+            .iter()
+            .find_map(|e| match e.kind {
+                EventKind::FaultNack { n } => Some(n),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(nack, 4);
+    }
+
+    #[test]
+    fn top_n_keeps_longest_with_deterministic_ties() {
+        let mut tr = Tracer::new(tiny_cfg(1 << 12));
+        for i in 0..100u64 {
+            // latencies 0..100; ties impossible here, then add tied pair.
+            tr.on_transfer(1, i, i + i, false, AddrClass::Remote, 1);
+        }
+        tr.on_transfer(2, 1000, 1099, false, AddrClass::Remote, 1);
+        tr.on_transfer(3, 2000, 2099, false, AddrClass::Remote, 1);
+        let trace = tr.harvest(3000, &StallBuckets::default(), "fifo", "fixed");
+        assert_eq!(trace.top.len(), TOP_REQUESTS);
+        assert_eq!(trace.top[0].latency(), 99);
+        // Earlier issue (lower seq) wins the 99-latency tie.
+        assert!(trace.top[0].issue == 99 || trace.top[0].seq < trace.top[1].seq);
+        let lats: Vec<u64> = trace.top.iter().map(|r| r.latency()).collect();
+        let mut sorted = lats.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(lats, sorted);
+    }
+
+    #[test]
+    fn chrome_json_well_formed() {
+        let mut tr = Tracer::new(tiny_cfg(256));
+        let st = StallBuckets::default();
+        tr.on_switch(10, 10, &st, Some(5));
+        tr.on_transfer(5, 12, 40, false, AddrClass::Remote, 2);
+        tr.on_transfer(5, 13, 20, true, AddrClass::Local, 1);
+        tr.on_sched(41, Some(5), 0);
+        tr.on_sched(42, None, 3);
+        tr.sample(48, FabricGauges { inflight: 1, ..FabricGauges::default() }, 1);
+        tr.on_switch(60, 60, &st, None);
+        let mut trace = tr.harvest(100, &st, "fifo", "queued");
+        trace.push(120, 0, EventKind::SvcReject);
+        trace.push(130, 0, EventKind::SvcDegradeEnter);
+        let json = chrome_json(&trace);
+        // Structure: single top-level object with a traceEvents array.
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.trim_end().ends_with("}"));
+        // Balanced braces/brackets (no string in our output contains them).
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        // No trailing comma before the array close.
+        assert!(!json.contains(",\n]"));
+        // Expected phases and tracks present.
+        for needle in [
+            "\"ph\":\"X\"",
+            "\"ph\":\"C\"",
+            "\"ph\":\"i\"",
+            "\"ph\":\"M\"",
+            "\"name\":\"aload\"",
+            "\"name\":\"astore\"",
+            "\"name\":\"coro 5\"",
+            "\"name\":\"pick\"",
+            "\"name\":\"hold\"",
+            "\"name\":\"reject\"",
+            "\"name\":\"degrade_enter\"",
+            "\"class\":\"remote\"",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+    }
+
+    #[test]
+    fn chrome_json_write_is_atomic_and_loadable() {
+        let dir = std::env::temp_dir().join(format!("coroamu_trace_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let tr = Tracer::new(tiny_cfg(16));
+        let trace = tr.harvest(10, &StallBuckets::default(), "fifo", "fixed");
+        let path = dir.join("out.json");
+        write_chrome_json(&trace, &path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("{\"traceEvents\":["));
+        assert!(!path.with_extension("json.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn event_log_is_deterministic_text() {
+        let build = || {
+            let mut tr = Tracer::new(tiny_cfg(64));
+            tr.on_transfer(3, 5, 25, false, AddrClass::Remote, 1);
+            tr.on_sched(26, Some(3), 0);
+            tr.harvest(50, &StallBuckets::default(), "fifo", "fixed")
+        };
+        let (a, b) = (build(), build());
+        assert_eq!(a.event_log(), b.event_log());
+        assert!(a.event_log().lines().count() == a.events.len());
+        assert!(a == b);
+    }
+
+    #[test]
+    fn merge_concatenates_and_reranks() {
+        let mk = |core: u32, lat: u64| {
+            let mut tr = Tracer::for_core(tiny_cfg(64), core);
+            tr.on_transfer(1, 0, lat, false, AddrClass::Remote, 1);
+            tr.harvest(lat + 10, &StallBuckets::default(), "fifo", "queued")
+        };
+        let merged = Trace::merge(vec![mk(0, 50), mk(1, 90)], 100);
+        assert_eq!(merged.cores, 2);
+        assert_eq!(merged.cycles, 100);
+        assert_eq!(merged.total, 4); // 2 spawns + 2 reqs
+        assert_eq!(merged.top[0].core, 1);
+        assert_eq!(merged.top[0].latency(), 90);
+        assert_eq!(merged.profile.len(), 4); // (main)+coro per core
+    }
+
+    #[test]
+    fn profile_report_renders() {
+        let mut tr = Tracer::new(tiny_cfg(256));
+        let mut st = StallBuckets::default();
+        tr.on_switch(10, 10, &st, Some(1));
+        tr.on_transfer(1, 11, 61, false, AddrClass::Remote, 4);
+        st.remote_mem = 40.0;
+        tr.sample(16, FabricGauges { inflight: 5, ..FabricGauges::default() }, 3);
+        tr.sample(32, FabricGauges { inflight: 2, ..FabricGauges::default() }, 1);
+        let trace = tr.harvest(100, &st, "latency", "tiered");
+        let report = render_profile(&trace);
+        assert!(report.contains("per-coroutine stall attribution"));
+        assert!(report.contains("tail-latency AMU requests"));
+        assert!(report.contains("queue occupancy"));
+        assert!(report.contains("(main)"));
+        assert!(report.contains("policy=latency"));
+    }
+
+    #[test]
+    fn sparkline_and_timeline_shapes() {
+        assert_eq!(sparkline(&[], 8), "(no samples)");
+        let line = sparkline(&[0, 1, 2, 3, 4, 5, 6, 7], 8);
+        assert_eq!(line.chars().count(), 8);
+        assert_eq!(line.chars().next().unwrap(), SPARK[0]);
+        assert_eq!(line.chars().last().unwrap(), SPARK[7]);
+        let bar = timeline_bar(10, 20, 40, 40);
+        assert_eq!(bar.chars().count(), 40);
+        assert!(bar.contains('█') && bar.contains('·'));
+    }
+}

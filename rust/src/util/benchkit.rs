@@ -169,7 +169,36 @@ pub fn build_mode() -> &'static str {
 }
 
 fn json_escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Serialize report tables as a JSON array of `{title, headers, rows}`
+/// objects (hand-rolled — no `serde` in the offline environment). Used
+/// by `coroamu report --json` and `coroamu sweep --json` so scripted
+/// consumers get the same cells the text renderer aligns.
+pub fn to_json(tables: &[crate::util::table::Table]) -> String {
+    let cells = |row: &[String]| -> String {
+        let quoted: Vec<String> = row.iter().map(|c| format!("\"{}\"", json_escape(c))).collect();
+        format!("[{}]", quoted.join(", "))
+    };
+    let mut out = String::from("[\n");
+    for (i, t) in tables.iter().enumerate() {
+        out.push_str("  {\n");
+        out.push_str(&format!("    \"title\": \"{}\",\n", json_escape(&t.title)));
+        out.push_str(&format!("    \"headers\": {},\n", cells(&t.headers)));
+        out.push_str("    \"rows\": [\n");
+        for (j, r) in t.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "      {}{}\n",
+                cells(r),
+                if j + 1 < t.rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("    ]\n");
+        out.push_str(&format!("  }}{}\n", if i + 1 < tables.len() { "," } else { "" }));
+    }
+    out.push_str("]\n");
+    out
 }
 
 pub fn human_ns(ns: f64) -> String {
@@ -257,6 +286,22 @@ mod tests {
         assert!(j.contains("\"mode\": "), "{j}");
         assert!(j.contains("\"mrate\": "), "{j}");
         assert!(j.contains("\"samples\": ["), "{j}");
+    }
+
+    #[test]
+    fn table_json_is_balanced_and_escaped() {
+        let mut t = crate::util::table::Table::new("Fig \"12\"", &["bench", "speedup"]);
+        t.row(vec!["gups".into(), "29.00x".into()]);
+        let j = to_json(&[t.clone(), t]);
+        assert!(j.contains("\"title\": \"Fig \\\"12\\\"\""), "{j}");
+        assert!(j.contains("\"headers\": [\"bench\", \"speedup\"]"), "{j}");
+        assert!(j.contains("[\"gups\", \"29.00x\"]"), "{j}");
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            let o = j.matches(open).count();
+            let c = j.matches(close).count();
+            assert_eq!(o, c, "unbalanced {open}{close} in {j}");
+        }
+        assert_eq!(to_json(&[]), "[\n]\n", "empty table list is a valid empty array");
     }
 
     #[test]

@@ -543,6 +543,112 @@ fn proptest_clusters_deterministic_across_restore_and_reruns() {
     );
 }
 
+/// The tracing-subsystem acceptance differential: with tracing off —
+/// whether left at the default, pinned in the session config, or
+/// requested per-run as an explicit `TraceConfig::off()` — the
+/// simulator is bit-identical to the seed: all five compile variants,
+/// all three interpreter paths (decoded-fused / decoded-unfused /
+/// reference), cycles + every stat + memory. Off is structural (the
+/// `Tracer` is never constructed), and this pins it.
+#[test]
+fn trace_off_is_bit_identical_to_seed() {
+    use coroamu::sim::trace::TraceConfig;
+    for v in Variant::ALL {
+        // Three paths under an explicitly pinned trace-off session.
+        assert_paths_agree_under(
+            SimConfig::nh_g().with_trace(TraceConfig::off()),
+            "gups",
+            v,
+            Scale::Tiny,
+            7,
+        );
+        // Explicit request == the session default, stat for stat.
+        let req = || RunRequest::new("gups", v).scale(Scale::Tiny).seed(7);
+        let base = Engine::new(SimConfig::nh_g()).run(req()).unwrap();
+        let off = Engine::new(SimConfig::nh_g()).run(req().trace(TraceConfig::off())).unwrap();
+        assert_eq!(
+            base.stats,
+            off.stats,
+            "{}: explicit trace=off diverges from the untraced default",
+            v.label()
+        );
+        assert_eq!(base.stats.trace_events, 0, "{}: untraced run counted events", v.label());
+        assert_eq!(base.stats.trace_dropped, 0, "{}: untraced run dropped events", v.label());
+        // And the traced entry point with tracing off builds no tracer.
+        let (rep, trace) = Engine::new(SimConfig::nh_g()).run_traced(req()).unwrap();
+        assert!(trace.is_none(), "{}: untraced run built a tracer", v.label());
+        assert_eq!(rep.stats, base.stats, "{}: run_traced(off) diverges", v.label());
+    }
+}
+
+/// Property: tracing is a pure observer and a deterministic one — the
+/// traced run's stats (minus the trace counters) match the untraced run
+/// bit for bit, and the event stream is byte-identical across (a)
+/// repeated runs through one engine (dataset restored from the COW
+/// snapshot) and (b) a fresh engine with the same seed. Rotates fabric,
+/// policy and faults by case; the nightly workflow cranks the case
+/// count (PROPTEST_CASES).
+#[test]
+fn proptest_trace_deterministic_across_restore_and_reruns() {
+    use coroamu::sim::faults::FaultConfig;
+    use coroamu::sim::trace::TraceConfig;
+    use coroamu::util::proptest::{check, env_cases, Config};
+    check(
+        Config { cases: env_cases(8), ..Config::default() },
+        |g| g.rng.next_u64(),
+        |seed: &u64| {
+            let fabric = FabricKind::ALL[(*seed % 4) as usize];
+            let policy = SchedPolicyKind::ALL[((*seed >> 2) % 4) as usize];
+            let faults = [FaultConfig::off(), FaultConfig::mild()][((*seed >> 4) % 2) as usize];
+            let cfg = SimConfig::nh_g().with_fabric(fabric).with_sched_policy(policy);
+            let req = |trace: bool| {
+                let r = RunRequest::new("gups", Variant::CoroAmuFull)
+                    .scale(Scale::Tiny)
+                    .seed(seed % 5)
+                    .faults(faults);
+                if trace {
+                    r.trace(TraceConfig::on())
+                } else {
+                    r
+                }
+            };
+            let tag = || format!("{}/{}/{}", fabric.label(), policy.label(), faults.label());
+            let engine = Engine::new(cfg.clone());
+            let (a, ta) = engine.run_traced(req(true)).map_err(|e| format!("{e:#}"))?;
+            let ta = ta.ok_or_else(|| format!("{}: traced run returned no trace", tag()))?;
+            if a.stats.trace_events != ta.total || a.stats.trace_dropped != ta.dropped {
+                return Err(format!("{}: stats/trace event accounting disagrees", tag()));
+            }
+            let (b, tb) = engine.run_traced(req(true)).map_err(|e| format!("{e:#}"))?;
+            let tb = tb.ok_or_else(|| format!("{}: rerun returned no trace", tag()))?;
+            if a.stats != b.stats {
+                return Err(format!("{}: snapshot-restore rerun diverges", tag()));
+            }
+            if ta.event_log() != tb.event_log() {
+                return Err(format!("{}: event stream diverges across reruns", tag()));
+            }
+            let (f, tf) = Engine::new(cfg).run_traced(req(true)).map_err(|e| format!("{e:#}"))?;
+            let tf = tf.ok_or_else(|| format!("{}: fresh engine returned no trace", tag()))?;
+            if a.stats != f.stats {
+                return Err(format!("{}: fresh engine with the same seed diverges", tag()));
+            }
+            if ta.event_log() != tf.event_log() {
+                return Err(format!("{}: event stream diverges on a fresh engine", tag()));
+            }
+            // Pure observer: stripping the trace counters reproduces the
+            // untraced stats exactly.
+            let mut masked = a.stats.clone();
+            masked.trace_events = 0;
+            masked.trace_dropped = 0;
+            let plain = engine.run(req(false)).map_err(|e| format!("{e:#}"))?;
+            if masked != plain.stats {
+                return Err(format!("{}: tracing perturbed the simulation", tag()));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Pin that memory-guided prediction coverage is a property of the
 /// scheduler policy (§IV-A as refactored into `sim::sched`):
 /// * ArrivalOrder + bafin — the paper's configuration — keeps zero
